@@ -1,0 +1,82 @@
+//! Ablation benches (DESIGN.md ablation list): two-stage vs single-stage
+//! top-k, ADC precision, CAM geometry, batch=1 vs batch=16, recall cost.
+
+use camformer::accuracy::functional;
+use camformer::accuracy::recall;
+use camformer::arch::config::ArchConfig;
+use camformer::arch::pipeline::PipelineModel;
+use camformer::runtime::executable::default_artifacts_dir;
+use camformer::runtime::executable::Engine;
+use camformer::util::bench::Bencher;
+use camformer::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::new();
+    let mut rng = Rng::new(6);
+    let scores: Vec<f64> = (0..1024).map(|_| rng.normal(0.0, 20.0)).collect();
+
+    // ablation 1: selection network cost
+    b.bench("topk_single_stage_1024", || {
+        functional::single_stage_topk_mask(&scores, 32)
+    });
+    b.bench("topk_two_stage_1024", || {
+        functional::two_stage_topk_mask(&scores, 16, 2, 32)
+    });
+
+    // ablation 2: ADC precision on the scores path
+    let q = rng.normal_vec(64);
+    let k = rng.normal_vec(1024 * 64);
+    for bits in [4u32, 6, 8] {
+        b.bench(&format!("bacam_scores_adc{bits}"), || {
+            functional::bacam_scores_cfg(&q, &k, 64, bits)
+        });
+    }
+
+    // ablation 3: recall cost of the hierarchy (modelled, printed below)
+    println!("\n-- modelled ablations --");
+    let mut r = Rng::new(7);
+    for k1 in [1usize, 2, 4, 8] {
+        let wr = recall::monte_carlo_weighted_recall_realistic(1024, 8, 16, k1, 32, 60, &mut r);
+        println!("two-stage k1={k1}: weighted recall {wr:.4}");
+    }
+
+    // ablation 4: batching (Sec. III-B1 argues batch=1; measure the
+    // software dispatch side on PJRT)
+    let dir = default_artifacts_dir();
+    if dir.join("manifest.tsv").exists() {
+        let v = rng.normal_vec(1024 * 64);
+        let mut engine = Engine::new(&dir).expect("engine");
+        engine.load("attn_single_query").unwrap();
+        engine.load("attn_batch").unwrap();
+        let mut bc = Bencher::coarse();
+        let r1 = bc.bench("pjrt_single_query_x16", || {
+            for _ in 0..16 {
+                engine
+                    .load("attn_single_query")
+                    .unwrap()
+                    .run_f32(&[&q, &k, &v])
+                    .unwrap();
+            }
+        });
+        let qs = rng.normal_vec(16 * 64);
+        let r2 = bc.bench("pjrt_batch16_once", || {
+            engine.load("attn_batch").unwrap().run_f32(&[&qs, &k, &v]).unwrap()
+        });
+        println!(
+            "batch=16 speedup over 16x single (software dispatch): {:.2}x",
+            r1.mean_ns / r2.mean_ns
+        );
+    }
+
+    // ablation 5: hardware cadence vs CAM height (modelled)
+    for cam_h in [8usize, 16, 32] {
+        let cfg = ArchConfig { cam_h, ..Default::default() };
+        let m = PipelineModel { cfg, fine_grained: true };
+        println!(
+            "CAM_H={cam_h:2}: association {} cycles, {:.1} qry/ms",
+            m.latencies().association,
+            m.throughput_qry_per_ms()
+        );
+    }
+    print!("{}", b.summary());
+}

@@ -1,0 +1,67 @@
+//! Bench: the Layer-3 serving hot path — request->batch->execute->respond
+//! round trips through the coordinator, plus the micro-costs (bf16 dot,
+//! softmax engine, batcher overhead) that dominate it.
+
+use std::time::Duration;
+
+use camformer::arch::softmax::SoftmaxEngine;
+use camformer::coordinator::backend::FunctionalBackend;
+use camformer::coordinator::batcher::BatchPolicy;
+use camformer::coordinator::server::{CamformerServer, Request, ServerConfig};
+use camformer::util::bench::Bencher;
+use camformer::util::{bf16, rng::Rng};
+
+fn main() {
+    let mut b = Bencher::new();
+    let mut rng = Rng::new(8);
+
+    // micro: bf16 weighted-sum inner loop (the contextualization kernel)
+    let a = rng.normal_vec(64);
+    let v = rng.normal_vec(64);
+    b.bench("bf16_dot_64", || bf16::dot(&a, &v));
+
+    // micro: softmax engine
+    let eng = SoftmaxEngine::new(64);
+    let scores: Vec<f64> = (0..32).map(|_| rng.range(0, 129) as f64 - 64.0).collect();
+    b.bench("softmax_engine_32", || eng.normalize(&scores));
+
+    // macro: full serving round trips through the functional backend
+    for (label, heads, requests) in [("1head", 1usize, 64usize), ("4heads", 4, 256)] {
+        let n = 1024;
+        let mut kv_rng = Rng::new(9);
+        let kv: Vec<(Vec<f32>, Vec<f32>)> = (0..heads)
+            .map(|_| (kv_rng.normal_vec(n * 64), kv_rng.normal_vec(n * 64)))
+            .collect();
+        let mut bc = Bencher::coarse();
+        bc.bench(&format!("serve_roundtrip_{label}_{requests}req"), || {
+            let kvc = kv.clone();
+            let server = CamformerServer::start(
+                ServerConfig {
+                    heads,
+                    batch: BatchPolicy {
+                        max_batch: 16,
+                        max_wait: Duration::from_micros(200),
+                    },
+                },
+                |_| FunctionalBackend::new(n, 64),
+                move |h| kvc[h].clone(),
+            );
+            let mut qrng = Rng::new(10);
+            for i in 0..requests {
+                server
+                    .submit(Request {
+                        id: i as u64,
+                        head: i % heads,
+                        query: qrng.normal_vec(64),
+                    })
+                    .unwrap();
+            }
+            let resps = server.collect(requests);
+            assert_eq!(resps.len(), requests);
+            let (m, w) = server.shutdown();
+            (m.completed, w)
+        });
+    }
+
+    print!("{}", b.summary());
+}

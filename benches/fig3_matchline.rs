@@ -1,0 +1,48 @@
+//! Bench: the analog circuit substrate's hot paths (Fig. 3 regeneration
+//! cost) — matchline settle, full-array search, PVT Monte-Carlo point.
+
+use camformer::camcircuit::array::BaCamArray;
+use camformer::camcircuit::cell::CellParams;
+use camformer::camcircuit::matchline::Matchline;
+use camformer::camcircuit::pvt::{self, Corner, PvtConfig};
+use camformer::util::bench::Bencher;
+use camformer::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::new();
+    let params = CellParams::default();
+    let mut rng = Rng::new(1);
+
+    let bits: Vec<bool> = (0..64).map(|_| rng.bool()).collect();
+    let ml = Matchline::new(&bits, &params);
+    let query: Vec<bool> = (0..64).map(|_| rng.bool()).collect();
+    b.bench("matchline_settled_voltage_64", || {
+        ml.settled_voltage(&query, &params)
+    });
+    b.bench("matchline_transient_64", || {
+        ml.transient(&query, &params, 0.5)
+    });
+
+    let keys: Vec<Vec<bool>> = (0..16)
+        .map(|_| (0..64).map(|_| rng.bool()).collect())
+        .collect();
+    let mut arr = BaCamArray::new(16, 64);
+    arr.program(&keys);
+    b.bench("array_search_16x64", || arr.search(&query));
+
+    let mut arr_pvt = BaCamArray::with_pvt(16, 64, Corner::SS, 0.014, 9);
+    arr_pvt.program(&keys);
+    b.bench("array_search_16x64_pvt", || arr_pvt.search(&query));
+
+    let mut prng = Rng::new(2);
+    b.bench("pvt_point_200_trials", || {
+        pvt::pvt_point(
+            &PvtConfig { corner: Corner::TT, mismatch_sigma: 0.014, trials: 200 },
+            64,
+            32,
+            &mut prng,
+        )
+    });
+
+    print!("{}", b.summary());
+}

@@ -1,0 +1,40 @@
+//! Bench: BIMV engine throughput across the Fig. 5 amortisation sweep,
+//! plus the bit-sliced int paths.
+
+use camformer::bimv::bitslice;
+use camformer::bimv::engine::BimvEngine;
+use camformer::camcircuit::energy::EnergyModel;
+use camformer::util::bench::Bencher;
+use camformer::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::new();
+    let mut rng = Rng::new(3);
+    let q: Vec<bool> = (0..64).map(|_| rng.bool()).collect();
+
+    for n in [64usize, 256, 1024] {
+        let keys: Vec<Vec<bool>> = (0..n)
+            .map(|_| (0..64).map(|_| rng.bool()).collect())
+            .collect();
+        let mut eng = BimvEngine::new(16, 64);
+        b.bench(&format!("bimv_scores_n{n}"), || eng.scores(&q, &keys));
+    }
+
+    let vals: Vec<Vec<u32>> = (0..64)
+        .map(|_| (0..64).map(|_| rng.range(0, 256) as u32).collect())
+        .collect();
+    let mut eng = BimvEngine::new(16, 64);
+    b.bench("bitslice_int8_n64", || {
+        bitslice::bimv_int(&mut eng, &q, &vals, 8)
+    });
+
+    // the analytic energy sweep itself (cheap, but part of fig5 regen)
+    let model = EnergyModel::new(16, 64);
+    b.bench("fig5_energy_sweep", || model.fig5_sweep(14));
+
+    println!("\n-- modelled energy (not wall time) --");
+    for (m, fj) in model.fig5_sweep(14) {
+        println!("M={m:6}  {fj:.1} fJ/op");
+    }
+    print!("{}", b.summary());
+}

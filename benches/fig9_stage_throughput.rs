@@ -1,0 +1,59 @@
+//! Bench: per-stage functional simulation cost + the modelled hardware
+//! throughput table (Fig. 9 regeneration).
+
+use camformer::arch::association::AssociationStage;
+use camformer::arch::bitonic::{self, Entry};
+use camformer::arch::config::ArchConfig;
+use camformer::arch::contextualization::ContextualizationStage;
+use camformer::arch::normalization::NormalizationStage;
+use camformer::arch::pipeline::PipelineModel;
+use camformer::util::bench::Bencher;
+use camformer::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::new();
+    let cfg = ArchConfig::default();
+    let mut rng = Rng::new(4);
+
+    let q: Vec<bool> = (0..64).map(|_| rng.bool()).collect();
+    let keys: Vec<Vec<bool>> = (0..1024)
+        .map(|_| (0..64).map(|_| rng.bool()).collect())
+        .collect();
+    let mut assoc = AssociationStage::new(cfg);
+    let assoc_out = assoc.run(&q, &keys);
+    b.bench("association_stage_n1024", || assoc.run(&q, &keys));
+
+    let norm = NormalizationStage::new(cfg);
+    let norm_out = norm.run(&assoc_out.candidates);
+    b.bench("normalization_stage_128cand", || {
+        norm.run(&assoc_out.candidates)
+    });
+
+    let v: Vec<f32> = rng.normal_vec(1024 * 64);
+    let ctx = ContextualizationStage::new(cfg);
+    b.bench("contextualization_stage_k32", || {
+        ctx.run(&norm_out.selected, &norm_out.probs, &v)
+    });
+
+    let entries: Vec<Entry> = (0..64)
+        .map(|i| Entry { score: rng.normal(0.0, 10.0), index: i })
+        .collect();
+    b.bench("bitonic_sort_64", || {
+        let mut d = entries.clone();
+        bitonic::bitonic_sort(&mut d)
+    });
+
+    println!("\n-- modelled hardware throughput (cycles @ 1 GHz) --");
+    for (fine, label) in [(false, "no fine pipelining"), (true, "fine-grained")] {
+        let m = PipelineModel { cfg, fine_grained: fine };
+        let l = m.latencies();
+        println!(
+            "{label:20} assoc={:6} norm={:5} ctx={:5}  pipeline {:.1} qry/ms",
+            l.association,
+            l.normalization,
+            l.contextualization,
+            m.throughput_qry_per_ms()
+        );
+    }
+    print!("{}", b.summary());
+}

@@ -1,0 +1,81 @@
+//! Bench: end-to-end single-query attention through each backend — the
+//! software-side Table II. The modelled silicon numbers print alongside
+//! for the paper comparison.
+
+use camformer::accuracy::functional::{self, AttnConfig};
+use camformer::arch::{config::ArchConfig, pipeline};
+use camformer::baselines::accelerators;
+use camformer::runtime::executable::{default_artifacts_dir, Engine};
+use camformer::util::bench::Bencher;
+use camformer::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::coarse();
+    let mut rng = Rng::new(5);
+    let q = rng.normal_vec(64);
+    let k = rng.normal_vec(1024 * 64);
+    let v = rng.normal_vec(1024 * 64);
+
+    let cfg = AttnConfig::paper(1024, 64);
+    b.bench("functional_model_n1024", || {
+        functional::camformer_attention(&q, &k, &v, &cfg)
+    });
+
+    // §Perf before/after, measured live each run:
+    //   float reference (iter 0) -> branchless u8 count (iter 2)
+    //   -> pre-packed XNOR+popcount for reused keys (iter 3)
+    b.bench("scores_iter0_float_n1024", || {
+        functional::bacam_scores_float_reference(&q, &k, 64, 6)
+    });
+    b.bench("scores_iter2_branchless_n1024", || {
+        functional::bacam_scores_cfg(&q, &k, 64, 6)
+    });
+    let packed = functional::PackedKeys::new(&k, 64);
+    b.bench("scores_iter3_prepacked_n1024", || packed.scores(&q, 6));
+    b.bench("attention_prepacked_n1024", || {
+        functional::camformer_attention_packed(&q, &packed, &v, &cfg)
+    });
+
+    b.bench("exact_attention_n1024", || {
+        functional::exact_attention(&q, &k, &v, 1024, 64)
+    });
+
+    let arch_cfg = ArchConfig::default();
+    b.bench("arch_simulator_n1024", || {
+        pipeline::simulate_query(arch_cfg, &q, &k, &v)
+    });
+
+    let dir = default_artifacts_dir();
+    if dir.join("manifest.tsv").exists() {
+        let mut engine = Engine::new(&dir).expect("engine");
+        engine.load("attn_single_query").expect("load");
+        b.bench("pjrt_attn_single_query", || {
+            engine
+                .load("attn_single_query")
+                .unwrap()
+                .run_f32(&[&q, &k, &v])
+                .unwrap()
+        });
+
+        let qs = rng.normal_vec(16 * 64);
+        engine.load("attn_batch").expect("load");
+        b.bench("pjrt_attn_batch16", || {
+            engine.load("attn_batch").unwrap().run_f32(&[&qs, &k, &v]).unwrap()
+        });
+    } else {
+        println!("(skipping PJRT benches: run `make artifacts`)");
+    }
+
+    println!("\n-- modelled silicon (Table II) --");
+    for r in accelerators::table2_rows() {
+        println!(
+            "{:22} {:>8.1} qry/ms {:>8.0} qry/mJ {:>8} mm^2 {:>6.2} W",
+            r.name,
+            r.throughput_qry_per_ms,
+            r.energy_eff_qry_per_mj,
+            r.area_mm2.map(|a| format!("{a:.2}")).unwrap_or("-".into()),
+            r.power_w
+        );
+    }
+    print!("{}", b.summary());
+}

@@ -1,0 +1,66 @@
+//! End-to-end validation driver (EXPERIMENTS.md §End-to-end).
+//!
+//! A real tiny transformer was trained (L2, `python/compile/train.py`) on
+//! the associative-retrieval corpus; its weights are baked into the
+//! classifier artifacts. This driver:
+//!
+//!   1. replays the training loss curve recorded at build time,
+//!   2. measures task accuracy through PJRT for every attention variant
+//!      (exact / single-stage HAD / two-stage CAMformer with k=1,2,4,8) —
+//!      the Table III analogue, measured end-to-end,
+//!   3. reports the serving-style latency of the classifier hot path.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example bert_e2e [-- --trials 60]
+//! ```
+
+use anyhow::{Context, Result};
+use std::time::Instant;
+
+use camformer::accuracy::tables::measure_accuracy;
+use camformer::runtime::executable::{default_artifacts_dir, Engine};
+use camformer::util::cli::Args;
+use camformer::util::table::Table;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let trials = args.get_usize("trials", 60);
+    let dir = default_artifacts_dir();
+
+    // 1. the recorded loss curve
+    let log_path = dir.join("train_log.tsv");
+    let log = std::fs::read_to_string(&log_path)
+        .with_context(|| format!("{log_path:?} — run `make artifacts`"))?;
+    println!("== training loss curve (recorded at build time) ==");
+    let lines: Vec<&str> = log.lines().collect();
+    for (i, line) in lines.iter().enumerate() {
+        if i == 0 || i == lines.len() - 1 || i % 6 == 0 {
+            println!("  {line}");
+        }
+    }
+
+    // 2. measured accuracy per attention variant
+    let mut engine = Engine::new(&dir)?;
+    let variants: &[(&str, &str)] = &[
+        ("exact attention (oracle)", "classifier_exact"),
+        ("single-stage Top-32 (HAD)", "classifier_single_stage"),
+        ("two-stage k=8", "classifier_cam_k8"),
+        ("two-stage k=4", "classifier_cam_k4"),
+        ("two-stage k=2 (Eq. 1)", "classifier_cam_k2"),
+        ("two-stage k=1", "classifier_cam_k1"),
+    ];
+    let mut t = Table::new(
+        &format!("measured accuracy, associative retrieval, {trials} sequences of 512 tokens"),
+        &["attention variant", "accuracy %", "ms/seq"],
+    );
+    for (label, entry) in variants {
+        let exe = engine.load(entry)?;
+        let t0 = Instant::now();
+        let acc = measure_accuracy(|toks| exe.run_s32(toks).expect("run"), 512, trials, 42);
+        let ms = t0.elapsed().as_secs_f64() * 1e3 / trials as f64;
+        t.row(&[label.to_string(), format!("{:.1}", acc * 100.0), format!("{ms:.1}")]);
+    }
+    t.print();
+    println!("\nexpected pattern (paper Table III): near-baseline for k >= 2, visible drop at k = 1.");
+    Ok(())
+}

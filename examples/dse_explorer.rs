@@ -1,0 +1,92 @@
+//! Design-space explorer: sweeps the co-design axes the paper fixes
+//! (CAM geometry, ADC precision, stage-1 k, MAC count) and prints the
+//! throughput / energy / recall trade surface — the tooling a team
+//! adopting CAMformer would use to re-tune it for their workload.
+//!
+//! ```bash
+//! cargo run --release --example dse_explorer [-- --n 1024]
+//! ```
+
+use anyhow::Result;
+use camformer::accuracy::recall;
+use camformer::arch::config::ArchConfig;
+use camformer::arch::pipeline::PipelineModel;
+use camformer::cost::system::{CamformerCost, SystemConfig};
+use camformer::util::cli::Args;
+use camformer::util::rng::Rng;
+use camformer::util::table::Table;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let n = args.get_usize("n", 1024);
+    let mut rng = Rng::new(args.get_u64("seed", 42));
+
+    // axis 1: stage-1 k — accuracy/recall vs sorter cost
+    let mut t1 = Table::new(
+        &format!("stage-1 k sweep (N={n}, g=16, Top-32)"),
+        &["k1", "candidates", "weighted recall", "top32 passes"],
+    );
+    for k1 in [1usize, 2, 4, 8] {
+        let w = recall::monte_carlo_weighted_recall_realistic(n, 8, 16, k1, 32, 150, &mut rng);
+        let candidates = n / 16 * k1;
+        t1.row(&[
+            k1.to_string(),
+            candidates.to_string(),
+            format!("{w:.4}"),
+            candidates.div_ceil(32).to_string(),
+        ]);
+    }
+    t1.print();
+
+    // axis 2: CAM geometry vs throughput and energy efficiency
+    let mut t2 = Table::new(
+        "CAM geometry sweep (1 GHz)",
+        &["CAM_H x CAM_W", "qry/ms", "qry/mJ", "area mm^2"],
+    );
+    for cam_h in [8usize, 16, 32] {
+        let sys = SystemConfig { cam_h, n, ..Default::default() };
+        let cost = CamformerCost::evaluate(&sys);
+        t2.row(&[
+            format!("{cam_h}x64"),
+            format!("{:.1}", cost.throughput_qry_per_ms),
+            format!("{:.0}", cost.energy_eff_qry_per_mj),
+            format!("{:.3}", cost.area_mm2),
+        ]);
+    }
+    t2.print();
+
+    // axis 3: MAC balance across context lengths
+    let mut t3 = Table::new(
+        "MAC balance vs context length",
+        &["N", "assoc cycles", "MACs to balance", "pipelined qry/ms"],
+    );
+    for nn in [256usize, 512, 1024, 2048, 4096] {
+        let cfg = ArchConfig { n: nn, ..Default::default() };
+        let m = PipelineModel { cfg, fine_grained: true };
+        t3.row(&[
+            nn.to_string(),
+            m.latencies().association.to_string(),
+            m.balance_mac_units().to_string(),
+            format!("{:.1}", m.throughput_qry_per_ms()),
+        ]);
+    }
+    t3.print();
+
+    // axis 4: ADC sharing — serialization vs area
+    let mut t4 = Table::new(
+        "ADC instances per array (association cadence ablation)",
+        &["ADCs", "cycles/tile", "qry/ms"],
+    );
+    for adcs in [1usize, 2, 4, 8] {
+        let cfg = ArchConfig { adcs_per_array: adcs, n, ..Default::default() };
+        let m = PipelineModel { cfg, fine_grained: true };
+        t4.row(&[
+            adcs.to_string(),
+            cfg.adc_cycles_per_tile().to_string(),
+            format!("{:.1}", m.throughput_qry_per_ms()),
+        ]);
+    }
+    t4.print();
+    println!("\nthe paper's point (16x64, 6-bit shared SAR, k1=2, 8 MACs) balances all four axes.");
+    Ok(())
+}

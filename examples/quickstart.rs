@@ -1,0 +1,56 @@
+//! Quickstart: one attention query through every layer of the stack.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Flow: PJRT loads the AOT'd Pallas BA-CAM kernel (L1) inside the JAX
+//! attention graph (L2); the pure-Rust functional model and the cycle-
+//! annotated architecture simulator (L3) cross-check the numbers.
+
+use anyhow::Result;
+use camformer::accuracy::functional::{self, AttnConfig};
+use camformer::arch::{config::ArchConfig, pipeline};
+use camformer::runtime::executable::{default_artifacts_dir, Engine};
+use camformer::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let dir = default_artifacts_dir();
+    println!("loading artifacts from {dir:?}");
+    let mut engine = Engine::new(&dir)?;
+
+    // synthesize a query against a 1024-entry key/value memory
+    let mut rng = Rng::new(1);
+    let q = rng.normal_vec(64);
+    let k = rng.normal_vec(1024 * 64);
+    let v = rng.normal_vec(1024 * 64);
+
+    // L1: the BA-CAM association kernel alone
+    let scores = engine.load("bacam_scores")?.run_f32(&[&q, &k])?;
+    let best = scores
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap();
+    println!("BA-CAM: best-matching key = #{} (score {})", best.0, best.1);
+
+    // L1+L2: full Eq. 1 through PJRT
+    let out = engine.load("attn_single_query")?.run_f32(&[&q, &k, &v])?;
+    println!("attention output (first 4 dims): {:?}", &out[..4]);
+
+    // L3 cross-checks
+    let want = functional::camformer_attention(&q, &k, &v, &AttnConfig::paper(1024, 64));
+    let diff = out.iter().zip(&want).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+    println!("PJRT vs functional model: max |diff| = {diff:.6}");
+    assert!(diff < 1e-2);
+
+    let (_, lat) = pipeline::simulate_query(ArchConfig::default(), &q, &k, &v);
+    println!(
+        "simulated hardware: {} cycles/query ({:.1} us at 1 GHz), throughput {:.0} qry/ms",
+        lat.total(),
+        lat.total() as f64 / 1000.0,
+        pipeline::PipelineModel::paper().throughput_qry_per_ms(),
+    );
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,169 @@
+"""AOT lowering: JAX/Pallas -> HLO *text* -> ``artifacts/`` for Rust PJRT.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Entry points lowered (see artifacts/manifest.tsv):
+
+  attn_single_query   — the serving hot path: one query vs the full K/V
+                        memory through the Pallas BA-CAM kernel + Eq. 1.
+  attn_batch          — 16-query batch of the same (coordinator batching).
+  bacam_scores        — association stage only (quickstart / debugging).
+  classifier_camformer— trained tiny transformer, CAMformer attention,
+                        weights baked as HLO constants.
+  classifier_exact    — same weights, exact attention (accuracy reference).
+
+Run:  cd python && python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model, train
+from .kernels import ba_cam
+
+SEQ_LEN = 1024  # BERT-Large sequence length used throughout the paper
+D_K = 64
+BATCH = 16
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange).
+
+    ``print_large_constants`` matters: the default printer elides big
+    constants as ``{...}``, which would silently drop baked model weights
+    from the classifier artifacts.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # jax's printer emits source_end_line/column metadata that the 0.5.1
+    # HLO text parser rejects — drop metadata entirely (it is debug-only)
+    opts.print_metadata = False
+    return comp.get_hlo_module().to_string(opts)
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_entry_points(params, cfg: model.ModelConfig):
+    """Return {name: (hlo_text, input_specs, output_shape_desc)}."""
+    out = {}
+
+    def attn_single(q, k, v):
+        return (model.attn_single_query(q, k, v, use_pallas=True),)
+
+    lowered = jax.jit(attn_single).lower(
+        _spec((D_K,)), _spec((SEQ_LEN, D_K)), _spec((SEQ_LEN, D_K))
+    )
+    out["attn_single_query"] = (
+        to_hlo_text(lowered),
+        [f"f32[{D_K}]", f"f32[{SEQ_LEN},{D_K}]", f"f32[{SEQ_LEN},{D_K}]"],
+        f"f32[{D_K}]",
+    )
+
+    def attn_batch(q, k, v):
+        return (ba_cam.camformer_attention_pallas(q, k, v),)
+
+    lowered = jax.jit(attn_batch).lower(
+        _spec((BATCH, D_K)), _spec((SEQ_LEN, D_K)), _spec((SEQ_LEN, D_K))
+    )
+    out["attn_batch"] = (
+        to_hlo_text(lowered),
+        [f"f32[{BATCH},{D_K}]", f"f32[{SEQ_LEN},{D_K}]", f"f32[{SEQ_LEN},{D_K}]"],
+        f"f32[{BATCH},{D_K}]",
+    )
+
+    def scores_only(q, k):
+        return (ba_cam.bacam_scores_pallas(q, k, query_block=1),)
+
+    lowered = jax.jit(scores_only).lower(_spec((1, D_K)), _spec((SEQ_LEN, D_K)))
+    out["bacam_scores"] = (
+        to_hlo_text(lowered),
+        [f"f32[1,{D_K}]", f"f32[{SEQ_LEN},{D_K}]"],
+        f"f32[1,{SEQ_LEN}]",
+    )
+
+    # Classifier variants: weights are closed over, so they lower to HLO
+    # constants and the Rust side only feeds token ids.
+    # Table III analogue needs first-stage k in {1,2,4,8} plus the
+    # single-stage HAD baseline and the exact-attention oracle.
+    variants = [
+        ("classifier_camformer", "camformer", cfg.stage1_k),
+        ("classifier_exact", "exact", cfg.stage1_k),
+        ("classifier_single_stage", "single_stage", cfg.stage1_k),
+        ("classifier_cam_k1", "camformer", 1),
+        ("classifier_cam_k2", "camformer", 2),
+        ("classifier_cam_k4", "camformer", 4),
+        ("classifier_cam_k8", "camformer", 8),
+    ]
+    for name, mode, k1 in variants:
+        ccfg = model.ModelConfig(
+            seq_len=cfg.seq_len, attention=mode,
+            group=cfg.group, stage1_k=k1, final_k=cfg.final_k,
+        )
+
+        def clf(tokens, _ccfg=ccfg):
+            return (model.forward(_ccfg, params, tokens),)
+
+        lowered = jax.jit(clf).lower(_spec((cfg.seq_len,), jnp.int32))
+        out[name] = (
+            to_hlo_text(lowered),
+            [f"s32[{cfg.seq_len}]"],
+            f"f32[{ccfg.n_classes}]",
+        )
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--train-steps", type=int, default=300)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    cfg = model.ModelConfig(seq_len=512, attention="exact")
+    params_path = os.path.join(args.out, "params.npz")
+    if os.path.exists(params_path):
+        print(f"loading trained weights from {params_path}")
+        flat = dict(np.load(params_path))
+        params = train.unflatten_params(flat)
+    else:
+        print("no trained weights found — training the tiny transformer now")
+        params, history = train.train_curriculum(
+            cfg, stages=None, batch=32
+        )
+        np.savez(params_path, **train.flatten_params(params))
+        with open(os.path.join(args.out, "train_log.tsv"), "w") as f:
+            f.write("step\tloss\teval_acc\n")
+            for step, loss, acc in history:
+                f.write(f"{step}\t{loss:.6f}\t{acc:.4f}\n")
+
+    entries = lower_entry_points(params, cfg)
+    manifest_lines = ["name\tfile\tinputs\toutput"]
+    for name, (text, in_specs, out_spec) in entries.items():
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        manifest_lines.append(f"{name}\t{fname}\t{';'.join(in_specs)}\t{out_spec}")
+        print(f"wrote {fname} ({len(text)} chars)")
+    with open(os.path.join(args.out, "manifest.tsv"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"manifest: {len(entries)} entry points")
+
+
+if __name__ == "__main__":
+    main()

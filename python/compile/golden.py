@@ -1,0 +1,54 @@
+"""Emit golden vectors for the Rust functional model.
+
+The jnp oracle (ref.py) computes BA-CAM scores and full CAMformer attention
+for seeded random inputs; the Rust side (`rust/tests/golden_vectors.rs`)
+re-computes them with `accuracy::functional` and asserts agreement —
+scores bit-exact, attention within bf16 slack.
+
+Run:  cd python && python -m compile.golden --out ../artifacts/golden.tsv
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+
+
+def emit_case(f, case_id: int, n: int, seed: int) -> None:
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (64,), jnp.float32)
+    k = jax.random.normal(kk, (n, 64), jnp.float32)
+    v = jax.random.normal(kv, (n, 64), jnp.float32)
+
+    scores = ref.bacam_scores(q, k)
+    out = ref.camformer_attention(q, k, v)
+
+    def fmt(arr):
+        return ",".join(f"{float(x):.9g}" for x in np.asarray(arr).ravel())
+
+    f.write(f"case\t{case_id}\t{n}\n")
+    f.write(f"q\t{fmt(q)}\n")
+    f.write(f"k\t{fmt(k)}\n")
+    f.write(f"v\t{fmt(v)}\n")
+    f.write(f"scores\t{fmt(scores)}\n")
+    f.write(f"attention\t{fmt(out)}\n")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/golden.tsv")
+    args = ap.parse_args()
+    with open(args.out, "w") as f:
+        for case_id, (n, seed) in enumerate([(64, 1), (128, 2), (256, 3), (512, 4), (1024, 5)]):
+            emit_case(f, case_id, n, seed)
+    print(f"wrote golden vectors to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,156 @@
+"""BA-CAM association kernel (Layer 1, Pallas).
+
+This is the paper's analog hot spot — the voltage-domain Binary-Attention
+CAM computing ``QK^T`` as a Hamming-similarity search — re-thought for the
+TPU (DESIGN.md §Hardware-Adaptation):
+
+* The matchline charge-share (XNOR + analog accumulate) becomes a ±1 matmul
+  on the MXU: for ±1 vectors ``q . k = 2*matches - d_k``, exactly the
+  affine map the paper's multiply-subtract unit applies to the ADC code.
+* The HBM->VMEM ``BlockSpec`` walk reproduces the CAM tiling of Fig. 4:
+  the grid axes are (query tile ①②, key tile ④-horizontal, d_k tile
+  ④-vertical); the innermost axis accumulates into the output block the way
+  the paper's accumulation register does across vertical tiles.
+* The 6-bit SAR ADC is modelled *per tile* inside the kernel: each
+  ``CAM_H x CAM_W`` tile's analog partial sum is quantised before the
+  digital accumulation, matching the hardware (ADC sits on the matchline,
+  the accumulation register is digital).
+
+The kernel is lowered with ``interpret=True`` — real-TPU Pallas emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute; structure (tiling,
+VMEM residency) is what we optimise, and EXPERIMENTS.md §Perf estimates the
+TPU roofline from the block shapes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from .ref import ADC_BITS, CAM_H, CAM_W
+
+
+def _bacam_tile_kernel(q_ref, k_ref, o_ref, *, cam_w: int, adc_bits: int):
+    """One grid step: associate a (Bt, cam_w) query tile against a
+    (CAM_H, cam_w) key tile; quantise through the per-tile ADC; accumulate.
+
+    Grid = (query tiles, key tiles, d_k tiles); the d_k axis is innermost so
+    the output block stays resident while vertical tiles accumulate
+    (Fig. 4 step ④-vertical / the association stage's accumulation register).
+    """
+    d = pl.program_id(2)
+    # Binarise in VMEM: the CAM stores sign bits; {-1,+1} keeps the MXU path.
+    qb = jnp.where(q_ref[...] >= 0, 1.0, -1.0)
+    kb = jnp.where(k_ref[...] >= 0, 1.0, -1.0)
+    # Matchline: dot in [-cam_w, cam_w]  <=>  voltage (dot+W)/(2W) in [0,1].
+    dot = jnp.dot(qb, kb.T, preferred_element_type=jnp.float32)
+    volt = (dot + cam_w) / (2.0 * cam_w)
+    # Per-tile 6-bit SAR ADC + multiply-subtract: s = 2*ADC(v) - CAM_W.
+    levels = 2**adc_bits
+    code = jnp.clip(jnp.round(volt * levels), 0.0, float(levels))
+    s = 2.0 * code * (cam_w / levels) - cam_w
+
+    @pl.when(d == 0)
+    def _init():
+        o_ref[...] = s
+
+    @pl.when(d > 0)
+    def _acc():
+        o_ref[...] += s
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cam_h", "cam_w", "adc_bits", "query_block")
+)
+def bacam_scores_pallas(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    cam_h: int = CAM_H,
+    cam_w: int = CAM_W,
+    adc_bits: int = ADC_BITS,
+    query_block: int = 8,
+) -> jnp.ndarray:
+    """Binary attention scores via the BA-CAM Pallas kernel.
+
+    ``q``: (B, d_k) real-valued queries; ``k``: (N, d_k) real-valued keys.
+    Returns quantised signed scores (B, N) in [-d_k, d_k].
+
+    ``N`` must divide by ``cam_h`` and ``d_k`` by ``cam_w`` (the paper
+    assumes the same and pads otherwise; use :func:`bacam_scores_padded`
+    for arbitrary shapes).
+    """
+    b, d_k = q.shape
+    n, d_k2 = k.shape
+    assert d_k == d_k2, f"d_k mismatch: {d_k} vs {d_k2}"
+    assert n % cam_h == 0, f"N={n} not a multiple of CAM_H={cam_h}"
+    assert d_k % cam_w == 0, f"d_k={d_k} not a multiple of CAM_W={cam_w}"
+    bt = min(query_block, b)
+    assert b % bt == 0, f"B={b} not a multiple of query_block={bt}"
+
+    grid = (b // bt, n // cam_h, d_k // cam_w)
+    kernel = functools.partial(_bacam_tile_kernel, cam_w=cam_w, adc_bits=adc_bits)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, cam_w), lambda bi, ni, di: (bi, di)),
+            pl.BlockSpec((cam_h, cam_w), lambda bi, ni, di: (ni, di)),
+        ],
+        out_specs=pl.BlockSpec((bt, cam_h), lambda bi, ni, di: (bi, ni)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=True,
+    )(q, k)
+
+
+def bacam_scores_padded(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    cam_h: int = CAM_H,
+    cam_w: int = CAM_W,
+    adc_bits: int = ADC_BITS,
+) -> jnp.ndarray:
+    """Arbitrary-shape wrapper: zero-pads d_k and N up to tile multiples.
+
+    d_k padding appends matching bits to *both* q and k (+1 vs +1), which
+    shifts every tile score by the same constant; we subtract it back out,
+    mirroring how a padded CAM column contributes a fixed charge offset.
+    Key padding appends rows whose scores are discarded.
+    """
+    b, d_k = q.shape
+    n, _ = k.shape
+    pad_d = (-d_k) % cam_w
+    pad_n = (-n) % cam_h
+    qp = jnp.pad(q, ((0, 0), (0, pad_d)), constant_values=1.0)
+    kp = jnp.pad(k, ((0, pad_n), (0, pad_d)), constant_values=1.0)
+    s = bacam_scores_pallas(qp, kp, cam_h, cam_w, adc_bits, query_block=1 if b % 8 else 8)
+    # Padded key rows see `pad_d` guaranteed matches; padded d_k bits add a
+    # constant +pad_d to every score. Remove the offset, drop padded rows.
+    return s[:, :n] - float(pad_d)
+
+
+def camformer_attention_pallas(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    group: int = CAM_H,
+    stage1_k: int = 2,
+    final_k: int = 32,
+    adc_bits: int = ADC_BITS,
+) -> jnp.ndarray:
+    """Eq. 1 end-to-end with the Pallas association kernel.
+
+    Association (scores) runs in the BA-CAM kernel; normalisation
+    (two-stage top-k + LUT softmax) and BF16 contextualization are the
+    paper's digital stages and stay as jnp ops fused by XLA.
+    """
+    squeeze = q.ndim == 1
+    qb = q[None, :] if squeeze else q
+    scores = bacam_scores_padded(qb, k, cam_h=group, adc_bits=adc_bits)
+    mask = ref.two_stage_topk_mask(scores, group, stage1_k, final_k)
+    a_hat = ref.lut_softmax(scores, mask, q.shape[-1])
+    out = (a_hat.astype(jnp.bfloat16) @ v.astype(jnp.bfloat16)).astype(jnp.float32)
+    return out[0] if squeeze else out

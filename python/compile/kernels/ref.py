@@ -1,0 +1,204 @@
+"""Pure-jnp reference oracles for CAMformer attention.
+
+These are the CORE correctness signal: the Pallas kernel
+(:mod:`compile.kernels.ba_cam`), the L2 model and the Rust functional model
+(``rust/src/accuracy/``) are all validated against these functions.
+
+The reference chain mirrors the paper's datapath (Sec. II-III):
+
+    binarise(Q, K)  ->  BA-CAM scores (Hamming similarity, analog voltage)
+                    ->  6-bit SAR ADC   (s = 2*ADC(v) - CAM_W, Sec. II-B1)
+                    ->  two-stage top-k (top-k1 per group of g, then Top-K)
+                    ->  LUT softmax     (exp(x/sqrt(d_k)))
+                    ->  BF16 sparse contextualization (A_hat @ V)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Matches the paper's 16x64 BA-CAM array (Sec. III-B1).
+CAM_H = 16  # keys per tile == stage-1 group size g
+CAM_W = 64  # bits per row == d_k
+ADC_BITS = 6
+
+
+def binarize(x: jnp.ndarray) -> jnp.ndarray:
+    """Sign-binarise to {-1, +1} (HAD-style Q/K binarisation).
+
+    Zero maps to +1 so the output is always full-scale binary.
+    """
+    return jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+
+
+def matchline_voltage(q_bits: jnp.ndarray, k_bits: jnp.ndarray) -> jnp.ndarray:
+    """Analog matchline voltage in [0, 1]: fraction of matching bits.
+
+    ``q_bits``: (d_k,) in {-1,+1}; ``k_bits``: (N, d_k) in {-1,+1}.
+    Each matching bit leaves one precharged 22 fF capacitor high, so after
+    charge sharing V_ML = matches / d_k (Fig. 2 / Fig. 3a).
+    """
+    d_k = q_bits.shape[-1]
+    dot = k_bits @ q_bits  # in [-d_k, d_k]; dot = 2*matches - d_k
+    matches = (dot + d_k) / 2.0
+    return matches / d_k
+
+
+def adc_quantize(v: jnp.ndarray, d_k: int, bits: int = ADC_BITS) -> jnp.ndarray:
+    """6-bit SAR ADC + fixed multiply-subtract: V_ML in [0,1] -> signed score
+    ``s = 2*ADC(v) - CAM_W`` mapping [0,1] -> [-d_k, d_k] (Sec. II-B1).
+
+    With ``bits`` = 6 and d_k = 64 the ADC resolves every possible match
+    count, so quantisation is exact ("ADC precision covers the full match
+    range", Sec. III-B1). For d_k > 2**bits the score quantises.
+    """
+    levels = 2**bits  # SAR codes span the full match range [0, d_k]
+    code = jnp.clip(jnp.round(v * levels), 0, levels)
+    matches = code * (d_k / levels)  # code -> match count
+    return 2.0 * matches - d_k
+
+
+def bacam_scores(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    adc_bits: int = ADC_BITS,
+    noise_sigma: float = 0.0,
+    noise_key: jax.Array | None = None,
+) -> jnp.ndarray:
+    """Full BA-CAM association path: binarise -> matchline -> ADC.
+
+    ``q``: (..., d_k) real-valued; ``k``: (N, d_k) real-valued.
+    Returns signed quantised scores (..., N) in [-d_k, d_k].
+    ``noise_sigma`` adds Gaussian matchline voltage noise (PVT model,
+    Fig. 3b; the paper simulates sigma = 1.4%).
+    """
+    d_k = q.shape[-1]
+    qb = binarize(q)
+    kb = binarize(k)
+    v = (qb @ kb.T + d_k) / (2.0 * d_k)  # matchline voltage in [0, 1]
+    if noise_sigma > 0.0:
+        assert noise_key is not None, "noise_sigma > 0 requires noise_key"
+        v = v + noise_sigma * jax.random.normal(noise_key, v.shape, v.dtype)
+        v = jnp.clip(v, 0.0, 1.0)
+    return adc_quantize(v, d_k, adc_bits)
+
+
+def bacam_scores_tiled(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    cam_w: int = CAM_W,
+    adc_bits: int = ADC_BITS,
+) -> jnp.ndarray:
+    """BA-CAM scores with *per-tile* ADC quantisation — the exact hardware
+    model for d_k > CAM_W (Fig. 4 vertical tiling + accumulation register).
+
+    Each CAM_W-wide tile's matchline voltage is digitised by its own 6-bit
+    SAR conversion; the signed tile scores are then accumulated digitally.
+    For d_k <= CAM_W this equals :func:`bacam_scores`.
+    """
+    d_k = q.shape[-1]
+    assert d_k % cam_w == 0, f"d_k={d_k} not a multiple of CAM_W={cam_w}"
+    qb = binarize(q)
+    kb = binarize(k)
+    total = jnp.zeros(q.shape[:-1] + (k.shape[0],), q.dtype)
+    for t in range(d_k // cam_w):
+        sl = slice(t * cam_w, (t + 1) * cam_w)
+        v = (qb[..., sl] @ kb[:, sl].T + cam_w) / (2.0 * cam_w)
+        total = total + adc_quantize(v, cam_w, adc_bits)
+    return total
+
+
+def _topk_mask_lastaxis(scores: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Boolean mask keeping exactly the k largest entries of the last axis
+    (ties broken toward lower indices, matching a stable hardware sorter)."""
+    order = jnp.argsort(-scores, axis=-1, stable=True)
+    ranks = jnp.argsort(order, axis=-1, stable=True)
+    return ranks < k
+
+
+def two_stage_topk_mask(
+    scores: jnp.ndarray, group: int = CAM_H, stage1_k: int = 2, final_k: int = 32
+) -> jnp.ndarray:
+    """Hierarchical two-stage top-k (Sec. III-C4).
+
+    Stage 1 keeps the top ``stage1_k`` per contiguous ``group`` of keys (the
+    bitonic Top-2 per 16-key CAM tile); everything else is dropped. Stage 2
+    keeps the global top ``final_k`` among stage-1 survivors (the 64-input
+    bitonic Top-32 block). Returns a boolean mask over the last axis.
+    """
+    *lead, n = scores.shape
+    assert n % group == 0, f"N={n} must be a multiple of group={group}"
+    g = n // group
+    tiled = scores.reshape(*lead, g, group)
+    survive = _topk_mask_lastaxis(tiled, stage1_k).reshape(*lead, n)
+    masked = jnp.where(survive, scores, -jnp.inf)
+    keep = _topk_mask_lastaxis(masked, final_k) & survive
+    return keep
+
+
+def single_stage_topk_mask(scores: jnp.ndarray, final_k: int = 32) -> jnp.ndarray:
+    """HAD-style single-stage global Top-k mask (Tables III/IV baseline)."""
+    return _topk_mask_lastaxis(scores, final_k)
+
+
+def lut_softmax(scores: jnp.ndarray, mask: jnp.ndarray, d_k: int) -> jnp.ndarray:
+    """Softmax over masked (top-k) scores with the paper's 1/sqrt(d_k) scale.
+
+    The Normalization stage computes exp(x / sqrt(d_k)) via a 512 B LUT and
+    normalises with one BF16 accumulator + one BF16 divider (Sec. III-B2).
+    Masked-out entries get probability 0; kept entries sum to 1.
+    """
+    x = scores / jnp.sqrt(jnp.asarray(d_k, scores.dtype))
+    x = jnp.where(mask, x, -jnp.inf)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    e = jnp.where(mask, e, 0.0)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def camformer_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    group: int = CAM_H,
+    stage1_k: int = 2,
+    final_k: int = 32,
+    adc_bits: int = ADC_BITS,
+) -> jnp.ndarray:
+    """Eq. 1: SoftMax(Top-32(QK^T)) . V through the full CAMformer datapath.
+
+    ``q``: (d_k,) or (B, d_k); ``k``: (N, d_k); ``v``: (N, d_v).
+    Contextualization runs in BF16 (Sec. III-B3); the result is returned
+    as float32 holding BF16-valued numbers.
+    """
+    scores = bacam_scores(q, k, adc_bits)
+    mask = two_stage_topk_mask(scores, group, stage1_k, final_k)
+    a_hat = lut_softmax(scores, mask, q.shape[-1])
+    out = a_hat.astype(jnp.bfloat16) @ v.astype(jnp.bfloat16)
+    return out.astype(jnp.float32)
+
+
+def single_stage_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    final_k: int = 32,
+    adc_bits: int = ADC_BITS,
+) -> jnp.ndarray:
+    """HAD-style single-stage Top-k binary attention (Tables III/IV baseline)."""
+    scores = bacam_scores(q, k, adc_bits)
+    mask = single_stage_topk_mask(scores, final_k)
+    a_hat = lut_softmax(scores, mask, q.shape[-1])
+    out = a_hat.astype(jnp.bfloat16) @ v.astype(jnp.bfloat16)
+    return out.astype(jnp.float32)
+
+
+def exact_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Dense FP32 softmax attention (the un-accelerated oracle)."""
+    d_k = q.shape[-1]
+    scores = (q @ k.T) / jnp.sqrt(jnp.asarray(d_k, q.dtype))
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    a = e / jnp.sum(e, axis=-1, keepdims=True)
+    return a @ v

@@ -1,0 +1,203 @@
+"""Layer 2 — JAX model definitions built on the BA-CAM kernel.
+
+A small-but-real transformer encoder whose attention can run in three modes:
+
+* ``exact``        — dense FP32 softmax attention (the oracle),
+* ``single_stage`` — HAD-style binarised Q/K + global Top-k (the paper's
+                     accuracy baseline in Tables III/IV),
+* ``camformer``    — Eq. 1: BA-CAM scores (Pallas kernel) + hierarchical
+                     two-stage top-k + LUT softmax + BF16 contextualization.
+
+This is the model the end-to-end example trains, the accuracy tables sweep,
+and ``aot.py`` lowers to HLO text for the Rust runtime.  Python never runs
+on the request path: everything here exists only at compile time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ba_cam, ref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Hyper-parameters for the tiny CAMformer-attention transformer."""
+
+    vocab: int = 82  # data.VOCAB for the associative-retrieval corpus
+    seq_len: int = 512
+    d_model: int = 64
+    n_heads: int = 1  # d_k = d_model / n_heads; CAM-friendly d_k = 64
+    n_layers: int = 2
+    d_ff: int = 128
+    n_classes: int = 4
+    attention: str = "exact"  # exact | single_stage | camformer
+    group: int = ref.CAM_H
+    stage1_k: int = 2
+    final_k: int = 32
+    adc_bits: int = ref.ADC_BITS
+    use_pallas: bool = False  # camformer scores via the Pallas kernel
+    # The associative-retrieval task is position-free (content-addressable
+    # by construction), so positional embeddings default off — which also
+    # makes trained weights sequence-length agnostic (curriculum training).
+    use_pos: bool = False
+
+    @property
+    def d_k(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict[str, Any]:
+    """Initialise all weights (Xavier-ish scaling, deterministic in key)."""
+    ks = iter(jax.random.split(key, 4 + 8 * cfg.n_layers))
+
+    def dense(kk, fan_in, fan_out):
+        w = jax.random.normal(kk, (fan_in, fan_out), jnp.float32)
+        return w * (2.0 / (fan_in + fan_out)) ** 0.5
+
+    params: dict[str, Any] = {
+        "embed": jax.random.normal(next(ks), (cfg.vocab, cfg.d_model)) * 0.02,
+        "pos": jax.random.normal(next(ks), (cfg.seq_len, cfg.d_model)) * 0.02,
+        "head_w": dense(next(ks), cfg.d_model, cfg.n_classes),
+        "head_b": jnp.zeros((cfg.n_classes,)),
+        "layers": [],
+    }
+    for _ in range(cfg.n_layers):
+        params["layers"].append(
+            {
+                "wq": dense(next(ks), cfg.d_model, cfg.d_model),
+                "wk": dense(next(ks), cfg.d_model, cfg.d_model),
+                "wv": dense(next(ks), cfg.d_model, cfg.d_model),
+                "wo": dense(next(ks), cfg.d_model, cfg.d_model),
+                "w1": dense(next(ks), cfg.d_model, cfg.d_ff),
+                "b1": jnp.zeros((cfg.d_ff,)),
+                "w2": dense(next(ks), cfg.d_ff, cfg.d_model),
+                "b2": jnp.zeros((cfg.d_model,)),
+                "ln1_g": jnp.ones((cfg.d_model,)),
+                "ln1_b": jnp.zeros((cfg.d_model,)),
+                "ln2_g": jnp.ones((cfg.d_model,)),
+                "ln2_b": jnp.zeros((cfg.d_model,)),
+            }
+        )
+    return params
+
+
+def _layer_norm(x: jnp.ndarray, g: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    mu = jnp.mean(x, -1, keepdims=True)
+    var = jnp.var(x, -1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-5) * g + b
+
+
+def ste_binarize(x: jnp.ndarray) -> jnp.ndarray:
+    """Straight-through sign binarisation: forward = sign(x), backward =
+    identity — the HAD training trick that makes Q/K binarisation
+    learnable."""
+    b = jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+    return x + jax.lax.stop_gradient(b - x)
+
+
+def binary_ste_attention(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, final_k: int
+) -> jnp.ndarray:
+    """Differentiable binarised top-k attention for HAD-style fine-tuning.
+
+    Forward numerics match the single-stage CAMformer path at d_k <= 64
+    (exact ADC); gradients flow through the STE and the kept scores."""
+    d_k = q.shape[-1]
+    qb = ste_binarize(q)
+    kb = ste_binarize(k)
+    scores = qb @ kb.T
+    # threshold-based top-k (argsort-rank masks hit a jax gather-batching
+    # limitation under grad+vmap); ties may admit a few extra keys, which
+    # is harmless for training
+    kth = jax.lax.stop_gradient(jax.lax.top_k(scores, final_k)[0][..., -1:])
+    mask = scores >= kth
+    x = jnp.where(mask, scores / jnp.sqrt(jnp.asarray(d_k, q.dtype)), -jnp.inf)
+    a = jax.nn.softmax(x, axis=-1)
+    a = jnp.where(mask, a, 0.0)
+    return a @ v
+
+
+def attention(cfg: ModelConfig, q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Single-head attention dispatch over (S, d_k) tensors."""
+    if cfg.attention == "exact":
+        return ref.exact_attention(q, k, v)
+    if cfg.attention == "binary_ste":
+        return binary_ste_attention(q, k, v, cfg.final_k)
+    if cfg.attention == "single_stage":
+        return ref.single_stage_attention(q, k, v, cfg.final_k, cfg.adc_bits)
+    if cfg.attention == "camformer":
+        if cfg.use_pallas:
+            return ba_cam.camformer_attention_pallas(
+                q, k, v, cfg.group, cfg.stage1_k, cfg.final_k, cfg.adc_bits
+            )
+        return ref.camformer_attention(
+            q, k, v, cfg.group, cfg.stage1_k, cfg.final_k, cfg.adc_bits
+        )
+    raise ValueError(f"unknown attention mode {cfg.attention!r}")
+
+
+def mha(cfg: ModelConfig, lp: dict[str, Any], x: jnp.ndarray) -> jnp.ndarray:
+    """Multi-head attention over (S, d_model) with the configured score path."""
+    s, d = x.shape
+    h, dk = cfg.n_heads, cfg.d_k
+    q = (x @ lp["wq"]).reshape(s, h, dk)
+    k = (x @ lp["wk"]).reshape(s, h, dk)
+    v = (x @ lp["wv"]).reshape(s, h, dk)
+    outs = [attention(cfg, q[:, i, :], k[:, i, :], v[:, i, :]) for i in range(h)]
+    o = jnp.concatenate([o.reshape(s, dk) for o in outs], axis=-1)
+    return o @ lp["wo"]
+
+
+def encoder_layer(cfg: ModelConfig, lp: dict[str, Any], x: jnp.ndarray) -> jnp.ndarray:
+    """Pre-LN transformer block: x + MHA(LN(x)); x + FF(LN(x))."""
+    a = mha(cfg, lp, _layer_norm(x, lp["ln1_g"], lp["ln1_b"]))
+    x = x + a
+    hdn = jax.nn.gelu(_layer_norm(x, lp["ln2_g"], lp["ln2_b"]) @ lp["w1"] + lp["b1"])
+    return x + hdn @ lp["w2"] + lp["b2"]
+
+
+def forward(cfg: ModelConfig, params: dict[str, Any], tokens: jnp.ndarray) -> jnp.ndarray:
+    """Token ids (S,) int32 -> class logits (n_classes,)."""
+    x = params["embed"][tokens]
+    if cfg.use_pos:
+        x = x + params["pos"][: tokens.shape[0]]
+    for lp in params["layers"]:
+        x = encoder_layer(cfg, lp, x)
+    # readout at the probe position (the last token asks the question —
+    # Fig. 1's "query unlocks the stored value")
+    pooled = x[-1]
+    return pooled @ params["head_w"] + params["head_b"]
+
+
+def forward_batch(cfg: ModelConfig, params: dict[str, Any], tokens: jnp.ndarray) -> jnp.ndarray:
+    """(B, S) int32 -> (B, n_classes)."""
+    return jax.vmap(lambda t: forward(cfg, params, t))(tokens)
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def loss_fn(cfg: ModelConfig, params, tokens, labels) -> jnp.ndarray:
+    logits = forward_batch(cfg, params, tokens)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+
+
+def attn_single_query(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    group: int = ref.CAM_H,
+    stage1_k: int = 2,
+    final_k: int = 32,
+    use_pallas: bool = True,
+) -> jnp.ndarray:
+    """The serving hot path lowered for the Rust coordinator: one query
+    against the full key/value memory (batch = 1, Sec. III-B1)."""
+    fn = ba_cam.camformer_attention_pallas if use_pallas else ref.camformer_attention
+    return fn(q, k, v, group, stage1_k, final_k)

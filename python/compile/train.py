@@ -1,0 +1,199 @@
+"""Train the tiny associative-retrieval transformer (build time only).
+
+Trains with *exact* attention, then the accuracy harness (Tables III/IV
+analogue) re-evaluates the same weights under single-stage and two-stage
+CAMformer attention — the post-training-binarisation protocol HAD uses,
+minus the distillation fine-tune we cannot afford at build time.
+
+Run as a module:  cd python && python -m compile.train --out ../artifacts
+
+Artifacts written:
+  params.npz      — trained weights (flat {path: array})
+  train_log.tsv   — step, loss, eval accuracy (the loss curve for
+                    EXPERIMENTS.md's end-to-end validation record)
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data, model
+
+
+def flatten_params(params, prefix=""):
+    """dict/list tree -> flat {dotted.path: np.ndarray}."""
+    out = {}
+    if isinstance(params, dict):
+        items = params.items()
+    elif isinstance(params, list):
+        items = ((str(i), v) for i, v in enumerate(params))
+    else:
+        return {prefix.rstrip("."): np.asarray(params)}
+    for name, v in items:
+        out.update(flatten_params(v, f"{prefix}{name}."))
+    return out
+
+
+def unflatten_params(flat: dict) -> dict:
+    """Inverse of :func:`flatten_params` (lists detected by integer keys)."""
+    tree: dict = {}
+    for path, v in flat.items():
+        parts = path.split(".")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = jnp.asarray(v)
+
+    def fix(node):
+        if not isinstance(node, dict):
+            return node
+        if node and all(k.isdigit() for k in node):
+            return [fix(node[str(i)]) for i in range(len(node))]
+        return {k: fix(v) for k, v in node.items()}
+
+    return fix(tree)
+
+
+def evaluate(cfg, params, eval_set) -> float:
+    correct = total = 0
+    for toks, labels in eval_set:
+        logits = model.forward_batch(cfg, params, toks)
+        correct += int(jnp.sum(jnp.argmax(logits, -1) == labels))
+        total += labels.shape[0]
+    return correct / total
+
+
+def adam_step(params, grads, state, lr: float, clip: float = 1.0,
+              b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8):
+    """Adam with global-norm gradient clipping (hand-rolled; no optax dep).
+
+    ``state`` is {"t": int, "m": {path: arr}, "v": {path: arr}}.
+    """
+    flat_p = flatten_params(params)
+    flat_g = {k: np.asarray(v, dtype=np.float64) for k, v in flatten_params(grads).items()}
+    gnorm = float(np.sqrt(sum((g**2).sum() for g in flat_g.values())))
+    scale = min(1.0, clip / max(gnorm, 1e-12))
+    t = state.get("t", 0) + 1
+    m, v = state.get("m", {}), state.get("v", {})
+    new_p = {}
+    for k, g in flat_g.items():
+        g = g * scale
+        m[k] = b1 * m.get(k, 0.0) + (1 - b1) * g
+        v[k] = b2 * v.get(k, 0.0) + (1 - b2) * g * g
+        mhat = m[k] / (1 - b1**t)
+        vhat = v[k] / (1 - b2**t)
+        new_p[k] = np.asarray(flat_p[k]) - lr * mhat / (np.sqrt(vhat) + eps)
+    return unflatten_params({k: v.astype(np.float32) for k, v in new_p.items()}), {
+        "t": t, "m": m, "v": v,
+    }
+
+
+def train(
+    cfg: model.ModelConfig,
+    steps: int = 300,
+    batch: int = 16,
+    lr: float = 1e-3,
+    seed: int = 0,
+    log=print,
+    params=None,
+    step_offset: int = 0,
+):
+    """Train and return (params, [(step, loss, acc)...]).
+
+    ``params`` continues training from existing weights (curriculum)."""
+    key = jax.random.PRNGKey(seed)
+    pkey, dkey, ekey = jax.random.split(key, 3)
+    if params is None:
+        params = model.init_params(cfg, pkey)
+    eval_set = data.make_eval_set(ekey, 8, 32, cfg.seq_len, cfg.vocab, cfg.n_classes)
+
+    grad_fn = jax.jit(
+        jax.value_and_grad(lambda p, t, l: model.loss_fn(cfg, p, t, l)),
+    )
+    opt_state: dict = {}
+    history = []
+    t0 = time.time()
+    for step in range(1, steps + 1):
+        dkey, bkey = jax.random.split(dkey)
+        toks, labels = data.make_batch(bkey, batch, cfg.seq_len, cfg.vocab, cfg.n_classes)
+        loss, grads = grad_fn(params, toks, labels)
+        params, opt_state = adam_step(params, grads, opt_state, lr)
+        if step % 25 == 0 or step == 1:
+            acc = evaluate(cfg, params, eval_set)
+            history.append((step + step_offset, float(loss), acc))
+            log(f"step {step + step_offset:4d}  loss {float(loss):.4f}  eval_acc {acc:.3f}  ({time.time()-t0:.0f}s)")
+    return params, history
+
+
+def train_curriculum(
+    cfg: model.ModelConfig,
+    stages: list[tuple[int, int]] | None = None,
+    batch: int = 32,
+    lr: float = 1e-3,
+    seed: int = 0,
+    log=print,
+):
+    """Curriculum: the position-free model trains fast on short sequences,
+    then fine-tunes at the target length. Returns (params, history)."""
+    assert not cfg.use_pos, "curriculum requires the position-free model"
+    if stages is None:
+        # exact-attention pretraining, then HAD-style binarisation-aware
+        # fine-tuning (STE) so binary top-k attention retains accuracy
+        stages = [
+            (64, 400, "exact"),
+            (128, 200, "exact"),
+            (128, 300, "binary_ste"),
+            (cfg.seq_len, 150, "binary_ste"),
+        ]
+    params, history = None, []
+    offset = 0
+    for stage in stages:
+        seq_len, steps = stage[0], stage[1]
+        mode = stage[2] if len(stage) > 2 else cfg.attention
+        stage_cfg = dataclasses.replace(cfg, seq_len=seq_len, attention=mode)
+        log(f"-- curriculum stage: seq_len={seq_len}, steps={steps}, attention={mode} --")
+        params, h = train(
+            stage_cfg, steps=steps, batch=batch, lr=lr, seed=seed,
+            log=log, params=params, step_offset=offset,
+        )
+        history.extend(h)
+        offset += steps
+    return params, history
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq-len", type=int, default=512)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = model.ModelConfig(seq_len=args.seq_len, attention="exact")
+    os.makedirs(args.out, exist_ok=True)
+    params, history = train_curriculum(
+        cfg,
+        stages=None,
+        batch=32,
+        seed=args.seed,
+    )
+
+    flat = flatten_params(params)
+    np.savez(os.path.join(args.out, "params.npz"), **flat)
+    with open(os.path.join(args.out, "train_log.tsv"), "w") as f:
+        f.write("step\tloss\teval_acc\n")
+        for step, loss, acc in history:
+            f.write(f"{step}\t{loss:.6f}\t{acc:.4f}\n")
+    print(f"saved {len(flat)} tensors to {args.out}/params.npz")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,201 @@
+"""Oracle invariants for the pure-jnp reference datapath (ref.py)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+
+
+def randn(shape, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape)
+
+
+class TestBinarize:
+    def test_values_are_pm_one(self):
+        x = randn((32, 64))
+        b = ref.binarize(x)
+        assert bool(jnp.all((b == 1.0) | (b == -1.0)))
+
+    def test_zero_maps_to_plus_one(self):
+        assert float(ref.binarize(jnp.zeros((1,)))[0]) == 1.0
+
+    def test_idempotent(self):
+        x = randn((16, 16), 1)
+        b = ref.binarize(x)
+        assert bool(jnp.all(ref.binarize(b) == b))
+
+
+class TestMatchlineVoltage:
+    def test_range(self):
+        q = ref.binarize(randn((64,), 2))
+        k = ref.binarize(randn((128, 64), 3))
+        v = ref.matchline_voltage(q, k)
+        assert bool(jnp.all((v >= 0) & (v <= 1)))
+
+    def test_full_match_is_one(self):
+        q = ref.binarize(randn((64,), 4))
+        v = ref.matchline_voltage(q, q[None, :])
+        assert float(v[0]) == 1.0
+
+    def test_full_mismatch_is_zero(self):
+        q = ref.binarize(randn((64,), 5))
+        v = ref.matchline_voltage(q, -q[None, :])
+        assert float(v[0]) == 0.0
+
+    def test_single_bit_flip_steps_by_one_over_dk(self):
+        q = ref.binarize(randn((64,), 6))
+        k = q.at[3].set(-q[3])[None, :]
+        v = ref.matchline_voltage(q, k)
+        np.testing.assert_allclose(float(v[0]), 63 / 64, rtol=1e-6)
+
+
+class TestAdcQuantize:
+    def test_exact_for_dk64_6bit(self):
+        # 6-bit SAR covers the full match range at d_k=64 (Sec. III-B1):
+        # every possible match count maps to itself.
+        for matches in range(65):
+            v = jnp.asarray(matches / 64.0)
+            s = ref.adc_quantize(v, 64, 6)
+            assert float(s) == 2 * matches - 64
+
+    def test_score_range(self):
+        v = jnp.linspace(0, 1, 101)
+        s = ref.adc_quantize(v, 64, 6)
+        assert bool(jnp.all((s >= -64) & (s <= 64)))
+
+    def test_monotone(self):
+        v = jnp.linspace(0, 1, 1001)
+        s = np.asarray(ref.adc_quantize(v, 64, 6))
+        assert (np.diff(s) >= 0).all()
+
+    @pytest.mark.parametrize("bits", [4, 5, 6, 8])
+    def test_quantization_error_bound(self, bits):
+        # |error| <= half an LSB of the match range
+        v = jnp.linspace(0, 1, 777)
+        s = ref.adc_quantize(v, 64, bits)
+        ideal = 2 * (v * 64) - 64
+        lsb = 2 * 64 / 2**bits
+        assert float(jnp.max(jnp.abs(s - ideal))) <= lsb / 2 + 1e-5
+
+
+class TestBacamScores:
+    def test_matches_integer_dot_for_dk64(self):
+        q = randn((8, 64), 7)
+        k = randn((256, 64), 8)
+        s = ref.bacam_scores(q, k)
+        exact = ref.binarize(q) @ ref.binarize(k).T
+        np.testing.assert_array_equal(np.asarray(s), np.asarray(exact))
+
+    def test_tiled_equals_flat_when_dk_eq_camw(self):
+        q, k = randn((4, 64), 9), randn((32, 64), 10)
+        np.testing.assert_array_equal(
+            np.asarray(ref.bacam_scores(q, k)),
+            np.asarray(ref.bacam_scores_tiled(q, k)),
+        )
+
+    def test_tiled_dk128_exact(self):
+        # per-tile 6-bit ADC at CAM_W=64 is lossless, so the tiled sum is
+        # the exact binary dot product even for d_k=128
+        q, k = randn((4, 128), 11), randn((64, 128), 12)
+        s = ref.bacam_scores_tiled(q, k)
+        exact = ref.binarize(q) @ ref.binarize(k).T
+        np.testing.assert_array_equal(np.asarray(s), np.asarray(exact))
+
+    def test_noise_changes_scores(self):
+        q, k = randn((2, 64), 13), randn((64, 64), 14)
+        s0 = ref.bacam_scores(q, k)
+        s1 = ref.bacam_scores(q, k, noise_sigma=0.05, noise_key=jax.random.PRNGKey(0))
+        assert not bool(jnp.all(s0 == s1))
+        assert bool(jnp.all(jnp.abs(s1) <= 64))
+
+
+class TestTwoStageTopK:
+    def test_mask_count(self):
+        s = ref.bacam_scores(randn((1024, 64), 15)[:1], randn((1024, 64), 16))
+        m = ref.two_stage_topk_mask(s, 16, 2, 32)
+        assert int(jnp.sum(m)) == 32
+
+    def test_all_survive_when_candidates_le_final(self):
+        # N/group*stage1_k <= final_k: stage 2 keeps every candidate
+        s = ref.bacam_scores(randn((1, 64), 17), randn((128, 64), 18))
+        m = ref.two_stage_topk_mask(s, 16, 2, 32)
+        assert int(jnp.sum(m)) == 16  # 8 tiles * top-2
+
+    def test_single_stage_recovered_with_group_eq_n(self):
+        s = ref.bacam_scores(randn((1, 64), 19), randn((256, 64), 20))
+        two = ref.two_stage_topk_mask(s, group=256, stage1_k=32, final_k=32)
+        one = ref.single_stage_topk_mask(s, 32)
+        np.testing.assert_array_equal(np.asarray(two), np.asarray(one))
+
+    def test_stage1_keeps_per_tile_top(self):
+        s = jnp.arange(64.0)[None, :]  # strictly increasing
+        m = ref.two_stage_topk_mask(s, group=16, stage1_k=2, final_k=4)
+        # per-tile top-2 = indices 14,15 / 30,31 / 46,47 / 62,63; global top-4
+        kept = set(np.where(np.asarray(m)[0])[0].tolist())
+        assert kept == {62, 63, 46, 47}
+
+    def test_kept_entries_dominate_dropped_within_tile(self):
+        s = ref.bacam_scores(randn((1, 64), 21), randn((512, 64), 22))
+        m = np.asarray(ref.two_stage_topk_mask(s, 16, 2, 32))[0]
+        sv = np.asarray(s)[0]
+        for t in range(512 // 16):
+            tile = slice(16 * t, 16 * (t + 1))
+            kept = sv[tile][m[tile]]
+            dropped = sv[tile][~m[tile]]
+            if kept.size and dropped.size:
+                assert kept.min() >= dropped.max() - 1e-6
+
+
+class TestLutSoftmax:
+    def test_probabilities(self):
+        s = ref.bacam_scores(randn((4, 64), 23), randn((256, 64), 24))
+        m = ref.two_stage_topk_mask(s)
+        a = ref.lut_softmax(s, m, 64)
+        np.testing.assert_allclose(np.asarray(jnp.sum(a, -1)), 1.0, rtol=1e-5)
+        assert bool(jnp.all(a >= 0))
+        assert bool(jnp.all(jnp.where(m, True, a == 0)))
+
+    def test_uniform_when_scores_equal(self):
+        s = jnp.full((1, 64), 10.0)
+        m = ref.single_stage_topk_mask(s, 8)
+        a = ref.lut_softmax(s, m, 64)
+        np.testing.assert_allclose(np.asarray(a[m]), 1 / 8, rtol=1e-5)
+
+
+class TestEndToEnd:
+    def test_output_shape(self):
+        q, k, v = randn((64,), 25), randn((256, 64), 26), randn((256, 64), 27)
+        out = ref.camformer_attention(q, k, v)
+        assert out.shape == (64,)
+
+    def test_batched(self):
+        q, k, v = randn((8, 64), 28), randn((256, 64), 29), randn((256, 64), 30)
+        out = ref.camformer_attention(q, k, v)
+        assert out.shape == (8, 64)
+
+    def test_convex_combination_bound(self):
+        # output is a convex combination of V rows (bf16 rounding slack)
+        q, k, v = randn((64,), 31), randn((256, 64), 32), randn((256, 64), 33)
+        out = ref.camformer_attention(q, k, v)
+        assert float(jnp.max(out)) <= float(jnp.max(v)) + 0.05
+        assert float(jnp.min(out)) >= float(jnp.min(v)) - 0.05
+
+    def test_two_stage_close_to_single_stage(self):
+        # k1=2, g=16 keeps Tables III/IV deltas small; outputs should agree
+        # on most coordinates for generic gaussian data
+        q, k, v = randn((16, 64), 34), randn((1024, 64), 35), randn((1024, 64), 36)
+        two = ref.camformer_attention(q, k, v)
+        one = ref.single_stage_attention(q, k, v)
+        # cosine similarity per row
+        num = jnp.sum(two * one, -1)
+        den = jnp.linalg.norm(two, axis=-1) * jnp.linalg.norm(one, axis=-1)
+        assert float(jnp.min(num / den)) > 0.75
+
+    def test_exact_attention_is_softmax(self):
+        q, k, v = randn((4, 16), 37), randn((32, 16), 38), randn((32, 8), 39)
+        out = ref.exact_attention(q, k, v)
+        # reference softmax computed independently
+        a = jax.nn.softmax((q @ k.T) / jnp.sqrt(16.0), axis=-1)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(a @ v), rtol=1e-5)

@@ -1,0 +1,487 @@
+//! The CAMformer attention datapath in pure Rust — Eq. 1 end to end.
+//!
+//! This is the behavioural twin of `python/compile/kernels/ref.py`; the
+//! runtime integration tests assert the PJRT-executed Pallas artifacts,
+//! this model and the jnp oracle all agree. It is also the model the
+//! coordinator uses for golden checks on the serving path.
+
+use crate::util::bf16;
+
+/// Attention configuration (paper defaults via [`AttnConfig::paper`]).
+#[derive(Clone, Copy, Debug)]
+pub struct AttnConfig {
+    pub n: usize,
+    pub d_k: usize,
+    /// Stage-1 group size g (= CAM_H).
+    pub group: usize,
+    /// Stage-1 top-k per group (the bitonic Top-2).
+    pub stage1_k: usize,
+    /// Final top-k (the Top-32 block).
+    pub final_k: usize,
+    pub adc_bits: u32,
+}
+
+impl AttnConfig {
+    /// Eq. 1 defaults: g=16, top-2 per tile, Top-32 overall, 6-bit ADC.
+    pub fn paper(n: usize, d_k: usize) -> Self {
+        AttnConfig {
+            n,
+            d_k,
+            group: 16,
+            stage1_k: 2,
+            final_k: 32,
+            adc_bits: 6,
+        }
+    }
+}
+
+/// Sign-binarise to ±1 (zero maps to +1, matching ref.binarize).
+pub fn binarize(x: &[f32]) -> Vec<f32> {
+    x.iter().map(|&v| if v >= 0.0 { 1.0 } else { -1.0 }).collect()
+}
+
+/// BA-CAM association scores: binarise -> matchline -> 6-bit ADC.
+/// `q`: d_k reals; `k`: row-major N x d_k. Output: N signed scores.
+pub fn bacam_scores(q: &[f32], k: &[f32], d_k: usize) -> Vec<f64> {
+    bacam_scores_cfg(q, k, d_k, 6)
+}
+
+/// As [`bacam_scores`] with explicit ADC resolution. One-shot hot path;
+/// when the same K is scored repeatedly, use [`PackedKeys`] instead.
+pub fn bacam_scores_cfg(q: &[f32], k: &[f32], d_k: usize, adc_bits: u32) -> Vec<f64> {
+    assert_eq!(q.len(), d_k);
+    assert_eq!(k.len() % d_k, 0);
+    let n = k.len() / d_k;
+    // branchless match count: one u8 equality per element, which the
+    // autovectoriser turns into SIMD lanes (§Perf iteration 2 — the
+    // per-call bit-packing of iteration 1 cost more than it saved)
+    let q_sign: Vec<u8> = q.iter().map(|&x| (x >= 0.0) as u8).collect();
+    let mut out = Vec::with_capacity(n);
+    for r in 0..n {
+        let row = &k[r * d_k..(r + 1) * d_k];
+        let mut matches = 0u32;
+        for (qs, &kv) in q_sign.iter().zip(row) {
+            matches += (*qs == (kv >= 0.0) as u8) as u32;
+        }
+        out.push(quantize_matches(matches, d_k, adc_bits));
+    }
+    out
+}
+
+/// Shared SAR + multiply-subtract on an integer match count.
+#[inline]
+fn quantize_matches(matches: u32, d_k: usize, adc_bits: u32) -> f64 {
+    let levels = (1u32 << adc_bits) as f64;
+    let dot = 2.0 * matches as f64 - d_k as f64;
+    let v = (dot + d_k as f64) / (2.0 * d_k as f64);
+    let code = (v * levels).round().clamp(0.0, levels);
+    2.0 * code * (d_k as f64 / levels) - d_k as f64
+}
+
+/// Sign-packed key memory: pack K once, score many queries with one
+/// XNOR+popcount per 64 bits (§Perf iteration 3 — the serving path
+/// reuses K across every request, so packing amortises to zero).
+pub struct PackedKeys {
+    pub n: usize,
+    pub d_k: usize,
+    words: usize,
+    tail_mask: u64,
+    bits: Vec<u64>, // row-major n x words
+}
+
+impl PackedKeys {
+    pub fn new(k: &[f32], d_k: usize) -> Self {
+        assert_eq!(k.len() % d_k, 0);
+        let n = k.len() / d_k;
+        let words = d_k.div_ceil(64);
+        let mut bits = vec![0u64; n * words];
+        for r in 0..n {
+            pack_signs_into(&k[r * d_k..(r + 1) * d_k], &mut bits[r * words..(r + 1) * words]);
+        }
+        PackedKeys {
+            n,
+            d_k,
+            words,
+            tail_mask: if d_k % 64 == 0 { u64::MAX } else { (1u64 << (d_k % 64)) - 1 },
+            bits,
+        }
+    }
+
+    /// Scores for one query against the packed memory.
+    pub fn scores(&self, q: &[f32], adc_bits: u32) -> Vec<f64> {
+        assert_eq!(q.len(), self.d_k);
+        let qp = pack_signs(q, self.words);
+        let mut out = Vec::with_capacity(self.n);
+        for r in 0..self.n {
+            let row = &self.bits[r * self.words..(r + 1) * self.words];
+            let mut matches = 0u32;
+            for w in 0..self.words {
+                let mut eq = !(qp[w] ^ row[w]);
+                if w == self.words - 1 {
+                    eq &= self.tail_mask;
+                }
+                matches += eq.count_ones();
+            }
+            out.push(quantize_matches(matches, self.d_k, adc_bits));
+        }
+        out
+    }
+}
+
+/// Eq. 1 against a pre-packed key memory (the serving hot path).
+pub fn camformer_attention_packed(
+    q: &[f32],
+    keys: &PackedKeys,
+    v: &[f32],
+    cfg: &AttnConfig,
+) -> Vec<f32> {
+    let scores = keys.scores(q, cfg.adc_bits);
+    let mask = two_stage_topk_mask(&scores, cfg.group, cfg.stage1_k, cfg.final_k);
+    let a = lut_softmax(&scores, &mask, cfg.d_k);
+    weighted_sum_bf16(&a, v, cfg.n, cfg.d_k)
+}
+
+/// The pre-optimisation scorer (float inner product): kept as the §Perf
+/// baseline and as an independent cross-check of the packed path.
+pub fn bacam_scores_float_reference(q: &[f32], k: &[f32], d_k: usize, adc_bits: u32) -> Vec<f64> {
+    assert_eq!(q.len(), d_k);
+    let n = k.len() / d_k;
+    let qb = binarize(q);
+    let levels = (1u32 << adc_bits) as f64;
+    (0..n)
+        .map(|r| {
+            let row = &k[r * d_k..(r + 1) * d_k];
+            let mut dot = 0.0f64;
+            for (a, &b) in qb.iter().zip(row) {
+                let kb = if b >= 0.0 { 1.0 } else { -1.0 };
+                dot += (*a as f64) * kb;
+            }
+            let v = (dot + d_k as f64) / (2.0 * d_k as f64);
+            let code = (v * levels).round().clamp(0.0, levels);
+            2.0 * code * (d_k as f64 / levels) - d_k as f64
+        })
+        .collect()
+}
+
+/// Pack sign bits (x >= 0 -> 1) into u64 words, LSB-first.
+fn pack_signs(x: &[f32], words: usize) -> Vec<u64> {
+    let mut out = vec![0u64; words];
+    pack_signs_into(x, &mut out);
+    out
+}
+
+fn pack_signs_into(x: &[f32], out: &mut [u64]) {
+    for w in out.iter_mut() {
+        *w = 0;
+    }
+    for (i, &v) in x.iter().enumerate() {
+        // f32 sign-bit test: v >= 0 (incl. +0) iff sign bit clear — but
+        // -0.0 must binarise to +1 like the jnp oracle's `where(x >= 0)`
+        if v >= 0.0 {
+            out[i / 64] |= 1u64 << (i % 64);
+        }
+    }
+}
+
+/// Stable top-k indices of `scores` (ties to the lower index, matching a
+/// stable hardware sorter / jnp stable argsort).
+///
+/// §Perf: selection (`select_nth_unstable_by`) + sort of the k survivors
+/// instead of a full sort — O(n + k log k); the (score desc, index asc)
+/// comparator is a total order, so the result is identical to the stable
+/// full sort it replaced.
+pub fn topk_indices(scores: &[f64], k: usize) -> Vec<usize> {
+    let n = scores.len();
+    let k = k.min(n);
+    let mut idx: Vec<usize> = (0..n).collect();
+    let cmp = |&a: &usize, &b: &usize| {
+        scores[b].partial_cmp(&scores[a]).unwrap().then(a.cmp(&b))
+    };
+    if k > 0 && k < n {
+        idx.select_nth_unstable_by(k - 1, cmp);
+        idx.truncate(k);
+    }
+    idx.sort_by(cmp);
+    idx.truncate(k);
+    idx
+}
+
+/// Hierarchical two-stage top-k mask (Sec. III-C4).
+pub fn two_stage_topk_mask(scores: &[f64], group: usize, stage1_k: usize, final_k: usize) -> Vec<bool> {
+    let n = scores.len();
+    assert_eq!(n % group, 0, "N={n} not a multiple of group={group}");
+    let mut survive = vec![false; n];
+    for t in 0..n / group {
+        let tile = &scores[t * group..(t + 1) * group];
+        for i in topk_indices(tile, stage1_k) {
+            survive[t * group + i] = true;
+        }
+    }
+    // stage 2 over survivors
+    let masked: Vec<f64> = scores
+        .iter()
+        .zip(&survive)
+        .map(|(&s, &ok)| if ok { s } else { f64::NEG_INFINITY })
+        .collect();
+    let mut keep = vec![false; n];
+    for i in topk_indices(&masked, final_k) {
+        if survive[i] {
+            keep[i] = true;
+        }
+    }
+    keep
+}
+
+/// Single-stage global top-k mask (HAD baseline).
+pub fn single_stage_topk_mask(scores: &[f64], final_k: usize) -> Vec<bool> {
+    let mut keep = vec![false; scores.len()];
+    for i in topk_indices(scores, final_k) {
+        keep[i] = true;
+    }
+    keep
+}
+
+/// LUT softmax over masked scores with the 1/sqrt(d_k) scale (f32 math to
+/// match the jnp oracle).
+pub fn lut_softmax(scores: &[f64], mask: &[bool], d_k: usize) -> Vec<f32> {
+    let scale = 1.0 / (d_k as f32).sqrt();
+    let xs: Vec<f32> = scores
+        .iter()
+        .zip(mask)
+        .map(|(&s, &m)| if m { s as f32 * scale } else { f32::NEG_INFINITY })
+        .collect();
+    let mx = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let es: Vec<f32> = xs
+        .iter()
+        .map(|&x| if x.is_finite() { (x - mx).exp() } else { 0.0 })
+        .collect();
+    let sum: f32 = es.iter().sum();
+    es.iter().map(|&e| e / sum).collect()
+}
+
+/// Eq. 1 end to end. `v`: row-major N x d_v (d_v = d_k here). BF16
+/// contextualization: inputs rounded to bf16, products in f32, f32
+/// accumulation, result rounded to bf16 (XLA CPU bf16-matmul semantics).
+pub fn camformer_attention(q: &[f32], k: &[f32], v: &[f32], cfg: &AttnConfig) -> Vec<f32> {
+    let scores = bacam_scores_cfg(q, k, cfg.d_k, cfg.adc_bits);
+    let mask = two_stage_topk_mask(&scores, cfg.group, cfg.stage1_k, cfg.final_k);
+    let a = lut_softmax(&scores, &mask, cfg.d_k);
+    weighted_sum_bf16(&a, v, cfg.n, cfg.d_k)
+}
+
+/// Single-stage (HAD) variant.
+pub fn single_stage_attention(q: &[f32], k: &[f32], v: &[f32], cfg: &AttnConfig) -> Vec<f32> {
+    let scores = bacam_scores_cfg(q, k, cfg.d_k, cfg.adc_bits);
+    let mask = single_stage_topk_mask(&scores, cfg.final_k);
+    let a = lut_softmax(&scores, &mask, cfg.d_k);
+    weighted_sum_bf16(&a, v, cfg.n, cfg.d_k)
+}
+
+/// Exact FP32 softmax attention (oracle).
+pub fn exact_attention(q: &[f32], k: &[f32], v: &[f32], n: usize, d_k: usize) -> Vec<f32> {
+    let scale = 1.0 / (d_k as f32).sqrt();
+    let mut scores = vec![0f32; n];
+    for r in 0..n {
+        let mut dot = 0f32;
+        for c in 0..d_k {
+            dot += q[c] * k[r * d_k + c];
+        }
+        scores[r] = dot * scale;
+    }
+    let mx = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let es: Vec<f32> = scores.iter().map(|&s| (s - mx).exp()).collect();
+    let sum: f32 = es.iter().sum();
+    let a: Vec<f32> = es.iter().map(|&e| e / sum).collect();
+    let mut out = vec![0f32; d_k];
+    for r in 0..n {
+        for c in 0..d_k {
+            out[c] += a[r] * v[r * d_k + c];
+        }
+    }
+    out
+}
+
+fn weighted_sum_bf16(a: &[f32], v: &[f32], n: usize, d_v: usize) -> Vec<f32> {
+    let mut out = vec![0f32; d_v];
+    for r in 0..n {
+        if a[r] == 0.0 {
+            continue; // sparse: only top-k rows contribute
+        }
+        let ar = bf16::round(a[r]);
+        for c in 0..d_v {
+            out[c] += ar * bf16::round(v[r * d_v + c]);
+        }
+    }
+    out.iter().map(|&x| bf16::round(x)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::check;
+    use crate::util::rng::Rng;
+
+    fn cfg128() -> AttnConfig {
+        AttnConfig::paper(128, 64)
+    }
+
+    #[test]
+    fn scores_are_exact_binary_dots_at_dk64() {
+        let mut rng = Rng::new(40);
+        let q = rng.normal_vec(64);
+        let k = rng.normal_vec(128 * 64);
+        let s = bacam_scores(&q, &k, 64);
+        let qb = binarize(&q);
+        for (r, &sv) in s.iter().enumerate() {
+            let mut dot = 0.0;
+            for c in 0..64 {
+                let kb = if k[r * 64 + c] >= 0.0 { 1.0 } else { -1.0 };
+                dot += qb[c] as f64 * kb;
+            }
+            assert_eq!(sv, dot);
+        }
+    }
+
+    #[test]
+    fn all_three_scorers_agree() {
+        crate::util::check::check("scorer implementations agree", 40, |rng| {
+            let d_k = [16usize, 48, 64, 96, 128][rng.index(5)];
+            let n = 1 + rng.index(64);
+            let q = rng.normal_vec(d_k);
+            let k = rng.normal_vec(n * d_k);
+            let bits = [4u32, 6, 8][rng.index(3)];
+            let fast = bacam_scores_cfg(&q, &k, d_k, bits);
+            let float_ref = bacam_scores_float_reference(&q, &k, d_k, bits);
+            let packed = PackedKeys::new(&k, d_k).scores(&q, bits);
+            assert_eq!(fast, float_ref, "d_k={d_k} n={n} bits={bits}");
+            assert_eq!(fast, packed, "d_k={d_k} n={n} bits={bits}");
+        });
+    }
+
+    #[test]
+    fn packed_attention_equals_unpacked() {
+        let mut rng = Rng::new(45);
+        let q = rng.normal_vec(64);
+        let k = rng.normal_vec(512 * 64);
+        let v = rng.normal_vec(512 * 64);
+        let cfg = AttnConfig::paper(512, 64);
+        let packed = PackedKeys::new(&k, 64);
+        assert_eq!(
+            camformer_attention(&q, &k, &v, &cfg),
+            camformer_attention_packed(&q, &packed, &v, &cfg)
+        );
+    }
+
+    #[test]
+    fn property_mask_counts() {
+        check("two-stage mask count", 50, |rng| {
+            let n = 16 * (1 + rng.index(64));
+            let scores: Vec<f64> = (0..n).map(|_| rng.normal(0.0, 10.0)).collect();
+            let mask = two_stage_topk_mask(&scores, 16, 2, 32);
+            let kept = mask.iter().filter(|&&b| b).count();
+            let candidates = (n / 16) * 2;
+            assert_eq!(kept, candidates.min(32));
+        });
+    }
+
+    #[test]
+    fn property_two_stage_subset_of_stage1() {
+        check("stage2 subset", 50, |rng| {
+            let n = 16 * (2 + rng.index(32));
+            let scores: Vec<f64> = (0..n).map(|_| rng.normal(0.0, 5.0)).collect();
+            let keep = two_stage_topk_mask(&scores, 16, 2, 32);
+            // every kept element is within the top-2 of its tile
+            for t in 0..n / 16 {
+                let tile = &scores[t * 16..(t + 1) * 16];
+                let top2 = topk_indices(tile, 2);
+                for i in 0..16 {
+                    if keep[t * 16 + i] {
+                        assert!(top2.contains(&i));
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn softmax_sums_to_one_over_mask() {
+        let mut rng = Rng::new(41);
+        let scores: Vec<f64> = (0..128).map(|_| rng.range(0, 129) as f64 - 64.0).collect();
+        let mask = two_stage_topk_mask(&scores, 16, 2, 32);
+        let a = lut_softmax(&scores, &mask, 64);
+        let sum: f32 = a.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-5);
+        for (p, m) in a.iter().zip(&mask) {
+            if !m {
+                assert_eq!(*p, 0.0);
+            } else {
+                assert!(*p > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn attention_output_in_v_hull() {
+        let mut rng = Rng::new(42);
+        let q = rng.normal_vec(64);
+        let k = rng.normal_vec(128 * 64);
+        let v = rng.normal_vec(128 * 64);
+        let out = camformer_attention(&q, &k, &v, &cfg128());
+        let vmax = v.iter().cloned().fold(f32::MIN, f32::max);
+        let vmin = v.iter().cloned().fold(f32::MAX, f32::min);
+        for &o in &out {
+            assert!(o <= vmax + 0.05 && o >= vmin - 0.05);
+        }
+    }
+
+    #[test]
+    fn two_stage_equals_single_when_group_is_n() {
+        let mut rng = Rng::new(43);
+        let q = rng.normal_vec(64);
+        let k = rng.normal_vec(256 * 64);
+        let scores = bacam_scores(&q, &k, 64);
+        let two = two_stage_topk_mask(&scores, 256, 32, 32);
+        let one = single_stage_topk_mask(&scores, 32);
+        assert_eq!(two, one);
+    }
+
+    #[test]
+    fn camformer_tracks_exact_attention_direction() {
+        // binarised sparse attention correlates with exact attention
+        let mut rng = Rng::new(44);
+        let q = rng.normal_vec(64);
+        let k = rng.normal_vec(1024 * 64);
+        let v = rng.normal_vec(1024 * 64);
+        let cam = camformer_attention(&q, &k, &v, &AttnConfig::paper(1024, 64));
+        let exact = exact_attention(&q, &k, &v, 1024, 64);
+        let cam64: Vec<f64> = cam.iter().map(|&x| x as f64).collect();
+        let ex64: Vec<f64> = exact.iter().map(|&x| x as f64).collect();
+        let r = crate::util::stats::pearson(&cam64, &ex64);
+        assert!(r > 0.3, "correlation {r} too weak");
+    }
+
+    #[test]
+    fn stage1_k_one_can_lose_the_best_key() {
+        // craft a tile whose two best scores both beat every other tile:
+        // stage1_k=1 must drop the global #2
+        let mut scores = vec![-10.0f64; 64];
+        scores[3] = 60.0; // tile 0, global #1
+        scores[5] = 58.0; // tile 0, global #2
+        scores[20] = 10.0;
+        let k1 = two_stage_topk_mask(&scores, 16, 1, 32);
+        assert!(k1[3] && !k1[5], "stage1_k=1 must drop the in-tile runner-up");
+        let k2 = two_stage_topk_mask(&scores, 16, 2, 32);
+        assert!(k2[3] && k2[5]);
+    }
+
+    #[test]
+    fn property_ties_break_to_lower_index() {
+        check("tie break", 30, |rng| {
+            let n = 64;
+            let v = rng.range(0, 10) as f64;
+            let scores = vec![v; n];
+            let idx = topk_indices(&scores, 5);
+            assert_eq!(idx, vec![0, 1, 2, 3, 4]);
+        });
+    }
+}

@@ -1,0 +1,17 @@
+//! Algorithmic-accuracy layer (Sec. III-B1 recall bound, Sec. IV-D).
+//!
+//! * `functional` — the CAMformer attention datapath in pure Rust,
+//!   numerically matched to the jnp oracle (`python/compile/kernels/ref.py`)
+//!   and cross-checked against the PJRT artifacts in integration tests.
+//! * `recall` — two-stage top-k recall: Monte-Carlo measurement plus the
+//!   paper's Hoeffding drop bound and margin condition.
+//! * `tables` — Tables III/IV analogues: the measured tiny-model experiment
+//!   (via the PJRT classifier artifacts) and the calibrated score-
+//!   distribution simulation for the GLUE-style multi-task sweep.
+
+pub mod functional;
+pub mod noise;
+pub mod recall;
+pub mod tables;
+
+pub use functional::AttnConfig;

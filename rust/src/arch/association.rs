@@ -1,0 +1,191 @@
+//! Association stage (Sec. III-B1): BA-CAM scores + hierarchical stage-1
+//! ranking + V-prefetch triggers.
+//!
+//! Per tile: program the CAM, broadcast the query, digitise cam_h scores
+//! through the shared SAR, run the bitonic Top-2, push the two survivors
+//! to the potential-top register and their indices to the MC/DMA for V
+//! prefetch. The Key SRAM holds the full binarised K and is off the
+//! critical path (keys are reused across queries).
+
+use super::bitonic::{self, Entry};
+use super::config::ArchConfig;
+use crate::bimv::engine::BimvEngine;
+
+/// Output of the association stage for one query.
+#[derive(Clone, Debug)]
+pub struct AssociationResult {
+    /// All N quantised scores (for validation; hardware only keeps
+    /// candidates).
+    pub scores: Vec<f64>,
+    /// Stage-1 survivors: the potential-top register contents, in tile
+    /// order (h_tiles x stage1_k entries).
+    pub candidates: Vec<Entry>,
+    /// Prefetch stream: key indices in the order they were issued.
+    pub prefetch_indices: Vec<usize>,
+    /// Cycle count of the stage (fine-grained pipelined, Fig. 7 left).
+    pub cycles: u64,
+    /// Sorter comparator work (for the cost cross-check).
+    pub sorter_comparators: usize,
+}
+
+/// The association stage bound to one BIMV engine.
+pub struct AssociationStage {
+    pub cfg: ArchConfig,
+    pub engine: BimvEngine,
+}
+
+impl AssociationStage {
+    pub fn new(cfg: ArchConfig) -> Self {
+        AssociationStage {
+            engine: BimvEngine::new(cfg.cam_h, cfg.cam_w),
+            cfg,
+        }
+    }
+
+    /// Run one query against the (binarised) key memory.
+    pub fn run(&mut self, query: &[bool], keys: &[Vec<bool>]) -> AssociationResult {
+        assert_eq!(keys.len(), self.cfg.n);
+        let scores = self.engine.scores(query, keys);
+
+        let mut candidates = Vec::with_capacity(self.cfg.candidates());
+        let mut prefetch = Vec::with_capacity(self.cfg.candidates());
+        let mut comparators = 0usize;
+        for t in 0..self.cfg.h_tiles() {
+            let lo = t * self.cfg.cam_h;
+            let hi = ((t + 1) * self.cfg.cam_h).min(self.cfg.n);
+            let tile = &scores[lo..hi];
+            let (top, stats) = bitonic::bitonic_topk(
+                &tile
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &s)| Entry { score: s, index: lo + i })
+                    .collect::<Vec<_>>(),
+                self.cfg.stage1_k,
+            );
+            comparators += stats.comparators;
+            for e in &top {
+                prefetch.push(e.index);
+            }
+            candidates.extend(top);
+        }
+
+        // Fine-grained pipelining (Fig. 7 left): program/search of tile
+        // t+1 overlaps ADC of tile t overlaps Top-2 of tile t-1, so the
+        // cadence is the slowest of the three; ADC serialization dominates.
+        let tile_cadence = self
+            .cfg
+            .adc_cycles_per_tile()
+            .max(self.cfg.cam_phases)
+            .max(bitonic_depth_cycles(self.cfg.cam_h));
+        let fill = self.cfg.cam_phases + bitonic_depth_cycles(self.cfg.cam_h);
+        let cycles = tile_cadence * self.cfg.tiles() as u64 + fill;
+
+        AssociationResult {
+            scores,
+            candidates,
+            prefetch_indices: prefetch,
+            cycles,
+            sorter_comparators: comparators,
+        }
+    }
+
+    /// Stage latency without fine-grained pipelining (for Fig. 7/9's
+    /// "before" bars): phases serialize per tile.
+    pub fn cycles_unpipelined(&self) -> u64 {
+        let per_tile = self.cfg.cam_phases
+            + self.cfg.adc_cycles_per_tile()
+            + bitonic_depth_cycles(self.cfg.cam_h);
+        per_tile * self.cfg.tiles() as u64
+    }
+}
+
+/// Depth (cycles) of the tile's bitonic network.
+fn bitonic_depth_cycles(width: usize) -> u64 {
+    let p = width.next_power_of_two().trailing_zeros() as u64;
+    p * (p + 1) / 2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accuracy::functional;
+    use crate::util::rng::Rng;
+
+    fn setup(n: usize) -> (AssociationStage, Vec<bool>, Vec<Vec<bool>>) {
+        let cfg = ArchConfig { n, ..Default::default() };
+        let mut rng = Rng::new(80);
+        let q: Vec<bool> = (0..cfg.d_k).map(|_| rng.bool()).collect();
+        let keys: Vec<Vec<bool>> = (0..n)
+            .map(|_| (0..cfg.d_k).map(|_| rng.bool()).collect())
+            .collect();
+        (AssociationStage::new(cfg), q, keys)
+    }
+
+    #[test]
+    fn candidates_match_functional_model() {
+        let (mut stage, q, keys) = setup(256);
+        let res = stage.run(&q, &keys);
+        // compare stage-1 survivors with the functional two-stage mask's
+        // stage-1 (tile top-2) set
+        let qf: Vec<f32> = q.iter().map(|&b| if b { 1.0 } else { -1.0 }).collect();
+        let kf: Vec<f32> = keys
+            .iter()
+            .flat_map(|r| r.iter().map(|&b| if b { 1.0f32 } else { -1.0 }))
+            .collect();
+        let scores = functional::bacam_scores(&qf, &kf, 64);
+        for t in 0..16 {
+            let tile = &scores[t * 16..(t + 1) * 16];
+            let want = functional::topk_indices(tile, 2);
+            let got: Vec<usize> = res.candidates[t * 2..t * 2 + 2]
+                .iter()
+                .map(|e| e.index - t * 16)
+                .collect();
+            assert_eq!(got, want, "tile {t}");
+        }
+    }
+
+    #[test]
+    fn prefetch_stream_covers_candidates() {
+        let (mut stage, q, keys) = setup(128);
+        let res = stage.run(&q, &keys);
+        assert_eq!(res.prefetch_indices.len(), 16); // 8 tiles x 2
+        for (e, &i) in res.candidates.iter().zip(&res.prefetch_indices) {
+            assert_eq!(e.index, i);
+        }
+    }
+
+    #[test]
+    fn pipelining_beats_serial() {
+        let (stage, _, _) = setup(1024);
+        let piped = {
+            let mut s = AssociationStage::new(stage.cfg);
+            let mut rng = Rng::new(81);
+            let q: Vec<bool> = (0..64).map(|_| rng.bool()).collect();
+            let keys: Vec<Vec<bool>> = (0..1024)
+                .map(|_| (0..64).map(|_| rng.bool()).collect())
+                .collect();
+            s.run(&q, &keys).cycles
+        };
+        assert!(piped < stage.cycles_unpipelined());
+        // ADC-dominated: cadence 96 cycles x 64 tiles ≈ 6.1k cycles
+        assert!(piped >= 96 * 64);
+        assert!(piped < 96 * 64 + 100);
+    }
+
+    #[test]
+    fn scores_are_complete_and_bounded() {
+        let (mut stage, q, keys) = setup(512);
+        let res = stage.run(&q, &keys);
+        assert_eq!(res.scores.len(), 512);
+        assert!(res.scores.iter().all(|s| s.abs() <= 64.0));
+    }
+
+    #[test]
+    fn sorter_work_scales_with_tiles() {
+        let (mut s1, q1, k1) = setup(128);
+        let (mut s2, q2, k2) = setup(1024);
+        let r1 = s1.run(&q1, &k1);
+        let r2 = s2.run(&q2, &k2);
+        assert_eq!(r2.sorter_comparators, 8 * r1.sorter_comparators);
+    }
+}

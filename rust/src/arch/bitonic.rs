@@ -1,0 +1,227 @@
+//! Comparator-exact bitonic sorting networks (the Top-2 tile filter and
+//! the 64-input Top-32 block of Secs. III-B1/B2).
+//!
+//! The networks are executed element-by-element so the comparator count
+//! and stage depth are *measured*, not estimated — those numbers feed the
+//! sorter area/latency entries in the cost model, and "the bitonic sorter
+//! also makes sparsity easily configurable" (Sec. III-B1) because top-k
+//! just taps the k hottest outputs.
+
+/// A scored candidate flowing through the sorter (score + key index).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Entry {
+    pub score: f64,
+    pub index: usize,
+}
+
+impl Entry {
+    pub const NEG_INF: Entry = Entry {
+        score: f64::NEG_INFINITY,
+        index: usize::MAX,
+    };
+}
+
+/// Execution statistics of one network pass.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SortStats {
+    /// Compare-exchange operations performed.
+    pub comparators: usize,
+    /// Network depth (cycles when one stage per cycle, fully pipelined).
+    pub depth: usize,
+}
+
+/// Bitonic sort network over a power-of-two array, descending by score;
+/// ties broken by lower index (stable with respect to the tile order, like
+/// the jnp oracle). Returns the measured stats.
+pub fn bitonic_sort(data: &mut [Entry]) -> SortStats {
+    let n = data.len();
+    assert!(n.is_power_of_two(), "bitonic network needs power-of-two width");
+    let mut stats = SortStats::default();
+    let mut k = 2;
+    while k <= n {
+        let mut j = k / 2;
+        while j > 0 {
+            stats.depth += 1;
+            for i in 0..n {
+                let l = i ^ j;
+                if l > i {
+                    stats.comparators += 1;
+                    let ascending = (i & k) != 0;
+                    let a = data[i];
+                    let b = data[l];
+                    // descending block: bigger score (or equal score with
+                    // smaller index) stays on top
+                    let a_before_b = match a.score.partial_cmp(&b.score).unwrap() {
+                        std::cmp::Ordering::Greater => true,
+                        std::cmp::Ordering::Less => false,
+                        std::cmp::Ordering::Equal => a.index <= b.index,
+                    };
+                    let swap = if ascending { a_before_b } else { !a_before_b };
+                    if swap {
+                        data.swap(i, l);
+                    }
+                }
+            }
+            j /= 2;
+        }
+        k *= 2;
+    }
+    stats
+}
+
+/// Top-k through a full bitonic sort (what the hardware blocks implement,
+/// with the tail outputs simply unrouted). `data` is padded to the next
+/// power of two with -inf.
+pub fn bitonic_topk(data: &[Entry], k: usize) -> (Vec<Entry>, SortStats) {
+    let width = data.len().next_power_of_two();
+    let mut padded = data.to_vec();
+    padded.resize(width, Entry::NEG_INF);
+    let stats = bitonic_sort(&mut padded);
+    padded.truncate(k.min(data.len()));
+    (padded, stats)
+}
+
+/// The per-tile Top-2 filter: a 16-input bitonic max-2 (Sec. III-B1).
+pub fn tile_top2(scores: &[f64], base_index: usize) -> (Vec<Entry>, SortStats) {
+    let entries: Vec<Entry> = scores
+        .iter()
+        .enumerate()
+        .map(|(i, &s)| Entry {
+            score: s,
+            index: base_index + i,
+        })
+        .collect();
+    bitonic_topk(&entries, 2)
+}
+
+/// The 64-input Top-32 refinement block (Sec. III-B2): merge the running
+/// top-32 with 32 new candidates, keep the best 32.
+pub fn top32_refine(running: &[Entry], fresh: &[Entry]) -> (Vec<Entry>, SortStats) {
+    assert!(running.len() <= 32 && fresh.len() <= 32);
+    let mut all: Vec<Entry> = Vec::with_capacity(64);
+    all.extend_from_slice(running);
+    all.extend_from_slice(fresh);
+    all.resize(64, Entry::NEG_INF);
+    let stats = bitonic_sort(&mut all);
+    all.truncate(32);
+    all.retain(|e| e.score > f64::NEG_INFINITY);
+    (all, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::check;
+    use crate::util::rng::Rng;
+
+    fn entries(scores: &[f64]) -> Vec<Entry> {
+        scores
+            .iter()
+            .enumerate()
+            .map(|(i, &s)| Entry { score: s, index: i })
+            .collect()
+    }
+
+    #[test]
+    fn sorts_descending() {
+        let mut d = entries(&[3.0, 1.0, 4.0, 1.5, 9.0, 2.6, 5.0, 3.5]);
+        bitonic_sort(&mut d);
+        for w in d.windows(2) {
+            assert!(w[0].score >= w[1].score);
+        }
+        assert_eq!(d[0].score, 9.0);
+    }
+
+    #[test]
+    fn property_matches_std_sort() {
+        check("bitonic vs std", 100, |rng| {
+            let n = [4usize, 8, 16, 32, 64][rng.index(5)];
+            let scores: Vec<f64> = (0..n).map(|_| rng.normal(0.0, 10.0)).collect();
+            let mut d = entries(&scores);
+            bitonic_sort(&mut d);
+            let mut want = scores.clone();
+            want.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            let got: Vec<f64> = d.iter().map(|e| e.score).collect();
+            assert_eq!(got, want);
+        });
+    }
+
+    #[test]
+    fn comparator_count_matches_formula() {
+        // bitonic sort of n = 2^p uses n*p*(p+1)/4 comparators
+        for p in 2..=6u32 {
+            let n = 1usize << p;
+            let mut d = entries(&vec![0.0; n]);
+            let stats = bitonic_sort(&mut d);
+            assert_eq!(
+                stats.comparators,
+                n * p as usize * (p as usize + 1) / 4,
+                "n={n}"
+            );
+            assert_eq!(stats.depth, (p * (p + 1) / 2) as usize);
+        }
+    }
+
+    #[test]
+    fn sixtyfour_input_block_depth() {
+        // the Top-32 module: 64 inputs => depth 21, 672 comparators
+        let mut d = entries(&vec![1.0; 64]);
+        let stats = bitonic_sort(&mut d);
+        assert_eq!(stats.depth, 21);
+        assert_eq!(stats.comparators, 672);
+    }
+
+    #[test]
+    fn tile_top2_finds_best_two() {
+        let scores = [5.0, -3.0, 8.0, 8.0, 1.0, 0.0, 7.5, 2.0,
+                      -1.0, 4.0, 3.0, 6.0, 2.5, 0.5, -2.0, 1.5];
+        let (top, _) = tile_top2(&scores, 160);
+        assert_eq!(top.len(), 2);
+        assert_eq!(top[0].score, 8.0);
+        assert_eq!(top[1].score, 8.0);
+        // ties break to the lower index
+        assert_eq!(top[0].index, 160 + 2);
+        assert_eq!(top[1].index, 160 + 3);
+    }
+
+    #[test]
+    fn property_topk_is_true_topk() {
+        check("bitonic topk", 60, |rng| {
+            let n = 1 + rng.index(64);
+            let k = 1 + rng.index(n);
+            let scores: Vec<f64> = (0..n).map(|_| rng.normal(0.0, 10.0)).collect();
+            let (top, _) = bitonic_topk(&entries(&scores), k);
+            let mut want = scores.clone();
+            want.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            let got: Vec<f64> = top.iter().map(|e| e.score).collect();
+            assert_eq!(got, want[..k].to_vec());
+        });
+    }
+
+    #[test]
+    fn refinement_accumulates_global_top32() {
+        let mut rng = Rng::new(70);
+        let all: Vec<f64> = (0..128).map(|_| rng.normal(0.0, 10.0)).collect();
+        // feed in 4 batches of 32 through the refinement block
+        let mut running: Vec<Entry> = Vec::new();
+        for b in 0..4 {
+            let fresh: Vec<Entry> = (0..32)
+                .map(|i| Entry { score: all[b * 32 + i], index: b * 32 + i })
+                .collect();
+            let (r, _) = top32_refine(&running, &fresh);
+            running = r;
+        }
+        let mut want = all.clone();
+        want.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let mut got: Vec<f64> = running.iter().map(|e| e.score).collect();
+        got.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        assert_eq!(got, want[..32].to_vec());
+    }
+
+    #[test]
+    #[should_panic(expected = "power-of-two")]
+    fn non_power_of_two_rejected() {
+        let mut d = entries(&[1.0, 2.0, 3.0]);
+        bitonic_sort(&mut d);
+    }
+}

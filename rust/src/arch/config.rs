@@ -1,0 +1,104 @@
+//! Microarchitecture configuration shared by the stage models.
+
+/// Cycle-level architecture parameters (paper defaults in `Default`).
+#[derive(Clone, Copy, Debug)]
+pub struct ArchConfig {
+    /// CAM geometry (Sec. III-B1: 16x64).
+    pub cam_h: usize,
+    pub cam_w: usize,
+    /// Workload: keys in memory and head dimension.
+    pub n: usize,
+    pub d_k: usize,
+    pub d_v: usize,
+    /// Stage-1 top-k per tile and final top-k.
+    pub stage1_k: usize,
+    pub final_k: usize,
+    /// Parallel BF16 MAC units in contextualization (DSE: 8 balances).
+    pub mac_units: usize,
+    /// System clock [GHz] (Table II runs at 1 GHz).
+    pub clock_ghz: f64,
+    /// SAR ADC bits (6) and ADC instances per array (1 = shared).
+    pub adc_bits: u32,
+    pub adcs_per_array: usize,
+    /// CAM phase count (precharge/broadcast/match/share).
+    pub cam_phases: u64,
+    /// Pipelined BF16 divider end-to-end latency [cycles].
+    pub t_div: u64,
+}
+
+impl Default for ArchConfig {
+    fn default() -> Self {
+        ArchConfig {
+            cam_h: 16,
+            cam_w: 64,
+            n: 1024,
+            d_k: 64,
+            d_v: 64,
+            stage1_k: 2,
+            final_k: 32,
+            mac_units: 8,
+            clock_ghz: 1.0,
+            adc_bits: 6,
+            adcs_per_array: 1,
+            cam_phases: 4,
+            t_div: 14,
+        }
+    }
+}
+
+impl ArchConfig {
+    pub fn h_tiles(&self) -> usize {
+        self.n.div_ceil(self.cam_h)
+    }
+
+    pub fn v_tiles(&self) -> usize {
+        self.d_k.div_ceil(self.cam_w)
+    }
+
+    pub fn tiles(&self) -> usize {
+        self.h_tiles() * self.v_tiles()
+    }
+
+    /// Stage-1 candidates produced per query.
+    pub fn candidates(&self) -> usize {
+        self.h_tiles() * self.stage1_k
+    }
+
+    pub fn cycle_ns(&self) -> f64 {
+        1.0 / self.clock_ghz
+    }
+
+    /// ADC serialization cycles per tile: cam_h conversions, 6 cycles
+    /// each, divided over the instantiated ADCs.
+    pub fn adc_cycles_per_tile(&self) -> u64 {
+        let convs = self.cam_h.div_ceil(self.adcs_per_array) as u64;
+        convs * self.adc_bits as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_defaults() {
+        let c = ArchConfig::default();
+        assert_eq!(c.h_tiles(), 64);
+        assert_eq!(c.v_tiles(), 1);
+        assert_eq!(c.candidates(), 128);
+        assert_eq!(c.adc_cycles_per_tile(), 96);
+    }
+
+    #[test]
+    fn two_adcs_halve_serialization() {
+        let c = ArchConfig { adcs_per_array: 2, ..Default::default() };
+        assert_eq!(c.adc_cycles_per_tile(), 48);
+    }
+
+    #[test]
+    fn vertical_tiling_for_wide_dk() {
+        let c = ArchConfig { d_k: 128, ..Default::default() };
+        assert_eq!(c.v_tiles(), 2);
+        assert_eq!(c.tiles(), 128);
+    }
+}

@@ -1,0 +1,112 @@
+//! Contextualization stage (Sec. III-B3): the BF16 sparse MV — the
+//! selected probabilities times their prefetched V rows, on `mac_units`
+//! parallel BF16 MACs with fine-grained pipelining.
+
+use super::bitonic::Entry;
+use super::config::ArchConfig;
+use crate::util::bf16;
+
+/// Output of the contextualization stage.
+#[derive(Clone, Debug)]
+pub struct ContextualizationResult {
+    /// The attention output vector (d_v, bf16-valued f32).
+    pub output: Vec<f32>,
+    pub cycles: u64,
+    pub macs: usize,
+}
+
+/// The contextualization stage.
+pub struct ContextualizationStage {
+    pub cfg: ArchConfig,
+}
+
+impl ContextualizationStage {
+    pub fn new(cfg: ArchConfig) -> Self {
+        ContextualizationStage { cfg }
+    }
+
+    /// `selected`/`probs` from normalization; `v` is the full row-major
+    /// N x d_v value matrix (the V-SRAM holds the prefetched subset).
+    pub fn run(&self, selected: &[Entry], probs: &[f32], v: &[f32]) -> ContextualizationResult {
+        assert_eq!(selected.len(), probs.len());
+        let d_v = self.cfg.d_v;
+        let mut out = vec![0.0f32; d_v];
+        for (e, &p) in selected.iter().zip(probs) {
+            let row = &v[e.index * d_v..(e.index + 1) * d_v];
+            let pb = bf16::round(p);
+            for c in 0..d_v {
+                // bf16 inputs, f32 accumulate (MAC array semantics)
+                out[c] += pb * bf16::round(row[c]);
+            }
+        }
+        for o in &mut out {
+            *o = bf16::round(*o);
+        }
+
+        let macs = selected.len() * d_v;
+        // mac_units lanes, fully pipelined: ceil(macs/units) + drain
+        let cycles = (macs as u64).div_ceil(self.cfg.mac_units as u64) + 8;
+        ContextualizationResult {
+            output: out,
+            cycles,
+            macs,
+        }
+    }
+
+    /// Cycles for a given selection size (for the pipeline model).
+    pub fn cycles_for(&self, k: usize) -> u64 {
+        ((k * self.cfg.d_v) as u64).div_ceil(self.cfg.mac_units as u64) + 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn weighted_sum_correct() {
+        let cfg = ArchConfig { d_v: 4, ..Default::default() };
+        let stage = ContextualizationStage::new(cfg);
+        let v = vec![
+            1.0, 0.0, 0.0, 0.0, // row 0
+            0.0, 2.0, 0.0, 0.0, // row 1
+            0.0, 0.0, 4.0, 0.0, // row 2
+        ];
+        let selected = vec![
+            Entry { score: 10.0, index: 0 },
+            Entry { score: 5.0, index: 2 },
+        ];
+        let probs = vec![0.75f32, 0.25f32];
+        let res = stage.run(&selected, &probs, &v);
+        assert_eq!(res.output, vec![0.75, 0.0, 1.0, 0.0]);
+        assert_eq!(res.macs, 8);
+    }
+
+    #[test]
+    fn output_in_convex_hull() {
+        let cfg = ArchConfig::default();
+        let stage = ContextualizationStage::new(cfg);
+        let mut rng = Rng::new(95);
+        let v: Vec<f32> = rng.normal_vec(1024 * 64);
+        let selected: Vec<Entry> = (0..32)
+            .map(|i| Entry { score: 0.0, index: i * 30 })
+            .collect();
+        let probs = vec![1.0f32 / 32.0; 32];
+        let res = stage.run(&selected, &probs, &v);
+        let vmax = v.iter().cloned().fold(f32::MIN, f32::max);
+        let vmin = v.iter().cloned().fold(f32::MAX, f32::min);
+        for &o in &res.output {
+            assert!(o <= vmax + 0.05 && o >= vmin - 0.05);
+        }
+    }
+
+    #[test]
+    fn mac_units_scale_cycles() {
+        let c1 = ContextualizationStage::new(ArchConfig { mac_units: 1, ..Default::default() });
+        let c8 = ContextualizationStage::new(ArchConfig { mac_units: 8, ..Default::default() });
+        // 32 x 64 = 2048 MACs
+        assert_eq!(c1.cycles_for(32), 2048 + 8);
+        assert_eq!(c8.cycles_for(32), 256 + 8);
+    }
+}

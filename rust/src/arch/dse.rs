@@ -1,0 +1,195 @@
+//! Systematic design-space exploration (Sec. IV-B).
+//!
+//! The paper balances stage throughput "in our design space exploration";
+//! this module makes that search reproducible: grid-search the co-design
+//! axes (CAM height, ADC sharing, MAC count, stage-1 k), evaluate each
+//! point's throughput / area / energy / weighted recall, and return the
+//! Pareto-optimal set.
+
+use super::config::ArchConfig;
+use super::contextualization::ContextualizationStage;
+use super::pipeline::PipelineModel;
+use crate::accuracy::recall;
+use crate::cost::system::{CamformerCost, SystemConfig};
+use crate::util::rng::Rng;
+
+/// One evaluated design point.
+#[derive(Clone, Debug)]
+pub struct DesignPoint {
+    pub cam_h: usize,
+    pub adcs_per_array: usize,
+    pub mac_units: usize,
+    pub stage1_k: usize,
+    pub throughput_qry_per_ms: f64,
+    pub area_mm2: f64,
+    pub energy_eff_qry_per_mj: f64,
+    pub weighted_recall: f64,
+    /// Stall fraction under coarse pipelining (0 = perfectly balanced).
+    pub stall_frac: f64,
+}
+
+impl DesignPoint {
+    /// `other` dominates when it is at least as good on all four objective
+    /// axes (throughput, area, efficiency, recall) and better on one.
+    pub fn dominated_by(&self, other: &DesignPoint) -> bool {
+        let ge = other.throughput_qry_per_ms >= self.throughput_qry_per_ms
+            && other.area_mm2 <= self.area_mm2
+            && other.energy_eff_qry_per_mj >= self.energy_eff_qry_per_mj
+            && other.weighted_recall >= self.weighted_recall;
+        let gt = other.throughput_qry_per_ms > self.throughput_qry_per_ms
+            || other.area_mm2 < self.area_mm2
+            || other.energy_eff_qry_per_mj > self.energy_eff_qry_per_mj
+            || other.weighted_recall > self.weighted_recall;
+        ge && gt
+    }
+}
+
+/// Evaluate one configuration (n fixed to the Table II workload).
+pub fn evaluate(
+    n: usize,
+    cam_h: usize,
+    adcs: usize,
+    macs: usize,
+    stage1_k: usize,
+    rng: &mut Rng,
+) -> DesignPoint {
+    let arch = ArchConfig {
+        n,
+        cam_h,
+        adcs_per_array: adcs,
+        mac_units: macs,
+        stage1_k,
+        ..Default::default()
+    };
+    let pm = PipelineModel { cfg: arch, fine_grained: true };
+    let lat = pm.latencies();
+    let sys = SystemConfig {
+        n,
+        cam_h,
+        mac_units: macs,
+        stage1_k,
+        adcs_per_array: adcs,
+        ..Default::default()
+    };
+    let cost = CamformerCost::evaluate(&sys);
+    let wr = recall::monte_carlo_weighted_recall_realistic(n, 8, cam_h, stage1_k, 32, 60, rng);
+    DesignPoint {
+        cam_h,
+        adcs_per_array: adcs,
+        mac_units: macs,
+        stage1_k,
+        throughput_qry_per_ms: pm.throughput_qry_per_ms(),
+        area_mm2: cost.area_mm2,
+        energy_eff_qry_per_mj: cost.energy_eff_qry_per_mj,
+        weighted_recall: wr,
+        stall_frac: lat.stall_cycles() as f64 / (3 * lat.bottleneck()) as f64,
+    }
+}
+
+/// Grid search over the co-design axes; returns all evaluated points.
+/// Recall is evaluated with a per-(cam_h, k1) deterministic seed (common
+/// random numbers), so configurations that share the selection geometry
+/// tie exactly instead of differing by Monte-Carlo noise.
+pub fn sweep(n: usize, seed: u64) -> Vec<DesignPoint> {
+    let mut out = Vec::new();
+    for &cam_h in &[8usize, 16, 32] {
+        for &adcs in &[1usize, 2, 4] {
+            for &macs in &[1usize, 4, 8, 16] {
+                for &k1 in &[1usize, 2, 4] {
+                    let mut rng = Rng::new(seed ^ (cam_h as u64 * 131 + k1 as u64));
+                    out.push(evaluate(n, cam_h, adcs, macs, k1, &mut rng));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Non-dominated subset of a sweep.
+pub fn pareto(points: &[DesignPoint]) -> Vec<DesignPoint> {
+    points
+        .iter()
+        .filter(|p| !points.iter().any(|q| p.dominated_by(q)))
+        .cloned()
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_point_pareto_within_shared_sar_slice() {
+        // Within the paper's own structural choices (one shared SAR,
+        // 8 MACs), the 16-high / k1=2 point must be Pareto-optimal over
+        // the remaining axes (CAM height, stage-1 k).
+        //
+        // Across *all* axes it is NOT optimal in our model: duplicating
+        // the cheap SAR doubles association cadence almost for free, and
+        // with association ADC-bound at n=1024 the 8 MACs are headroom,
+        // not necessity. That divergence from the paper's "8 MACs
+        // required" DSE narrative is documented in EXPERIMENTS.md (our
+        // shared-SAR serialization model makes association relatively
+        // slower than theirs).
+        let pts = sweep(1024, 42);
+        let slice: Vec<DesignPoint> = pts
+            .iter()
+            .filter(|p| p.adcs_per_array == 1 && p.mac_units == 8)
+            .cloned()
+            .collect();
+        let paper = slice
+            .iter()
+            .find(|p| p.cam_h == 16 && p.stage1_k == 2)
+            .unwrap()
+            .clone();
+        for q in &slice {
+            assert!(
+                !paper.dominated_by(q),
+                "paper point dominated by cam_h={} k1={}",
+                q.cam_h,
+                q.stage1_k
+            );
+        }
+    }
+
+    #[test]
+    fn extra_adcs_cost_area() {
+        let mut rng = Rng::new(47);
+        let one = evaluate(1024, 16, 1, 8, 2, &mut rng);
+        let four = evaluate(1024, 16, 4, 8, 2, &mut rng);
+        assert!(four.area_mm2 > one.area_mm2);
+    }
+
+    #[test]
+    fn pareto_set_is_nonempty_and_nondominated() {
+        let pts = sweep(512, 43);
+        let front = pareto(&pts);
+        assert!(!front.is_empty() && front.len() < pts.len());
+        for a in &front {
+            assert!(!front.iter().any(|b| a.dominated_by(b)));
+        }
+    }
+
+    #[test]
+    fn more_adcs_trade_area_for_throughput() {
+        let mut rng = Rng::new(44);
+        let one = evaluate(1024, 16, 1, 8, 2, &mut rng);
+        let four = evaluate(1024, 16, 4, 8, 2, &mut rng);
+        assert!(four.throughput_qry_per_ms > one.throughput_qry_per_ms * 2.0);
+    }
+
+    #[test]
+    fn smaller_k1_never_improves_recall() {
+        let mut rng = Rng::new(45);
+        let k1 = evaluate(1024, 16, 1, 8, 1, &mut rng);
+        let k4 = evaluate(1024, 16, 1, 8, 4, &mut rng);
+        assert!(k4.weighted_recall >= k1.weighted_recall);
+    }
+
+    #[test]
+    fn stall_fraction_bounded() {
+        for p in sweep(256, 46) {
+            assert!((0.0..1.0).contains(&p.stall_frac));
+        }
+    }
+}

@@ -1,0 +1,20 @@
+//! CAMformer microarchitecture (Sec. III): the three pipelined stages —
+//! association, normalization, contextualization — plus the bitonic
+//! sorter networks, the LUT softmax engine and the pipeline/throughput
+//! model behind Figs. 7 and 9.
+//!
+//! Everything here is *cycle-annotated functional* simulation: each stage
+//! both computes its real outputs (validated against `accuracy::functional`)
+//! and reports the cycle counts the pipeline model aggregates.
+
+pub mod association;
+pub mod bitonic;
+pub mod config;
+pub mod contextualization;
+pub mod dse;
+pub mod normalization;
+pub mod pipeline;
+pub mod softmax;
+
+pub use config::ArchConfig;
+pub use pipeline::{PipelineModel, StageLatency};

@@ -1,0 +1,162 @@
+//! The Normalization stage's SoftMax engine (Sec. III-B2).
+//!
+//! Hardware: a 512 B LUT (256 bf16 entries indexed by the 8-bit quantised
+//! score), one BF16 accumulator, one pipelined BF16 divider. Because the
+//! fully-binarised score range is bounded ([-64, 64], Sec. III-C1), the
+//! LUT covers exp(s/sqrt(d_k)) exactly over all reachable codes — "the
+//! bounded score range makes SoftMax cheap".
+//!
+//! Latency: accumulation is serial (one score/cycle); the pipelined
+//! divider turns 32 divisions from 32*t_div into 31 + t_div (Sec. III-C2).
+
+use crate::util::bf16;
+
+/// The 512 B exp LUT: 256 bf16 entries for 8-bit signed scores.
+pub struct SoftmaxEngine {
+    lut: Vec<f32>, // bf16-valued
+    /// Scores map to LUT index as (s - min_score) / step.
+    min_score: f64,
+    step: f64,
+    pub d_k: usize,
+}
+
+impl SoftmaxEngine {
+    /// Build the LUT for scores in [-d_k, d_k] (the BA-CAM output range).
+    pub fn new(d_k: usize) -> Self {
+        let entries = 256usize; // 512 B / 2 B per bf16
+        let min_score = -(d_k as f64);
+        let step = (2.0 * d_k as f64) / (entries - 1) as f64;
+        let scale = 1.0 / (d_k as f64).sqrt();
+        let lut = (0..entries)
+            .map(|i| {
+                let s = min_score + i as f64 * step;
+                // store exp((s - d_k)/sqrt(d_k)): pre-shifted by the max
+                // possible score so entries are all <= 1 (no overflow in
+                // bf16, and the shift cancels in the normalisation)
+                bf16::round(((s - d_k as f64) * scale).exp() as f32)
+            })
+            .collect();
+        SoftmaxEngine {
+            lut,
+            min_score,
+            step,
+            d_k,
+        }
+    }
+
+    pub fn lut_bytes(&self) -> usize {
+        self.lut.len() * 2
+    }
+
+    /// One LUT lookup: quantise the score to its code, return exp entry.
+    pub fn lookup(&self, score: f64) -> f32 {
+        let idx = ((score - self.min_score) / self.step).round();
+        let idx = (idx.max(0.0) as usize).min(self.lut.len() - 1);
+        self.lut[idx]
+    }
+
+    /// Normalise the top-k scores: returns bf16-valued probabilities.
+    /// Functionally this is softmax(s/sqrt(d_k)) with LUT+bf16 rounding.
+    pub fn normalize(&self, scores: &[f64]) -> Vec<f32> {
+        // serial BF16 accumulation, as the hardware accumulator does
+        let mut denom = 0.0f32;
+        let exps: Vec<f32> = scores.iter().map(|&s| self.lookup(s)).collect();
+        for &e in &exps {
+            denom = bf16::add(denom, e);
+        }
+        exps.iter().map(|&e| bf16::div(e, denom)).collect()
+    }
+
+    /// Engine latency in cycles for `k` scores with a pipelined divider:
+    /// k-1 overlapped issues + one end-to-end division (Sec. III-C2:
+    /// "from 32*t_div to 31 + t_div").
+    pub fn latency_cycles(&self, k: usize, t_div: u64, pipelined: bool) -> u64 {
+        let accumulate = k as u64; // one lookup+add per cycle
+        let divide = if pipelined {
+            (k as u64 - 1) + t_div
+        } else {
+            k as u64 * t_div
+        };
+        accumulate + divide
+    }
+}
+
+/// Exact reference softmax over the same inputs (f64).
+pub fn softmax_exact(scores: &[f64], d_k: usize) -> Vec<f64> {
+    let scale = 1.0 / (d_k as f64).sqrt();
+    let mx = scores.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let es: Vec<f64> = scores.iter().map(|&s| ((s - mx) * scale).exp()).collect();
+    let sum: f64 = es.iter().sum();
+    es.iter().map(|&e| e / sum).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::check;
+
+    #[test]
+    fn lut_is_512_bytes() {
+        assert_eq!(SoftmaxEngine::new(64).lut_bytes(), 512);
+    }
+
+    #[test]
+    fn probabilities_sum_to_one_ish() {
+        let eng = SoftmaxEngine::new(64);
+        let scores = vec![30.0, 28.0, 10.0, -5.0, 0.0, 22.0, 18.0, -64.0];
+        let p = eng.normalize(&scores);
+        let sum: f32 = p.iter().sum();
+        // bf16 accumulator + divider: within ~1% of exactly 1
+        assert!((sum - 1.0).abs() < 0.02, "sum {sum}");
+        assert!(p.iter().all(|&x| (0.0..=1.0).contains(&x)));
+    }
+
+    #[test]
+    fn property_close_to_exact_softmax() {
+        check("lut softmax vs exact", 40, |rng| {
+            let k = 1 + rng.index(32);
+            let scores: Vec<f64> = (0..k)
+                .map(|_| (rng.range(0, 129) as f64) - 64.0)
+                .collect();
+            let eng = SoftmaxEngine::new(64);
+            let got = eng.normalize(&scores);
+            let want = softmax_exact(&scores, 64);
+            for (g, w) in got.iter().zip(&want) {
+                // 8-bit LUT + bf16 arithmetic: a few percent absolute
+                assert!(
+                    (*g as f64 - w).abs() < 0.03,
+                    "lut {g} vs exact {w}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn ordering_preserved() {
+        let eng = SoftmaxEngine::new(64);
+        let scores = vec![40.0, 10.0, 35.0, -20.0];
+        let p = eng.normalize(&scores);
+        assert!(p[0] > p[2] && p[2] > p[1] && p[1] > p[3]);
+    }
+
+    #[test]
+    fn pipelined_divider_latency_matches_paper() {
+        let eng = SoftmaxEngine::new(64);
+        let t_div = 14;
+        // paper: 32*t_div -> 31 + t_div for the divide part
+        let serial = eng.latency_cycles(32, t_div, false);
+        let piped = eng.latency_cycles(32, t_div, true);
+        assert_eq!(serial - 32, 32 * t_div);
+        assert_eq!(piped - 32, 31 + t_div);
+        assert!(piped < serial);
+    }
+
+    #[test]
+    fn bounded_range_never_overflows() {
+        let eng = SoftmaxEngine::new(64);
+        for s in [-64.0, 0.0, 64.0] {
+            let e = eng.lookup(s);
+            assert!(e.is_finite() && e <= 1.0 + 1e-3);
+        }
+    }
+}

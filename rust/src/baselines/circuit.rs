@@ -1,0 +1,178 @@
+//! Circuit-level BIMV alternatives (Table I): behavioural error models of
+//! CiM (XNOR + popcount with calibrated flash ADC) and TD-CAM (time-domain
+//! matchline sensing through a TDA), compared against BA-CAM's voltage
+//! sensing under the same PVT conditions.
+//!
+//! The point the table makes: delay-domain sensing is *nonlinear* in the
+//! match count and its device-delay variations accumulate, so TD-CAM needs
+//! calibration and still shows up to 7.76% deviation; voltage-domain
+//! charge sharing is linear and ratiometric, holding ~1% mean error.
+
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+/// Sensing scheme under comparison.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scheme {
+    /// Bit-line XNOR+popcount with column-muxed flash ADC (CiM [29]).
+    CiM,
+    /// Time-domain matchline, TDA sensing (TD-CAM [28]).
+    TdCam,
+    /// Voltage-domain charge sharing (BA-CAM, ours).
+    BaCam,
+}
+
+/// One Table I row's *measured* characteristics.
+#[derive(Clone, Debug)]
+pub struct CircuitRow {
+    pub scheme: Scheme,
+    pub name: &'static str,
+    pub sensing: &'static str,
+    pub peripherals: &'static str,
+    pub freq_mhz: f64,
+    pub mean_err_pct: f64,
+    pub max_dev_pct: f64,
+}
+
+/// Simulate the *normalised match-count estimate* error of each scheme at
+/// a given process sigma, over random match counts on a 64-wide row.
+pub fn simulate_error(scheme: Scheme, sigma: f64, trials: usize, rng: &mut Rng) -> (f64, f64) {
+    let width = 64usize;
+    let mut errs = Vec::with_capacity(trials);
+    for _ in 0..trials {
+        let m = rng.index(width + 1);
+        let ideal = m as f64 / width as f64;
+        let measured = match scheme {
+            Scheme::BaCam => {
+                // ratiometric voltage: per-cell cap mismatch averages over
+                // the row (error ~ sigma*sqrt(m)/width), plus the shared
+                // SAR's comparator offset + reference noise referred to
+                // full scale (the dominant residual — calibrated to the
+                // paper's 1.12% overall error at sigma = 1.4%)
+                let mut num = 0.0;
+                let mut den = 0.0;
+                for i in 0..width {
+                    let c = 1.0 + sigma * rng.gauss();
+                    den += c;
+                    if i < m {
+                        num += c;
+                    }
+                }
+                num / den + 0.9 * sigma * rng.gauss()
+            }
+            Scheme::TdCam => {
+                // discharge delay ~ 1/(m + m0): nonlinear; unlike charge
+                // sharing, the discharge-path delay does NOT average over
+                // the row — threshold/drive variation rides on the full
+                // path and the TDA adds conversion jitter. The effective
+                // sigma multipliers (11x drive, 5.5x TDA) are calibrated
+                // to the published 7.76% TD-CAM deviation [28]; what the
+                // model preserves is the *relative* robustness ordering
+                // and its sigma scaling.
+                let m0 = 4.0;
+                let ideal_delay = 1.0 / (m as f64 + m0);
+                let drive = 1.0 + 11.0 * sigma * rng.gauss();
+                let tda_jitter = 1.0 + 5.5 * sigma * rng.gauss();
+                let delay = (ideal_delay * drive * tda_jitter).max(1e-6);
+                // invert through the nominal curve
+                (1.0 / delay - m0) / width as f64
+            }
+            Scheme::CiM => {
+                // digital popcount is exact; the flash ADC's per-column
+                // gain/offset spread (needs calibration, Table I) is the
+                // error source — multipliers calibrated to the ~7%
+                // predicted CiM error [29]
+                let gain = 1.0 + 8.0 * sigma * rng.gauss();
+                let offset = 2.0 * sigma * rng.gauss();
+                ideal * gain + offset
+            }
+        };
+        errs.push((measured - ideal).abs() * 100.0);
+    }
+    (stats::mean(&errs), errs.iter().cloned().fold(0.0, f64::max))
+}
+
+/// Regenerate Table I with measured error columns at sigma = 1.4%.
+pub fn table1_rows(seed: u64) -> Vec<CircuitRow> {
+    let mut rng = Rng::new(seed);
+    let trials = 4000;
+    let (cim_mean, cim_max) = simulate_error(Scheme::CiM, 0.014, trials, &mut rng);
+    let (td_mean, td_max) = simulate_error(Scheme::TdCam, 0.014, trials, &mut rng);
+    let (ba_mean, ba_max) = simulate_error(Scheme::BaCam, 0.014, trials, &mut rng);
+    vec![
+        CircuitRow {
+            scheme: Scheme::CiM,
+            name: "CiM [29]",
+            sensing: "BL sum (XNOR+Accumulate)",
+            peripherals: "Flash ADC (MUX) + Adder Tree",
+            freq_mhz: 18.5,
+            mean_err_pct: cim_mean,
+            max_dev_pct: cim_max,
+        },
+        CircuitRow {
+            scheme: Scheme::TdCam,
+            name: "TD-CAM [28]",
+            sensing: "Time ML",
+            peripherals: "TDA + tune",
+            freq_mhz: 200.0,
+            mean_err_pct: td_mean,
+            max_dev_pct: td_max,
+        },
+        CircuitRow {
+            scheme: Scheme::BaCam,
+            name: "BA-CAM (Ours)",
+            sensing: "Voltage ML",
+            peripherals: "Shared SAR",
+            freq_mhz: 500.0,
+            mean_err_pct: ba_mean,
+            max_dev_pct: ba_max,
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bacam_beats_tdcam_and_cim() {
+        let rows = table1_rows(42);
+        let get = |s: Scheme| rows.iter().find(|r| r.scheme == s).unwrap();
+        let ba = get(Scheme::BaCam);
+        let td = get(Scheme::TdCam);
+        let cim = get(Scheme::CiM);
+        assert!(ba.mean_err_pct < td.mean_err_pct);
+        assert!(ba.mean_err_pct < cim.mean_err_pct);
+    }
+
+    #[test]
+    fn error_bands_match_table1() {
+        // paper: BA-CAM 1.12% (sigma=1.4%), TD-CAM 7.76%, CiM ~7% (pred.)
+        let rows = table1_rows(43);
+        let get = |s: Scheme| rows.iter().find(|r| r.scheme == s).unwrap();
+        let ba = get(Scheme::BaCam).mean_err_pct;
+        let td = get(Scheme::TdCam).mean_err_pct;
+        let cim = get(Scheme::CiM).mean_err_pct;
+        assert!(ba < 2.0, "BA-CAM mean err {ba}% (paper 1.12%)");
+        assert!((3.0..12.0).contains(&td), "TD-CAM mean err {td}% (paper 7.76%)");
+        assert!((2.0..12.0).contains(&cim), "CiM err {cim}% (paper ~7%)");
+    }
+
+    #[test]
+    fn tdcam_error_grows_faster_with_sigma() {
+        let mut rng = Rng::new(44);
+        let (ba_lo, _) = simulate_error(Scheme::BaCam, 0.01, 2000, &mut rng);
+        let (ba_hi, _) = simulate_error(Scheme::BaCam, 0.04, 2000, &mut rng);
+        let (td_lo, _) = simulate_error(Scheme::TdCam, 0.01, 2000, &mut rng);
+        let (td_hi, _) = simulate_error(Scheme::TdCam, 0.04, 2000, &mut rng);
+        assert!((td_hi - td_lo) > (ba_hi - ba_lo));
+    }
+
+    #[test]
+    fn frequencies_match_table() {
+        let rows = table1_rows(45);
+        assert_eq!(rows[0].freq_mhz, 18.5);
+        assert_eq!(rows[1].freq_mhz, 200.0);
+        assert_eq!(rows[2].freq_mhz, 500.0);
+    }
+}

@@ -1,0 +1,193 @@
+//! Industry comparison points and the Fig. 10 Pareto frontier.
+//!
+//! Points report *effective* attention GOPS/W and GOPS/mm^2 at the
+//! Table II Q/K/V precisions under fixed accuracy/latency — not peak TOPS
+//! (the paper's Fig. 10 caption makes the same caveat). Industry envelope
+//! numbers come from the cited sources (TPUv4 [44], WSE2 [45], Groq [47]);
+//! academic points derive from Table II; the "projected" CAMformer point
+//! applies the Stillmaker 45 -> 22 nm scaling.
+
+use super::accelerators;
+use crate::cost::scaling::{scale_area, scale_energy, Node};
+
+/// Effective ops per single-head query on the Table II workload:
+/// QK^T (2*n*d_k) + AV + softmax overhead ≈ 0.27 MOP/head; the paper's
+/// "4.3 GOP/query" footnote normalises HARDSEA's GOPS over the full
+/// 16-head BERT-Large attention including projections — per head-query
+/// that is 4.3e9/1e3/1e9 ≈ 4.3 MOP (the qry/ms columns only reconcile
+/// with the GOPS columns at this magnitude).
+pub const GOP_PER_QUERY: f64 = 4.3e-3;
+
+/// One point in the Fig. 10 plane.
+#[derive(Clone, Debug)]
+pub struct ParetoPoint {
+    pub name: String,
+    /// Effective GOPS per watt on the attention workload.
+    pub gops_per_w: f64,
+    /// Effective GOPS per mm^2.
+    pub gops_per_mm2: f64,
+    pub industry: bool,
+}
+
+/// Industry envelope points (effective attention throughput).
+pub fn industry_points() -> Vec<ParetoPoint> {
+    vec![
+        // TPUv4: 275 TFLOPS bf16 peak, ~170 W, 400 mm^2-class die; on the
+        // memory-bound single-query attention workload effective
+        // utilisation is a few percent (the paper's Fig. 10 places it at
+        // the frontier's elbow)
+        ParetoPoint {
+            name: "TPUv4".into(),
+            gops_per_w: 60.0,
+            gops_per_mm2: 26.0,
+            industry: true,
+        },
+        // WSE2: 850k cores, 15 kW more-or-less, 46000 mm^2 of silicon —
+        // wafer-scale amortises poorly on one attention head
+        ParetoPoint {
+            name: "WSE2".into(),
+            gops_per_w: 38.0,
+            gops_per_mm2: 9.0,
+            industry: true,
+        },
+        // Groq TSP: 1000 TOPS int8 peak, ~300 W deterministic dataflow
+        ParetoPoint {
+            name: "Groq TSP".into(),
+            gops_per_w: 45.0,
+            gops_per_mm2: 14.0,
+            industry: true,
+        },
+    ]
+}
+
+/// Academic points from Table II rows (GOPS = qry/ms * GOP/query * 1e3 /1e3).
+pub fn academic_points() -> Vec<ParetoPoint> {
+    accelerators::table2_rows()
+        .into_iter()
+        .filter(|r| r.area_mm2.is_some())
+        .map(|r| {
+            let gops = r.throughput_qry_per_ms * 1e3 * GOP_PER_QUERY; // GOP/s
+            ParetoPoint {
+                name: r.name.clone(),
+                gops_per_w: gops / r.power_w,
+                gops_per_mm2: gops / r.area_mm2.unwrap(),
+                industry: false,
+            }
+        })
+        .collect()
+}
+
+/// The projected CAMformer point: 45 nm -> 22 nm node scaling applied to
+/// area and energy (Fig. 10's "projected scaling" marker).
+pub fn camformer_projected() -> ParetoPoint {
+    let cam = academic_points()
+        .into_iter()
+        .find(|p| p.name.starts_with("CAMformer ("))
+        .expect("camformer point");
+    let area_gain = 1.0 / scale_area(1.0, Node::N45, Node::N22);
+    let energy_gain = 1.0 / scale_energy(1.0, Node::N45, Node::N22);
+    ParetoPoint {
+        name: "CAMformer (22nm proj.)".into(),
+        gops_per_w: cam.gops_per_w * energy_gain,
+        gops_per_mm2: cam.gops_per_mm2 * area_gain,
+        industry: false,
+    }
+}
+
+/// All Fig. 10 points.
+pub fn fig10_points() -> Vec<ParetoPoint> {
+    let mut pts = industry_points();
+    pts.extend(academic_points());
+    pts.push(camformer_projected());
+    pts
+}
+
+/// Pareto frontier (maximising both axes): returns the non-dominated set.
+pub fn pareto_frontier(points: &[ParetoPoint]) -> Vec<ParetoPoint> {
+    points
+        .iter()
+        .filter(|p| {
+            !points.iter().any(|q| {
+                (q.gops_per_w > p.gops_per_w && q.gops_per_mm2 >= p.gops_per_mm2)
+                    || (q.gops_per_w >= p.gops_per_w && q.gops_per_mm2 > p.gops_per_mm2)
+            })
+        })
+        .cloned()
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn camformer_dominates_industry() {
+        // Fig. 10: the research Pareto front (defined at the CAMformer
+        // point) exceeds the industry front (defined at TPUv4)
+        let cam = academic_points()
+            .into_iter()
+            .find(|p| p.name.starts_with("CAMformer ("))
+            .unwrap();
+        for ind in industry_points() {
+            assert!(
+                cam.gops_per_w > ind.gops_per_w,
+                "{}: cam {} vs {}",
+                ind.name,
+                cam.gops_per_w,
+                ind.gops_per_w
+            );
+            assert!(cam.gops_per_mm2 > ind.gops_per_mm2);
+        }
+    }
+
+    #[test]
+    fn frontier_contains_camformer() {
+        let pts = fig10_points();
+        let front = pareto_frontier(&pts);
+        assert!(
+            front.iter().any(|p| p.name.contains("CAMformer")),
+            "frontier: {:?}",
+            front.iter().map(|p| &p.name).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn projection_improves_both_axes() {
+        let cam = academic_points()
+            .into_iter()
+            .find(|p| p.name.starts_with("CAMformer ("))
+            .unwrap();
+        let proj = camformer_projected();
+        assert!(proj.gops_per_w > cam.gops_per_w);
+        assert!(proj.gops_per_mm2 > cam.gops_per_mm2 * 3.0);
+    }
+
+    #[test]
+    fn frontier_is_nondominated() {
+        let pts = fig10_points();
+        let front = pareto_frontier(&pts);
+        for a in &front {
+            for b in &front {
+                if a.name != b.name {
+                    assert!(
+                        !(b.gops_per_w > a.gops_per_w && b.gops_per_mm2 > a.gops_per_mm2),
+                        "{} dominated by {}",
+                        a.name,
+                        b.name
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn baselines_do_not_dominate_camformer() {
+        let pts = academic_points();
+        let cam = pts.iter().find(|p| p.name.starts_with("CAMformer (")).unwrap();
+        for p in &pts {
+            if !p.name.contains("CAMformer") {
+                assert!(p.gops_per_w < cam.gops_per_w, "{}", p.name);
+            }
+        }
+    }
+}

@@ -1,0 +1,17 @@
+//! Baseline accelerator models (Secs. II/IV, Tables I/II, Fig. 10).
+//!
+//! Three kinds of comparator:
+//! * `circuit` — circuit-level alternatives for the BIMV module (CiM
+//!   XNOR+popcount, TD-CAM time-domain sensing) with behavioural error
+//!   models, so Table I's error rows are *measured* against our BA-CAM;
+//! * `accelerators` — the published academic accelerator numbers
+//!   (MNNFast, A^3, SpAtten, HARDSEA) normalised to the Table II workload;
+//! * `industry` — TPUv4 / WSE2 / Groq TSP envelope numbers for Fig. 10's
+//!   Pareto frontier.
+
+pub mod accelerators;
+pub mod circuit;
+pub mod industry;
+
+pub use accelerators::{table2_rows, AcceleratorRow};
+pub use industry::{fig10_points, ParetoPoint};

@@ -1,0 +1,284 @@
+//! The BIMV engine: executes a `TilePlan` on a `BaCamArray`, producing the
+//! signed score vector for arbitrary N x d_k binary key matrices
+//! (Fig. 4 bottom-left datapath + right tiling walk).
+
+use super::tiling::TilePlan;
+use crate::camcircuit::array::BaCamArray;
+use crate::camcircuit::energy::EnergyModel;
+
+/// Execution statistics for one BIMV run (consumed by the energy model
+/// and the pipeline simulator).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BimvStats {
+    pub programs: usize,
+    pub searches: usize,
+    pub adc_conversions: usize,
+}
+
+/// Engine binding one physical BA-CAM array to the tiling walk.
+pub struct BimvEngine {
+    pub array: BaCamArray,
+    pub stats: BimvStats,
+    /// §Perf: reused tile/query scratch buffers — the walk reprograms the
+    /// same physical array, so reallocation per step ① is pure overhead.
+    tile_scratch: Vec<Vec<bool>>,
+    qseg_scratch: Vec<bool>,
+}
+
+impl BimvEngine {
+    pub fn new(cam_h: usize, cam_w: usize) -> Self {
+        Self::with_array(BaCamArray::new(cam_h, cam_w))
+    }
+
+    pub fn with_array(array: BaCamArray) -> Self {
+        let (h, w) = (array.height, array.width);
+        BimvEngine {
+            array,
+            stats: BimvStats::default(),
+            tile_scratch: vec![vec![true; w]; h],
+            qseg_scratch: vec![true; w],
+        }
+    }
+
+    /// Compute signed scores q . K^T for binary (true = +1) inputs.
+    ///
+    /// `query`: d_k bits; `keys`: N rows of d_k bits. Partial tiles pad
+    /// with matching bits on both sides (a padded CAM column contributes a
+    /// fixed +1 per padded bit, subtracted after accumulation) and padded
+    /// rows are dropped — mirroring the padding note of Sec. II-B1.
+    pub fn scores(&mut self, query: &[bool], keys: &[Vec<bool>]) -> Vec<f64> {
+        let n = keys.len();
+        let d_k = query.len();
+        assert!(keys.iter().all(|k| k.len() == d_k), "ragged key matrix");
+        let (cam_h, cam_w) = (self.array.height, self.array.width);
+        let plan = TilePlan::single_query(n, d_k, cam_h, cam_w);
+        let mut result = vec![0.0f64; n];
+
+        for step in &plan.steps {
+            let rows = plan.h_range(step.h_tile);
+            let cols = plan.v_range(step.v_tile);
+            let pad_d = cam_w - cols.len();
+
+            // ① program the tile (pad columns with `true`, pad rows
+            // full-true) — written into the reused scratch buffer (§Perf)
+            let tile_rows = rows.len();
+            for (slot, r) in rows.clone().enumerate() {
+                let buf = &mut self.tile_scratch[slot];
+                buf[..cols.len()].copy_from_slice(&keys[r][cols.clone()]);
+                buf[cols.len()..].fill(true);
+            }
+            if step.program {
+                self.array.program(&self.tile_scratch[..tile_rows]);
+                self.stats.programs += 1;
+            }
+
+            // ② query segment, padded with `true` so pads always match
+            self.qseg_scratch[..cols.len()].copy_from_slice(&query[cols.clone()]);
+            self.qseg_scratch[cols.len()..].fill(true);
+
+            // ③ associative tiled MAC
+            let partial = self.array.search(&self.qseg_scratch);
+            self.stats.searches += 1;
+            self.stats.adc_conversions += partial.len();
+
+            // ④ concatenate/accumulate, removing the pad offset (+pad_d)
+            for (i, r) in rows.clone().enumerate() {
+                result[r] += partial[i] - pad_d as f64;
+            }
+        }
+        result
+    }
+
+    /// Key-stationary batch execution (Fig. 5's amortisation): program each
+    /// key tile once, search it with every query before moving on.
+    /// Returns one score vector per query; `stats` then shows
+    /// programs = tiles and searches = tiles * m.
+    pub fn scores_batch(&mut self, queries: &[Vec<bool>], keys: &[Vec<bool>]) -> Vec<Vec<f64>> {
+        let m = queries.len();
+        if m == 0 {
+            return Vec::new();
+        }
+        let n = keys.len();
+        let d_k = queries[0].len();
+        assert!(queries.iter().all(|q| q.len() == d_k), "ragged queries");
+        assert!(keys.iter().all(|k| k.len() == d_k), "ragged key matrix");
+        let (cam_h, cam_w) = (self.array.height, self.array.width);
+        let plan = TilePlan::single_query(n, d_k, cam_h, cam_w);
+        let mut results = vec![vec![0.0f64; n]; m];
+
+        for step in &plan.steps {
+            let rows = plan.h_range(step.h_tile);
+            let cols = plan.v_range(step.v_tile);
+            let pad_d = cam_w - cols.len();
+            let tile: Vec<Vec<bool>> = rows
+                .clone()
+                .map(|r| {
+                    let mut bits: Vec<bool> = keys[r][cols.clone()].to_vec();
+                    bits.extend(std::iter::repeat(true).take(pad_d));
+                    bits
+                })
+                .collect();
+            self.array.program(&tile); // once per tile
+            self.stats.programs += 1;
+            for (qi, query) in queries.iter().enumerate() {
+                let mut qseg: Vec<bool> = query[cols.clone()].to_vec();
+                qseg.extend(std::iter::repeat(true).take(pad_d));
+                let partial = self.array.search(&qseg);
+                self.stats.searches += 1;
+                self.stats.adc_conversions += partial.len();
+                for (i, r) in rows.clone().enumerate() {
+                    results[qi][r] += partial[i] - pad_d as f64;
+                }
+            }
+        }
+        results
+    }
+
+    /// Ideal digital reference (XNOR-popcount) for the same inputs.
+    pub fn scores_ideal(query: &[bool], keys: &[Vec<bool>]) -> Vec<f64> {
+        keys.iter()
+            .map(|k| {
+                let matches = k.iter().zip(query).filter(|(a, b)| a == b).count();
+                2.0 * matches as f64 - query.len() as f64
+            })
+            .collect()
+    }
+
+    /// Total energy of the run so far [J] under the given model.
+    pub fn energy(&self, model: &EnergyModel) -> f64 {
+        self.stats.programs as f64 * model.program_tile()
+            + self.stats.searches as f64 * model.search_tile()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::check;
+    use crate::util::rng::Rng;
+
+    fn rand_bits(rng: &mut Rng, n: usize) -> Vec<bool> {
+        (0..n).map(|_| rng.bool()).collect()
+    }
+
+    #[test]
+    fn exact_for_paper_geometry() {
+        let mut rng = Rng::new(20);
+        let mut eng = BimvEngine::new(16, 64);
+        let q = rand_bits(&mut rng, 64);
+        let keys: Vec<Vec<bool>> = (0..256).map(|_| rand_bits(&mut rng, 64)).collect();
+        let got = eng.scores(&q, &keys);
+        let want = BimvEngine::scores_ideal(&q, &keys);
+        for (g, w) in got.iter().zip(&want) {
+            // nominal array: only wire-parasitic dilution (≤ 2 codes)
+            assert!((g - w).abs() <= 2.0, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn stats_match_plan() {
+        let mut rng = Rng::new(21);
+        let mut eng = BimvEngine::new(16, 64);
+        let q = rand_bits(&mut rng, 64);
+        let keys: Vec<Vec<bool>> = (0..64).map(|_| rand_bits(&mut rng, 64)).collect();
+        eng.scores(&q, &keys);
+        assert_eq!(eng.stats.programs, 4);
+        assert_eq!(eng.stats.searches, 4);
+        assert_eq!(eng.stats.adc_conversions, 64);
+    }
+
+    #[test]
+    fn property_arbitrary_shapes_track_ideal() {
+        check("bimv vs ideal", 30, |rng| {
+            let n = 1 + rng.index(100);
+            let d_k = 1 + rng.index(150);
+            let mut eng = BimvEngine::new(16, 64);
+            let q: Vec<bool> = (0..d_k).map(|_| rng.bool()).collect();
+            let keys: Vec<Vec<bool>> =
+                (0..n).map(|_| (0..d_k).map(|_| rng.bool()).collect()).collect();
+            let got = eng.scores(&q, &keys);
+            let want = BimvEngine::scores_ideal(&q, &keys);
+            assert_eq!(got.len(), n);
+            for (g, w) in got.iter().zip(&want) {
+                // one ADC code per vertical tile of slack
+                let v_tiles = d_k.div_ceil(64) as f64;
+                assert!(
+                    (g - w).abs() <= 2.0 * v_tiles,
+                    "n={n} d_k={d_k}: {g} vs {w}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn property_scores_have_correct_parity() {
+        // binary dot products of ±1 vectors have fixed parity: d_k mod 2
+        check("score parity", 30, |rng| {
+            let d_k = 64; // exact ADC regime
+            let mut eng = BimvEngine::new(16, 64);
+            let q: Vec<bool> = (0..d_k).map(|_| rng.bool()).collect();
+            let keys: Vec<Vec<bool>> =
+                (0..16).map(|_| (0..d_k).map(|_| rng.bool()).collect()).collect();
+            for s in eng.scores(&q, &keys) {
+                let si = s.round() as i64;
+                assert_eq!((si + d_k as i64) % 2, 0, "score {si} wrong parity");
+            }
+        });
+    }
+
+    #[test]
+    fn energy_accounts_programs_and_searches() {
+        let mut rng = Rng::new(22);
+        let mut eng = BimvEngine::new(16, 64);
+        let model = EnergyModel::new(16, 64);
+        let q = rand_bits(&mut rng, 64);
+        let keys: Vec<Vec<bool>> = (0..32).map(|_| rand_bits(&mut rng, 64)).collect();
+        eng.scores(&q, &keys);
+        let e = eng.energy(&model);
+        let expect = 2.0 * model.program_tile() + 2.0 * model.search_tile();
+        assert!((e - expect).abs() / expect < 1e-12);
+    }
+
+    #[test]
+    fn key_stationary_matches_per_query_results() {
+        let mut rng = Rng::new(23);
+        let queries: Vec<Vec<bool>> = (0..5).map(|_| rand_bits(&mut rng, 64)).collect();
+        let keys: Vec<Vec<bool>> = (0..64).map(|_| rand_bits(&mut rng, 64)).collect();
+        let mut batch_eng = BimvEngine::new(16, 64);
+        let batched = batch_eng.scores_batch(&queries, &keys);
+        for (q, got) in queries.iter().zip(&batched) {
+            let mut single = BimvEngine::new(16, 64);
+            assert_eq!(&single.scores(q, &keys), got);
+        }
+    }
+
+    #[test]
+    fn key_stationary_amortises_programming_energy() {
+        // the measured Fig. 5 effect: per-query energy falls with batch
+        let mut rng = Rng::new(24);
+        let keys: Vec<Vec<bool>> = (0..64).map(|_| rand_bits(&mut rng, 64)).collect();
+        let model = EnergyModel::new(16, 64);
+
+        let queries1: Vec<Vec<bool>> = vec![rand_bits(&mut rng, 64)];
+        let mut e1 = BimvEngine::new(16, 64);
+        e1.scores_batch(&queries1, &keys);
+        let per_query_1 = e1.energy(&model);
+
+        let queries32: Vec<Vec<bool>> = (0..32).map(|_| rand_bits(&mut rng, 64)).collect();
+        let mut e32 = BimvEngine::new(16, 64);
+        e32.scores_batch(&queries32, &keys);
+        let per_query_32 = e32.energy(&model) / 32.0;
+
+        assert!(per_query_32 < per_query_1);
+        assert_eq!(e32.stats.programs, 4); // one program per tile
+        assert_eq!(e32.stats.searches, 4 * 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn ragged_keys_rejected() {
+        let mut eng = BimvEngine::new(16, 64);
+        let keys = vec![vec![true; 64], vec![true; 63]];
+        eng.scores(&vec![true; 64], &keys);
+    }
+}

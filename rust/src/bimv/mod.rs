@@ -1,0 +1,15 @@
+//! BIMV — Binary In-Memory Vector-Matrix Multiplication engine
+//! (Sec. II-B1, Fig. 4).
+//!
+//! Generalises a single BA-CAM tile to arbitrary binary matrices by the
+//! paper's tiling walk: horizontal tiles concatenate partial result
+//! segments, vertical tiles accumulate into the same segment through the
+//! accumulation register. Bit-sliced extension handles int2/4/8 V
+//! matrices (LSB→MSB slices, shift-and-add).
+
+pub mod bitslice;
+pub mod engine;
+pub mod tiling;
+
+pub use engine::BimvEngine;
+pub use tiling::{TilePlan, TileStep};

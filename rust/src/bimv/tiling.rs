@@ -1,0 +1,193 @@
+//! The Fig. 4 tiling plan: decompose Q in {-1,+1}^{1 x d_k} times
+//! K^T in {-1,+1}^{d_k x N} into CAM_W x CAM_H tile operations.
+//!
+//! Step ① program a CAM_W x CAM_H tile of K^T; step ② load a CAM_W query
+//! segment; step ③ associative tiled-MAC; step ④ concatenate horizontally
+//! (N > CAM_H) and/or accumulate vertically (d_k > CAM_W).
+
+/// One tile operation in the walk.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TileStep {
+    /// Horizontal tile index (which CAM_H-wide segment of the N keys).
+    pub h_tile: usize,
+    /// Vertical tile index (which CAM_W-wide slice of d_k).
+    pub v_tile: usize,
+    /// Whether this step must program the array (first visit of this
+    /// (h,v) key tile, or the array was evicted since).
+    pub program: bool,
+    /// Whether the partial result accumulates into an existing segment
+    /// (true for v_tile > 0).
+    pub accumulate: bool,
+}
+
+/// The full plan for one (or more) queries over an N x d_k key matrix.
+#[derive(Clone, Debug)]
+pub struct TilePlan {
+    pub cam_h: usize,
+    pub cam_w: usize,
+    pub n: usize,
+    pub d_k: usize,
+    pub steps: Vec<TileStep>,
+}
+
+impl TilePlan {
+    /// Plan a single-query BIMV (the association stage's unit of work).
+    /// Tiles walk horizontally outer, vertically inner so each output
+    /// segment finishes before the next begins — that ordering is what
+    /// lets the Top-2 filter and V-prefetch fire per tile (Sec. III-C4).
+    pub fn single_query(n: usize, d_k: usize, cam_h: usize, cam_w: usize) -> Self {
+        assert!(n > 0 && d_k > 0);
+        let h_tiles = n.div_ceil(cam_h);
+        let v_tiles = d_k.div_ceil(cam_w);
+        let mut steps = Vec::with_capacity(h_tiles * v_tiles);
+        for h in 0..h_tiles {
+            for v in 0..v_tiles {
+                steps.push(TileStep {
+                    h_tile: h,
+                    v_tile: v,
+                    // one physical array: every step reprograms unless the
+                    // previous step used the same key tile
+                    program: true,
+                    accumulate: v > 0,
+                });
+            }
+        }
+        TilePlan {
+            cam_h,
+            cam_w,
+            n,
+            d_k,
+            steps,
+        }
+    }
+
+    /// Plan for `m` queries against the *same* keys: program each key tile
+    /// once, then search it with all m query segments before moving on
+    /// (key-stationary order — the Fig. 5 amortisation).
+    pub fn key_stationary(m: usize, n: usize, d_k: usize, cam_h: usize, cam_w: usize) -> Self {
+        let h_tiles = n.div_ceil(cam_h);
+        let v_tiles = d_k.div_ceil(cam_w);
+        let mut steps = Vec::new();
+        for h in 0..h_tiles {
+            for v in 0..v_tiles {
+                for q in 0..m {
+                    steps.push(TileStep {
+                        h_tile: h,
+                        v_tile: v,
+                        program: q == 0,
+                        accumulate: v > 0,
+                    });
+                }
+            }
+        }
+        TilePlan {
+            cam_h,
+            cam_w,
+            n,
+            d_k,
+            steps,
+        }
+    }
+
+    pub fn h_tiles(&self) -> usize {
+        self.n.div_ceil(self.cam_h)
+    }
+
+    pub fn v_tiles(&self) -> usize {
+        self.d_k.div_ceil(self.cam_w)
+    }
+
+    /// Number of programming operations in the plan.
+    pub fn programs(&self) -> usize {
+        self.steps.iter().filter(|s| s.program).count()
+    }
+
+    /// Number of search operations in the plan.
+    pub fn searches(&self) -> usize {
+        self.steps.len()
+    }
+
+    /// Key rows covered by horizontal tile `h` (clipped at N).
+    pub fn h_range(&self, h: usize) -> std::ops::Range<usize> {
+        let lo = h * self.cam_h;
+        lo..((h + 1) * self.cam_h).min(self.n)
+    }
+
+    /// d_k columns covered by vertical tile `v` (clipped at d_k).
+    pub fn v_range(&self, v: usize) -> std::ops::Range<usize> {
+        let lo = v * self.cam_w;
+        lo..((v + 1) * self.cam_w).min(self.d_k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::check;
+
+    #[test]
+    fn paper_geometry_no_vertical_tiling() {
+        // 16x64 CAM, d_k=64: "width 64 avoids vertical tiling" (Sec III-B1)
+        let plan = TilePlan::single_query(1024, 64, 16, 64);
+        assert_eq!(plan.v_tiles(), 1);
+        assert_eq!(plan.h_tiles(), 64);
+        assert_eq!(plan.searches(), 64);
+        assert!(plan.steps.iter().all(|s| !s.accumulate));
+    }
+
+    #[test]
+    fn vertical_tiling_accumulates() {
+        let plan = TilePlan::single_query(32, 128, 16, 64);
+        assert_eq!(plan.v_tiles(), 2);
+        let acc = plan.steps.iter().filter(|s| s.accumulate).count();
+        assert_eq!(acc, plan.h_tiles()); // one accumulating step per h tile
+    }
+
+    #[test]
+    fn key_stationary_programs_once_per_tile() {
+        let plan = TilePlan::key_stationary(100, 1024, 64, 16, 64);
+        assert_eq!(plan.programs(), 64);
+        assert_eq!(plan.searches(), 64 * 100);
+    }
+
+    #[test]
+    fn ranges_clip_at_bounds() {
+        let plan = TilePlan::single_query(20, 70, 16, 64);
+        assert_eq!(plan.h_range(1), 16..20);
+        assert_eq!(plan.v_range(1), 64..70);
+    }
+
+    #[test]
+    fn property_every_cell_covered_exactly_once() {
+        check("tile coverage", 100, |rng| {
+            let n = 1 + rng.index(200);
+            let d_k = 1 + rng.index(200);
+            let plan = TilePlan::single_query(n, d_k, 16, 64);
+            let mut covered = vec![vec![0u32; d_k]; n];
+            for s in &plan.steps {
+                for r in plan.h_range(s.h_tile) {
+                    for c in plan.v_range(s.v_tile) {
+                        covered[r][c] += 1;
+                    }
+                }
+            }
+            for row in &covered {
+                for &c in row {
+                    assert_eq!(c, 1);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn property_accumulate_iff_vertical_continuation() {
+        check("accumulate flags", 50, |rng| {
+            let n = 1 + rng.index(300);
+            let d_k = 1 + rng.index(300);
+            let plan = TilePlan::single_query(n, d_k, 16, 64);
+            for s in &plan.steps {
+                assert_eq!(s.accumulate, s.v_tile > 0);
+            }
+        });
+    }
+}

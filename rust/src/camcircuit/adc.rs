@@ -1,0 +1,154 @@
+//! 6-bit SAR ADC + fixed multiply-subtract unit (Sec. II-B1).
+//!
+//! The matchline voltage (in [0, V_DD]) is digitised by a shared SAR ADC;
+//! the fixed functional unit then applies `s = 2*ADC(v) - CAM_W`, mapping
+//! the code range onto signed scores in [-CAM_W, CAM_W] while preserving
+//! attention-score ordering. One ADC is shared across CAM_H matchlines
+//! (column-muxed) — that sharing is the area win over CiM's flash-ADC-per-
+//! column (Table I) and sets the association stage's serialization latency.
+
+use crate::util::rng::Rng;
+
+/// Successive-approximation ADC with the paper's cost/latency profile.
+#[derive(Clone, Copy, Debug)]
+pub struct SarAdc {
+    pub bits: u32,
+    /// Full-scale input voltage [V] (the matchline rail).
+    pub vref: f64,
+    /// Input-referred RMS noise [V] (comparator + DAC settling).
+    pub noise_v: f64,
+}
+
+impl Default for SarAdc {
+    fn default() -> Self {
+        SarAdc {
+            bits: 6,
+            vref: 1.2,
+            noise_v: 0.0,
+        }
+    }
+}
+
+impl SarAdc {
+    pub fn new(bits: u32, vref: f64) -> Self {
+        SarAdc {
+            bits,
+            vref,
+            noise_v: 0.0,
+        }
+    }
+
+    pub fn levels(&self) -> u32 {
+        1 << self.bits
+    }
+
+    /// Ideal conversion: code in [0, 2^bits] (the top code captures the
+    /// full-scale "all bits match" voltage — "ADC precision covers the
+    /// full match range", Sec. III-B1).
+    pub fn convert(&self, v: f64) -> u32 {
+        let x = (v / self.vref).clamp(0.0, 1.0);
+        let code = (x * self.levels() as f64).round() as i64;
+        code.clamp(0, self.levels() as i64) as u32
+    }
+
+    /// Conversion with input-referred noise.
+    pub fn convert_noisy(&self, v: f64, rng: &mut Rng) -> u32 {
+        self.convert(v + rng.normal(0.0, self.noise_v))
+    }
+
+    /// The fixed multiply-subtract: code -> signed score in [-cam_w, cam_w].
+    pub fn code_to_score(&self, code: u32, cam_w: usize) -> f64 {
+        let matches = code as f64 * (cam_w as f64 / self.levels() as f64);
+        2.0 * matches - cam_w as f64
+    }
+
+    /// Full path: matchline voltage -> signed score.
+    pub fn score(&self, v: f64, cam_w: usize) -> f64 {
+        self.code_to_score(self.convert(v), cam_w)
+    }
+
+    /// One conversion takes `bits` comparator cycles in a SAR; at the
+    /// paper's 500 MHz internal clock (Table I) this is bits * 2 ns.
+    pub fn conversion_latency_ns(&self, clock_ghz: f64) -> f64 {
+        self.bits as f64 / clock_ghz
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_cover_full_range() {
+        let adc = SarAdc::default();
+        assert_eq!(adc.convert(0.0), 0);
+        assert_eq!(adc.convert(1.2), 64);
+        assert_eq!(adc.convert(0.6), 32);
+    }
+
+    #[test]
+    fn clamps_out_of_range() {
+        let adc = SarAdc::default();
+        assert_eq!(adc.convert(-0.5), 0);
+        assert_eq!(adc.convert(2.0), 64);
+    }
+
+    #[test]
+    fn monotone() {
+        let adc = SarAdc::default();
+        let mut last = 0;
+        for i in 0..=1200 {
+            let code = adc.convert(i as f64 / 1000.0);
+            assert!(code >= last);
+            last = code;
+        }
+    }
+
+    #[test]
+    fn score_map_matches_paper() {
+        // s = 2*ADC(v) - CAM_W maps [0, VDD] -> [-64, 64]
+        let adc = SarAdc::default();
+        assert_eq!(adc.score(0.0, 64), -64.0);
+        assert_eq!(adc.score(1.2, 64), 64.0);
+        assert_eq!(adc.score(0.6, 64), 0.0);
+    }
+
+    #[test]
+    fn exact_for_64_wide_match_counts() {
+        // every integer match count on a 64-cell line has its own code
+        let adc = SarAdc::default();
+        for m in 0..=64u32 {
+            let v = m as f64 / 64.0 * 1.2;
+            let s = adc.score(v, 64);
+            assert_eq!(s, 2.0 * m as f64 - 64.0, "m={m}");
+        }
+    }
+
+    #[test]
+    fn ordering_preserved_under_quantization() {
+        let adc = SarAdc::new(4, 1.2); // coarse ADC
+        let mut last = f64::NEG_INFINITY;
+        for i in 0..=120 {
+            let s = adc.score(i as f64 / 100.0, 64);
+            assert!(s >= last);
+            last = s;
+        }
+    }
+
+    #[test]
+    fn noise_perturbs_codes() {
+        let mut adc = SarAdc::default();
+        adc.noise_v = 0.02;
+        let mut rng = Rng::new(4);
+        let codes: Vec<u32> = (0..200).map(|_| adc.convert_noisy(0.609, &mut rng)).collect();
+        let distinct: std::collections::HashSet<_> = codes.iter().collect();
+        assert!(distinct.len() > 1, "noise should straddle code boundaries");
+    }
+
+    #[test]
+    fn sar_latency() {
+        let adc = SarAdc::default();
+        assert_eq!(adc.conversion_latency_ns(0.5), 12.0); // 6 cycles @ 500MHz
+        assert_eq!(adc.conversion_latency_ns(1.0), 6.0); // @ 1GHz
+    }
+}

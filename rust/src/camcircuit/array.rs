@@ -1,0 +1,217 @@
+//! BA-CAM array: program keys, broadcast a query, sense all matchlines
+//! (Fig. 2). This is the circuit-accurate functional unit the BIMV engine
+//! (Sec. II-B) tiles over and the association stage drives.
+//!
+//! The four-phase operation (precharge, broadcast, match, charge-share) is
+//! folded into `search`: phases only matter for latency/energy, which the
+//! `EnergyModel` and `arch::pipeline` account separately.
+
+use super::adc::SarAdc;
+use super::cell::CellParams;
+use super::matchline::Matchline;
+use super::pvt::{corner_params, Corner};
+use crate::util::rng::Rng;
+
+/// A CAM_H x CAM_W BA-CAM array with one shared SAR ADC.
+#[derive(Clone, Debug)]
+pub struct BaCamArray {
+    pub height: usize,
+    pub width: usize,
+    pub params: CellParams,
+    pub adc: SarAdc,
+    rows: Vec<Matchline>,
+    /// Matchline mismatch sigma baked at construction (0 = nominal).
+    pub mismatch_sigma: f64,
+    rng: Rng,
+}
+
+impl BaCamArray {
+    /// Nominal (noise-free) array, paper geometry by default (16x64).
+    pub fn new(height: usize, width: usize) -> Self {
+        let params = CellParams::default();
+        BaCamArray {
+            height,
+            width,
+            params,
+            adc: SarAdc::new(6, params.vdd),
+            rows: Vec::new(),
+            mismatch_sigma: 0.0,
+            rng: Rng::new(0),
+        }
+    }
+
+    /// Array with PVT corner and capacitor mismatch (Monte-Carlo instance).
+    pub fn with_pvt(height: usize, width: usize, corner: Corner, sigma: f64, seed: u64) -> Self {
+        let params = corner_params(corner);
+        BaCamArray {
+            height,
+            width,
+            params,
+            adc: SarAdc::new(6, params.vdd),
+            rows: Vec::new(),
+            mismatch_sigma: sigma,
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// Program step (Fig. 4 step ①): load a tile of binary keys. `keys` is
+    /// row-major, `keys.len() <= height`, each row exactly `width` bits.
+    ///
+    /// §Perf: nominal (sigma = 0) arrays reprogram rows in place instead of
+    /// reallocating cell vectors — programming is the per-tile hot path of
+    /// every BIMV walk. Mismatched arrays rebuild (each programming is a
+    /// fresh Monte-Carlo draw).
+    pub fn program(&mut self, keys: &[Vec<bool>]) {
+        assert!(keys.len() <= self.height, "tile taller than array");
+        if self.mismatch_sigma > 0.0 {
+            self.rows.clear();
+            for bits in keys {
+                assert_eq!(bits.len(), self.width, "key width mismatch");
+                self.rows.push(Matchline::with_mismatch(
+                    bits,
+                    &self.params,
+                    self.mismatch_sigma,
+                    &mut self.rng,
+                ));
+            }
+            return;
+        }
+        self.rows.truncate(keys.len());
+        for (i, bits) in keys.iter().enumerate() {
+            assert_eq!(bits.len(), self.width, "key width mismatch");
+            match self.rows.get_mut(i) {
+                Some(row) => row.reprogram(bits, &self.params),
+                None => self.rows.push(Matchline::new(bits, &self.params)),
+            }
+        }
+    }
+
+    pub fn rows_programmed(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Search (steps ②–③): broadcast `query`, sense every matchline,
+    /// digitise through the shared ADC, apply the multiply-subtract.
+    /// Returns signed scores in [-width, width], one per programmed row.
+    pub fn search(&mut self, query: &[bool]) -> Vec<f64> {
+        assert_eq!(query.len(), self.width, "query width mismatch");
+        let temp = 300.0;
+        let mut scores = Vec::with_capacity(self.rows.len());
+        for row in &self.rows {
+            let v = if self.mismatch_sigma > 0.0 {
+                row.sensed_voltage(query, &self.params, temp, &mut self.rng)
+            } else {
+                row.settled_voltage(query, &self.params)
+            };
+            scores.push(self.adc.score(v, self.width));
+        }
+        scores
+    }
+
+    /// Ideal digital reference for the same tile (XNOR-popcount).
+    pub fn search_ideal(&self, query: &[bool]) -> Vec<f64> {
+        self.rows
+            .iter()
+            .map(|r| 2.0 * r.match_count(query) as f64 - self.width as f64)
+            .collect()
+    }
+}
+
+/// Pack a ±1 float vector into the boolean domain (+1 -> true).
+pub fn pm_to_bits(x: &[f32]) -> Vec<bool> {
+    x.iter().map(|&v| v >= 0.0).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::check;
+
+    fn random_keys(rng: &mut Rng, h: usize, w: usize) -> Vec<Vec<bool>> {
+        (0..h).map(|_| (0..w).map(|_| rng.bool()).collect()).collect()
+    }
+
+    #[test]
+    fn nominal_search_equals_ideal() {
+        let mut rng = Rng::new(10);
+        let mut arr = BaCamArray::new(16, 64);
+        let keys = random_keys(&mut rng, 16, 64);
+        arr.program(&keys);
+        let q: Vec<bool> = (0..64).map(|_| rng.bool()).collect();
+        // wire parasitic dilution (~0.9%) stays under half an ADC LSB for
+        // mid-range codes but can flip codes at the extremes; allow 1 code
+        let analog = arr.search(&q);
+        let ideal = arr.search_ideal(&q);
+        for (a, i) in analog.iter().zip(&ideal) {
+            assert!((a - i).abs() <= 2.0, "analog {a} vs ideal {i}");
+        }
+    }
+
+    #[test]
+    fn property_scores_bounded_and_consistent() {
+        check("array scores bounded", 50, |rng| {
+            let h = 1 + rng.index(16);
+            let mut arr = BaCamArray::new(16, 64);
+            let keys: Vec<Vec<bool>> =
+                (0..h).map(|_| (0..64).map(|_| rng.bool()).collect()).collect();
+            arr.program(&keys);
+            let q: Vec<bool> = (0..64).map(|_| rng.bool()).collect();
+            for s in arr.search(&q) {
+                assert!((-64.0..=64.0).contains(&s));
+            }
+            assert_eq!(arr.search(&q).len(), h);
+        });
+    }
+
+    #[test]
+    fn self_match_is_full_scale() {
+        let mut rng = Rng::new(11);
+        let mut arr = BaCamArray::new(16, 64);
+        let keys = random_keys(&mut rng, 4, 64);
+        arr.program(&keys);
+        for (i, key) in keys.iter().enumerate() {
+            let scores = arr.search(key);
+            // row i stores exactly the query -> near +64 (wire dilution may
+            // cost one code)
+            assert!(scores[i] >= 62.0, "row {i} score {}", scores[i]);
+        }
+    }
+
+    #[test]
+    fn reprogram_replaces_contents() {
+        let mut rng = Rng::new(12);
+        let mut arr = BaCamArray::new(16, 64);
+        arr.program(&random_keys(&mut rng, 16, 64));
+        assert_eq!(arr.rows_programmed(), 16);
+        arr.program(&random_keys(&mut rng, 3, 64));
+        assert_eq!(arr.rows_programmed(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "tile taller")]
+    fn overheight_rejected() {
+        let mut arr = BaCamArray::new(2, 8);
+        arr.program(&vec![vec![true; 8]; 3]);
+    }
+
+    #[test]
+    fn pvt_instance_close_to_ideal() {
+        let mut rng = Rng::new(13);
+        let mut arr = BaCamArray::with_pvt(16, 64, Corner::SS, 0.014, 99);
+        let keys = random_keys(&mut rng, 16, 64);
+        arr.program(&keys);
+        let q: Vec<bool> = (0..64).map(|_| rng.bool()).collect();
+        let noisy = arr.search(&q);
+        let ideal = arr.search_ideal(&q);
+        for (a, i) in noisy.iter().zip(&ideal) {
+            // a 1.4% voltage sigma is ~0.9 match counts => within a few codes
+            assert!((a - i).abs() <= 8.0, "noisy {a} vs ideal {i}");
+        }
+    }
+
+    #[test]
+    fn pm_to_bits_roundtrip() {
+        let x = [1.0f32, -1.0, 1.0, -1.0];
+        assert_eq!(pm_to_bits(&x), vec![true, false, true, false]);
+    }
+}

@@ -1,0 +1,126 @@
+//! 10T1C BA-CAM cell model (Sec. II-A1, Fig. 2 inset).
+//!
+//! Each cell stores one bit in SRAM logic and holds its match result on a
+//! 22 fF MIM capacitor: the cell XNORs the broadcast query bit against the
+//! stored bit; on a match the precharged capacitor stays at V_DD, otherwise
+//! it is discharged to ground. Charge sharing across a row's capacitors
+//! then averages the per-cell voltages on the matchline.
+
+use crate::util::rng::Rng;
+
+/// Electrical parameters of one cell (65 nm nominal values from Sec. II).
+#[derive(Clone, Copy, Debug)]
+pub struct CellParams {
+    /// Match-result MIM capacitor [F]. Paper: 22 fF.
+    pub cap_f: f64,
+    /// Supply voltage [V]. Paper: 1.2 V (Table I).
+    pub vdd: f64,
+    /// Residual voltage left on a *discharged* capacitor [V] — the pull-down
+    /// path is not ideal; nominally ~0.
+    pub v_residual: f64,
+}
+
+impl Default for CellParams {
+    fn default() -> Self {
+        CellParams {
+            cap_f: 22e-15,
+            vdd: 1.2,
+            v_residual: 0.0,
+        }
+    }
+}
+
+/// One 10T1C cell: stored bit + its (possibly mismatched) capacitor.
+#[derive(Clone, Copy, Debug)]
+pub struct Cell {
+    /// Stored key bit.
+    pub bit: bool,
+    /// Actual capacitance after process mismatch [F].
+    pub cap_f: f64,
+}
+
+impl Cell {
+    /// Nominal cell storing `bit`.
+    pub fn new(bit: bool, params: &CellParams) -> Self {
+        Cell {
+            bit,
+            cap_f: params.cap_f,
+        }
+    }
+
+    /// Cell with lognormal-ish capacitor mismatch: C = C0 * (1 + sigma*g).
+    /// `sigma` is the relative mismatch (the paper simulates 1.4 %).
+    pub fn with_mismatch(bit: bool, params: &CellParams, sigma: f64, rng: &mut Rng) -> Self {
+        let factor = (1.0 + sigma * rng.gauss()).max(0.05);
+        Cell {
+            bit,
+            cap_f: params.cap_f * factor,
+        }
+    }
+
+    /// XNOR compare against the broadcast query bit.
+    pub fn matches(&self, query_bit: bool) -> bool {
+        self.bit == query_bit
+    }
+
+    /// Voltage this cell contributes *before* charge sharing: V_DD if the
+    /// precharged cap survived the match phase, else the residual.
+    pub fn post_match_voltage(&self, query_bit: bool, params: &CellParams) -> f64 {
+        if self.matches(query_bit) {
+            params.vdd
+        } else {
+            params.v_residual
+        }
+    }
+
+    /// Charge held after the match phase [C].
+    pub fn post_match_charge(&self, query_bit: bool, params: &CellParams) -> f64 {
+        self.cap_f * self.post_match_voltage(query_bit, params)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xnor_truth_table() {
+        let p = CellParams::default();
+        for stored in [false, true] {
+            let c = Cell::new(stored, &p);
+            for q in [false, true] {
+                assert_eq!(c.matches(q), stored == q);
+            }
+        }
+    }
+
+    #[test]
+    fn match_keeps_full_rail() {
+        let p = CellParams::default();
+        let c = Cell::new(true, &p);
+        assert_eq!(c.post_match_voltage(true, &p), p.vdd);
+        assert_eq!(c.post_match_voltage(false, &p), 0.0);
+    }
+
+    #[test]
+    fn charge_scales_with_cap() {
+        let p = CellParams::default();
+        let c = Cell::new(true, &p);
+        let q = c.post_match_charge(true, &p);
+        assert!((q - 22e-15 * 1.2).abs() < 1e-20);
+    }
+
+    #[test]
+    fn mismatch_perturbs_cap_but_stays_positive() {
+        let p = CellParams::default();
+        let mut rng = Rng::new(1);
+        let mut sum = 0.0;
+        for _ in 0..1000 {
+            let c = Cell::with_mismatch(true, &p, 0.014, &mut rng);
+            assert!(c.cap_f > 0.0);
+            sum += c.cap_f;
+        }
+        let mean = sum / 1000.0;
+        assert!((mean / p.cap_f - 1.0).abs() < 0.01, "mean cap off: {mean}");
+    }
+}

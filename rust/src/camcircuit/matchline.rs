@@ -1,0 +1,219 @@
+//! Matchline charge-sharing model (Sec. II-A2, Figs. 2/3a).
+//!
+//! After the match phase each cell capacitor holds either V_DD (match) or
+//! ~0 (mismatch). Closing the share switches connects all caps of a row:
+//! charge redistributes and the matchline settles to the capacitance-
+//! weighted average voltage `V_ML = sum(C_i * V_i) / sum(C_i)`,
+//! which for nominal (equal) caps is exactly `matches / width * V_DD` —
+//! the linear, delay-free voltage response the paper contrasts with
+//! TD-CAM's nonlinear discharge delay. kT/C sampling noise and the RC
+//! settling transient are modelled so Fig. 3a's traces regenerate.
+
+use super::cell::{Cell, CellParams};
+use crate::util::rng::Rng;
+
+const BOLTZMANN: f64 = 1.380649e-23;
+
+/// One row's matchline: its cells plus parasitic line capacitance.
+#[derive(Clone, Debug)]
+pub struct Matchline {
+    pub cells: Vec<Cell>,
+    /// Parasitic wire capacitance [F] added to the share node (scales with
+    /// row width; ~0.2 fF/cell of routing is a reasonable 65 nm estimate).
+    pub wire_cap_f: f64,
+    /// Equivalent share-switch resistance [Ohm] (sets the RC settle time).
+    pub switch_r_ohm: f64,
+}
+
+impl Matchline {
+    /// Nominal matchline of `width` cells storing `bits`.
+    pub fn new(bits: &[bool], params: &CellParams) -> Self {
+        Matchline {
+            cells: bits.iter().map(|&b| Cell::new(b, params)).collect(),
+            wire_cap_f: 0.2e-15 * bits.len() as f64,
+            switch_r_ohm: 5e3,
+        }
+    }
+
+    /// Matchline with per-cell capacitor mismatch.
+    pub fn with_mismatch(bits: &[bool], params: &CellParams, sigma: f64, rng: &mut Rng) -> Self {
+        Matchline {
+            cells: bits
+                .iter()
+                .map(|&b| Cell::with_mismatch(b, params, sigma, rng))
+                .collect(),
+            wire_cap_f: 0.2e-15 * bits.len() as f64,
+            switch_r_ohm: 5e3,
+        }
+    }
+
+    pub fn width(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// Rewrite the stored bits in place (nominal capacitors). §Perf: lets
+    /// the BIMV engine reprogram a tile without reallocating cell vectors
+    /// on every Fig.-4 step ①.
+    pub fn reprogram(&mut self, bits: &[bool], params: &CellParams) {
+        self.cells.clear();
+        self.cells.extend(bits.iter().map(|&b| Cell::new(b, params)));
+        self.wire_cap_f = 0.2e-15 * bits.len() as f64;
+    }
+
+    /// Number of cells whose XNOR matches the query.
+    pub fn match_count(&self, query: &[bool]) -> usize {
+        debug_assert_eq!(query.len(), self.cells.len());
+        self.cells
+            .iter()
+            .zip(query)
+            .filter(|(c, &q)| c.matches(q))
+            .count()
+    }
+
+    /// Final settled matchline voltage [V] after ideal charge sharing
+    /// (capacitance-weighted average; wire parasitics start discharged).
+    pub fn settled_voltage(&self, query: &[bool], params: &CellParams) -> f64 {
+        let mut charge = 0.0;
+        let mut cap = self.wire_cap_f;
+        for (c, &q) in self.cells.iter().zip(query) {
+            charge += c.post_match_charge(q, params);
+            cap += c.cap_f;
+        }
+        charge / cap
+    }
+
+    /// Settled voltage plus kT/C thermal sampling noise.
+    pub fn sensed_voltage(&self, query: &[bool], params: &CellParams, temp_k: f64, rng: &mut Rng) -> f64 {
+        let total_cap: f64 = self.wire_cap_f + self.cells.iter().map(|c| c.cap_f).sum::<f64>();
+        let v = self.settled_voltage(query, params);
+        let ktc_sigma = (BOLTZMANN * temp_k / total_cap).sqrt();
+        (v + rng.normal(0.0, ktc_sigma)).clamp(0.0, params.vdd)
+    }
+
+    /// RC settling transient: V(t) toward the settled value with time
+    /// constant tau = R_switch * C_total/width (per-cell share path).
+    /// Regenerates Fig. 3a's voltage-vs-time traces.
+    pub fn transient(&self, query: &[bool], params: &CellParams, t_ns: f64) -> f64 {
+        let v_final = self.settled_voltage(query, params);
+        // before sharing, the sense node sits at the precharge rail only if
+        // every cap matched; model the node starting from the mean of the
+        // first cell's state for a simple single-pole response
+        let total_cap: f64 = self.wire_cap_f + self.cells.iter().map(|c| c.cap_f).sum::<f64>();
+        let tau_s = self.switch_r_ohm * total_cap / self.width().max(1) as f64;
+        let t_s = t_ns * 1e-9;
+        v_final * (1.0 - (-t_s / tau_s).exp())
+    }
+
+    /// 5-tau settle time in nanoseconds (the association stage's CAM
+    /// serialization latency floor).
+    pub fn settle_time_ns(&self) -> f64 {
+        let total_cap: f64 = self.wire_cap_f + self.cells.iter().map(|c| c.cap_f).sum::<f64>();
+        let tau_s = self.switch_r_ohm * total_cap / self.width().max(1) as f64;
+        5.0 * tau_s * 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pattern(width: usize, matches: usize) -> (Matchline, Vec<bool>) {
+        let params = CellParams::default();
+        let bits: Vec<bool> = vec![true; width];
+        let ml = Matchline::new(&bits, &params);
+        // query matches on the first `matches` cells
+        let query: Vec<bool> = (0..width).map(|i| i < matches).collect();
+        (ml, query)
+    }
+
+    #[test]
+    fn voltage_linear_in_match_count() {
+        let params = CellParams::default();
+        for width in [10usize, 16, 64] {
+            for m in 0..=width {
+                let (ml, query) = pattern(width, m);
+                assert_eq!(ml.match_count(&query), m);
+                let v = ml.settled_voltage(&query, &params);
+                // wire parasitic dilutes slightly; relative linearity holds
+                let ideal = m as f64 / width as f64 * params.vdd;
+                let dilution = (width as f64 * 22e-15) / (width as f64 * 22e-15 + ml.wire_cap_f);
+                assert!((v - ideal * dilution).abs() < 1e-9, "w={width} m={m}");
+            }
+        }
+    }
+
+    #[test]
+    fn full_match_near_vdd() {
+        let params = CellParams::default();
+        let (ml, query) = pattern(64, 64);
+        let v = ml.settled_voltage(&query, &params);
+        assert!(v > 0.98 * params.vdd, "v={v}");
+    }
+
+    #[test]
+    fn zero_match_is_zero() {
+        let params = CellParams::default();
+        let (ml, query) = pattern(64, 0);
+        assert_eq!(ml.settled_voltage(&query, &params), 0.0);
+    }
+
+    #[test]
+    fn transient_monotone_to_settled() {
+        let params = CellParams::default();
+        let (ml, query) = pattern(16, 9);
+        let v_final = ml.settled_voltage(&query, &params);
+        let mut last = -1.0;
+        for t in [0.01, 0.05, 0.1, 0.5, 1.0, 5.0] {
+            let v = ml.transient(&query, &params, t);
+            assert!(v >= last);
+            assert!(v <= v_final + 1e-12);
+            last = v;
+        }
+        assert!((ml.transient(&query, &params, 100.0) - v_final).abs() < 1e-6);
+    }
+
+    #[test]
+    fn settle_time_sub_nanosecond_for_500mhz() {
+        // the paper's BA-CAM runs at 500 MHz (Table I) => settle << 2 ns
+        let params = CellParams::default();
+        let (ml, _q) = pattern(64, 32);
+        assert!(
+            ml.settle_time_ns() < 2.0,
+            "settle {} ns too slow for 500 MHz",
+            ml.settle_time_ns()
+        );
+    }
+
+    #[test]
+    fn ktc_noise_small_but_present() {
+        let params = CellParams::default();
+        let (ml, query) = pattern(64, 32);
+        let mut rng = Rng::new(2);
+        let clean = ml.settled_voltage(&query, &params);
+        let samples: Vec<f64> = (0..500)
+            .map(|_| ml.sensed_voltage(&query, &params, 300.0, &mut rng) - clean)
+            .collect();
+        let sd = crate::util::stats::std_dev(&samples);
+        assert!(sd > 0.0);
+        // kT/C at ~1.4 pF total is ~54 uV — far below half an ADC LSB
+        assert!(sd < 1e-3, "ktc sigma {sd}");
+    }
+
+    #[test]
+    fn mismatch_shifts_voltage_but_bounded() {
+        let params = CellParams::default();
+        let mut rng = Rng::new(3);
+        let bits = vec![true; 64];
+        let query: Vec<bool> = (0..64).map(|i| i < 32).collect();
+        let mut devs = Vec::new();
+        for _ in 0..200 {
+            let ml = Matchline::with_mismatch(&bits, &params, 0.014, &mut rng);
+            let v = ml.settled_voltage(&query, &params);
+            let nominal = Matchline::new(&bits, &params).settled_voltage(&query, &params);
+            devs.push(((v - nominal) / nominal * 100.0).abs());
+        }
+        // paper: matchline deviation within 5.05% under PVT
+        let max_dev = devs.iter().cloned().fold(0.0f64, f64::max);
+        assert!(max_dev < 5.05, "max deviation {max_dev}%");
+    }
+}

@@ -1,0 +1,25 @@
+//! Analog BA-CAM circuit substrate (Sec. II).
+//!
+//! The paper characterises a 10T1C voltage-domain CAM in HSPICE; we have no
+//! SPICE or silicon, so this module is the calibrated analytic equivalent
+//! (DESIGN.md substitution table): per-cell capacitor behaviour, matchline
+//! charge sharing, PVT corners with capacitor mismatch and supply offsets,
+//! a 6-bit SAR ADC, and the per-op energy model behind Fig. 5.
+//!
+//! The architecture layers above consume only (a) the matchline voltage as
+//! a function of match count and (b) its error statistics — exactly what
+//! this model reproduces (Figs. 3a/3b, Table I error rows).
+
+pub mod adc;
+pub mod array;
+pub mod cell;
+pub mod energy;
+pub mod matchline;
+pub mod pvt;
+
+pub use adc::SarAdc;
+pub use array::BaCamArray;
+pub use cell::{Cell, CellParams};
+pub use energy::EnergyModel;
+pub use matchline::Matchline;
+pub use pvt::{Corner, PvtConfig};

@@ -1,0 +1,130 @@
+//! Table-regeneration subcommands (Tables I, II, III, IV).
+
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+
+use camformer::accuracy::tables as acc_tables;
+use camformer::baselines::accelerators;
+use camformer::baselines::circuit;
+use camformer::runtime::executable::{default_artifacts_dir, Engine};
+use camformer::util::cli::Args;
+use camformer::util::table::Table;
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    args.get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(default_artifacts_dir)
+}
+
+/// Table I: circuit-level comparison with measured error columns.
+pub fn table1(args: &Args) -> Result<()> {
+    let seed = args.get_u64("seed", 42);
+    let rows = circuit::table1_rows(seed);
+    let mut t = Table::new(
+        "Table I — circuit-level BIMV comparison (errors MEASURED at sigma=1.4%)",
+        &["module", "sensing", "peripherals", "freq MHz", "mean err %", "max dev %"],
+    );
+    for r in &rows {
+        t.row(&[
+            r.name.to_string(),
+            r.sensing.to_string(),
+            r.peripherals.to_string(),
+            format!("{:.1}", r.freq_mhz),
+            format!("{:.2}", r.mean_err_pct),
+            format!("{:.2}", r.max_dev_pct),
+        ]);
+    }
+    t.print();
+    println!("\npaper error rows: CiM ~7% (pred.), TD-CAM 7.76%, BA-CAM 1.12%.");
+    Ok(())
+}
+
+/// Table II: accelerator comparison.
+pub fn table2(_args: &Args) -> Result<()> {
+    let rows = accelerators::table2_rows();
+    let mut t = Table::new(
+        "Table II — performance comparison at 1 GHz (BERT-Large head, n=1024)",
+        &["accelerator", "Q/K/V bits", "cores", "thruput qry/ms", "qry/mJ", "area mm^2", "power W"],
+    );
+    for r in &rows {
+        t.row(&[
+            r.name.clone(),
+            r.qkv_bits.to_string(),
+            r.cores.to_string(),
+            format!("{:.1}", r.throughput_qry_per_ms),
+            format!("{:.0}", r.energy_eff_qry_per_mj),
+            r.area_mm2.map(|a| format!("{a:.2}")).unwrap_or_else(|| "-".into()),
+            format!("{:.2}", r.power_w),
+        ]);
+    }
+    t.print();
+    println!("\npaper CAMformer row: 191 qry/ms, 9045 qry/mJ, 0.26 mm^2, 0.17 W (model-derived rows above;");
+    println!("baseline rows carry the published numbers).");
+    Ok(())
+}
+
+/// Table III analogue: MEASURED accuracy vs first-stage k via the PJRT
+/// classifier artifacts on the associative-retrieval task.
+pub fn table3(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let trials = args.get_usize("trials", 60);
+    let seed = args.get_u64("seed", 42);
+    let mut engine = Engine::new(&dir)
+        .with_context(|| format!("artifacts at {dir:?}; run `make artifacts`"))?;
+
+    let variants: &[(&str, &str)] = &[
+        ("exact attention (oracle)", "classifier_exact"),
+        ("single-stage Top-32 (HAD baseline)", "classifier_single_stage"),
+        ("two-stage, k=8", "classifier_cam_k8"),
+        ("two-stage, k=4", "classifier_cam_k4"),
+        ("two-stage, k=2", "classifier_cam_k2"),
+        ("two-stage, k=1", "classifier_cam_k1"),
+    ];
+    let mut t = Table::new(
+        "Table III analogue — MEASURED accuracy on associative retrieval (512 tokens)",
+        &["attention", "accuracy %"],
+    );
+    for (label, entry) in variants {
+        let exe = engine.load(entry)?;
+        let acc = acc_tables::measure_accuracy(
+            |toks| exe.run_s32(toks).expect("classifier run"),
+            512,
+            trials,
+            seed,
+        );
+        t.row(&[label.to_string(), format!("{:.1}", acc * 100.0)]);
+    }
+    t.print();
+    println!("\npaper pattern (DeiT): accuracy near baseline for k>=2, visible drop at k=1.");
+    Ok(())
+}
+
+/// Table IV: GLUE-style calibrated simulation.
+pub fn table4(args: &Args) -> Result<()> {
+    let seed = args.get_u64("seed", 42);
+    let k4 = acc_tables::table4_simulated(4, seed);
+    let k2 = acc_tables::table4_simulated(2, seed + 1);
+    let mut t = Table::new(
+        "Table IV — GLUE-style two-stage accuracy (calibrated simulation, g=16)",
+        &["task", "HAD baseline", "first-stage k=4", "first-stage k=2"],
+    );
+    for i in 0..k4.len() {
+        t.row(&[
+            k4[i].0.name.to_string(),
+            format!("{:.2}", k4[i].0.baseline),
+            format!("{:.2}", k4[i].1),
+            format!("{:.2}", k2[i].1),
+        ]);
+    }
+    let base_avg: f64 =
+        k4.iter().map(|(t, _)| t.baseline).sum::<f64>() / k4.len() as f64;
+    t.row(&[
+        "Avg".to_string(),
+        format!("{base_avg:.2}"),
+        format!("{:.2}", acc_tables::table4_average(&k4)),
+        format!("{:.2}", acc_tables::table4_average(&k2)),
+    ]);
+    t.print();
+    println!("\npaper: avg 80.81 -> 80.54 (k=4) / 80.48 (k=2); <0.4% average degradation.");
+    Ok(())
+}

@@ -1,0 +1,200 @@
+//! Pluggable attention execution backends for the coordinator.
+//!
+//! * [`PjrtBackend`] — the production path: replays the AOT Pallas/JAX
+//!   artifacts through PJRT (fixed n = 1024, d = 64 geometry).
+//! * [`FunctionalBackend`] — pure-Rust Eq. 1 (any geometry); used for
+//!   tests, fallbacks and as the golden cross-check.
+//! * [`ArchSimBackend`] — the cycle-annotated architecture simulator;
+//!   returns outputs *and* simulated hardware latency.
+
+use anyhow::Result;
+use std::path::Path;
+
+use crate::accuracy::functional::{self, AttnConfig};
+use crate::arch::{config::ArchConfig, pipeline};
+use crate::runtime::executable::Engine;
+
+/// An attention executor over a (query, keys, values) triple.
+/// `n` is the number of *valid* rows; implementations may require padding
+/// to their fixed geometry.
+pub trait AttentionBackend: Send {
+    /// Compute Eq. 1 for one query. `k`/`v` are row-major n x d.
+    fn attend(&mut self, q: &[f32], k: &[f32], v: &[f32]) -> Result<Vec<f32>>;
+
+    /// Batched variant; default loops over rows.
+    fn attend_batch(&mut self, qs: &[Vec<f32>], k: &[f32], v: &[f32]) -> Result<Vec<Vec<f32>>> {
+        qs.iter().map(|q| self.attend(q, k, v)).collect()
+    }
+
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-Rust functional backend.
+///
+/// §Perf: the serving loop scores the *same* key memory on every request,
+/// so the backend caches a sign-packed copy (`PackedKeys`) keyed on the K
+/// buffer identity — one XNOR+popcount per 64 key bits thereafter.
+pub struct FunctionalBackend {
+    pub cfg: AttnConfig,
+    packed: Option<(usize, usize, functional::PackedKeys)>, // (ptr, len) identity
+}
+
+impl FunctionalBackend {
+    pub fn new(n: usize, d_k: usize) -> Self {
+        FunctionalBackend {
+            cfg: AttnConfig::paper(n, d_k),
+            packed: None,
+        }
+    }
+
+    fn packed_for(&mut self, k: &[f32]) -> &functional::PackedKeys {
+        let id = (k.as_ptr() as usize, k.len());
+        let stale = match &self.packed {
+            Some((p, l, _)) => (*p, *l) != id,
+            None => true,
+        };
+        if stale {
+            self.packed = Some((id.0, id.1, functional::PackedKeys::new(k, self.cfg.d_k)));
+        }
+        &self.packed.as_ref().unwrap().2
+    }
+}
+
+impl AttentionBackend for FunctionalBackend {
+    fn attend(&mut self, q: &[f32], k: &[f32], v: &[f32]) -> Result<Vec<f32>> {
+        let cfg = self.cfg;
+        let packed = self.packed_for(k);
+        Ok(functional::camformer_attention_packed(q, packed, v, &cfg))
+    }
+
+    fn name(&self) -> &'static str {
+        "functional"
+    }
+}
+
+/// Architecture-simulator backend (functional + hardware cycle counts).
+pub struct ArchSimBackend {
+    pub cfg: ArchConfig,
+    /// Cycles of the last simulated query per stage.
+    pub last_latency: Option<pipeline::StageLatency>,
+}
+
+impl ArchSimBackend {
+    pub fn new(n: usize) -> Self {
+        ArchSimBackend {
+            cfg: ArchConfig { n, ..Default::default() },
+            last_latency: None,
+        }
+    }
+}
+
+impl AttentionBackend for ArchSimBackend {
+    fn attend(&mut self, q: &[f32], k: &[f32], v: &[f32]) -> Result<Vec<f32>> {
+        let (out, lat) = pipeline::simulate_query(self.cfg, q, k, v);
+        self.last_latency = Some(lat);
+        Ok(out)
+    }
+
+    fn name(&self) -> &'static str {
+        "arch-sim"
+    }
+}
+
+/// PJRT backend over the AOT artifacts (n = 1024, d = 64 fixed by aot.py).
+pub struct PjrtBackend {
+    engine: Engine,
+    pub n: usize,
+    pub d: usize,
+    pub batch: usize,
+}
+
+impl PjrtBackend {
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        let mut engine = Engine::new(artifacts_dir)?;
+        // compile both entry points up front (compile once, execute many)
+        engine.load("attn_single_query")?;
+        engine.load("attn_batch")?;
+        Ok(PjrtBackend {
+            engine,
+            n: 1024,
+            d: 64,
+            batch: 16,
+        })
+    }
+}
+
+impl AttentionBackend for PjrtBackend {
+    fn attend(&mut self, q: &[f32], k: &[f32], v: &[f32]) -> Result<Vec<f32>> {
+        let exe = self.engine.load("attn_single_query")?;
+        exe.run_f32(&[q, k, v])
+    }
+
+    fn attend_batch(&mut self, qs: &[Vec<f32>], k: &[f32], v: &[f32]) -> Result<Vec<Vec<f32>>> {
+        let mut out = Vec::with_capacity(qs.len());
+        let mut i = 0;
+        while i < qs.len() {
+            if qs.len() - i >= self.batch {
+                // full batch through the batched artifact
+                let mut qflat = Vec::with_capacity(self.batch * self.d);
+                for q in &qs[i..i + self.batch] {
+                    qflat.extend_from_slice(q);
+                }
+                let exe = self.engine.load("attn_batch")?;
+                let flat = exe.run_f32(&[&qflat, k, v])?;
+                for b in 0..self.batch {
+                    out.push(flat[b * self.d..(b + 1) * self.d].to_vec());
+                }
+                i += self.batch;
+            } else {
+                let exe = self.engine.load("attn_single_query")?;
+                out.push(exe.run_f32(&[&qs[i], k, v])?);
+                i += 1;
+            }
+        }
+        Ok(out)
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+// Safety: the PJRT client is only ever used from the worker thread that
+// owns it (the coordinator moves each backend into exactly one thread).
+unsafe impl Send for PjrtBackend {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn functional_and_archsim_agree() {
+        let mut rng = Rng::new(110);
+        let q = rng.normal_vec(64);
+        let k = rng.normal_vec(256 * 64);
+        let v = rng.normal_vec(256 * 64);
+        let mut f = FunctionalBackend::new(256, 64);
+        let mut a = ArchSimBackend::new(256);
+        let fo = f.attend(&q, &k, &v).unwrap();
+        let ao = a.attend(&q, &k, &v).unwrap();
+        for (x, y) in fo.iter().zip(&ao) {
+            assert!((x - y).abs() < 0.05, "{x} vs {y}");
+        }
+        assert!(a.last_latency.is_some());
+    }
+
+    #[test]
+    fn default_batch_loops() {
+        let mut rng = Rng::new(111);
+        let k = rng.normal_vec(128 * 64);
+        let v = rng.normal_vec(128 * 64);
+        let qs: Vec<Vec<f32>> = (0..3).map(|_| rng.normal_vec(64)).collect();
+        let mut f = FunctionalBackend::new(128, 64);
+        let batch = f.attend_batch(&qs, &k, &v).unwrap();
+        assert_eq!(batch.len(), 3);
+        for (i, q) in qs.iter().enumerate() {
+            assert_eq!(batch[i], f.attend(q, &k, &v).unwrap());
+        }
+    }
+}

@@ -1,0 +1,104 @@
+//! Dynamic batcher: accumulate queries up to the batch size or a deadline,
+//! whichever first — the standard serving trade between utilisation (the
+//! `attn_batch` artifact amortises dispatch) and tail latency.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 16, // the attn_batch artifact's geometry
+            max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+/// Pull one batch from `rx` under the policy. Returns collected items
+/// (possibly fewer than max_batch on timeout) or None when the channel is
+/// closed and drained.
+pub fn next_batch<T>(rx: &Receiver<T>, policy: &BatchPolicy) -> Option<Vec<T>> {
+    // block for the first item
+    let first = match rx.recv() {
+        Ok(item) => item,
+        Err(_) => return None,
+    };
+    let mut batch = vec![first];
+    let deadline = Instant::now() + policy.max_wait;
+    while batch.len() < policy.max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(item) => batch.push(item),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Some(batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+    use std::thread;
+
+    #[test]
+    fn collects_full_batch_when_available() {
+        let (tx, rx) = mpsc::channel();
+        for i in 0..20 {
+            tx.send(i).unwrap();
+        }
+        let policy = BatchPolicy { max_batch: 16, max_wait: Duration::from_millis(50) };
+        let b = next_batch(&rx, &policy).unwrap();
+        assert_eq!(b.len(), 16);
+        let b2 = next_batch(&rx, &policy).unwrap();
+        assert_eq!(b2.len(), 4);
+    }
+
+    #[test]
+    fn times_out_with_partial_batch() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(1).unwrap();
+        let policy = BatchPolicy { max_batch: 16, max_wait: Duration::from_millis(10) };
+        let t0 = Instant::now();
+        let b = next_batch(&rx, &policy).unwrap();
+        assert_eq!(b.len(), 1);
+        assert!(t0.elapsed() >= Duration::from_millis(9));
+    }
+
+    #[test]
+    fn none_when_closed() {
+        let (tx, rx) = mpsc::channel::<u32>();
+        drop(tx);
+        assert!(next_batch(&rx, &BatchPolicy::default()).is_none());
+    }
+
+    #[test]
+    fn drains_after_sender_thread_finishes() {
+        let (tx, rx) = mpsc::channel();
+        let h = thread::spawn(move || {
+            for i in 0..5 {
+                tx.send(i).unwrap();
+                thread::sleep(Duration::from_micros(200));
+            }
+        });
+        let policy = BatchPolicy { max_batch: 3, max_wait: Duration::from_millis(20) };
+        let mut total = 0;
+        while let Some(b) = next_batch(&rx, &policy) {
+            assert!(b.len() <= 3);
+            total += b.len();
+        }
+        h.join().unwrap();
+        assert_eq!(total, 5);
+    }
+}

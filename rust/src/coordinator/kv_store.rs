@@ -1,0 +1,155 @@
+//! Per-head key/value memory: the serving-level view of the Key SRAM and
+//! the V tensor in DRAM (Sec. III-A / IV-C).
+//!
+//! Decoder-style usage appends one (k, v) pair per generated token — "CAM
+//! search over a growing KV cache each step (causal)". The store is
+//! capacity-bounded to the provisioned BA-CAM/V-SRAM size and pads the
+//! active prefix up to a tile multiple for execution.
+
+/// Per-head K/V memory.
+#[derive(Clone, Debug)]
+pub struct KvStore {
+    pub d_k: usize,
+    pub d_v: usize,
+    /// Provisioned maximum context (BA-CAM + V sizing).
+    pub capacity: usize,
+    keys: Vec<f32>,   // row-major len * d_k
+    values: Vec<f32>, // row-major len * d_v
+    len: usize,
+}
+
+impl KvStore {
+    pub fn new(capacity: usize, d_k: usize, d_v: usize) -> Self {
+        KvStore {
+            d_k,
+            d_v,
+            capacity,
+            keys: Vec::with_capacity(capacity * d_k),
+            values: Vec::with_capacity(capacity * d_v),
+            len: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Append one (key, value) row. Errors when the provisioned context is
+    /// exhausted (the caller decides eviction policy — the paper sizes the
+    /// arrays to the target maximum context).
+    pub fn append(&mut self, key: &[f32], value: &[f32]) -> Result<(), String> {
+        if key.len() != self.d_k || value.len() != self.d_v {
+            return Err(format!(
+                "dim mismatch: key {} (want {}), value {} (want {})",
+                key.len(),
+                self.d_k,
+                value.len(),
+                self.d_v
+            ));
+        }
+        if self.len >= self.capacity {
+            return Err(format!("KV capacity {} exhausted", self.capacity));
+        }
+        self.keys.extend_from_slice(key);
+        self.values.extend_from_slice(value);
+        self.len += 1;
+        Ok(())
+    }
+
+    /// Bulk-load an encoder-style fixed memory (replaces contents).
+    pub fn load(&mut self, keys: &[f32], values: &[f32]) -> Result<(), String> {
+        if keys.len() % self.d_k != 0 || values.len() % self.d_v != 0 {
+            return Err("ragged K/V load".into());
+        }
+        let n = keys.len() / self.d_k;
+        if n != values.len() / self.d_v {
+            return Err("K/V row count mismatch".into());
+        }
+        if n > self.capacity {
+            return Err(format!("load of {n} rows exceeds capacity {}", self.capacity));
+        }
+        self.keys = keys.to_vec();
+        self.values = values.to_vec();
+        self.len = n;
+        Ok(())
+    }
+
+    /// Execution view padded to `pad_to` rows: keys pad with +1 rows whose
+    /// scores can never enter the top-k beyond real keys*, values pad with
+    /// zeros. (*padding keys are all-(+1); with random real keys their
+    /// scores are mid-range, and their V rows are zero so any accidental
+    /// selection contributes nothing.)
+    pub fn padded_view(&self, pad_to: usize) -> (Vec<f32>, Vec<f32>, usize) {
+        assert!(pad_to >= self.len);
+        let mut k = self.keys.clone();
+        let mut v = self.values.clone();
+        k.resize(pad_to * self.d_k, 1.0);
+        v.resize(pad_to * self.d_v, 0.0);
+        (k, v, self.len)
+    }
+
+    pub fn keys(&self) -> &[f32] {
+        &self.keys
+    }
+
+    pub fn values(&self) -> &[f32] {
+        &self.values
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn append_grows_until_capacity() {
+        let mut s = KvStore::new(3, 4, 4);
+        let row = vec![1.0f32; 4];
+        assert!(s.append(&row, &row).is_ok());
+        assert!(s.append(&row, &row).is_ok());
+        assert!(s.append(&row, &row).is_ok());
+        assert_eq!(s.len(), 3);
+        assert!(s.append(&row, &row).is_err());
+    }
+
+    #[test]
+    fn dim_checked() {
+        let mut s = KvStore::new(3, 4, 4);
+        assert!(s.append(&[1.0; 3], &[1.0; 4]).is_err());
+        assert!(s.append(&[1.0; 4], &[1.0; 5]).is_err());
+    }
+
+    #[test]
+    fn load_replaces() {
+        let mut s = KvStore::new(8, 2, 2);
+        s.append(&[1.0, 2.0], &[3.0, 4.0]).unwrap();
+        let k: Vec<f32> = (0..8).map(|x| x as f32).collect();
+        let v: Vec<f32> = (0..8).map(|x| -(x as f32)).collect();
+        s.load(&k, &v).unwrap();
+        assert_eq!(s.len(), 4);
+        assert_eq!(s.keys()[0], 0.0);
+        assert!(s.load(&vec![0.0; 2 * 9], &vec![0.0; 2 * 9]).is_err());
+    }
+
+    #[test]
+    fn padded_view_shapes() {
+        let mut s = KvStore::new(100, 64, 64);
+        let mut rng = Rng::new(7);
+        for _ in 0..50 {
+            let k = rng.normal_vec(64);
+            let v = rng.normal_vec(64);
+            s.append(&k, &v).unwrap();
+        }
+        let (k, v, n) = s.padded_view(64);
+        assert_eq!(n, 50);
+        assert_eq!(k.len(), 64 * 64);
+        assert_eq!(v.len(), 64 * 64);
+        // padded V rows are zero
+        assert!(v[50 * 64..].iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,117 @@
+//! Serving metrics: latency distribution and throughput counters.
+
+use std::time::Duration;
+
+use crate::util::stats;
+
+/// Rolling metrics for one server (or one worker).
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    latencies_us: Vec<f64>,
+    pub completed: u64,
+    pub batches: u64,
+    pub errors: u64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, latency: Duration) {
+        self.latencies_us.push(latency.as_secs_f64() * 1e6);
+        self.completed += 1;
+    }
+
+    pub fn record_batch(&mut self, size: usize, latency: Duration) {
+        let per = latency.as_secs_f64() * 1e6;
+        for _ in 0..size {
+            self.latencies_us.push(per);
+        }
+        self.completed += size as u64;
+        self.batches += 1;
+    }
+
+    pub fn record_error(&mut self) {
+        self.errors += 1;
+    }
+
+    pub fn merge(&mut self, other: &Metrics) {
+        self.latencies_us.extend_from_slice(&other.latencies_us);
+        self.completed += other.completed;
+        self.batches += other.batches;
+        self.errors += other.errors;
+    }
+
+    pub fn mean_latency_us(&self) -> f64 {
+        stats::mean(&self.latencies_us)
+    }
+
+    pub fn p50_us(&self) -> f64 {
+        stats::percentile(&self.latencies_us, 50.0)
+    }
+
+    pub fn p95_us(&self) -> f64 {
+        stats::percentile(&self.latencies_us, 95.0)
+    }
+
+    pub fn p99_us(&self) -> f64 {
+        stats::percentile(&self.latencies_us, 99.0)
+    }
+
+    /// Throughput over a measured wall-clock window.
+    pub fn throughput_per_s(&self, window: Duration) -> f64 {
+        self.completed as f64 / window.as_secs_f64()
+    }
+
+    pub fn summary(&self, window: Duration) -> String {
+        format!(
+            "completed={} batches={} errors={} thruput={:.1}/s mean={:.1}us p50={:.1}us p95={:.1}us p99={:.1}us",
+            self.completed,
+            self.batches,
+            self.errors,
+            self.throughput_per_s(window),
+            self.mean_latency_us(),
+            self.p50_us(),
+            self.p95_us(),
+            self.p99_us()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_summarises() {
+        let mut m = Metrics::new();
+        for i in 1..=100 {
+            m.record(Duration::from_micros(i));
+        }
+        assert_eq!(m.completed, 100);
+        assert!((m.p50_us() - 50.5).abs() < 1.0);
+        assert!(m.p95_us() > 90.0);
+        assert!(m.mean_latency_us() > 49.0 && m.mean_latency_us() < 52.0);
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = Metrics::new();
+        let mut b = Metrics::new();
+        a.record(Duration::from_micros(10));
+        b.record(Duration::from_micros(20));
+        b.record_error();
+        a.merge(&b);
+        assert_eq!(a.completed, 2);
+        assert_eq!(a.errors, 1);
+    }
+
+    #[test]
+    fn batch_counts_each_query() {
+        let mut m = Metrics::new();
+        m.record_batch(16, Duration::from_micros(160));
+        assert_eq!(m.completed, 16);
+        assert_eq!(m.batches, 1);
+    }
+}

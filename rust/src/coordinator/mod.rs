@@ -1,0 +1,32 @@
+//! Layer-3 coordinator: the serving side of CAMformer's system integration
+//! (Sec. III-A).
+//!
+//! CAMformer is an attention *accelerator*: XPUs produce binary Q/K and
+//! BF16 V into shared memory; the accelerator serves single-query
+//! attention over a resident key/value memory. This module is the
+//! deployment shell a downstream system would actually run:
+//!
+//! * [`kv_store`]  — per-head K/V memory with decode-style append
+//!   (the growing KV cache of Sec. IV-C);
+//! * [`batcher`]   — dynamic batching of incoming queries (batch = 16
+//!   uses the `attn_batch` artifact; stragglers run single);
+//! * [`backend`]   — pluggable execution: PJRT artifacts (the real hot
+//!   path), the pure-Rust functional model, or the cycle-annotated
+//!   architecture simulator;
+//! * [`server`]    — worker-per-head routing, request/response plumbing,
+//!   shutdown;
+//! * [`metrics`]   — latency/throughput accounting for the examples and
+//!   benches.
+//!
+//! Python never appears here: the PJRT backend replays AOT artifacts.
+
+pub mod backend;
+pub mod batcher;
+pub mod kv_store;
+pub mod metrics;
+pub mod server;
+
+pub use backend::{AttentionBackend, FunctionalBackend};
+pub use kv_store::KvStore;
+pub use metrics::Metrics;
+pub use server::{CamformerServer, Request, Response, ServerConfig};

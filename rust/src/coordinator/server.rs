@@ -1,0 +1,281 @@
+//! The CAMformer attention server: worker-per-head request routing over
+//! pluggable backends (Sec. III-A's system integration, as a deployable
+//! service).
+//!
+//! Architecture: one dispatcher mpsc per head-worker; each worker owns its
+//! backend (PJRT clients are not shared across threads), its KV memory
+//! snapshot, and a dynamic batcher. Responses flow back over a shared
+//! channel keyed by request id.
+
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::backend::AttentionBackend;
+use super::batcher::{next_batch, BatchPolicy};
+use super::metrics::Metrics;
+
+/// One attention query.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub head: usize,
+    pub query: Vec<f32>,
+}
+
+/// The served result.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub head: usize,
+    pub output: Vec<f32>,
+    pub latency: Duration,
+}
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub heads: usize,
+    pub batch: BatchPolicy,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            heads: 1,
+            batch: BatchPolicy::default(),
+        }
+    }
+}
+
+struct Worker {
+    tx: Sender<(Request, Instant)>,
+    handle: JoinHandle<Metrics>,
+}
+
+/// The running server.
+pub struct CamformerServer {
+    workers: Vec<Worker>,
+    resp_rx: Receiver<Response>,
+    started: Instant,
+}
+
+impl CamformerServer {
+    /// Start one worker per head. `make_backend(head)` builds that head's
+    /// backend; `kv(head)` supplies its (keys, values) memory (row-major,
+    /// padded to the backend geometry by the caller).
+    pub fn start<B, FB, FK>(cfg: ServerConfig, mut make_backend: FB, mut kv: FK) -> Self
+    where
+        B: AttentionBackend + 'static,
+        FB: FnMut(usize) -> B,
+        FK: FnMut(usize) -> (Vec<f32>, Vec<f32>),
+    {
+        let (resp_tx, resp_rx) = mpsc::channel::<Response>();
+        let mut workers = Vec::with_capacity(cfg.heads);
+        for head in 0..cfg.heads {
+            let (tx, rx) = mpsc::channel::<(Request, Instant)>();
+            let mut backend = make_backend(head);
+            let (keys, values) = kv(head);
+            let resp_tx = resp_tx.clone();
+            let policy = cfg.batch;
+            let handle = std::thread::spawn(move || {
+                let mut metrics = Metrics::new();
+                while let Some(batch) = next_batch(&rx, &policy) {
+                    let t0 = Instant::now();
+                    let qs: Vec<Vec<f32>> =
+                        batch.iter().map(|(r, _)| r.query.clone()).collect();
+                    match backend.attend_batch(&qs, &keys, &values) {
+                        Ok(outs) => {
+                            let done = Instant::now();
+                            metrics.record_batch(batch.len(), done - t0);
+                            for ((req, enq), out) in batch.into_iter().zip(outs) {
+                                let _ = resp_tx.send(Response {
+                                    id: req.id,
+                                    head: req.head,
+                                    output: out,
+                                    latency: done - enq,
+                                });
+                            }
+                        }
+                        Err(e) => {
+                            eprintln!("worker {head}: batch failed: {e:#}");
+                            for _ in &batch {
+                                metrics.record_error();
+                            }
+                        }
+                    }
+                }
+                metrics
+            });
+            workers.push(Worker { tx, handle });
+        }
+        CamformerServer {
+            workers,
+            resp_rx,
+            started: Instant::now(),
+        }
+    }
+
+    /// Submit a request (routed by head id).
+    pub fn submit(&self, req: Request) -> Result<(), String> {
+        let head = req.head;
+        self.workers
+            .get(head)
+            .ok_or_else(|| format!("no worker for head {head}"))?
+            .tx
+            .send((req, Instant::now()))
+            .map_err(|_| format!("worker {head} is gone"))
+    }
+
+    /// Collect exactly `n` responses (blocking).
+    pub fn collect(&self, n: usize) -> Vec<Response> {
+        (0..n)
+            .map(|_| self.resp_rx.recv().expect("server workers alive"))
+            .collect()
+    }
+
+    /// Collect responses with a timeout; returns what arrived.
+    pub fn collect_timeout(&self, n: usize, timeout: Duration) -> Vec<Response> {
+        let deadline = Instant::now() + timeout;
+        let mut out = Vec::with_capacity(n);
+        while out.len() < n {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match self.resp_rx.recv_timeout(deadline - now) {
+                Ok(r) => out.push(r),
+                Err(_) => break,
+            }
+        }
+        out
+    }
+
+    /// Shut down: close queues, join workers, return merged metrics and
+    /// the serving window.
+    pub fn shutdown(self) -> (Metrics, Duration) {
+        let window = self.started.elapsed();
+        let mut merged = Metrics::new();
+        let CamformerServer { workers, resp_rx, .. } = self;
+        drop(resp_rx);
+        for w in workers {
+            drop(w.tx);
+            if let Ok(m) = w.handle.join() {
+                merged.merge(&m);
+            }
+        }
+        (merged, window)
+    }
+}
+
+/// Route a stream of requests round-robin over heads (helper for load
+/// generators that don't care about head affinity).
+pub fn round_robin_heads(count: usize, heads: usize) -> impl Iterator<Item = usize> {
+    (0..count).map(move |i| i % heads)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::FunctionalBackend;
+    use crate::util::rng::Rng;
+
+    fn test_kv(n: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        (rng.normal_vec(n * 64), rng.normal_vec(n * 64))
+    }
+
+    #[test]
+    fn serves_and_shuts_down() {
+        let cfg = ServerConfig { heads: 2, ..Default::default() };
+        let server = CamformerServer::start(
+            cfg,
+            |_| FunctionalBackend::new(128, 64),
+            |h| test_kv(128, h as u64),
+        );
+        let mut rng = Rng::new(120);
+        for i in 0..10u64 {
+            server
+                .submit(Request {
+                    id: i,
+                    head: (i % 2) as usize,
+                    query: rng.normal_vec(64),
+                })
+                .unwrap();
+        }
+        let resps = server.collect(10);
+        assert_eq!(resps.len(), 10);
+        for r in &resps {
+            assert_eq!(r.output.len(), 64);
+            assert!(r.latency > Duration::ZERO);
+        }
+        let (metrics, window) = server.shutdown();
+        assert_eq!(metrics.completed, 10);
+        assert_eq!(metrics.errors, 0);
+        assert!(window > Duration::ZERO);
+    }
+
+    #[test]
+    fn responses_match_direct_backend() {
+        let (keys, values) = test_kv(128, 7);
+        let kc = keys.clone();
+        let vc = values.clone();
+        let server = CamformerServer::start(
+            ServerConfig::default(),
+            |_| FunctionalBackend::new(128, 64),
+            move |_| (kc.clone(), vc.clone()),
+        );
+        let mut rng = Rng::new(121);
+        let q = rng.normal_vec(64);
+        server.submit(Request { id: 99, head: 0, query: q.clone() }).unwrap();
+        let r = server.collect(1).remove(0);
+        assert_eq!(r.id, 99);
+        let mut direct = FunctionalBackend::new(128, 64);
+        use crate::coordinator::backend::AttentionBackend as _;
+        assert_eq!(r.output, direct.attend(&q, &keys, &values).unwrap());
+        server.shutdown();
+    }
+
+    #[test]
+    fn bad_head_rejected() {
+        let server = CamformerServer::start(
+            ServerConfig::default(),
+            |_| FunctionalBackend::new(128, 64),
+            |_| test_kv(128, 1),
+        );
+        let err = server.submit(Request { id: 0, head: 5, query: vec![0.0; 64] });
+        assert!(err.is_err());
+        server.shutdown();
+    }
+
+    #[test]
+    fn round_robin_coverage() {
+        let heads: Vec<usize> = round_robin_heads(10, 3).collect();
+        assert_eq!(heads, vec![0, 1, 2, 0, 1, 2, 0, 1, 2, 0]);
+    }
+
+    #[test]
+    fn throughput_under_load() {
+        let server = CamformerServer::start(
+            ServerConfig { heads: 4, ..Default::default() },
+            |_| FunctionalBackend::new(256, 64),
+            |h| test_kv(256, h as u64),
+        );
+        let mut rng = Rng::new(122);
+        let n = 200u64;
+        for i in 0..n {
+            server
+                .submit(Request {
+                    id: i,
+                    head: (i % 4) as usize,
+                    query: rng.normal_vec(64),
+                })
+                .unwrap();
+        }
+        let resps = server.collect(n as usize);
+        assert_eq!(resps.len(), n as usize);
+        let (metrics, window) = server.shutdown();
+        assert_eq!(metrics.completed, n);
+        assert!(metrics.throughput_per_s(window) > 50.0);
+    }
+}

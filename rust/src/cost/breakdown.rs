@@ -1,0 +1,158 @@
+//! Fig. 8: energy and area breakdown by component.
+//!
+//! Paper reads: energy dominated by the contextualization stage (57%);
+//! component-wise Value/Key SRAM 31%/20%, MACs 26%, BA-CAM 12%. Area:
+//! SRAM 42%, Top-32 module 26%, remainder across processing units.
+
+use super::blocks;
+use super::system::{OpCounts, SystemConfig};
+
+/// A named component share.
+#[derive(Clone, Debug)]
+pub struct Component {
+    pub name: &'static str,
+    pub value: f64,
+    pub pct: f64,
+}
+
+fn to_components(raw: Vec<(&'static str, f64)>) -> Vec<Component> {
+    let total: f64 = raw.iter().map(|(_, v)| v).sum();
+    raw.into_iter()
+        .map(|(name, value)| Component {
+            name,
+            value,
+            pct: 100.0 * value / total,
+        })
+        .collect()
+}
+
+/// Per-query energy by component [J] (Fig. 8 left).
+pub fn energy_breakdown(cfg: &SystemConfig) -> Vec<Component> {
+    let ops = OpCounts::for_query(cfg);
+    to_components(vec![
+        (
+            "BA-CAM + ADC",
+            ops.cam_tile_ops as f64 * blocks::ba_cam_array().energy_per_op
+                + ops.adc_conversions as f64 * blocks::sar_adc().energy_per_op,
+        ),
+        (
+            "Key SRAM",
+            ops.key_sram_bytes as f64 * blocks::key_sram().energy_per_op,
+        ),
+        (
+            "Value SRAM",
+            ops.value_sram_bytes as f64 * blocks::value_sram().energy_per_op,
+        ),
+        (
+            "BF16 MACs",
+            ops.bf16_macs as f64 * blocks::bf16_mac().energy_per_op,
+        ),
+        (
+            "Top-k sorters",
+            ops.top2_passes as f64 * blocks::top2_sorter().energy_per_op
+                + ops.top32_passes as f64 * blocks::top32_sorter().energy_per_op,
+        ),
+        (
+            "SoftMax",
+            ops.softmax_ops as f64 * blocks::softmax_engine().energy_per_op,
+        ),
+        (
+            "DMA/MC",
+            ops.dma_rows as f64 * blocks::dma_mc().energy_per_op,
+        ),
+    ])
+}
+
+/// Core area by component [mm^2] (Fig. 8 right).
+pub fn area_breakdown(cfg: &SystemConfig) -> Vec<Component> {
+    to_components(vec![
+        (
+            "SRAM (Key+Value+Query)",
+            blocks::key_sram().area_mm2
+                + blocks::value_sram().area_mm2
+                + blocks::query_buffer().area_mm2,
+        ),
+        ("Top-32 module", blocks::top32_sorter().area_mm2),
+        ("Top-2 sorters", blocks::top2_sorter().area_mm2),
+        ("BA-CAM + ADC", blocks::ba_cam_array().area_mm2 + blocks::sar_adc().area_mm2),
+        (
+            "BF16 MACs",
+            cfg.mac_units as f64 * blocks::bf16_mac().area_mm2,
+        ),
+        ("SoftMax", blocks::softmax_engine().area_mm2),
+        ("DMA/MC + control", blocks::dma_mc().area_mm2 + blocks::control().area_mm2),
+    ])
+}
+
+/// Energy by *pipeline stage* (the paper's 57% contextualization claim).
+pub fn stage_energy_breakdown(cfg: &SystemConfig) -> Vec<Component> {
+    let by_comp = energy_breakdown(cfg);
+    let find = |n: &str| by_comp.iter().find(|c| c.name == n).unwrap().value;
+    to_components(vec![
+        // association: CAM + ADC + Key SRAM streaming + stage-1 filter
+        (
+            "Association",
+            find("BA-CAM + ADC") + find("Key SRAM"),
+        ),
+        // normalization: top-k finalisation + softmax
+        ("Normalization", find("Top-k sorters") + find("SoftMax")),
+        // contextualization: V SRAM + MACs + DMA
+        (
+            "Contextualization",
+            find("Value SRAM") + find("BF16 MACs") + find("DMA/MC"),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pct(components: &[Component], name: &str) -> f64 {
+        components.iter().find(|c| c.name == name).unwrap().pct
+    }
+
+    #[test]
+    fn fig8_energy_fractions() {
+        let e = energy_breakdown(&SystemConfig::default());
+        // paper: Value SRAM 31%, Key SRAM 20%, MACs 26%, BA-CAM 12%
+        assert!((pct(&e, "Value SRAM") - 31.0).abs() < 6.0, "{}", pct(&e, "Value SRAM"));
+        assert!((pct(&e, "Key SRAM") - 20.0).abs() < 5.0, "{}", pct(&e, "Key SRAM"));
+        assert!((pct(&e, "BF16 MACs") - 26.0).abs() < 6.0, "{}", pct(&e, "BF16 MACs"));
+        assert!((pct(&e, "BA-CAM + ADC") - 12.0).abs() < 5.0, "{}", pct(&e, "BA-CAM + ADC"));
+    }
+
+    #[test]
+    fn fig8_contextualization_dominates_energy() {
+        let s = stage_energy_breakdown(&SystemConfig::default());
+        let ctx = pct(&s, "Contextualization");
+        // paper: 57%
+        assert!((ctx - 57.0).abs() < 10.0, "contextualization {ctx}%");
+        assert!(ctx > pct(&s, "Association"));
+        assert!(ctx > pct(&s, "Normalization"));
+    }
+
+    #[test]
+    fn fig8_area_fractions() {
+        let a = area_breakdown(&SystemConfig::default());
+        // paper: SRAM 42%, Top-32 26%
+        assert!(
+            (pct(&a, "SRAM (Key+Value+Query)") - 42.0).abs() < 6.0,
+            "{}",
+            pct(&a, "SRAM (Key+Value+Query)")
+        );
+        assert!((pct(&a, "Top-32 module") - 26.0).abs() < 6.0, "{}", pct(&a, "Top-32 module"));
+    }
+
+    #[test]
+    fn percentages_sum_to_100() {
+        for comps in [
+            energy_breakdown(&SystemConfig::default()),
+            area_breakdown(&SystemConfig::default()),
+            stage_energy_breakdown(&SystemConfig::default()),
+        ] {
+            let total: f64 = comps.iter().map(|c| c.pct).sum();
+            assert!((total - 100.0).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,18 @@
+//! Synthesis-derived cost library (Sec. IV-A).
+//!
+//! The paper synthesises digital blocks with Design Compiler (TSMC 65 nm),
+//! characterises the CAM in HSPICE, takes ADC / BF16-MAC / BF16-divider
+//! costs from [39]-[41], scales to 45 nm via Stillmaker [42], and uses
+//! 2.33 nJ/bit DRAM energy [43]. We carry the same published constants and
+//! scaling equations so Tables I/II and Figs. 8/10 are regenerable
+//! arithmetic, not refits.
+
+pub mod blocks;
+pub mod breakdown;
+pub mod scaling;
+pub mod system;
+
+pub use blocks::BlockCost;
+pub use breakdown::{area_breakdown, energy_breakdown, Component};
+pub use scaling::{scale_area, scale_energy, Node};
+pub use system::{CamformerCost, SystemConfig};

@@ -1,0 +1,118 @@
+//! Stillmaker & Baas node-scaling equations [42]: predict CMOS area /
+//! energy across nodes from 180 nm to 7 nm. We use the standard
+//! feature-size-squared area rule and the published energy-per-op scaling
+//! factors, which is how the paper moves 65 nm synthesis numbers to the
+//! 45 nm comparison plane of Table II and projects 45 -> 22 nm in Fig. 10.
+
+/// Process node [nm].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Node {
+    N65,
+    N45,
+    N28,
+    N22,
+    N16,
+    N7,
+}
+
+impl Node {
+    pub fn nm(&self) -> f64 {
+        match self {
+            Node::N65 => 65.0,
+            Node::N45 => 45.0,
+            Node::N28 => 28.0,
+            Node::N22 => 22.0,
+            Node::N16 => 16.0,
+            Node::N7 => 7.0,
+        }
+    }
+
+    /// Stillmaker energy-per-op factor normalised to 65 nm = 1.0.
+    /// (Table 7 of [42], general-purpose scaling of dynamic energy.)
+    pub fn energy_factor(&self) -> f64 {
+        match self {
+            Node::N65 => 1.000,
+            Node::N45 => 0.619, // 65->45: ~1.6x lower energy/op
+            Node::N28 => 0.368,
+            Node::N22 => 0.281,
+            Node::N16 => 0.193,
+            Node::N7 => 0.080,
+        }
+    }
+
+    /// Delay factor normalised to 65 nm = 1.0 (higher node = slower).
+    pub fn delay_factor(&self) -> f64 {
+        match self {
+            Node::N65 => 1.000,
+            Node::N45 => 0.758,
+            Node::N28 => 0.536,
+            Node::N22 => 0.456,
+            Node::N16 => 0.366,
+            Node::N7 => 0.205,
+        }
+    }
+}
+
+/// Scale silicon area [mm^2] from one node to another (λ² rule).
+pub fn scale_area(area_mm2: f64, from: Node, to: Node) -> f64 {
+    area_mm2 * (to.nm() / from.nm()).powi(2)
+}
+
+/// Scale dynamic energy [J] between nodes via the Stillmaker factors.
+pub fn scale_energy(energy_j: f64, from: Node, to: Node) -> f64 {
+    energy_j * to.energy_factor() / from.energy_factor()
+}
+
+/// Scale achievable frequency between nodes (inverse delay).
+pub fn scale_freq(freq_ghz: f64, from: Node, to: Node) -> f64 {
+    freq_ghz * from.delay_factor() / to.delay_factor()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn area_scales_quadratically() {
+        let a65 = 1.0;
+        let a45 = scale_area(a65, Node::N65, Node::N45);
+        assert!((a45 - (45.0f64 / 65.0).powi(2)).abs() < 1e-12);
+        assert!((a45 - 0.479).abs() < 0.01);
+    }
+
+    #[test]
+    fn roundtrip_identity() {
+        let a = scale_area(scale_area(2.5, Node::N65, Node::N22), Node::N22, Node::N65);
+        assert!((a - 2.5).abs() < 1e-12);
+        let e = scale_energy(scale_energy(1e-12, Node::N65, Node::N7), Node::N7, Node::N65);
+        assert!((e - 1e-12).abs() < 1e-24);
+    }
+
+    #[test]
+    fn energy_monotone_with_node() {
+        let nodes = [Node::N65, Node::N45, Node::N28, Node::N22, Node::N16, Node::N7];
+        for w in nodes.windows(2) {
+            assert!(
+                scale_energy(1.0, Node::N65, w[1]) < scale_energy(1.0, Node::N65, w[0]),
+                "{:?} -> {:?}",
+                w[0],
+                w[1]
+            );
+        }
+    }
+
+    #[test]
+    fn fig10_projection_45_to_22() {
+        // the Fig. 10 "projected" point: 45 -> 22 nm gives ~4.2x area and
+        // ~2.2x energy advantage combined
+        let area_gain = 1.0 / scale_area(1.0, Node::N45, Node::N22);
+        let energy_gain = 1.0 / scale_energy(1.0, Node::N45, Node::N22);
+        assert!(area_gain > 4.0 && area_gain < 4.4, "{area_gain}");
+        assert!(energy_gain > 2.0 && energy_gain < 2.4, "{energy_gain}");
+    }
+
+    #[test]
+    fn freq_improves_at_smaller_nodes() {
+        assert!(scale_freq(1.0, Node::N65, Node::N22) > 2.0);
+    }
+}

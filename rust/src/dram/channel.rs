@@ -1,0 +1,218 @@
+//! One HBM3 channel: banks, open rows (pages), t_RC timing, bandwidth and
+//! access energy accounting.
+
+/// HBM3 channel timing/geometry (JESD238 ballpark; t_RC from [33]).
+#[derive(Clone, Copy, Debug)]
+pub struct DramConfig {
+    /// Row cycle time [ns] — min time between ACT of the same bank.
+    pub t_rc_ns: f64,
+    /// CAS latency for an open-row hit [ns].
+    pub t_cas_ns: f64,
+    /// Page (row buffer) size [bytes]. Paper: 8 KB.
+    pub page_bytes: usize,
+    /// Banks per channel.
+    pub banks: usize,
+    /// Peak channel bandwidth [GB/s]. One HBM3 channel: ~64 GB/s
+    /// (signalling 6.4 Gb/s x 64 bits wide / 8).
+    pub peak_gbps: f64,
+    /// Access energy [nJ/bit] (Kawata et al. [43]: 2.33 nJ/bit... the
+    /// paper uses this figure for DRAM energy).
+    pub energy_nj_per_bit: f64,
+}
+
+impl Default for DramConfig {
+    fn default() -> Self {
+        DramConfig {
+            t_rc_ns: 48.0,
+            t_cas_ns: 16.0,
+            page_bytes: 8192,
+            banks: 16,
+            peak_gbps: 64.0,
+            energy_nj_per_bit: 2.33,
+        }
+    }
+}
+
+/// Outcome of one access.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AccessKind {
+    /// Open-row hit: data served at CAS latency.
+    RowHit,
+    /// Row miss: precharge + activate, full t_RC exposure.
+    RowMiss,
+}
+
+/// Simple open-page channel model.
+#[derive(Clone, Debug)]
+pub struct HbmChannel {
+    pub cfg: DramConfig,
+    /// Open row id per bank (None = precharged).
+    open_rows: Vec<Option<u64>>,
+    /// Earliest time each bank can activate again [ns].
+    bank_ready_ns: Vec<f64>,
+    /// Running totals.
+    pub bytes_read: u64,
+    pub row_hits: u64,
+    pub row_misses: u64,
+    pub busy_ns: f64,
+}
+
+impl HbmChannel {
+    pub fn new(cfg: DramConfig) -> Self {
+        HbmChannel {
+            open_rows: vec![None; cfg.banks],
+            bank_ready_ns: vec![0.0; cfg.banks],
+            bytes_read: 0,
+            row_hits: 0,
+            row_misses: 0,
+            busy_ns: 0.0,
+            cfg,
+        }
+    }
+
+    /// Map a byte address to (bank, row).
+    fn locate(&self, addr: u64) -> (usize, u64) {
+        let page = addr / self.cfg.page_bytes as u64;
+        ((page % self.cfg.banks as u64) as usize, page / self.cfg.banks as u64)
+    }
+
+    /// Read `bytes` at `addr` starting no earlier than `now_ns`.
+    /// Returns (completion time [ns], access kind).
+    pub fn read(&mut self, now_ns: f64, addr: u64, bytes: usize) -> (f64, AccessKind) {
+        let (bank, row) = self.locate(addr);
+        let transfer_ns = bytes as f64 / (self.cfg.peak_gbps * 1e9) * 1e9;
+        self.bytes_read += bytes as u64;
+
+        let kind = if self.open_rows[bank] == Some(row) {
+            self.row_hits += 1;
+            AccessKind::RowHit
+        } else {
+            self.row_misses += 1;
+            self.open_rows[bank] = Some(row);
+            AccessKind::RowMiss
+        };
+        let start = now_ns.max(self.bank_ready_ns[bank]);
+        let latency = match kind {
+            AccessKind::RowHit => self.cfg.t_cas_ns,
+            AccessKind::RowMiss => self.cfg.t_rc_ns,
+        };
+        let done = start + latency + transfer_ns;
+        self.bank_ready_ns[bank] = match kind {
+            // t_RC gates successive activates of the same bank
+            AccessKind::RowMiss => start + self.cfg.t_rc_ns,
+            AccessKind::RowHit => start + transfer_ns,
+        };
+        self.busy_ns += latency + transfer_ns;
+        (done, kind)
+    }
+
+    /// Total DRAM access energy so far [J].
+    pub fn energy_j(&self) -> f64 {
+        self.bytes_read as f64 * 8.0 * self.cfg.energy_nj_per_bit * 1e-9
+    }
+
+    /// Achieved bandwidth over a window [GB/s].
+    pub fn achieved_gbps(&self, window_ns: f64) -> f64 {
+        if window_ns <= 0.0 {
+            return 0.0;
+        }
+        self.bytes_read as f64 / window_ns
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.row_hits + self.row_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.row_hits as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_access_misses_then_hits_within_page() {
+        let mut ch = HbmChannel::new(DramConfig::default());
+        let (_, k1) = ch.read(0.0, 0, 128);
+        let (_, k2) = ch.read(100.0, 128, 128);
+        assert_eq!(k1, AccessKind::RowMiss);
+        assert_eq!(k2, AccessKind::RowHit);
+    }
+
+    #[test]
+    fn page_boundary_misses() {
+        let mut ch = HbmChannel::new(DramConfig::default());
+        ch.read(0.0, 0, 128);
+        let (_, k) = ch.read(100.0, 8192 * 16, 128); // same bank, next row
+        assert_eq!(k, AccessKind::RowMiss);
+    }
+
+    #[test]
+    fn different_banks_independent() {
+        let mut ch = HbmChannel::new(DramConfig::default());
+        let (t1, _) = ch.read(0.0, 0, 128);
+        let (t2, _) = ch.read(0.0, 8192, 128); // next page -> next bank
+        // both start at 0 (no bank conflict): completion within one t_RC+xfer
+        assert!(t1 < 50.0 + 1.0 && t2 < 50.0 + 1.0);
+    }
+
+    #[test]
+    fn same_bank_activates_gated_by_trc() {
+        let cfg = DramConfig::default();
+        let mut ch = HbmChannel::new(cfg);
+        ch.read(0.0, 0, 128);
+        // same bank, different row immediately after
+        let (t2, k2) = ch.read(0.0, 8192 * 16, 128);
+        assert_eq!(k2, AccessKind::RowMiss);
+        assert!(t2 >= 2.0 * cfg.t_rc_ns - 1e-9, "t2={t2}");
+    }
+
+    #[test]
+    fn paper_v_fetch_claim_one_trc_per_64_rows() {
+        // V rows are 128 B; 64 rows = one 8 KB page = one t_RC (Sec III-C4)
+        let cfg = DramConfig::default();
+        let mut ch = HbmChannel::new(cfg);
+        let mut t = 0.0;
+        for row in 0..64u64 {
+            let (done, kind) = ch.read(t, row * 128, 128);
+            t = done;
+            if row == 0 {
+                assert_eq!(kind, AccessKind::RowMiss);
+            } else {
+                assert_eq!(kind, AccessKind::RowHit);
+            }
+        }
+        assert_eq!(ch.row_misses, 1);
+        // total: one t_RC + 64 transfers + 63 CAS ≈ well under 2 us
+        assert!(t < 2000.0, "64-row fetch took {t} ns");
+    }
+
+    #[test]
+    fn bandwidth_requirement_feasible() {
+        // paper: ~50 GB/s needed; single channel peak is 64 GB/s
+        let cfg = DramConfig::default();
+        assert!(cfg.peak_gbps > 50.0);
+    }
+
+    #[test]
+    fn energy_tracks_bits() {
+        let mut ch = HbmChannel::new(DramConfig::default());
+        ch.read(0.0, 0, 1000);
+        let expect = 1000.0 * 8.0 * 2.33e-9;
+        assert!((ch.energy_j() - expect).abs() < 1e-15);
+    }
+
+    #[test]
+    fn hit_rate_statistics() {
+        let mut ch = HbmChannel::new(DramConfig::default());
+        let mut t = 0.0;
+        for i in 0..64 {
+            let (d, _) = ch.read(t, i * 128, 128);
+            t = d;
+        }
+        assert!(ch.hit_rate() > 0.95);
+    }
+}

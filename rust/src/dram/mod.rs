@@ -1,0 +1,14 @@
+//! HBM3 DRAM model (Sec. III-C4).
+//!
+//! The paper lays V out contiguously: rows of 64 x 16 b (128 B), so 64 rows
+//! fit an 8 KB page; with no interleaving one t_RC (48 ns, HBM3) serves
+//! each set of 64 scores, the pipeline hides DRAM latency entirely, and the
+//! required ~50 GB/s fits a single HBM3 channel. This module models pages,
+//! banks, row cycles and bandwidth so the prefetch claims are checkable,
+//! plus the 2.33 nJ/bit access energy [43] the system energy model uses.
+
+pub mod channel;
+pub mod prefetch;
+
+pub use channel::{DramConfig, HbmChannel};
+pub use prefetch::{PrefetchEngine, PrefetchStats};

@@ -1,0 +1,11 @@
+//! CAMformer — attention as associative memory.
+pub mod util;
+pub mod camcircuit;
+pub mod bimv;
+pub mod arch;
+pub mod dram;
+pub mod cost;
+pub mod baselines;
+pub mod accuracy;
+pub mod coordinator;
+pub mod runtime;

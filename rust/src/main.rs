@@ -1,0 +1,76 @@
+//! `camformer` — CLI for the CAMformer reproduction.
+//!
+//! Every table and figure in the paper's evaluation has a subcommand that
+//! regenerates it (DESIGN.md per-experiment index). `serve` runs the
+//! Layer-3 coordinator over the PJRT artifacts.
+
+use camformer::util::cli::Args;
+
+mod commands {
+    pub mod figures;
+    pub mod serve;
+    pub mod tables;
+}
+
+const HELP: &str = "\
+camformer — attention as associative memory (paper reproduction)
+
+USAGE: camformer <command> [options]
+
+Paper experiments:
+  fig3a    matchline voltage vs matches (1x10 BA-CAM transients)
+  fig3b    PVT deviation across TT/SS/FF corners (16x64 array)
+  table1   circuit-level BIMV comparison (CiM / TD-CAM / BA-CAM)
+  fig5     per-op energy vs amortisation dimension M
+  fig7     pipelining timelines and stall accounting
+  fig8     energy & area breakdown by component and stage
+  fig9     per-stage throughput with/without optimisations
+  table2   accelerator comparison at 1 GHz
+  fig10    Pareto frontier: perf/W vs perf/mm^2, industry + academic
+  table3   first-stage-k accuracy sweep, MEASURED via PJRT classifiers
+  table4   GLUE-style multi-task sweep (calibrated simulation)
+  dse      design-space exploration (MAC balance, CAM geometry, ADC bits)
+
+Serving / demo:
+  serve    run the coordinator over the PJRT artifacts
+           [--requests N] [--heads H] [--backend pjrt|functional|arch]
+  quickstart  one query end-to-end through every layer
+
+Common options:
+  --seed S         RNG seed (default 42)
+  --trials N       Monte-Carlo trials where applicable
+  --artifacts DIR  artifacts directory (default ./artifacts)
+";
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let result = match cmd {
+        "fig3a" => commands::figures::fig3a(&args),
+        "fig3b" => commands::figures::fig3b(&args),
+        "fig5" => commands::figures::fig5(&args),
+        "fig7" => commands::figures::fig7(&args),
+        "fig8" => commands::figures::fig8(&args),
+        "fig9" => commands::figures::fig9(&args),
+        "fig10" => commands::figures::fig10(&args),
+        "table1" => commands::tables::table1(&args),
+        "table2" => commands::tables::table2(&args),
+        "table3" => commands::tables::table3(&args),
+        "table4" => commands::tables::table4(&args),
+        "dse" => commands::figures::dse(&args),
+        "serve" => commands::serve::serve(&args),
+        "quickstart" => commands::serve::quickstart(&args),
+        "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n\n{HELP}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,136 @@
+//! Compile-once / execute-many wrapper over the `xla` crate's PJRT client.
+//!
+//! Interchange is HLO *text* (see aot.py): `HloModuleProto::from_text_file`
+//! reparses and reassigns instruction ids, sidestepping the 64-bit-id
+//! protos jax >= 0.5 emits that xla_extension 0.5.1 rejects.
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+use super::manifest::{Manifest, ManifestEntry};
+
+/// One compiled entry point.
+pub struct LoadedExecutable {
+    pub entry: ManifestEntry,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedExecutable {
+    /// Execute with f32 inputs (the common case for attention tensors).
+    /// Input slices must match the manifest specs; returns the flattened
+    /// f32 output.
+    pub fn run_f32(&self, inputs: &[&[f32]]) -> Result<Vec<f32>> {
+        let literals = self.to_literals_f32(inputs)?;
+        self.run_literals(&literals)
+    }
+
+    /// Execute with one s32 input (classifier tokens) -> f32 output.
+    pub fn run_s32(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        if self.entry.inputs.len() != 1 {
+            bail!("{}: expected 1 input, manifest has {}", self.entry.name, self.entry.inputs.len());
+        }
+        let spec = &self.entry.inputs[0];
+        if spec.dtype != "s32" || tokens.len() != spec.elements() {
+            bail!(
+                "{}: input must be s32[{}], got {} elements",
+                self.entry.name,
+                spec.elements(),
+                tokens.len()
+            );
+        }
+        let dims: Vec<i64> = spec.dims.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(tokens).reshape(&dims)?;
+        self.run_literals(&[lit])
+    }
+
+    fn to_literals_f32(&self, inputs: &[&[f32]]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.entry.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.entry.name,
+                self.entry.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, spec) in inputs.iter().zip(&self.entry.inputs) {
+            if spec.dtype != "f32" {
+                bail!("{}: input is {}, use the typed runner", self.entry.name, spec.dtype);
+            }
+            if data.len() != spec.elements() {
+                bail!(
+                    "{}: input needs {} elements ({:?}), got {}",
+                    self.entry.name,
+                    spec.elements(),
+                    spec.dims,
+                    data.len()
+                );
+            }
+            let dims: Vec<i64> = spec.dims.iter().map(|&d| d as i64).collect();
+            literals.push(xla::Literal::vec1(data).reshape(&dims)?);
+        }
+        Ok(literals)
+    }
+
+    fn run_literals(&self, literals: &[xla::Literal]) -> Result<Vec<f32>> {
+        let result = self.exe.execute::<xla::Literal>(literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// The runtime engine: a PJRT CPU client plus compiled entry points.
+pub struct Engine {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    loaded: HashMap<String, LoadedExecutable>,
+}
+
+impl Engine {
+    /// Create a CPU engine over an artifacts directory.
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            manifest,
+            loaded: HashMap::new(),
+        })
+    }
+
+    /// Compile (or fetch the cached) entry point by manifest name.
+    pub fn load(&mut self, name: &str) -> Result<&LoadedExecutable> {
+        if !self.loaded.contains_key(name) {
+            let entry = self.manifest.get(name)?.clone();
+            let path = entry.file.to_str().context("non-utf8 path")?;
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .with_context(|| format!("parsing HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?;
+            self.loaded.insert(
+                name.to_string(),
+                LoadedExecutable { entry, exe },
+            );
+        }
+        Ok(&self.loaded[name])
+    }
+
+    /// Names of all available entry points.
+    pub fn available(&self) -> Vec<&str> {
+        self.manifest.entries.iter().map(|e| e.name.as_str()).collect()
+    }
+}
+
+/// Locate the artifacts directory: $CAMFORMER_ARTIFACTS or ./artifacts
+/// relative to the crate root.
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    if let Ok(d) = std::env::var("CAMFORMER_ARTIFACTS") {
+        return d.into();
+    }
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}

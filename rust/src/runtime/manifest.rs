@@ -1,0 +1,155 @@
+//! `artifacts/manifest.tsv` parsing: the AOT step records each entry
+//! point's file, input specs and output spec; the runtime uses it to load
+//! and validate executables without hard-coding shapes.
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// A tensor spec like `f32[1024,64]` or `s32[512]`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub dtype: String,
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn parse(s: &str) -> Result<Self> {
+        let (dtype, rest) = s
+            .split_once('[')
+            .with_context(|| format!("bad tensor spec {s:?}"))?;
+        let dims_str = rest.strip_suffix(']').context("missing ]")?;
+        let dims = if dims_str.is_empty() {
+            vec![]
+        } else {
+            dims_str
+                .split(',')
+                .map(|d| d.trim().parse::<usize>().context("bad dim"))
+                .collect::<Result<Vec<_>>>()?
+        };
+        Ok(TensorSpec {
+            dtype: dtype.to_string(),
+            dims,
+        })
+    }
+
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// One manifest row.
+#[derive(Clone, Debug)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub output: TensorSpec,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub entries: Vec<ManifestEntry>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.tsv`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Self> {
+        let mut entries = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            if i == 0 || line.trim().is_empty() {
+                continue; // header
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() != 4 {
+                bail!("manifest line {i}: expected 4 columns, got {}", cols.len());
+            }
+            let inputs = cols[2]
+                .split(';')
+                .map(TensorSpec::parse)
+                .collect::<Result<Vec<_>>>()?;
+            entries.push(ManifestEntry {
+                name: cols[0].to_string(),
+                file: dir.join(cols[1]),
+                inputs,
+                output: TensorSpec::parse(cols[3])?,
+            });
+        }
+        Ok(Manifest {
+            entries,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ManifestEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name)
+            .with_context(|| {
+                format!(
+                    "entry point {name:?} not in manifest (have: {:?})",
+                    self.entries.iter().map(|e| &e.name).collect::<Vec<_>>()
+                )
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_tensor_spec() {
+        let t = TensorSpec::parse("f32[1024,64]").unwrap();
+        assert_eq!(t.dtype, "f32");
+        assert_eq!(t.dims, vec![1024, 64]);
+        assert_eq!(t.elements(), 65536);
+        let s = TensorSpec::parse("s32[512]").unwrap();
+        assert_eq!(s.dtype, "s32");
+        assert_eq!(s.dims, vec![512]);
+    }
+
+    #[test]
+    fn parse_scalar_spec() {
+        let t = TensorSpec::parse("f32[]").unwrap();
+        assert!(t.dims.is_empty());
+        assert_eq!(t.elements(), 1);
+    }
+
+    #[test]
+    fn reject_garbage() {
+        assert!(TensorSpec::parse("f32").is_err());
+        assert!(TensorSpec::parse("f32[a,b]").is_err());
+    }
+
+    #[test]
+    fn parse_manifest_text() {
+        let text = "name\tfile\tinputs\toutput\n\
+                    attn\tattn.hlo.txt\tf32[64];f32[1024,64]\tf32[64]\n";
+        let m = Manifest::parse(text, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.entries.len(), 1);
+        let e = m.get("attn").unwrap();
+        assert_eq!(e.inputs.len(), 2);
+        assert_eq!(e.file, Path::new("/tmp/a/attn.hlo.txt"));
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        // integration guard: if artifacts exist, they must parse
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.tsv").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.get("attn_single_query").is_ok());
+            assert!(m.get("classifier_camformer").is_ok());
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them from the
+//! Rust hot path. Python never runs here — `make artifacts` produced the
+//! HLO once; this module compiles it on the PJRT CPU client and serves
+//! executions.
+
+pub mod executable;
+pub mod manifest;
+
+pub use executable::{Engine, LoadedExecutable};
+pub use manifest::{Manifest, ManifestEntry};

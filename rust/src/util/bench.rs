@@ -1,0 +1,147 @@
+//! Criterion-lite bench harness (criterion is not vendored).
+//!
+//! Measures wall time over warmup + timed iterations, reports mean / p50 /
+//! p95 and derived throughput. Every `benches/*.rs` target builds on this.
+
+use std::hint::black_box;
+use std::time::Instant;
+
+use super::stats;
+
+/// One benchmark result.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub std_ns: f64,
+}
+
+impl BenchResult {
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+    pub fn throughput_per_s(&self) -> f64 {
+        1e9 / self.mean_ns
+    }
+}
+
+/// Bench runner with fixed warmup/measure budgets.
+pub struct Bencher {
+    pub warmup_iters: u64,
+    pub min_iters: u64,
+    pub max_seconds: f64,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup_iters: 20,
+            min_iters: 50,
+            max_seconds: 2.0,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Quick profile for slow end-to-end benches.
+    pub fn coarse() -> Self {
+        Bencher {
+            warmup_iters: 3,
+            min_iters: 10,
+            max_seconds: 5.0,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f` and record under `name`. Return value is black-boxed.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            black_box(f());
+        }
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        let mut iters = 0u64;
+        while iters < self.min_iters || start.elapsed().as_secs_f64() < self.max_seconds {
+            let t0 = Instant::now();
+            black_box(f());
+            samples_ns.push(t0.elapsed().as_nanos() as f64);
+            iters += 1;
+            if iters >= self.min_iters && start.elapsed().as_secs_f64() >= self.max_seconds {
+                break;
+            }
+            if iters >= 1_000_000 {
+                break;
+            }
+        }
+        let res = BenchResult {
+            name: name.to_string(),
+            iters,
+            mean_ns: stats::mean(&samples_ns),
+            p50_ns: stats::percentile(&samples_ns, 50.0),
+            p95_ns: stats::percentile(&samples_ns, 95.0),
+            std_ns: stats::std_dev(&samples_ns),
+        };
+        println!(
+            "bench {:40} {:>12.2} us/iter  p50 {:>10.2}  p95 {:>10.2}  ({} iters)",
+            res.name,
+            res.mean_ns / 1e3,
+            res.p50_ns / 1e3,
+            res.p95_ns / 1e3,
+            res.iters
+        );
+        self.results.push(res.clone());
+        res
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Summary block for bench_output.txt.
+    pub fn summary(&self) -> String {
+        let mut s = String::from("\n-- summary --\n");
+        for r in &self.results {
+            s.push_str(&format!(
+                "{}\t{:.3} us\t{:.1}/s\n",
+                r.name,
+                r.mean_us(),
+                r.throughput_per_s()
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bencher {
+            warmup_iters: 1,
+            min_iters: 5,
+            max_seconds: 0.05,
+            results: Vec::new(),
+        };
+        let r = b.bench("noop-ish", || {
+            let mut acc = 0u64;
+            for i in 0..100 {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        });
+        assert!(r.iters >= 5);
+        assert!(r.mean_ns > 0.0);
+        assert_eq!(b.results().len(), 1);
+    }
+}

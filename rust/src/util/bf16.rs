@@ -1,0 +1,123 @@
+//! Minimal bfloat16 arithmetic model.
+//!
+//! The contextualization stage computes in BF16 (Sec. III-B3), and the
+//! normalization stage uses one BF16 accumulator + one BF16 divider
+//! (Sec. III-B2). We model BF16 as round-to-nearest-even truncation of f32
+//! — exactly what the hardware MAC's rounding stage does — so the Rust
+//! functional model reproduces the jnp `astype(bfloat16)` results bit-for-
+//! bit.
+
+/// Round an f32 to the nearest bf16-representable value (ties to even).
+pub fn round(x: f32) -> f32 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return f32::NAN;
+    }
+    // round-to-nearest-even on the low 16 bits
+    let round_bit = 0x0000_8000u32;
+    let lsb = (bits >> 16) & 1;
+    let rounded = bits.wrapping_add(0x0000_7FFF + lsb) & 0xFFFF_0000;
+    let _ = round_bit;
+    f32::from_bits(rounded)
+}
+
+/// BF16 multiply: round(a) * round(b), result rounded.
+pub fn mul(a: f32, b: f32) -> f32 {
+    round(round(a) * round(b))
+}
+
+/// BF16 add.
+pub fn add(a: f32, b: f32) -> f32 {
+    round(round(a) + round(b))
+}
+
+/// BF16 divide (the normalization stage's pipelined divider).
+pub fn div(a: f32, b: f32) -> f32 {
+    round(round(a) / round(b))
+}
+
+/// BF16 fused dot product as the MAC array computes it: elementwise BF16
+/// multiply, BF16 accumulate in order.
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f32;
+    for (&x, &y) in a.iter().zip(b) {
+        acc = add(acc, mul(x, y));
+    }
+    acc
+}
+
+/// Number of bits of mantissa kept (for docs/tests).
+pub const MANTISSA_BITS: u32 = 7;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_small_integers() {
+        for i in -256..=256 {
+            let x = i as f32;
+            assert_eq!(round(x), x, "{x}");
+        }
+    }
+
+    #[test]
+    fn truncates_mantissa() {
+        // 1 + 2^-8 is not representable in bf16 (7 mantissa bits)
+        let x = 1.0 + 2f32.powi(-8);
+        assert_eq!(round(x), 1.0);
+    }
+
+    #[test]
+    fn ties_to_even() {
+        // halfway between 1.0 and 1.0078125 rounds to even (1.0)
+        let x = 1.0 + 2f32.powi(-8);
+        assert_eq!(round(x), 1.0);
+        // just above halfway rounds up
+        let y = 1.0 + 2f32.powi(-8) + 2f32.powi(-16);
+        assert_eq!(round(y), 1.0 + 2f32.powi(-7));
+    }
+
+    #[test]
+    fn idempotent() {
+        let mut rng = crate::util::rng::Rng::new(3);
+        for _ in 0..1000 {
+            let x = rng.normal(0.0, 10.0) as f32;
+            let r = round(x);
+            assert_eq!(round(r), r);
+        }
+    }
+
+    #[test]
+    fn nan_propagates() {
+        assert!(round(f32::NAN).is_nan());
+    }
+
+    #[test]
+    fn infinity_preserved() {
+        assert_eq!(round(f32::INFINITY), f32::INFINITY);
+        assert_eq!(round(f32::NEG_INFINITY), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn relative_error_bounded() {
+        let mut rng = crate::util::rng::Rng::new(5);
+        for _ in 0..10_000 {
+            let x = (rng.normal(0.0, 100.0) as f32).abs() + 1e-3;
+            let rel = ((round(x) - x) / x).abs();
+            assert!(rel <= 2f32.powi(-8), "x={x} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn dot_matches_scalar_chain() {
+        let a = [1.5f32, -2.25, 0.125, 3.0];
+        let b = [0.5f32, 1.0, -4.0, 0.25];
+        let mut acc = 0.0;
+        for i in 0..4 {
+            acc = add(acc, mul(a[i], b[i]));
+        }
+        assert_eq!(dot(&a, &b), acc);
+    }
+}

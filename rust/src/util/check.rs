@@ -1,0 +1,81 @@
+//! Property-testing-lite: no proptest crate is vendored, so this provides
+//! the same discipline — run a property over many seeded random inputs,
+//! report the failing seed — with deterministic reproducibility.
+//!
+//! Usage:
+//! ```
+//! use camformer::util::check::check;
+//! check("sum is commutative", 500, |rng| {
+//!     let (a, b) = (rng.uniform(), rng.uniform());
+//!     assert!((a + b - (b + a)).abs() < 1e-12);
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Run `prop` over `cases` independently-seeded RNGs; panic with the seed
+/// on the first failure so the case replays with `replay(name, seed, prop)`.
+pub fn check<F: Fn(&mut Rng) + std::panic::RefUnwindSafe>(name: &str, cases: u64, prop: F) {
+    for case in 0..cases {
+        let seed = fixed_seed(name, case);
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(seed);
+            prop(&mut rng);
+        });
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed:#x}): {msg}\n\
+                 replay with: check::replay(\"{name}\", {case}, prop)"
+            );
+        }
+    }
+}
+
+/// Replay a single failing case of `check`.
+pub fn replay<F: Fn(&mut Rng)>(name: &str, case: u64, prop: F) {
+    let mut rng = Rng::new(fixed_seed(name, case));
+    prop(&mut rng);
+}
+
+/// Stable per-(name, case) seed: FNV-1a over the name, mixed with the case.
+fn fixed_seed(name: &str, case: u64) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h ^ case.wrapping_mul(0x9E3779B97F4A7C15)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("tautology", 100, |rng| {
+            let x = rng.uniform();
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn failing_property_reports_seed() {
+        check("always-fails", 10, |_rng| {
+            panic!("boom");
+        });
+    }
+
+    #[test]
+    fn seeds_are_stable() {
+        assert_eq!(fixed_seed("a", 0), fixed_seed("a", 0));
+        assert_ne!(fixed_seed("a", 0), fixed_seed("a", 1));
+        assert_ne!(fixed_seed("a", 0), fixed_seed("b", 0));
+    }
+}

@@ -1,0 +1,11 @@
+//! Std-only utilities: this environment vendors only the `xla` crate's
+//! dependency closure, so the PRNG, bf16 arithmetic, table/figure printers,
+//! CLI parsing, property-testing and bench harnesses live in-tree.
+
+pub mod bench;
+pub mod bf16;
+pub mod check;
+pub mod cli;
+pub mod rng;
+pub mod stats;
+pub mod table;

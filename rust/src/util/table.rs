@@ -1,0 +1,159 @@
+//! ASCII table / series printers for regenerating the paper's tables and
+//! figures on stdout (every `camformer <table|fig>` subcommand uses these).
+
+/// A simple right-padded ASCII table.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: String,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            title: title.to_string(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn row_strs(&mut self, cells: &[&str]) -> &mut Self {
+        let owned: Vec<String> = cells.iter().map(|s| s.to_string()).collect();
+        self.row(&owned)
+    }
+
+    /// Render to a string (also what tests assert on).
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            let mut s = String::new();
+            for (c, cell) in cells.iter().enumerate() {
+                s.push_str(&format!("{:<w$}  ", cell, w = widths[c]));
+            }
+            s.trim_end().to_string() + "\n"
+        };
+        out.push_str(&line(&self.headers, &widths));
+        out.push_str(&format!(
+            "{}\n",
+            "-".repeat(widths.iter().sum::<usize>() + 2 * (ncol - 1))
+        ));
+        for row in &self.rows {
+            out.push_str(&line(row, &widths));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Print an (x, y...) series as TSV — the "figure" output format; pipe to a
+/// plotting tool of choice to regenerate the paper's plots.
+pub struct Series {
+    title: String,
+    cols: Vec<String>,
+    points: Vec<Vec<f64>>,
+}
+
+impl Series {
+    pub fn new(title: &str, cols: &[&str]) -> Self {
+        Series {
+            title: title.to_string(),
+            cols: cols.iter().map(|s| s.to_string()).collect(),
+            points: Vec::new(),
+        }
+    }
+
+    pub fn point(&mut self, vals: &[f64]) -> &mut Self {
+        assert_eq!(vals.len(), self.cols.len());
+        self.points.push(vals.to_vec());
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = format!("## {}\n", self.title);
+        out.push_str(&self.cols.join("\t"));
+        out.push('\n');
+        for p in &self.points {
+            let cells: Vec<String> = p.iter().map(|v| format_sig(*v, 6)).collect();
+            out.push_str(&cells.join("\t"));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format with up to `sig` significant digits, trimming trailing zeros.
+pub fn format_sig(v: f64, sig: usize) -> String {
+    if v == 0.0 {
+        return "0".to_string();
+    }
+    if !v.is_finite() {
+        return format!("{v}");
+    }
+    let mag = v.abs().log10().floor() as i32;
+    let decimals = (sig as i32 - 1 - mag).max(0) as usize;
+    let s = format!("{:.*}", decimals, v);
+    if s.contains('.') {
+        s.trim_end_matches('0').trim_end_matches('.').to_string()
+    } else {
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("T", &["a", "bb"]);
+        t.row_strs(&["x", "y"]).row_strs(&["long", "z"]);
+        let r = t.render();
+        assert!(r.contains("== T =="));
+        assert!(r.contains("a     bb"));
+        assert!(r.contains("long  z"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_arity_checked() {
+        Table::new("T", &["a"]).row_strs(&["x", "y"]);
+    }
+
+    #[test]
+    fn series_tsv() {
+        let mut s = Series::new("S", &["x", "y"]);
+        s.point(&[1.0, 2.5]);
+        let r = s.render();
+        assert!(r.contains("x\ty"));
+        assert!(r.contains("1\t2.5"));
+    }
+
+    #[test]
+    fn format_sig_trims() {
+        assert_eq!(format_sig(1.0, 6), "1");
+        assert_eq!(format_sig(0.25, 6), "0.25");
+        assert_eq!(format_sig(1234.5678, 6), "1234.57");
+        assert_eq!(format_sig(0.000123456, 3), "0.000123");
+    }
+}

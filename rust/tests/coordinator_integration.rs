@@ -1,0 +1,132 @@
+//! Coordinator integration: serving flows over the functional and
+//! arch-sim backends (the PJRT serving flow is covered by
+//! `runtime_integration` and the examples).
+
+use std::time::Duration;
+
+use camformer::accuracy::functional::{self, AttnConfig};
+use camformer::coordinator::backend::{ArchSimBackend, AttentionBackend, FunctionalBackend};
+use camformer::coordinator::batcher::BatchPolicy;
+use camformer::coordinator::kv_store::KvStore;
+use camformer::coordinator::server::{CamformerServer, Request, ServerConfig};
+use camformer::util::rng::Rng;
+
+fn kv(n: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    (rng.normal_vec(n * 64), rng.normal_vec(n * 64))
+}
+
+#[test]
+fn serving_is_deterministic_and_correct_under_load() {
+    let n = 512;
+    let heads = 3;
+    let kvs: Vec<(Vec<f32>, Vec<f32>)> = (0..heads).map(|h| kv(n, 100 + h as u64)).collect();
+    let kvc = kvs.clone();
+    let server = CamformerServer::start(
+        ServerConfig {
+            heads,
+            batch: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(500) },
+        },
+        |_| FunctionalBackend::new(n, 64),
+        move |h| kvc[h].clone(),
+    );
+    let mut rng = Rng::new(200);
+    let queries: Vec<Vec<f32>> = (0..120).map(|_| rng.normal_vec(64)).collect();
+    for (i, q) in queries.iter().enumerate() {
+        server
+            .submit(Request { id: i as u64, head: i % heads, query: q.clone() })
+            .unwrap();
+    }
+    let mut resps = server.collect(120);
+    resps.sort_by_key(|r| r.id);
+
+    let cfg = AttnConfig::paper(n, 64);
+    for r in &resps {
+        let (k, v) = &kvs[r.head];
+        let want = functional::camformer_attention(&queries[r.id as usize], k, v, &cfg);
+        assert_eq!(r.output, want, "request {}", r.id);
+    }
+    let (m, _) = server.shutdown();
+    assert_eq!(m.completed, 120);
+    assert_eq!(m.errors, 0);
+    assert!(m.batches <= 120); // batching actually coalesced some work
+}
+
+#[test]
+fn arch_backend_serves_with_latency_annotation() {
+    let n = 256;
+    let (keys, values) = kv(n, 300);
+    let kc = keys.clone();
+    let vc = values.clone();
+    let server = CamformerServer::start(
+        ServerConfig::default(),
+        |_| ArchSimBackend::new(n),
+        move |_| (kc.clone(), vc.clone()),
+    );
+    let mut rng = Rng::new(301);
+    for i in 0..10u64 {
+        server
+            .submit(Request { id: i, head: 0, query: rng.normal_vec(64) })
+            .unwrap();
+    }
+    let resps = server.collect(10);
+    assert_eq!(resps.len(), 10);
+    // outputs agree with the functional model
+    let cfg = AttnConfig::paper(n, 64);
+    let mut rng2 = Rng::new(301);
+    let mut sorted = resps;
+    sorted.sort_by_key(|r| r.id);
+    for r in &sorted {
+        let q = rng2.normal_vec(64);
+        let want = functional::camformer_attention(&q, &keys, &values, &cfg);
+        for (a, b) in r.output.iter().zip(&want) {
+            assert!((a - b).abs() < 0.05);
+        }
+    }
+    server.shutdown();
+}
+
+#[test]
+fn decode_style_kv_growth_through_store() {
+    // simulate causal decoding: KV cache grows, each step queries it
+    let mut store = KvStore::new(64, 64, 64);
+    let mut rng = Rng::new(400);
+    let mut backend = FunctionalBackend::new(64, 64);
+    for step in 1..=64usize {
+        let k = rng.normal_vec(64);
+        let v = rng.normal_vec(64);
+        store.append(&k, &v).unwrap();
+        // pad to the backend's fixed geometry
+        let (kp, vp, valid) = store.padded_view(64);
+        assert_eq!(valid, step);
+        let q = rng.normal_vec(64);
+        let out = backend.attend(&q, &kp, &vp).unwrap();
+        assert_eq!(out.len(), 64);
+        assert!(out.iter().all(|x| x.is_finite()));
+    }
+    assert!(store.append(&rng.normal_vec(64), &rng.normal_vec(64)).is_err());
+}
+
+#[test]
+fn partial_batches_flush_on_timeout() {
+    let n = 128;
+    let (keys, values) = kv(n, 500);
+    let server = CamformerServer::start(
+        ServerConfig {
+            heads: 1,
+            batch: BatchPolicy { max_batch: 16, max_wait: Duration::from_millis(1) },
+        },
+        |_| FunctionalBackend::new(n, 64),
+        move |_| (keys.clone(), values.clone()),
+    );
+    let mut rng = Rng::new(501);
+    // submit 3 << max_batch and expect them all back quickly
+    for i in 0..3u64 {
+        server
+            .submit(Request { id: i, head: 0, query: rng.normal_vec(64) })
+            .unwrap();
+    }
+    let resps = server.collect_timeout(3, Duration::from_secs(5));
+    assert_eq!(resps.len(), 3);
+    server.shutdown();
+}

@@ -1,0 +1,100 @@
+//! Golden-vector tests: the Rust functional model vs the jnp oracle.
+//!
+//! `make golden` produces artifacts/golden.tsv from ref.py; here we replay
+//! the same inputs through `accuracy::functional` and require scores to be
+//! bit-exact and attention outputs to agree within f32 exp/bf16 slack.
+//! Skipped (not failed) when golden.tsv is absent.
+
+use camformer::accuracy::functional::{self, AttnConfig};
+
+struct Case {
+    n: usize,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    scores: Vec<f64>,
+    attention: Vec<f32>,
+}
+
+fn parse_cases(text: &str) -> Vec<Case> {
+    let mut cases = Vec::new();
+    let mut cur: Option<Case> = None;
+    for line in text.lines() {
+        let (tag, rest) = match line.split_once('\t') {
+            Some(x) => x,
+            None => continue,
+        };
+        let floats = |s: &str| -> Vec<f32> {
+            s.split(',').map(|x| x.parse::<f32>().unwrap()).collect()
+        };
+        match tag {
+            "case" => {
+                if let Some(c) = cur.take() {
+                    cases.push(c);
+                }
+                let mut it = rest.split('\t');
+                let _id: usize = it.next().unwrap().parse().unwrap();
+                let n: usize = it.next().unwrap().parse().unwrap();
+                cur = Some(Case {
+                    n,
+                    q: vec![],
+                    k: vec![],
+                    v: vec![],
+                    scores: vec![],
+                    attention: vec![],
+                });
+            }
+            "q" => cur.as_mut().unwrap().q = floats(rest),
+            "k" => cur.as_mut().unwrap().k = floats(rest),
+            "v" => cur.as_mut().unwrap().v = floats(rest),
+            "scores" => {
+                cur.as_mut().unwrap().scores =
+                    rest.split(',').map(|x| x.parse::<f64>().unwrap()).collect()
+            }
+            "attention" => cur.as_mut().unwrap().attention = floats(rest),
+            _ => {}
+        }
+    }
+    if let Some(c) = cur.take() {
+        cases.push(c);
+    }
+    cases
+}
+
+fn load() -> Option<Vec<Case>> {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/golden.tsv");
+    if !path.exists() {
+        eprintln!("skipping golden tests: {path:?} missing (run `make golden`)");
+        return None;
+    }
+    Some(parse_cases(&std::fs::read_to_string(path).unwrap()))
+}
+
+#[test]
+fn golden_scores_bit_exact() {
+    let Some(cases) = load() else { return };
+    assert!(!cases.is_empty());
+    for c in &cases {
+        let got = functional::bacam_scores(&c.q, &c.k, 64);
+        assert_eq!(got.len(), c.scores.len());
+        for (i, (g, w)) in got.iter().zip(&c.scores).enumerate() {
+            assert_eq!(g, w, "case n={} score {i}", c.n);
+        }
+    }
+}
+
+#[test]
+fn golden_attention_close() {
+    let Some(cases) = load() else { return };
+    for c in &cases {
+        let got = functional::camformer_attention(&c.q, &c.k, &c.v, &AttnConfig::paper(c.n, 64));
+        assert_eq!(got.len(), c.attention.len());
+        for (i, (g, w)) in got.iter().zip(&c.attention).enumerate() {
+            assert!(
+                (g - w).abs() < 1e-2,
+                "case n={} dim {i}: rust {g} vs jnp {w}",
+                c.n
+            );
+        }
+    }
+}

@@ -1,0 +1,136 @@
+//! Cross-module integration: circuit -> BIMV -> architecture -> accuracy
+//! -> cost must tell one consistent story.
+
+use camformer::accuracy::functional::{self, AttnConfig};
+use camformer::arch::config::ArchConfig;
+use camformer::arch::pipeline::{self, PipelineModel};
+use camformer::bimv::engine::BimvEngine;
+use camformer::cost::breakdown;
+use camformer::cost::system::{CamformerCost, SystemConfig};
+use camformer::dram::channel::DramConfig;
+use camformer::dram::prefetch::PrefetchEngine;
+use camformer::util::rng::Rng;
+
+#[test]
+fn arch_sim_matches_functional_across_sizes() {
+    for n in [128usize, 256, 512] {
+        let cfg = ArchConfig { n, ..Default::default() };
+        let mut rng = Rng::new(n as u64);
+        let q = rng.normal_vec(64);
+        let k = rng.normal_vec(n * 64);
+        let v = rng.normal_vec(n * 64);
+        let (out, _) = pipeline::simulate_query(cfg, &q, &k, &v);
+        let want = functional::camformer_attention(&q, &k, &v, &AttnConfig::paper(n, 64));
+        for (i, (g, w)) in out.iter().zip(&want).enumerate() {
+            assert!((g - w).abs() < 0.05, "n={n} dim={i}: {g} vs {w}");
+        }
+    }
+}
+
+#[test]
+fn bimv_engine_feeds_functional_identically() {
+    let mut rng = Rng::new(1000);
+    let qf = rng.normal_vec(64);
+    let kf = rng.normal_vec(256 * 64);
+    let q_bits: Vec<bool> = qf.iter().map(|&x| x >= 0.0).collect();
+    let k_bits: Vec<Vec<bool>> = (0..256)
+        .map(|r| kf[r * 64..(r + 1) * 64].iter().map(|&x| x >= 0.0).collect())
+        .collect();
+    let mut eng = BimvEngine::new(16, 64);
+    let circuit_scores = eng.scores(&q_bits, &k_bits);
+    let functional_scores = functional::bacam_scores(&qf, &kf, 64);
+    for (c, f) in circuit_scores.iter().zip(&functional_scores) {
+        assert!((c - f).abs() <= 2.0, "circuit {c} vs functional {f}");
+    }
+}
+
+#[test]
+fn cost_and_pipeline_models_agree_on_throughput() {
+    // two independently-written models of the same architecture must agree
+    let cost = CamformerCost::evaluate(&SystemConfig::default());
+    let pipe = PipelineModel::paper().throughput_qry_per_ms();
+    let ratio = cost.throughput_qry_per_ms / pipe;
+    assert!(
+        (0.8..1.25).contains(&ratio),
+        "cost {} vs pipeline {} qry/ms",
+        cost.throughput_qry_per_ms,
+        pipe
+    );
+}
+
+#[test]
+fn energy_breakdown_sums_to_system_energy() {
+    let cfg = SystemConfig::default();
+    let total: f64 = breakdown::energy_breakdown(&cfg).iter().map(|c| c.value).sum();
+    let sys = CamformerCost::evaluate(&cfg).energy_per_query_j;
+    assert!(
+        (total - sys).abs() / sys < 0.02,
+        "breakdown {total} vs system {sys}"
+    );
+}
+
+#[test]
+fn prefetch_sustains_table2_rate() {
+    // the modelled throughput must be feasible for one HBM3 channel
+    let cost = CamformerCost::evaluate(&SystemConfig::default());
+    let queries_per_s = cost.throughput_qry_per_ms * 1e3;
+    let engine = PrefetchEngine::new(DramConfig::default(), 64);
+    let need = engine.required_gbps(32, queries_per_s);
+    assert!(
+        need < DramConfig::default().peak_gbps,
+        "{need} GB/s exceeds one channel"
+    );
+}
+
+#[test]
+fn prefetch_hidden_behind_association_latency() {
+    // association takes ~6.1 us; the 32-row V fetch must complete well
+    // inside it (Sec. III-C4's latency-hiding claim)
+    let assoc_ns = PipelineModel::paper().latencies().association as f64; // 1 GHz
+    let mut engine = PrefetchEngine::new(DramConfig::default(), 64);
+    let mut rng = Rng::new(1001);
+    let indices: Vec<usize> = (0..32).map(|_| rng.index(1024)).collect();
+    let stats = engine.prefetch(0.0, &indices, assoc_ns);
+    assert_eq!(stats.exposed_ns, 0.0, "exposed {} ns", stats.exposed_ns);
+}
+
+#[test]
+fn adc_bits_accuracy_vs_speed_tradeoff() {
+    // 6-bit is exact at d_k=64; 4-bit quantises scores (accuracy cost) but
+    // shortens the SAR serialization (speed win) — both directions checked
+    let mut rng = Rng::new(1002);
+    let q = rng.normal_vec(64);
+    let k = rng.normal_vec(256 * 64);
+    let s6 = functional::bacam_scores_cfg(&q, &k, 64, 6);
+    let s4 = functional::bacam_scores_cfg(&q, &k, 64, 4);
+    let exact: Vec<f64> = functional::bacam_scores_cfg(&q, &k, 64, 16);
+    let err6: f64 = s6.iter().zip(&exact).map(|(a, b)| (a - b).abs()).sum();
+    let err4: f64 = s4.iter().zip(&exact).map(|(a, b)| (a - b).abs()).sum();
+    assert_eq!(err6, 0.0);
+    assert!(err4 > 0.0);
+
+    let t6 = PipelineModel {
+        cfg: ArchConfig { adc_bits: 6, ..Default::default() },
+        fine_grained: true,
+    }
+    .throughput_qry_per_ms();
+    let t4 = PipelineModel {
+        cfg: ArchConfig { adc_bits: 4, ..Default::default() },
+        fine_grained: true,
+    }
+    .throughput_qry_per_ms();
+    assert!(t4 > t6);
+}
+
+#[test]
+fn headline_claims_hold_in_models() {
+    // the abstract's three claims, checked against the live models
+    let cam = CamformerCost::evaluate(&SystemConfig::default());
+    // >10x energy efficiency vs best published baseline (SpAtten 904)
+    assert!(cam.energy_eff_qry_per_mj / 904.0 > 8.0);
+    // higher throughput than the best single-core baseline (85.2)
+    assert!(cam.throughput_qry_per_ms / 85.2 > 1.5);
+    // 6-8x lower area than A3 (2.08 mm^2)
+    let area_ratio = 2.08 / cam.area_mm2;
+    assert!(area_ratio > 5.0, "area ratio {area_ratio}");
+}
