@@ -1,6 +1,6 @@
-//! Bench: the Layer-3 serving hot path — request->batch->execute->respond
-//! round trips through the coordinator, plus the micro-costs (bf16 dot,
-//! softmax engine, batcher overhead) that dominate it.
+//! Bench: the Layer-3 serving hot path — prefill/decode/attend round
+//! trips through the session-oriented coordinator, plus the micro-costs
+//! (bf16 dot, softmax engine) that dominate it.
 
 use std::time::Duration;
 
@@ -25,41 +25,106 @@ fn main() {
     let scores: Vec<f64> = (0..32).map(|_| rng.range(0, 129) as f64 - 64.0).collect();
     b.bench("softmax_engine_32", || eng.normalize(&scores));
 
-    // macro: full serving round trips through the functional backend
+    // macro: read-heavy serving — prefill once, stream Attends
     for (label, heads, requests) in [("1head", 1usize, 64usize), ("4heads", 4, 256)] {
         let n = 1024;
-        let mut kv_rng = Rng::new(9);
-        let kv: Vec<(Vec<f32>, Vec<f32>)> = (0..heads)
-            .map(|_| (kv_rng.normal_vec(n * 64), kv_rng.normal_vec(n * 64)))
-            .collect();
         let mut bc = Bencher::coarse();
-        bc.bench(&format!("serve_roundtrip_{label}_{requests}req"), || {
-            let kvc = kv.clone();
+        bc.bench(&format!("serve_attend_{label}_{requests}req"), || {
             let server = CamformerServer::start(
                 ServerConfig {
                     heads,
+                    kv_capacity: n,
                     batch: BatchPolicy {
                         max_batch: 16,
                         max_wait: Duration::from_micros(200),
                     },
+                    ..Default::default()
                 },
                 |_| FunctionalBackend::new(n, 64),
-                move |h| kvc[h].clone(),
             );
+            let mut kv_rng = Rng::new(9);
+            for h in 0..heads {
+                server
+                    .submit(Request::Prefill {
+                        id: 100_000 + h as u64,
+                        session: 1,
+                        head: h,
+                        keys: kv_rng.normal_vec(n * 64),
+                        values: kv_rng.normal_vec(n * 64),
+                    })
+                    .unwrap();
+            }
             let mut qrng = Rng::new(10);
             for i in 0..requests {
                 server
-                    .submit(Request {
+                    .submit(Request::Attend {
                         id: i as u64,
+                        session: 1,
                         head: i % heads,
                         query: qrng.normal_vec(64),
                     })
                     .unwrap();
             }
-            let resps = server.collect(requests);
-            assert_eq!(resps.len(), requests);
+            let resps = server.collect(requests + heads);
+            assert_eq!(resps.len(), requests + heads);
             let (m, w) = server.shutdown();
             (m.completed, w)
+        });
+    }
+
+    // macro: the decode loop — live KV append + attend per step, the
+    // paper's growing-cache serving scenario (Sec. IV-C)
+    for (label, sessions, steps) in [("2sess", 2usize, 64usize), ("8sess", 8, 32)] {
+        let capacity = 256usize;
+        let prefill_rows = 64usize;
+        let mut bc = Bencher::coarse();
+        bc.bench(&format!("decode_loop_{label}_{steps}steps"), || {
+            let server = CamformerServer::start(
+                ServerConfig {
+                    kv_capacity: capacity,
+                    max_sessions: sessions,
+                    batch: BatchPolicy {
+                        max_batch: 16,
+                        max_wait: Duration::from_micros(200),
+                    },
+                    ..Default::default()
+                },
+                |_| FunctionalBackend::new(capacity, 64),
+            );
+            let mut rng2 = Rng::new(11);
+            let mut id = 0u64;
+            for sid in 0..sessions as u64 {
+                server
+                    .submit(Request::Prefill {
+                        id: 100_000 + sid,
+                        session: sid,
+                        head: 0,
+                        keys: rng2.normal_vec(prefill_rows * 64),
+                        values: rng2.normal_vec(prefill_rows * 64),
+                    })
+                    .unwrap();
+            }
+            for _step in 0..steps {
+                for sid in 0..sessions as u64 {
+                    server
+                        .submit(Request::Decode {
+                            id,
+                            session: sid,
+                            head: 0,
+                            query: rng2.normal_vec(64),
+                            new_key: rng2.normal_vec(64),
+                            new_value: rng2.normal_vec(64),
+                        })
+                        .unwrap();
+                    id += 1;
+                }
+            }
+            let total = sessions * (steps + 1);
+            let resps = server.collect(total);
+            assert_eq!(resps.len(), total);
+            assert!(resps.iter().all(|r| r.is_ok()));
+            let (m, w) = server.shutdown();
+            (m.decodes, w)
         });
     }
 

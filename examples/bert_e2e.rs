@@ -27,6 +27,16 @@ fn main() -> Result<()> {
     let trials = args.get_usize("trials", 60);
     let dir = default_artifacts_dir();
 
+    // graceful skip on a fresh checkout, mirroring the runtime tests:
+    // the measurement needs the AOT artifacts and a PJRT-enabled build
+    if !dir.join("manifest.tsv").exists() {
+        println!(
+            "bert_e2e: no artifacts at {dir:?} — run `make artifacts` (and build with \
+             `--features pjrt`) to measure the Table III analogue; skipping."
+        );
+        return Ok(());
+    }
+
     // 1. the recorded loss curve
     let log_path = dir.join("train_log.tsv");
     let log = std::fs::read_to_string(&log_path)

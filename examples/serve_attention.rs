@@ -1,17 +1,22 @@
-//! Serving scenario: the Layer-3 coordinator batches a stream of attention
-//! queries over multiple heads and executes them on the PJRT artifacts —
-//! CAMformer as deployed next to an XPU (Sec. III-A).
+//! Serving scenario: session-oriented decode serving through the Layer-3
+//! coordinator — prefill a prompt per session, then stream live decode
+//! steps whose (k, v) pairs append to each session's KV cache ("CAM
+//! search over a growing KV cache each step", Sec. IV-C).
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example serve_attention [-- --requests 512 --heads 4]
+//! cargo run --release --example serve_attention \
+//!     [-- --sessions 8 --steps 64 --heads 4 --backend functional|arch|pjrt]
 //! ```
 //!
-//! Reports serving latency percentiles and throughput, and golden-checks a
-//! sample of responses against the pure-Rust functional model.
+//! Reports serving latency percentiles (p50/p99) and throughput, and
+//! golden-checks a final query per session against the pure-Rust
+//! functional model applied to the accumulated K/V. The `pjrt` backend
+//! needs `make artifacts` and a build with `--features pjrt`.
 
 use anyhow::Result;
 use camformer::accuracy::functional::{self, AttnConfig};
-use camformer::coordinator::backend::PjrtBackend;
+use camformer::coordinator::backend::{ArchSimBackend, FunctionalBackend, PjrtBackend};
+use camformer::coordinator::kv_store::KvStore;
 use camformer::coordinator::server::{CamformerServer, Request, ServerConfig};
 use camformer::runtime::executable::default_artifacts_dir;
 use camformer::util::cli::Args;
@@ -20,47 +25,118 @@ use camformer::util::rng::Rng;
 fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1));
     let heads = args.get_usize("heads", 4);
-    let requests = args.get_usize("requests", 256);
-    let n = 1024usize;
+    let sessions = args.get_usize("sessions", 8);
+    let steps = args.get_usize("steps", 64);
+    let backend_kind = args.get_or("backend", "functional");
     let d = 64usize;
+    let capacity = 1024usize;
+    let prefill_rows = 128usize;
 
-    println!("serve_attention: {requests} requests, {heads} heads, PJRT backend");
-    let dir = default_artifacts_dir();
-
-    // per-head KV memories (in a real deployment the XPU writes these into
-    // shared memory; here a seeded generator stands in)
-    let mut kv_rng = Rng::new(7);
-    let kv: Vec<(Vec<f32>, Vec<f32>)> = (0..heads)
-        .map(|_| (kv_rng.normal_vec(n * d), kv_rng.normal_vec(n * d)))
-        .collect();
-
-    let kv_clone = kv.clone();
-    let server = CamformerServer::start(
-        ServerConfig { heads, ..Default::default() },
-        |h| PjrtBackend::new(&dir).unwrap_or_else(|e| panic!("head {h}: {e:#}")),
-        move |h| kv_clone[h].clone(),
+    println!(
+        "serve_attention: {sessions} sessions x {steps} decode steps over {heads} heads, \
+         {backend_kind} backend"
     );
 
-    // deterministic query stream
-    let mut rng = Rng::new(8);
-    let queries: Vec<Vec<f32>> = (0..requests).map(|_| rng.normal_vec(d)).collect();
-    for (i, q) in queries.iter().enumerate() {
-        server
-            .submit(Request { id: i as u64, head: i % heads, query: q.clone() })
-            .map_err(anyhow::Error::msg)?;
-    }
-    let resps = server.collect(requests);
+    let cfg = ServerConfig {
+        heads,
+        kv_capacity: capacity,
+        max_sessions: sessions.max(1),
+        ..Default::default()
+    };
+    let quantum = cfg.pad_quantum;
+    let server = match backend_kind {
+        "functional" => {
+            CamformerServer::start(cfg, |_| FunctionalBackend::new(capacity, d))
+        }
+        "arch" => CamformerServer::start(cfg, |_| ArchSimBackend::new(capacity)),
+        "pjrt" => {
+            let dir = default_artifacts_dir();
+            CamformerServer::start(cfg, move |w| {
+                PjrtBackend::new(&dir).unwrap_or_else(|e| panic!("worker {w}: {e:#}"))
+            })
+        }
+        other => anyhow::bail!("unknown backend {other:?} (functional|arch|pjrt)"),
+    };
 
-    // golden check a sample
-    let cfg = AttnConfig::paper(n, d);
-    for r in resps.iter().step_by(requests / 8).take(8) {
-        let (k, v) = &kv[r.head];
-        let want = functional::camformer_attention(&queries[r.id as usize], k, v, &cfg);
-        for (a, b) in r.output.iter().zip(&want) {
-            assert!((a - b).abs() < 5e-2, "golden mismatch: {a} vs {b}");
+    // per-(session, head) mirrors so the golden check can replay the
+    // accumulated K/V (in a real deployment the XPU owns these tensors)
+    let mut rng = Rng::new(7);
+    let mut mirrors: Vec<Vec<KvStore>> = (0..sessions)
+        .map(|_| (0..heads).map(|_| KvStore::new(capacity, d, d)).collect())
+        .collect();
+
+    let mut next_id = 0u64;
+    for sid in 0..sessions as u64 {
+        for h in 0..heads {
+            let keys = rng.normal_vec(prefill_rows * d);
+            let values = rng.normal_vec(prefill_rows * d);
+            mirrors[sid as usize][h].load(&keys, &values).map_err(anyhow::Error::msg)?;
+            server
+                .submit(Request::Prefill { id: next_id, session: sid, head: h, keys, values })
+                .map_err(anyhow::Error::msg)?;
+            next_id += 1;
         }
     }
-    println!("golden checks passed");
+    let acks = server.collect(sessions * heads);
+    anyhow::ensure!(acks.iter().all(|a| a.is_ok()), "prefill failed");
+
+    // interleaved decode streams: every step appends one (k, v) per head
+    for _step in 0..steps {
+        for sid in 0..sessions as u64 {
+            for h in 0..heads {
+                let q = rng.normal_vec(d);
+                let nk = rng.normal_vec(d);
+                let nv = rng.normal_vec(d);
+                mirrors[sid as usize][h].append(&nk, &nv).map_err(anyhow::Error::msg)?;
+                server
+                    .submit(Request::Decode {
+                        id: next_id,
+                        session: sid,
+                        head: h,
+                        query: q,
+                        new_key: nk,
+                        new_value: nv,
+                    })
+                    .map_err(anyhow::Error::msg)?;
+                next_id += 1;
+            }
+        }
+    }
+    let total = sessions * heads * steps;
+    let resps = server.collect(total);
+    let failed = resps.iter().filter(|r| !r.is_ok()).count();
+    anyhow::ensure!(failed == 0, "{failed} decode steps failed");
+
+    // golden check: one final Attend per session against the functional
+    // model over the accumulated cache
+    let mut golden_q = Vec::new();
+    for sid in 0..sessions as u64 {
+        let q = rng.normal_vec(d);
+        server
+            .submit(Request::Attend { id: next_id, session: sid, head: 0, query: q.clone() })
+            .map_err(anyhow::Error::msg)?;
+        golden_q.push((next_id, sid, q));
+        next_id += 1;
+    }
+    let finals = server.collect(sessions);
+    for r in &finals {
+        let (_, sid, q) = golden_q.iter().find(|(id, _, _)| *id == r.id).unwrap();
+        let store = &mirrors[*sid as usize][0];
+        // the reference must replay the backend's execution geometry: the
+        // PJRT artifacts are compiled for a fixed 1024-row context, the
+        // flexible backends pad to the stage-1 group quantum
+        let rows = match backend_kind {
+            "pjrt" => capacity,
+            _ => store.len().div_ceil(quantum) * quantum,
+        };
+        let (kp, vp, _) = store.padded(rows);
+        let want = functional::camformer_attention(q, kp, vp, &AttnConfig::paper(rows, d));
+        for (a, b) in r.output().iter().zip(&want) {
+            anyhow::ensure!((a - b).abs() < 5e-2, "golden mismatch: {a} vs {b}");
+        }
+    }
+    println!("golden checks passed ({} sessions, live cache length {})", sessions,
+             prefill_rows + steps);
 
     let (metrics, window) = server.shutdown();
     println!("{}", metrics.summary(window));

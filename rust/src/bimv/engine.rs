@@ -275,6 +275,51 @@ mod tests {
     }
 
     #[test]
+    fn property_tile_boundary_shapes_match_i32_oracle() {
+        // ISSUE 1 satellite: randomized sweep of every (n, d_k) pair from
+        // the tile-boundary set {1, cam-1, cam, cam+1, 3*cam+7} against a
+        // naive i32 ±1 dot-product oracle. Exercises exact-fit, one-off
+        // and multi-tile-plus-remainder walks in both dimensions.
+        let (cam_h, cam_w) = (16usize, 64usize);
+        let ns = [1, cam_h - 1, cam_h, cam_h + 1, 3 * cam_h + 7];
+        let ds = [1, cam_w - 1, cam_w, cam_w + 1, 3 * cam_w + 7];
+        check("bimv tile-boundary shapes vs i32 oracle", 8, |rng| {
+            for &n in &ns {
+                for &d_k in &ds {
+                    let mut eng = BimvEngine::new(cam_h, cam_w);
+                    let q: Vec<bool> = (0..d_k).map(|_| rng.bool()).collect();
+                    let keys: Vec<Vec<bool>> =
+                        (0..n).map(|_| (0..d_k).map(|_| rng.bool()).collect()).collect();
+                    let got = eng.scores(&q, &keys);
+                    assert_eq!(got.len(), n, "n={n} d_k={d_k}: wrong score count");
+                    // naive i32 oracle over the ±1 encoding
+                    let want: Vec<i32> = keys
+                        .iter()
+                        .map(|k| {
+                            k.iter()
+                                .zip(&q)
+                                .map(|(&kb, &qb)| {
+                                    let kv: i32 = if kb { 1 } else { -1 };
+                                    let qv: i32 = if qb { 1 } else { -1 };
+                                    kv * qv
+                                })
+                                .sum()
+                        })
+                        .collect();
+                    // analog slack: one ADC code (2 counts) per vertical tile
+                    let tol = 2.0 * d_k.div_ceil(cam_w) as f64;
+                    for (i, (g, &w)) in got.iter().zip(&want).enumerate() {
+                        assert!(
+                            (g - f64::from(w)).abs() <= tol,
+                            "n={n} d_k={d_k} row {i}: engine {g} vs i32 oracle {w}"
+                        );
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
     #[should_panic(expected = "ragged")]
     fn ragged_keys_rejected() {
         let mut eng = BimvEngine::new(16, 64);

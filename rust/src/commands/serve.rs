@@ -1,10 +1,12 @@
-//! Serving subcommands: the coordinator demo and the all-layers quickstart.
+//! Serving subcommands: the session-oriented coordinator demo and the
+//! all-layers quickstart.
 
 use anyhow::{Context, Result};
 use std::path::PathBuf;
 
 use camformer::accuracy::functional::{self, AttnConfig};
 use camformer::coordinator::backend::{ArchSimBackend, FunctionalBackend, PjrtBackend};
+use camformer::coordinator::kv_store::KvStore;
 use camformer::coordinator::server::{CamformerServer, Request, ServerConfig};
 use camformer::runtime::executable::{default_artifacts_dir, Engine};
 use camformer::util::cli::Args;
@@ -16,77 +18,122 @@ fn artifacts_dir(args: &Args) -> PathBuf {
         .unwrap_or_else(default_artifacts_dir)
 }
 
-/// Run the coordinator over a synthetic request stream.
+/// Run the coordinator over a synthetic decode-serving workload:
+/// `--sessions` streams, each prefilled with `--prefill` rows and decoded
+/// for `--steps` live KV-append steps across `--heads` heads.
 pub fn serve(args: &Args) -> Result<()> {
     let heads = args.get_usize("heads", 4);
-    let requests = args.get_usize("requests", 256);
-    let backend_kind = args.get_or("backend", "pjrt");
+    let sessions = args.get_usize("sessions", 4);
+    let steps = args.get_usize("steps", 32);
+    let prefill_rows = args.get_usize("prefill", 128);
+    let backend_kind = args.get_or("backend", "functional");
     let seed = args.get_u64("seed", 42);
-    let n = 1024usize;
+    let capacity = 1024usize;
     let d = 64usize;
 
-    println!("camformer serve: {requests} requests over {heads} heads, backend={backend_kind}");
-    let mut kv_rng = Rng::new(seed);
-    let kv_data: Vec<(Vec<f32>, Vec<f32>)> = (0..heads)
-        .map(|_| (kv_rng.normal_vec(n * d), kv_rng.normal_vec(n * d)))
-        .collect();
+    println!(
+        "camformer serve: {sessions} sessions x {steps} decode steps over {heads} heads, \
+         backend={backend_kind}"
+    );
+    anyhow::ensure!(
+        prefill_rows + steps <= capacity,
+        "prefill {prefill_rows} + steps {steps} exceeds the provisioned context {capacity}"
+    );
 
     let dir = artifacts_dir(args);
-    let cfg = ServerConfig { heads, ..Default::default() };
-    let kv_for = {
-        let kv = kv_data.clone();
-        move |h: usize| kv[h].clone()
+    let cfg = ServerConfig {
+        heads,
+        kv_capacity: capacity,
+        max_sessions: sessions.max(1),
+        ..Default::default()
     };
-
+    let quantum = cfg.pad_quantum;
     let server = match backend_kind {
-        "pjrt" => CamformerServer::start(
-            cfg,
-            |h| {
-                PjrtBackend::new(&dir)
-                    .with_context(|| format!("PJRT backend for head {h}"))
-                    .expect("artifacts present — run `make artifacts`")
-            },
-            kv_for,
-        ),
-        "functional" => CamformerServer::start(cfg, |_| FunctionalBackend::new(n, d), kv_for),
-        "arch" => CamformerServer::start(cfg, |_| ArchSimBackend::new(n), kv_for),
+        "pjrt" => CamformerServer::start(cfg, move |w| {
+            PjrtBackend::new(&dir)
+                .with_context(|| format!("PJRT backend for worker {w}"))
+                .expect("artifacts present — run `make artifacts` and build with --features pjrt")
+        }),
+        "functional" => CamformerServer::start(cfg, |_| FunctionalBackend::new(capacity, d)),
+        "arch" => CamformerServer::start(cfg, |_| ArchSimBackend::new(capacity)),
         other => anyhow::bail!("unknown backend {other:?} (pjrt|functional|arch)"),
     };
 
-    let mut rng = Rng::new(seed + 1);
-    for i in 0..requests as u64 {
-        server
-            .submit(Request {
-                id: i,
-                head: (i as usize) % heads,
-                query: rng.normal_vec(d),
-            })
-            .map_err(anyhow::Error::msg)?;
-    }
-    let resps = server.collect(requests);
-    anyhow::ensure!(resps.len() == requests, "lost responses");
+    // head-0 mirror per session for the golden cross-check
+    let mut rng = Rng::new(seed);
+    let mut mirrors: Vec<KvStore> =
+        (0..sessions).map(|_| KvStore::new(capacity, d, d)).collect();
 
-    // golden cross-check on a sample of responses
-    let acfg = AttnConfig::paper(n, d);
-    let mut checked = 0;
-    for r in resps.iter().take(8) {
-        let (k, v) = &kv_data[r.head];
-        // reconstruct the query by id (the stream above is deterministic)
-        let mut rng2 = Rng::new(seed + 1);
-        let mut q = Vec::new();
-        for i in 0..=r.id {
-            q = rng2.normal_vec(d);
-            let _ = i;
+    let mut next_id = 0u64;
+    for sid in 0..sessions as u64 {
+        for h in 0..heads {
+            let keys = rng.normal_vec(prefill_rows * d);
+            let values = rng.normal_vec(prefill_rows * d);
+            if h == 0 {
+                mirrors[sid as usize].load(&keys, &values)?;
+            }
+            server.submit(Request::Prefill { id: next_id, session: sid, head: h, keys, values })?;
+            next_id += 1;
         }
-        let want = functional::camformer_attention(&q, k, v, &acfg);
-        for (a, b) in r.output.iter().zip(&want) {
+    }
+    let acks = server.collect(sessions * heads);
+    anyhow::ensure!(acks.iter().all(|a| a.is_ok()), "prefill failed");
+
+    for _step in 0..steps {
+        for sid in 0..sessions as u64 {
+            for h in 0..heads {
+                let q = rng.normal_vec(d);
+                let nk = rng.normal_vec(d);
+                let nv = rng.normal_vec(d);
+                if h == 0 {
+                    mirrors[sid as usize].append(&nk, &nv)?;
+                }
+                server.submit(Request::Decode {
+                    id: next_id,
+                    session: sid,
+                    head: h,
+                    query: q,
+                    new_key: nk,
+                    new_value: nv,
+                })?;
+                next_id += 1;
+            }
+        }
+    }
+    let total = sessions * heads * steps;
+    let resps = server.collect(total);
+    let failed = resps.iter().filter(|r| !r.is_ok()).count();
+    anyhow::ensure!(failed == 0, "{failed} of {total} decode steps failed");
+
+    // golden cross-check: a final head-0 query per session against the
+    // functional model over the accumulated cache
+    let mut checked = 0;
+    let mut goldens = Vec::new();
+    for sid in 0..sessions as u64 {
+        let q = rng.normal_vec(d);
+        server.submit(Request::Attend { id: next_id, session: sid, head: 0, query: q.clone() })?;
+        goldens.push((next_id, sid, q));
+        next_id += 1;
+    }
+    for r in server.collect(sessions) {
+        let (_, sid, q) = goldens.iter().find(|(id, _, _)| *id == r.id).unwrap();
+        let store = &mirrors[*sid as usize];
+        // replay the backend's execution geometry: PJRT serves over its
+        // fixed 1024-row context, flexible backends over the group quantum
+        let rows = match backend_kind {
+            "pjrt" => capacity,
+            _ => store.len().div_ceil(quantum) * quantum,
+        };
+        let (kp, vp, _) = store.padded(rows);
+        let want = functional::camformer_attention(q, kp, vp, &AttnConfig::paper(rows, d));
+        for (a, b) in r.output().iter().zip(&want) {
             anyhow::ensure!((a - b).abs() < 0.05, "golden check failed: {a} vs {b}");
         }
         checked += 1;
     }
 
     let (metrics, window) = server.shutdown();
-    println!("golden-checked {checked} responses against the functional model: OK");
+    println!("golden-checked {checked} sessions against the functional model: OK");
     println!("{}", metrics.summary(window));
     Ok(())
 }

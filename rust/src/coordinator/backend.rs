@@ -6,6 +6,11 @@
 //!   tests, fallbacks and as the golden cross-check.
 //! * [`ArchSimBackend`] — the cycle-annotated architecture simulator;
 //!   returns outputs *and* simulated hardware latency.
+//!
+//! Backends see K/V as row-major buffers whose row count is whatever the
+//! serving layer padded to ([`AttentionBackend::required_rows`]); flexible
+//! backends derive n per call so a session's growing KV cache needs no
+//! re-construction.
 
 use anyhow::Result;
 use std::path::Path;
@@ -15,8 +20,9 @@ use crate::arch::{config::ArchConfig, pipeline};
 use crate::runtime::executable::Engine;
 
 /// An attention executor over a (query, keys, values) triple.
-/// `n` is the number of *valid* rows; implementations may require padding
-/// to their fixed geometry.
+/// `k`/`v` are row-major; implementations derive the row count from the
+/// buffer length (or require their fixed geometry — see
+/// [`AttentionBackend::required_rows`]).
 pub trait AttentionBackend: Send {
     /// Compute Eq. 1 for one query. `k`/`v` are row-major n x d.
     fn attend(&mut self, q: &[f32], k: &[f32], v: &[f32]) -> Result<Vec<f32>>;
@@ -26,14 +32,30 @@ pub trait AttentionBackend: Send {
         qs.iter().map(|q| self.attend(q, k, v)).collect()
     }
 
+    /// Execution-geometry rows for `rows` valid keys: flexible backends
+    /// round up to the stage-1 group `quantum`; fixed-geometry backends
+    /// (the PJRT artifacts) return their compiled n.
+    fn required_rows(&self, rows: usize, quantum: usize) -> usize {
+        rows.max(1).div_ceil(quantum) * quantum
+    }
+
+    /// Invalidate any cached derivative of the key memory. The serving
+    /// layer calls this after every KV mutation: the KV buffers mutate in
+    /// place (see `KvStore`), so pointer identity alone cannot detect
+    /// staleness.
+    fn on_kv_update(&mut self) {}
+
     fn name(&self) -> &'static str;
 }
 
 /// Pure-Rust functional backend.
 ///
-/// §Perf: the serving loop scores the *same* key memory on every request,
-/// so the backend caches a sign-packed copy (`PackedKeys`) keyed on the K
-/// buffer identity — one XNOR+popcount per 64 key bits thereafter.
+/// §Perf: read-heavy serving scores the *same* key memory on every
+/// request, so the backend caches a sign-packed copy (`PackedKeys`) keyed
+/// on the K buffer identity — one XNOR+popcount per 64 key bits
+/// thereafter. Identity alone is NOT enough under in-place KV mutation;
+/// the serving layer busts the cache through
+/// [`AttentionBackend::on_kv_update`].
 pub struct FunctionalBackend {
     pub cfg: AttnConfig,
     packed: Option<(usize, usize, functional::PackedKeys)>, // (ptr, len) identity
@@ -62,9 +84,14 @@ impl FunctionalBackend {
 
 impl AttentionBackend for FunctionalBackend {
     fn attend(&mut self, q: &[f32], k: &[f32], v: &[f32]) -> Result<Vec<f32>> {
-        let cfg = self.cfg;
+        let mut cfg = self.cfg;
+        cfg.n = k.len() / cfg.d_k; // geometry follows the (padded) cache
         let packed = self.packed_for(k);
         Ok(functional::camformer_attention_packed(q, packed, v, &cfg))
+    }
+
+    fn on_kv_update(&mut self) {
+        self.packed = None;
     }
 
     fn name(&self) -> &'static str {
@@ -90,6 +117,7 @@ impl ArchSimBackend {
 
 impl AttentionBackend for ArchSimBackend {
     fn attend(&mut self, q: &[f32], k: &[f32], v: &[f32]) -> Result<Vec<f32>> {
+        self.cfg.n = k.len() / self.cfg.d_k; // geometry follows the cache
         let (out, lat) = pipeline::simulate_query(self.cfg, q, k, v);
         self.last_latency = Some(lat);
         Ok(out)
@@ -154,6 +182,12 @@ impl AttentionBackend for PjrtBackend {
         Ok(out)
     }
 
+    /// The artifacts are compiled for a fixed context; the serving layer
+    /// must pad every session's cache to it.
+    fn required_rows(&self, _rows: usize, _quantum: usize) -> usize {
+        self.n
+    }
+
     fn name(&self) -> &'static str {
         "pjrt"
     }
@@ -196,5 +230,48 @@ mod tests {
         for (i, q) in qs.iter().enumerate() {
             assert_eq!(batch[i], f.attend(q, &k, &v).unwrap());
         }
+    }
+
+    #[test]
+    fn geometry_follows_buffer_length() {
+        // constructed for n=1024, served with a 64-row padded cache
+        let mut rng = Rng::new(113);
+        let q = rng.normal_vec(64);
+        let k = rng.normal_vec(64 * 64);
+        let v = rng.normal_vec(64 * 64);
+        let mut f = FunctionalBackend::new(1024, 64);
+        let got = f.attend(&q, &k, &v).unwrap();
+        let want = functional::camformer_attention(&q, &k, &v, &AttnConfig::paper(64, 64));
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn kv_update_invalidates_packed_cache() {
+        let mut rng = Rng::new(112);
+        let q = rng.normal_vec(64);
+        let mut k = rng.normal_vec(32 * 64);
+        let v = rng.normal_vec(32 * 64);
+        let mut f = FunctionalBackend::new(32, 64);
+        let first = f.attend(&q, &k, &v).unwrap();
+        // mutate K in place: same pointer, same length — identity checks
+        // cannot see this, only the explicit invalidation hook can
+        for x in k.iter_mut() {
+            *x = -*x;
+        }
+        f.on_kv_update();
+        let second = f.attend(&q, &k, &v).unwrap();
+        let mut fresh = FunctionalBackend::new(32, 64);
+        assert_eq!(second, fresh.attend(&q, &k, &v).unwrap());
+        assert_ne!(first, second, "sign-flipped keys must change the output");
+    }
+
+    #[test]
+    fn required_rows_quantized() {
+        let f = FunctionalBackend::new(64, 64);
+        assert_eq!(f.required_rows(0, 16), 16);
+        assert_eq!(f.required_rows(1, 16), 16);
+        assert_eq!(f.required_rows(16, 16), 16);
+        assert_eq!(f.required_rows(17, 16), 32);
+        assert_eq!(f.required_rows(1024, 16), 1024);
     }
 }

@@ -39,7 +39,11 @@ pub fn next_batch<T>(rx: &Receiver<T>, policy: &BatchPolicy) -> Option<Vec<T>> {
         }
         match rx.recv_timeout(deadline - now) {
             Ok(item) => batch.push(item),
-            Err(RecvTimeoutError::Timeout) => break,
+            // A timeout only says the OS wait elapsed *approximately*;
+            // loop back and let the deadline check decide, so an early
+            // timer wakeup can never return an under-waited partial batch
+            // (the source of flakes on loaded CI machines).
+            Err(RecvTimeoutError::Timeout) => continue,
             Err(RecvTimeoutError::Disconnected) => break,
         }
     }
@@ -65,6 +69,10 @@ mod tests {
         assert_eq!(b2.len(), 4);
     }
 
+    // De-flaked (ISSUE 1): asserts only the guaranteed lower bound — the
+    // deadline loop cannot return before `max_wait` has fully elapsed —
+    // and puts no upper bound on elapsed time, which a loaded CI machine
+    // cannot honour.
     #[test]
     fn times_out_with_partial_batch() {
         let (tx, rx) = mpsc::channel();
@@ -73,7 +81,13 @@ mod tests {
         let t0 = Instant::now();
         let b = next_batch(&rx, &policy).unwrap();
         assert_eq!(b.len(), 1);
-        assert!(t0.elapsed() >= Duration::from_millis(9));
+        assert!(
+            t0.elapsed() >= policy.max_wait,
+            "returned after {:?}, before the {:?} deadline",
+            t0.elapsed(),
+            policy.max_wait
+        );
+        drop(tx);
     }
 
     #[test]
@@ -83,22 +97,28 @@ mod tests {
         assert!(next_batch(&rx, &BatchPolicy::default()).is_none());
     }
 
+    // De-flaked (ISSUE 1): the seed version staggered sends with
+    // micro-sleeps, so a preempted sender could race the batcher's
+    // deadline. Arrival timing is irrelevant to the property under test —
+    // every sent item is drained, in order, in batches of at most
+    // max_batch — so the sends are unstaggered and the only timing left
+    // (a generous max_wait) has no bearing on the assertions.
     #[test]
     fn drains_after_sender_thread_finishes() {
         let (tx, rx) = mpsc::channel();
         let h = thread::spawn(move || {
             for i in 0..5 {
                 tx.send(i).unwrap();
-                thread::sleep(Duration::from_micros(200));
             }
+            // tx drops here: the channel disconnects once drained
         });
-        let policy = BatchPolicy { max_batch: 3, max_wait: Duration::from_millis(20) };
-        let mut total = 0;
+        h.join().unwrap();
+        let policy = BatchPolicy { max_batch: 3, max_wait: Duration::from_secs(5) };
+        let mut got = Vec::new();
         while let Some(b) = next_batch(&rx, &policy) {
             assert!(b.len() <= 3);
-            total += b.len();
+            got.extend(b);
         }
-        h.join().unwrap();
-        assert_eq!(total, 5);
+        assert_eq!(got, vec![0, 1, 2, 3, 4]);
     }
 }

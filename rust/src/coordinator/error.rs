@@ -1,0 +1,95 @@
+//! Typed error surface for the serving layer.
+//!
+//! Admission and execution failures used to be bare `String`s; callers
+//! (examples, tests, a future RPC shell) need to branch on the cause, so
+//! every way a request can fail is an explicit variant. Errors are
+//! `Clone + PartialEq` because worker threads report them inside
+//! `Response` values and tests assert on them structurally.
+
+use std::fmt;
+
+use super::session::SessionId;
+
+/// Everything that can go wrong admitting or serving a request.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// Routed to a head the server was not configured with.
+    UnknownHead { head: usize, heads: usize },
+    /// Decode/Attend against a session that was never prefilled on this
+    /// worker.
+    UnknownSession { session: SessionId },
+    /// Admission refused: the worker already holds its maximum number of
+    /// live sessions.
+    SessionLimit { max_sessions: usize },
+    /// The session's provisioned KV context is exhausted (the paper sizes
+    /// the BA-CAM/V arrays to the target maximum context; eviction is the
+    /// caller's policy).
+    CapacityExhausted { capacity: usize },
+    /// A query / key / value had the wrong dimension.
+    DimMismatch {
+        what: &'static str,
+        got: usize,
+        want: usize,
+    },
+    /// The worker thread is gone (server shutting down).
+    WorkerGone { worker: usize },
+    /// The execution backend failed.
+    Backend(String),
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::UnknownHead { head, heads } => {
+                write!(f, "no worker for head {head} (server has {heads} heads)")
+            }
+            ServeError::UnknownSession { session } => {
+                write!(f, "session {session} does not exist on this worker (prefill first)")
+            }
+            ServeError::SessionLimit { max_sessions } => {
+                write!(f, "admission refused: worker at its {max_sessions}-session limit")
+            }
+            ServeError::CapacityExhausted { capacity } => {
+                write!(f, "provisioned KV capacity {capacity} exhausted")
+            }
+            ServeError::DimMismatch { what, got, want } => {
+                write!(f, "{what}: dimension {got}, want {want}")
+            }
+            ServeError::WorkerGone { worker } => write!(f, "worker {worker} is gone"),
+            ServeError::Backend(msg) => write!(f, "backend failure: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn displays_are_actionable() {
+        let cases: Vec<(ServeError, &str)> = vec![
+            (ServeError::UnknownHead { head: 5, heads: 2 }, "head 5"),
+            (ServeError::UnknownSession { session: 9 }, "session 9"),
+            (ServeError::SessionLimit { max_sessions: 4 }, "4-session"),
+            (ServeError::CapacityExhausted { capacity: 64 }, "capacity 64"),
+            (
+                ServeError::DimMismatch { what: "decode query", got: 3, want: 64 },
+                "decode query",
+            ),
+            (ServeError::WorkerGone { worker: 1 }, "worker 1"),
+            (ServeError::Backend("boom".into()), "boom"),
+        ];
+        for (e, needle) in cases {
+            let s = e.to_string();
+            assert!(s.contains(needle), "{s:?} missing {needle:?}");
+        }
+    }
+
+    #[test]
+    fn is_a_std_error() {
+        fn takes_err<E: std::error::Error>(_: E) {}
+        takes_err(ServeError::WorkerGone { worker: 0 });
+    }
+}

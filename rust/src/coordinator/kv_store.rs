@@ -3,18 +3,33 @@
 //!
 //! Decoder-style usage appends one (k, v) pair per generated token — "CAM
 //! search over a growing KV cache each step (causal)". The store is
-//! capacity-bounded to the provisioned BA-CAM/V-SRAM size and pads the
-//! active prefix up to a tile multiple for execution.
+//! capacity-bounded to the provisioned BA-CAM/V-SRAM size.
+//!
+//! §Perf: the buffers are allocated at full capacity up front with the
+//! padding pattern pre-written, so `append` is a row copy and
+//! [`KvStore::padded`] hands the execution layer a borrowed prefix — the
+//! decode hot path never clones the cache (the seed implementation
+//! re-cloned and re-padded the whole K/V on every step). Because the
+//! buffers mutate in place, pointer identity does NOT change when content
+//! does: any layer caching a derivative of the keys must be invalidated
+//! explicitly (see `AttentionBackend::on_kv_update`).
 
-/// Per-head K/V memory.
+use super::error::ServeError;
+
+/// Padding element for key rows: all-(+1) rows score mid-range against
+/// random real keys, and their V rows are zero, so an accidentally
+/// selected pad contributes nothing to the output.
+pub const KEY_PAD: f32 = 1.0;
+
+/// Per-session, per-head K/V memory.
 #[derive(Clone, Debug)]
 pub struct KvStore {
     pub d_k: usize,
     pub d_v: usize,
     /// Provisioned maximum context (BA-CAM + V sizing).
     pub capacity: usize,
-    keys: Vec<f32>,   // row-major len * d_k
-    values: Vec<f32>, // row-major len * d_v
+    keys: Vec<f32>,   // capacity x d_k, rows >= len hold KEY_PAD
+    values: Vec<f32>, // capacity x d_v, rows >= len hold 0.0
     len: usize,
 }
 
@@ -24,8 +39,8 @@ impl KvStore {
             d_k,
             d_v,
             capacity,
-            keys: Vec::with_capacity(capacity * d_k),
-            values: Vec::with_capacity(capacity * d_v),
+            keys: vec![KEY_PAD; capacity * d_k],
+            values: vec![0.0; capacity * d_v],
             len: 0,
         }
     }
@@ -41,63 +56,81 @@ impl KvStore {
     /// Append one (key, value) row. Errors when the provisioned context is
     /// exhausted (the caller decides eviction policy — the paper sizes the
     /// arrays to the target maximum context).
-    pub fn append(&mut self, key: &[f32], value: &[f32]) -> Result<(), String> {
-        if key.len() != self.d_k || value.len() != self.d_v {
-            return Err(format!(
-                "dim mismatch: key {} (want {}), value {} (want {})",
-                key.len(),
-                self.d_k,
-                value.len(),
-                self.d_v
-            ));
+    pub fn append(&mut self, key: &[f32], value: &[f32]) -> Result<(), ServeError> {
+        if key.len() != self.d_k {
+            return Err(ServeError::DimMismatch { what: "key", got: key.len(), want: self.d_k });
+        }
+        if value.len() != self.d_v {
+            return Err(ServeError::DimMismatch { what: "value", got: value.len(), want: self.d_v });
         }
         if self.len >= self.capacity {
-            return Err(format!("KV capacity {} exhausted", self.capacity));
+            return Err(ServeError::CapacityExhausted { capacity: self.capacity });
         }
-        self.keys.extend_from_slice(key);
-        self.values.extend_from_slice(value);
+        let (kd, vd) = (self.d_k, self.d_v);
+        self.keys[self.len * kd..(self.len + 1) * kd].copy_from_slice(key);
+        self.values[self.len * vd..(self.len + 1) * vd].copy_from_slice(value);
         self.len += 1;
         Ok(())
     }
 
-    /// Bulk-load an encoder-style fixed memory (replaces contents).
-    pub fn load(&mut self, keys: &[f32], values: &[f32]) -> Result<(), String> {
-        if keys.len() % self.d_k != 0 || values.len() % self.d_v != 0 {
-            return Err("ragged K/V load".into());
+    /// Bulk-load a prefill / encoder-style memory (replaces contents).
+    pub fn load(&mut self, keys: &[f32], values: &[f32]) -> Result<(), ServeError> {
+        if keys.len() % self.d_k != 0 {
+            return Err(ServeError::DimMismatch { what: "keys", got: keys.len(), want: self.d_k });
+        }
+        if values.len() % self.d_v != 0 {
+            return Err(ServeError::DimMismatch { what: "values", got: values.len(), want: self.d_v });
         }
         let n = keys.len() / self.d_k;
         if n != values.len() / self.d_v {
-            return Err("K/V row count mismatch".into());
+            return Err(ServeError::DimMismatch {
+                what: "K/V row count",
+                got: values.len() / self.d_v,
+                want: n,
+            });
         }
         if n > self.capacity {
-            return Err(format!("load of {n} rows exceeds capacity {}", self.capacity));
+            return Err(ServeError::CapacityExhausted { capacity: self.capacity });
         }
-        self.keys = keys.to_vec();
-        self.values = values.to_vec();
+        self.keys[..keys.len()].copy_from_slice(keys);
+        self.values[..values.len()].copy_from_slice(values);
+        // restore the padding pattern over rows [n, old_len)
+        let repad_to = self.len.max(n);
+        for x in &mut self.keys[n * self.d_k..repad_to * self.d_k] {
+            *x = KEY_PAD;
+        }
+        for x in &mut self.values[n * self.d_v..repad_to * self.d_v] {
+            *x = 0.0;
+        }
         self.len = n;
         Ok(())
     }
 
-    /// Execution view padded to `pad_to` rows: keys pad with +1 rows whose
-    /// scores can never enter the top-k beyond real keys*, values pad with
-    /// zeros. (*padding keys are all-(+1); with random real keys their
-    /// scores are mid-range, and their V rows are zero so any accidental
-    /// selection contributes nothing.)
-    pub fn padded_view(&self, pad_to: usize) -> (Vec<f32>, Vec<f32>, usize) {
-        assert!(pad_to >= self.len);
-        let mut k = self.keys.clone();
-        let mut v = self.values.clone();
-        k.resize(pad_to * self.d_k, 1.0);
-        v.resize(pad_to * self.d_v, 0.0);
-        (k, v, self.len)
+    /// Zero-copy execution view padded to `pad_to` rows (the decode hot
+    /// path). Requires `len <= pad_to <= capacity`; the pad rows are
+    /// pre-written, so this is a pure borrow.
+    pub fn padded(&self, pad_to: usize) -> (&[f32], &[f32], usize) {
+        assert!(
+            pad_to >= self.len && pad_to <= self.capacity,
+            "pad_to {pad_to} outside [{}, {}]",
+            self.len,
+            self.capacity
+        );
+        (
+            &self.keys[..pad_to * self.d_k],
+            &self.values[..pad_to * self.d_v],
+            self.len,
+        )
     }
 
+    /// The valid (unpadded) key rows.
     pub fn keys(&self) -> &[f32] {
-        &self.keys
+        &self.keys[..self.len * self.d_k]
     }
 
+    /// The valid (unpadded) value rows.
     pub fn values(&self) -> &[f32] {
-        &self.values
+        &self.values[..self.len * self.d_v]
     }
 }
 
@@ -114,7 +147,10 @@ mod tests {
         assert!(s.append(&row, &row).is_ok());
         assert!(s.append(&row, &row).is_ok());
         assert_eq!(s.len(), 3);
-        assert!(s.append(&row, &row).is_err());
+        assert_eq!(
+            s.append(&row, &row),
+            Err(ServeError::CapacityExhausted { capacity: 3 })
+        );
     }
 
     #[test]
@@ -125,19 +161,26 @@ mod tests {
     }
 
     #[test]
-    fn load_replaces() {
+    fn load_replaces_and_repads() {
         let mut s = KvStore::new(8, 2, 2);
-        s.append(&[1.0, 2.0], &[3.0, 4.0]).unwrap();
-        let k: Vec<f32> = (0..8).map(|x| x as f32).collect();
-        let v: Vec<f32> = (0..8).map(|x| -(x as f32)).collect();
+        // occupy 3 rows, then load 2: row 2 must be re-padded
+        for _ in 0..3 {
+            s.append(&[9.0, 9.0], &[8.0, 8.0]).unwrap();
+        }
+        let k: Vec<f32> = (0..4).map(|x| x as f32).collect();
+        let v: Vec<f32> = (0..4).map(|x| -(x as f32)).collect();
         s.load(&k, &v).unwrap();
-        assert_eq!(s.len(), 4);
-        assert_eq!(s.keys()[0], 0.0);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.keys(), &k[..]);
+        let (kp, vp, n) = s.padded(4);
+        assert_eq!(n, 2);
+        assert!(kp[2 * 2..].iter().all(|&x| x == KEY_PAD));
+        assert!(vp[2 * 2..].iter().all(|&x| x == 0.0));
         assert!(s.load(&vec![0.0; 2 * 9], &vec![0.0; 2 * 9]).is_err());
     }
 
     #[test]
-    fn padded_view_shapes() {
+    fn padded_is_zero_copy_and_stable() {
         let mut s = KvStore::new(100, 64, 64);
         let mut rng = Rng::new(7);
         for _ in 0..50 {
@@ -145,11 +188,18 @@ mod tests {
             let v = rng.normal_vec(64);
             s.append(&k, &v).unwrap();
         }
-        let (k, v, n) = s.padded_view(64);
+        let ptr_before = s.padded(64).0.as_ptr();
+        let (k, v, n) = s.padded(64);
         assert_eq!(n, 50);
         assert_eq!(k.len(), 64 * 64);
         assert_eq!(v.len(), 64 * 64);
-        // padded V rows are zero
+        assert!(k[50 * 64..].iter().all(|&x| x == KEY_PAD));
         assert!(v[50 * 64..].iter().all(|&x| x == 0.0));
+        // appends must not move the buffer (the serving layer relies on
+        // explicit invalidation, not reallocation, for cache busting)
+        drop((k, v));
+        s.append(&rng.normal_vec(64), &rng.normal_vec(64)).unwrap();
+        assert_eq!(s.padded(64).0.as_ptr(), ptr_before);
     }
+
 }

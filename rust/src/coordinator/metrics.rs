@@ -1,4 +1,4 @@
-//! Serving metrics: latency distribution and throughput counters.
+//! Serving metrics: latency distribution, throughput and per-op counters.
 
 use std::time::Duration;
 
@@ -11,6 +11,10 @@ pub struct Metrics {
     pub completed: u64,
     pub batches: u64,
     pub errors: u64,
+    /// Per-op accounting for the session serving API.
+    pub prefills: u64,
+    pub decodes: u64,
+    pub attends: u64,
 }
 
 impl Metrics {
@@ -23,12 +27,8 @@ impl Metrics {
         self.completed += 1;
     }
 
-    pub fn record_batch(&mut self, size: usize, latency: Duration) {
-        let per = latency.as_secs_f64() * 1e6;
-        for _ in 0..size {
-            self.latencies_us.push(per);
-        }
-        self.completed += size as u64;
+    /// Count a coalesced batch (latencies recorded per response).
+    pub fn note_batch(&mut self) {
         self.batches += 1;
     }
 
@@ -41,6 +41,9 @@ impl Metrics {
         self.completed += other.completed;
         self.batches += other.batches;
         self.errors += other.errors;
+        self.prefills += other.prefills;
+        self.decodes += other.decodes;
+        self.attends += other.attends;
     }
 
     pub fn mean_latency_us(&self) -> f64 {
@@ -59,6 +62,16 @@ impl Metrics {
         stats::percentile(&self.latencies_us, 99.0)
     }
 
+    /// Median latency as a `Duration`.
+    pub fn p50(&self) -> Duration {
+        Duration::from_secs_f64(self.p50_us() / 1e6)
+    }
+
+    /// Tail latency as a `Duration`.
+    pub fn p99(&self) -> Duration {
+        Duration::from_secs_f64(self.p99_us() / 1e6)
+    }
+
     /// Throughput over a measured wall-clock window.
     pub fn throughput_per_s(&self, window: Duration) -> f64 {
         self.completed as f64 / window.as_secs_f64()
@@ -66,8 +79,12 @@ impl Metrics {
 
     pub fn summary(&self, window: Duration) -> String {
         format!(
-            "completed={} batches={} errors={} thruput={:.1}/s mean={:.1}us p50={:.1}us p95={:.1}us p99={:.1}us",
+            "completed={} (prefill={} decode={} attend={}) batches={} errors={} \
+             thruput={:.1}/s mean={:.1}us p50={:.1}us p95={:.1}us p99={:.1}us",
             self.completed,
+            self.prefills,
+            self.decodes,
+            self.attends,
             self.batches,
             self.errors,
             self.throughput_per_s(window),
@@ -93,6 +110,8 @@ mod tests {
         assert!((m.p50_us() - 50.5).abs() < 1.0);
         assert!(m.p95_us() > 90.0);
         assert!(m.mean_latency_us() > 49.0 && m.mean_latency_us() < 52.0);
+        assert!(m.p99() >= m.p50());
+        assert!(m.p50() > Duration::ZERO);
     }
 
     #[test]
@@ -100,18 +119,27 @@ mod tests {
         let mut a = Metrics::new();
         let mut b = Metrics::new();
         a.record(Duration::from_micros(10));
+        a.decodes += 1;
         b.record(Duration::from_micros(20));
+        b.attends += 1;
         b.record_error();
         a.merge(&b);
         assert_eq!(a.completed, 2);
         assert_eq!(a.errors, 1);
+        assert_eq!(a.decodes, 1);
+        assert_eq!(a.attends, 1);
     }
 
     #[test]
-    fn batch_counts_each_query() {
+    fn batches_counted_separately_from_completions() {
         let mut m = Metrics::new();
-        m.record_batch(16, Duration::from_micros(160));
+        m.note_batch();
+        for _ in 0..16 {
+            m.record(Duration::from_micros(10));
+        }
         assert_eq!(m.completed, 16);
         assert_eq!(m.batches, 1);
+        m.note_batch();
+        assert_eq!(m.batches, 2);
     }
 }

@@ -1,32 +1,64 @@
 //! Layer-3 coordinator: the serving side of CAMformer's system integration
-//! (Sec. III-A).
+//! (Sec. III-A), as a session-oriented decode-serving system.
 //!
 //! CAMformer is an attention *accelerator*: XPUs produce binary Q/K and
 //! BF16 V into shared memory; the accelerator serves single-query
-//! attention over a resident key/value memory. This module is the
-//! deployment shell a downstream system would actually run:
+//! attention over a resident key/value memory. The paper's headline
+//! serving scenario is autoregressive decoding — "CAM search over a
+//! growing KV cache each step (causal)", Sec. IV-C — so this module is a
+//! decode-serving simulator, not a one-shot attention demo:
 //!
-//! * [`kv_store`]  — per-head K/V memory with decode-style append
-//!   (the growing KV cache of Sec. IV-C);
-//! * [`batcher`]   — dynamic batching of incoming queries (batch = 16
+//! * [`session`]   — [`Session`]: live per-(session, head) KV state owned
+//!   by a worker thread; sessions route session id -> shard -> head;
+//! * [`kv_store`]  — [`KvStore`]: capacity-provisioned K/V memory with
+//!   O(row) decode append and zero-copy padded execution views;
+//! * [`server`]    — [`CamformerServer`]: `Prefill` / `Decode` / `Attend`
+//!   request enum, capacity-aware typed admission, worker-per-(shard,
+//!   head) routing, shutdown;
+//! * [`batcher`]   — dynamic batching of incoming requests (batch = 16
 //!   uses the `attn_batch` artifact; stragglers run single);
 //! * [`backend`]   — pluggable execution: PJRT artifacts (the real hot
-//!   path), the pure-Rust functional model, or the cycle-annotated
-//!   architecture simulator;
-//! * [`server`]    — worker-per-head routing, request/response plumbing,
-//!   shutdown;
-//! * [`metrics`]   — latency/throughput accounting for the examples and
-//!   benches.
+//!   path, `pjrt` feature), the pure-Rust functional model, or the
+//!   cycle-annotated architecture simulator;
+//! * [`error`]     — [`ServeError`]: every admission / serving failure as
+//!   a typed variant;
+//! * [`metrics`]   — per-op counters, latency percentiles (p50/p95/p99)
+//!   and throughput for the examples and benches.
+//!
+//! # Serving API sketch
+//!
+//! ```ignore
+//! let cfg = ServerConfig { shards: 2, heads: 4, kv_capacity: 1024, ..Default::default() };
+//! let server = CamformerServer::start(cfg, |_| FunctionalBackend::new(1024, 64));
+//! server.submit(Request::Prefill { id: 0, session: 7, head: 0, keys, values })?;
+//! server.submit(Request::Decode  { id: 1, session: 7, head: 0, query, new_key, new_value })?;
+//! let resp = server.collect(2);            // acks + attention outputs
+//! let (metrics, window) = server.shutdown(); // p50/p99, per-op counts
+//! ```
+//!
+//! # Test matrix
+//!
+//! | layer       | kind        | where |
+//! |-------------|-------------|-------|
+//! | batcher/kv/metrics/session | unit | in-module `#[cfg(test)]` |
+//! | scorers, masks, BIMV tiles | property (seeded, `util::check`) | `accuracy::functional`, `bimv::engine` |
+//! | decode serving (≥2 sessions, live append, bit-equality vs functional reference) | integration | `rust/tests/decode_serving.rs` |
+//! | serving flows over functional/arch backends | integration | `rust/tests/coordinator_integration.rs` |
+//! | PJRT artifacts vs functional model | golden (skips without artifacts) | `rust/tests/runtime_integration.rs` |
 //!
 //! Python never appears here: the PJRT backend replays AOT artifacts.
 
 pub mod backend;
 pub mod batcher;
+pub mod error;
 pub mod kv_store;
 pub mod metrics;
 pub mod server;
+pub mod session;
 
 pub use backend::{AttentionBackend, FunctionalBackend};
+pub use error::ServeError;
 pub use kv_store::KvStore;
 pub use metrics::Metrics;
-pub use server::{CamformerServer, Request, Response, ServerConfig};
+pub use server::{CamformerServer, Output, Request, Response, ServerConfig};
+pub use session::{Session, SessionId};

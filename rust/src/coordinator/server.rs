@@ -1,50 +1,184 @@
-//! The CAMformer attention server: worker-per-head request routing over
-//! pluggable backends (Sec. III-A's system integration, as a deployable
-//! service).
+//! The CAMformer serving layer: session-oriented decode serving over
+//! pluggable backends (Sec. III-A's system integration as a deployable
+//! service, driving the growing KV cache of Sec. IV-C).
 //!
-//! Architecture: one dispatcher mpsc per head-worker; each worker owns its
-//! backend (PJRT clients are not shared across threads), its KV memory
-//! snapshot, and a dynamic batcher. Responses flow back over a shared
-//! channel keyed by request id.
+//! Topology: sessions are partitioned across `shards`; each shard runs
+//! one worker thread per head, so a request routes session id -> shard ->
+//! head worker. Each worker owns its backend (PJRT clients are not shared
+//! across threads), the live KV state of every session assigned to it
+//! (one [`KvStore`] per session), and a dynamic batcher. Responses flow
+//! back over a shared channel keyed by request id.
+//!
+//! Request lifecycle:
+//! * [`Request::Prefill`] creates (or resets) the session on the target
+//!   worker and bulk-loads the prompt K/V;
+//! * [`Request::Decode`] appends one generated (k, v) pair and attends
+//!   the query over the grown cache — one autoregressive step;
+//! * [`Request::Attend`] is a read-only query over the current cache.
+//!
+//! Admission is capacity-aware and typed ([`ServeError`]): dimension and
+//! provisioning violations are rejected synchronously at `submit`;
+//! state-dependent failures (unknown session, per-worker session limit,
+//! exhausted KV capacity) come back inside the [`Response`].
 
+use std::collections::HashMap;
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::backend::AttentionBackend;
 use super::batcher::{next_batch, BatchPolicy};
+use super::error::ServeError;
+use super::kv_store::KvStore;
 use super::metrics::Metrics;
+use super::session::{Session, SessionId};
 
-/// One attention query.
+/// One serving operation. Every variant carries the (id, session, head)
+/// routing triple; ids are caller-chosen and echoed on the response.
 #[derive(Clone, Debug)]
-pub struct Request {
-    pub id: u64,
-    pub head: usize,
-    pub query: Vec<f32>,
+pub enum Request {
+    /// Bulk-load the prompt K/V, creating the session on this head worker
+    /// (re-prefilling an existing session resets its cache).
+    Prefill {
+        id: u64,
+        session: SessionId,
+        head: usize,
+        keys: Vec<f32>,
+        values: Vec<f32>,
+    },
+    /// Append one generated (k, v) pair, then attend the query over the
+    /// grown cache — the causal decode step.
+    Decode {
+        id: u64,
+        session: SessionId,
+        head: usize,
+        query: Vec<f32>,
+        new_key: Vec<f32>,
+        new_value: Vec<f32>,
+    },
+    /// Read-only attention over the session's current cache.
+    Attend {
+        id: u64,
+        session: SessionId,
+        head: usize,
+        query: Vec<f32>,
+    },
+}
+
+impl Request {
+    pub fn id(&self) -> u64 {
+        match self {
+            Request::Prefill { id, .. }
+            | Request::Decode { id, .. }
+            | Request::Attend { id, .. } => *id,
+        }
+    }
+
+    pub fn session(&self) -> SessionId {
+        match self {
+            Request::Prefill { session, .. }
+            | Request::Decode { session, .. }
+            | Request::Attend { session, .. } => *session,
+        }
+    }
+
+    pub fn head(&self) -> usize {
+        match self {
+            Request::Prefill { head, .. }
+            | Request::Decode { head, .. }
+            | Request::Attend { head, .. } => *head,
+        }
+    }
+}
+
+/// Successful payload of a served request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Output {
+    /// Attention output (empty for `Prefill` acks).
+    pub output: Vec<f32>,
+    /// Session KV length after the operation.
+    pub seq_len: usize,
 }
 
 /// The served result.
 #[derive(Clone, Debug)]
 pub struct Response {
     pub id: u64,
+    pub session: SessionId,
     pub head: usize,
-    pub output: Vec<f32>,
+    pub result: Result<Output, ServeError>,
     pub latency: Duration,
+}
+
+impl Response {
+    pub fn is_ok(&self) -> bool {
+        self.result.is_ok()
+    }
+
+    /// The attention output; panics on a serving error (test/demo helper).
+    pub fn output(&self) -> &[f32] {
+        match &self.result {
+            Ok(o) => &o.output,
+            Err(e) => panic!("request {} (session {}) failed: {e}", self.id, self.session),
+        }
+    }
+
+    /// The post-op KV length; panics on a serving error.
+    pub fn seq_len(&self) -> usize {
+        match &self.result {
+            Ok(o) => o.seq_len,
+            Err(e) => panic!("request {} (session {}) failed: {e}", self.id, self.session),
+        }
+    }
 }
 
 /// Server configuration.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
+    /// Session partitions; each shard runs `heads` workers and owns the
+    /// sessions with `session % shards == shard`.
+    pub shards: usize,
+    /// Attention heads (one worker per head per shard).
     pub heads: usize,
+    /// Provisioned per-session context rows (BA-CAM + V-SRAM sizing).
+    /// Must be at least the backend's fixed geometry (1024 for PJRT) and
+    /// a multiple of `pad_quantum` for flexible backends.
+    pub kv_capacity: usize,
+    pub d_k: usize,
+    pub d_v: usize,
+    /// Admission bound: live sessions per worker.
+    pub max_sessions: usize,
+    /// Flexible backends pad the live KV length up to a multiple of this
+    /// (the stage-1 group size g); fixed-geometry backends override it
+    /// via `AttentionBackend::required_rows`.
+    pub pad_quantum: usize,
     pub batch: BatchPolicy,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
         ServerConfig {
+            shards: 1,
             heads: 1,
+            kv_capacity: 1024,
+            d_k: 64,
+            d_v: 64,
+            max_sessions: 64,
+            pad_quantum: 16,
             batch: BatchPolicy::default(),
         }
+    }
+}
+
+impl ServerConfig {
+    /// Total worker threads (`shards * heads`).
+    pub fn workers(&self) -> usize {
+        self.shards * self.heads
+    }
+
+    fn worker_index(&self, session: SessionId, head: usize) -> usize {
+        let shard = (session % self.shards as u64) as usize;
+        shard * self.heads + head
     }
 }
 
@@ -55,76 +189,120 @@ struct Worker {
 
 /// The running server.
 pub struct CamformerServer {
+    cfg: ServerConfig,
     workers: Vec<Worker>,
     resp_rx: Receiver<Response>,
     started: Instant,
 }
 
 impl CamformerServer {
-    /// Start one worker per head. `make_backend(head)` builds that head's
-    /// backend; `kv(head)` supplies its (keys, values) memory (row-major,
-    /// padded to the backend geometry by the caller).
-    pub fn start<B, FB, FK>(cfg: ServerConfig, mut make_backend: FB, mut kv: FK) -> Self
+    /// Start `shards * heads` workers. `make_backend(w)` builds the
+    /// backend owned by worker `w` (`w = shard * heads + head`). Sessions
+    /// are created lazily by `Prefill` requests.
+    pub fn start<B, FB>(cfg: ServerConfig, mut make_backend: FB) -> Self
     where
         B: AttentionBackend + 'static,
         FB: FnMut(usize) -> B,
-        FK: FnMut(usize) -> (Vec<f32>, Vec<f32>),
     {
+        assert!(cfg.shards >= 1 && cfg.heads >= 1, "need at least one worker");
         let (resp_tx, resp_rx) = mpsc::channel::<Response>();
-        let mut workers = Vec::with_capacity(cfg.heads);
-        for head in 0..cfg.heads {
+        let mut workers = Vec::with_capacity(cfg.workers());
+        for w in 0..cfg.workers() {
             let (tx, rx) = mpsc::channel::<(Request, Instant)>();
-            let mut backend = make_backend(head);
-            let (keys, values) = kv(head);
+            let backend = make_backend(w);
             let resp_tx = resp_tx.clone();
-            let policy = cfg.batch;
-            let handle = std::thread::spawn(move || {
-                let mut metrics = Metrics::new();
-                while let Some(batch) = next_batch(&rx, &policy) {
-                    let t0 = Instant::now();
-                    let qs: Vec<Vec<f32>> =
-                        batch.iter().map(|(r, _)| r.query.clone()).collect();
-                    match backend.attend_batch(&qs, &keys, &values) {
-                        Ok(outs) => {
-                            let done = Instant::now();
-                            metrics.record_batch(batch.len(), done - t0);
-                            for ((req, enq), out) in batch.into_iter().zip(outs) {
-                                let _ = resp_tx.send(Response {
-                                    id: req.id,
-                                    head: req.head,
-                                    output: out,
-                                    latency: done - enq,
-                                });
-                            }
-                        }
-                        Err(e) => {
-                            eprintln!("worker {head}: batch failed: {e:#}");
-                            for _ in &batch {
-                                metrics.record_error();
-                            }
-                        }
-                    }
-                }
-                metrics
-            });
+            let wcfg = cfg.clone();
+            let handle = std::thread::spawn(move || worker_loop(w, wcfg, backend, rx, resp_tx));
             workers.push(Worker { tx, handle });
         }
         CamformerServer {
+            cfg,
             workers,
             resp_rx,
             started: Instant::now(),
         }
     }
 
-    /// Submit a request (routed by head id).
-    pub fn submit(&self, req: Request) -> Result<(), String> {
-        let head = req.head;
-        self.workers
-            .get(head)
-            .ok_or_else(|| format!("no worker for head {head}"))?
+    /// Submit a request, routed session id -> shard -> head worker.
+    /// Shape/provisioning violations are rejected here, synchronously;
+    /// state-dependent failures arrive as an error [`Response`].
+    pub fn submit(&self, req: Request) -> Result<(), ServeError> {
+        self.validate(&req)?;
+        let w = self.cfg.worker_index(req.session(), req.head());
+        self.workers[w]
             .tx
             .send((req, Instant::now()))
-            .map_err(|_| format!("worker {head} is gone"))
+            .map_err(|_| ServeError::WorkerGone { worker: w })
+    }
+
+    fn validate(&self, req: &Request) -> Result<(), ServeError> {
+        let cfg = &self.cfg;
+        let head = req.head();
+        if head >= cfg.heads {
+            return Err(ServeError::UnknownHead { head, heads: cfg.heads });
+        }
+        match req {
+            Request::Prefill { keys, values, .. } => {
+                if keys.len() % cfg.d_k != 0 {
+                    return Err(ServeError::DimMismatch {
+                        what: "prefill keys",
+                        got: keys.len(),
+                        want: cfg.d_k,
+                    });
+                }
+                if values.len() % cfg.d_v != 0 {
+                    return Err(ServeError::DimMismatch {
+                        what: "prefill values",
+                        got: values.len(),
+                        want: cfg.d_v,
+                    });
+                }
+                let rows = keys.len() / cfg.d_k;
+                if rows != values.len() / cfg.d_v {
+                    return Err(ServeError::DimMismatch {
+                        what: "prefill rows",
+                        got: values.len() / cfg.d_v,
+                        want: rows,
+                    });
+                }
+                if rows > cfg.kv_capacity {
+                    return Err(ServeError::CapacityExhausted { capacity: cfg.kv_capacity });
+                }
+            }
+            Request::Decode { query, new_key, new_value, .. } => {
+                if query.len() != cfg.d_k {
+                    return Err(ServeError::DimMismatch {
+                        what: "decode query",
+                        got: query.len(),
+                        want: cfg.d_k,
+                    });
+                }
+                if new_key.len() != cfg.d_k {
+                    return Err(ServeError::DimMismatch {
+                        what: "decode key",
+                        got: new_key.len(),
+                        want: cfg.d_k,
+                    });
+                }
+                if new_value.len() != cfg.d_v {
+                    return Err(ServeError::DimMismatch {
+                        what: "decode value",
+                        got: new_value.len(),
+                        want: cfg.d_v,
+                    });
+                }
+            }
+            Request::Attend { query, .. } => {
+                if query.len() != cfg.d_k {
+                    return Err(ServeError::DimMismatch {
+                        what: "query",
+                        got: query.len(),
+                        want: cfg.d_k,
+                    });
+                }
+            }
+        }
+        Ok(())
     }
 
     /// Collect exactly `n` responses (blocking).
@@ -168,6 +346,266 @@ impl CamformerServer {
     }
 }
 
+/// Per-op label for the worker's metrics accounting.
+#[derive(Clone, Copy)]
+enum Op {
+    Prefill,
+    Decode,
+    Attend,
+}
+
+fn deliver(resp_tx: &Sender<Response>, metrics: &mut Metrics, op: Op, resp: Response) {
+    match &resp.result {
+        Ok(_) => {
+            metrics.record(resp.latency);
+            match op {
+                Op::Prefill => metrics.prefills += 1,
+                Op::Decode => metrics.decodes += 1,
+                Op::Attend => metrics.attends += 1,
+            }
+        }
+        Err(_) => metrics.record_error(),
+    }
+    let _ = resp_tx.send(resp);
+}
+
+/// Padded execution rows for `len` live keys, admission-checked against
+/// the provisioned capacity AND the backend's geometry: a fixed-geometry
+/// backend whose compiled n is below `len` is as exhausted as a full
+/// store (without this check it would trip `KvStore::padded`'s assert
+/// and panic the worker).
+fn padded_rows<B: AttentionBackend>(
+    backend: &B,
+    cfg: &ServerConfig,
+    len: usize,
+) -> Result<usize, ServeError> {
+    let rows = backend.required_rows(len, cfg.pad_quantum);
+    if rows > cfg.kv_capacity {
+        return Err(ServeError::CapacityExhausted { capacity: cfg.kv_capacity });
+    }
+    if rows < len {
+        return Err(ServeError::CapacityExhausted { capacity: rows });
+    }
+    Ok(rows)
+}
+
+fn attend_one<B: AttentionBackend>(
+    backend: &mut B,
+    cfg: &ServerConfig,
+    s: &Session,
+    q: &[f32],
+) -> Result<Vec<f32>, ServeError> {
+    let rows = padded_rows(backend, cfg, s.store.len())?;
+    let (k, v, _) = s.store.padded(rows);
+    backend.attend(q, k, v).map_err(|e| ServeError::Backend(format!("{e:#}")))
+}
+
+fn attend_batch_on<B: AttentionBackend>(
+    backend: &mut B,
+    cfg: &ServerConfig,
+    s: &Session,
+    qs: &[Vec<f32>],
+) -> Result<Vec<Vec<f32>>, ServeError> {
+    let rows = padded_rows(backend, cfg, s.store.len())?;
+    let (k, v, _) = s.store.padded(rows);
+    backend
+        .attend_batch(qs, k, v)
+        .map_err(|e| ServeError::Backend(format!("{e:#}")))
+}
+
+/// Execute one mutating request (Prefill/Decode) against the worker's
+/// session table.
+fn handle_mutating<B: AttentionBackend>(
+    backend: &mut B,
+    cfg: &ServerConfig,
+    sessions: &mut HashMap<SessionId, Session>,
+    req: Request,
+) -> Result<Output, ServeError> {
+    match req {
+        Request::Prefill { session, keys, values, .. } => {
+            if !sessions.contains_key(&session) {
+                if sessions.len() >= cfg.max_sessions {
+                    return Err(ServeError::SessionLimit { max_sessions: cfg.max_sessions });
+                }
+                sessions.insert(
+                    session,
+                    Session::new(session, KvStore::new(cfg.kv_capacity, cfg.d_k, cfg.d_v)),
+                );
+            }
+            let s = sessions.get_mut(&session).unwrap();
+            s.store.load(&keys, &values)?;
+            backend.on_kv_update();
+            Ok(Output { output: Vec::new(), seq_len: s.store.len() })
+        }
+        Request::Decode { session, query, new_key, new_value, .. } => {
+            let s = sessions
+                .get_mut(&session)
+                .ok_or(ServeError::UnknownSession { session })?;
+            // admission for the *grown* cache runs before the append so a
+            // refused Decode leaves the session state untouched (a client
+            // retry must not double-append its token)
+            padded_rows(backend, cfg, s.store.len() + 1)?;
+            s.store.append(&new_key, &new_value)?;
+            backend.on_kv_update();
+            let out = attend_one(backend, cfg, s, &query)?;
+            Ok(Output { output: out, seq_len: s.store.len() })
+        }
+        Request::Attend { .. } => unreachable!("Attend is handled by flush_attends"),
+    }
+}
+
+/// Execute a run of read-only Attends that share a session as one backend
+/// batch.
+#[allow(clippy::too_many_arguments)]
+fn flush_attends<B: AttentionBackend>(
+    backend: &mut B,
+    cfg: &ServerConfig,
+    sessions: &HashMap<SessionId, Session>,
+    session: SessionId,
+    pending: &mut Vec<(u64, Vec<f32>, Instant)>,
+    head: usize,
+    metrics: &mut Metrics,
+    resp_tx: &Sender<Response>,
+) {
+    if pending.is_empty() {
+        return;
+    }
+    let items = std::mem::take(pending);
+    match sessions.get(&session) {
+        None => {
+            for (id, _, enq) in items {
+                deliver(
+                    resp_tx,
+                    metrics,
+                    Op::Attend,
+                    Response {
+                        id,
+                        session,
+                        head,
+                        result: Err(ServeError::UnknownSession { session }),
+                        latency: enq.elapsed(),
+                    },
+                );
+            }
+        }
+        Some(s) => {
+            // the queries are already owned — split them out rather than
+            // deep-cloning on the hot path
+            let (metas, qs): (Vec<(u64, Instant)>, Vec<Vec<f32>>) =
+                items.into_iter().map(|(id, q, enq)| ((id, enq), q)).unzip();
+            match attend_batch_on(backend, cfg, s, &qs) {
+                Ok(outs) => {
+                    for ((id, enq), out) in metas.into_iter().zip(outs) {
+                        deliver(
+                            resp_tx,
+                            metrics,
+                            Op::Attend,
+                            Response {
+                                id,
+                                session,
+                                head,
+                                result: Ok(Output { output: out, seq_len: s.store.len() }),
+                                latency: enq.elapsed(),
+                            },
+                        );
+                    }
+                }
+                Err(e) => {
+                    for (id, enq) in metas {
+                        deliver(
+                            resp_tx,
+                            metrics,
+                            Op::Attend,
+                            Response {
+                                id,
+                                session,
+                                head,
+                                result: Err(e.clone()),
+                                latency: enq.elapsed(),
+                            },
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn worker_loop<B: AttentionBackend>(
+    worker: usize,
+    cfg: ServerConfig,
+    mut backend: B,
+    rx: Receiver<(Request, Instant)>,
+    resp_tx: Sender<Response>,
+) -> Metrics {
+    let head = worker % cfg.heads;
+    let mut metrics = Metrics::new();
+    let mut sessions: HashMap<SessionId, Session> = HashMap::new();
+    while let Some(batch) = next_batch(&rx, &cfg.batch) {
+        metrics.note_batch();
+        // Consecutive read-only Attends on the same session coalesce into
+        // one backend batch; mutating ops (Prefill/Decode) are barriers,
+        // so per-session program order is preserved.
+        let mut pending: Vec<(u64, Vec<f32>, Instant)> = Vec::new();
+        let mut pending_session: SessionId = 0;
+        for (req, enq) in batch {
+            match req {
+                Request::Attend { id, session, query, .. } => {
+                    if !pending.is_empty() && pending_session != session {
+                        flush_attends(
+                            &mut backend,
+                            &cfg,
+                            &sessions,
+                            pending_session,
+                            &mut pending,
+                            head,
+                            &mut metrics,
+                            &resp_tx,
+                        );
+                    }
+                    pending_session = session;
+                    pending.push((id, query, enq));
+                }
+                other => {
+                    flush_attends(
+                        &mut backend,
+                        &cfg,
+                        &sessions,
+                        pending_session,
+                        &mut pending,
+                        head,
+                        &mut metrics,
+                        &resp_tx,
+                    );
+                    let (id, session) = (other.id(), other.session());
+                    let op = match other {
+                        Request::Prefill { .. } => Op::Prefill,
+                        _ => Op::Decode,
+                    };
+                    let result = handle_mutating(&mut backend, &cfg, &mut sessions, other);
+                    deliver(
+                        &resp_tx,
+                        &mut metrics,
+                        op,
+                        Response { id, session, head, result, latency: enq.elapsed() },
+                    );
+                }
+            }
+        }
+        flush_attends(
+            &mut backend,
+            &cfg,
+            &sessions,
+            pending_session,
+            &mut pending,
+            head,
+            &mut metrics,
+            &resp_tx,
+        );
+    }
+    metrics
+}
+
 /// Route a stream of requests round-robin over heads (helper for load
 /// generators that don't care about head affinity).
 pub fn round_robin_heads(count: usize, heads: usize) -> impl Iterator<Item = usize> {
@@ -180,71 +618,217 @@ mod tests {
     use crate::coordinator::backend::FunctionalBackend;
     use crate::util::rng::Rng;
 
-    fn test_kv(n: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
-        let mut rng = Rng::new(seed);
-        (rng.normal_vec(n * 64), rng.normal_vec(n * 64))
+    fn functional_server(cfg: ServerConfig) -> CamformerServer {
+        let n = cfg.kv_capacity;
+        CamformerServer::start(cfg, move |_| FunctionalBackend::new(n, 64))
     }
 
     #[test]
     fn serves_and_shuts_down() {
-        let cfg = ServerConfig { heads: 2, ..Default::default() };
-        let server = CamformerServer::start(
-            cfg,
-            |_| FunctionalBackend::new(128, 64),
-            |h| test_kv(128, h as u64),
-        );
+        let cfg = ServerConfig { heads: 2, kv_capacity: 128, ..Default::default() };
+        let server = functional_server(cfg);
         let mut rng = Rng::new(120);
+        // one session, prefilled independently on both head workers
+        for h in 0..2usize {
+            server
+                .submit(Request::Prefill {
+                    id: 1000 + h as u64,
+                    session: 1,
+                    head: h,
+                    keys: rng.normal_vec(128 * 64),
+                    values: rng.normal_vec(128 * 64),
+                })
+                .unwrap();
+        }
         for i in 0..10u64 {
             server
-                .submit(Request {
+                .submit(Request::Attend {
                     id: i,
+                    session: 1,
                     head: (i % 2) as usize,
                     query: rng.normal_vec(64),
                 })
                 .unwrap();
         }
-        let resps = server.collect(10);
-        assert_eq!(resps.len(), 10);
+        let resps = server.collect(12);
+        assert_eq!(resps.len(), 12);
         for r in &resps {
-            assert_eq!(r.output.len(), 64);
+            assert!(r.is_ok(), "{:?}", r.result);
             assert!(r.latency > Duration::ZERO);
+            if r.id < 1000 {
+                assert_eq!(r.output().len(), 64);
+                assert_eq!(r.seq_len(), 128);
+            }
         }
         let (metrics, window) = server.shutdown();
-        assert_eq!(metrics.completed, 10);
+        assert_eq!(metrics.completed, 12);
+        assert_eq!(metrics.prefills, 2);
+        assert_eq!(metrics.attends, 10);
         assert_eq!(metrics.errors, 0);
         assert!(window > Duration::ZERO);
     }
 
     #[test]
     fn responses_match_direct_backend() {
-        let (keys, values) = test_kv(128, 7);
-        let kc = keys.clone();
-        let vc = values.clone();
-        let server = CamformerServer::start(
-            ServerConfig::default(),
-            |_| FunctionalBackend::new(128, 64),
-            move |_| (kc.clone(), vc.clone()),
-        );
         let mut rng = Rng::new(121);
+        let keys = rng.normal_vec(128 * 64);
+        let values = rng.normal_vec(128 * 64);
+        let cfg = ServerConfig { kv_capacity: 128, ..Default::default() };
+        let server = functional_server(cfg);
+        server
+            .submit(Request::Prefill {
+                id: 0,
+                session: 7,
+                head: 0,
+                keys: keys.clone(),
+                values: values.clone(),
+            })
+            .unwrap();
         let q = rng.normal_vec(64);
-        server.submit(Request { id: 99, head: 0, query: q.clone() }).unwrap();
-        let r = server.collect(1).remove(0);
-        assert_eq!(r.id, 99);
+        server
+            .submit(Request::Attend { id: 99, session: 7, head: 0, query: q.clone() })
+            .unwrap();
+        let mut resps = server.collect(2);
+        resps.sort_by_key(|r| r.id);
+        assert_eq!(resps[1].id, 99);
         let mut direct = FunctionalBackend::new(128, 64);
         use crate::coordinator::backend::AttentionBackend as _;
-        assert_eq!(r.output, direct.attend(&q, &keys, &values).unwrap());
+        assert_eq!(resps[1].output(), &direct.attend(&q, &keys, &values).unwrap()[..]);
         server.shutdown();
     }
 
     #[test]
-    fn bad_head_rejected() {
-        let server = CamformerServer::start(
-            ServerConfig::default(),
-            |_| FunctionalBackend::new(128, 64),
-            |_| test_kv(128, 1),
+    fn bad_head_rejected_synchronously() {
+        let server = functional_server(ServerConfig::default());
+        let err = server.submit(Request::Attend {
+            id: 0,
+            session: 0,
+            head: 5,
+            query: vec![0.0; 64],
+        });
+        assert_eq!(err, Err(ServeError::UnknownHead { head: 5, heads: 1 }));
+        server.shutdown();
+    }
+
+    #[test]
+    fn bad_dims_rejected_synchronously() {
+        let server = functional_server(ServerConfig::default());
+        let err = server.submit(Request::Attend {
+            id: 0,
+            session: 0,
+            head: 0,
+            query: vec![0.0; 63],
+        });
+        assert_eq!(
+            err,
+            Err(ServeError::DimMismatch { what: "query", got: 63, want: 64 })
         );
-        let err = server.submit(Request { id: 0, head: 5, query: vec![0.0; 64] });
-        assert!(err.is_err());
+        let err = server.submit(Request::Prefill {
+            id: 1,
+            session: 0,
+            head: 0,
+            keys: vec![0.0; 2 * 64],
+            values: vec![0.0; 3 * 64],
+        });
+        assert!(matches!(err, Err(ServeError::DimMismatch { .. })));
+        server.shutdown();
+    }
+
+    #[test]
+    fn unknown_session_reported_in_response() {
+        let server = functional_server(ServerConfig::default());
+        server
+            .submit(Request::Attend { id: 3, session: 42, head: 0, query: vec![0.0; 64] })
+            .unwrap();
+        let r = server.collect(1).remove(0);
+        assert_eq!(r.result, Err(ServeError::UnknownSession { session: 42 }));
+        let (m, _) = server.shutdown();
+        assert_eq!(m.errors, 1);
+        assert_eq!(m.completed, 0);
+    }
+
+    #[test]
+    fn session_limit_enforced() {
+        let cfg = ServerConfig { max_sessions: 2, kv_capacity: 16, ..Default::default() };
+        let server = functional_server(cfg);
+        let mut rng = Rng::new(122);
+        for sid in 0..3u64 {
+            server
+                .submit(Request::Prefill {
+                    id: sid,
+                    session: sid,
+                    head: 0,
+                    keys: rng.normal_vec(16 * 64),
+                    values: rng.normal_vec(16 * 64),
+                })
+                .unwrap();
+        }
+        let mut resps = server.collect(3);
+        resps.sort_by_key(|r| r.id);
+        assert!(resps[0].is_ok());
+        assert!(resps[1].is_ok());
+        assert_eq!(resps[2].result, Err(ServeError::SessionLimit { max_sessions: 2 }));
+        server.shutdown();
+    }
+
+    /// A backend compiled for a fixed 16-row context, like PJRT but tiny.
+    struct Fixed16Backend(FunctionalBackend);
+
+    impl AttentionBackend for Fixed16Backend {
+        fn attend(&mut self, q: &[f32], k: &[f32], v: &[f32]) -> anyhow::Result<Vec<f32>> {
+            self.0.attend(q, k, v)
+        }
+
+        fn required_rows(&self, _rows: usize, _quantum: usize) -> usize {
+            16
+        }
+
+        fn on_kv_update(&mut self) {
+            self.0.on_kv_update();
+        }
+
+        fn name(&self) -> &'static str {
+            "fixed16"
+        }
+    }
+
+    #[test]
+    fn fixed_geometry_overflow_is_typed_not_a_panic() {
+        // kv_capacity above the backend's compiled context: growing past
+        // the geometry must yield CapacityExhausted, not panic the worker,
+        // and a refused decode must not commit its append
+        let cfg = ServerConfig { kv_capacity: 64, ..Default::default() };
+        let server =
+            CamformerServer::start(cfg, |_| Fixed16Backend(FunctionalBackend::new(16, 64)));
+        let mut rng = Rng::new(124);
+        server
+            .submit(Request::Prefill {
+                id: 0,
+                session: 0,
+                head: 0,
+                keys: rng.normal_vec(16 * 64),
+                values: rng.normal_vec(16 * 64),
+            })
+            .unwrap();
+        server
+            .submit(Request::Decode {
+                id: 1,
+                session: 0,
+                head: 0,
+                query: rng.normal_vec(64),
+                new_key: rng.normal_vec(64),
+                new_value: rng.normal_vec(64),
+            })
+            .unwrap();
+        server
+            .submit(Request::Attend { id: 2, session: 0, head: 0, query: rng.normal_vec(64) })
+            .unwrap();
+        let mut resps = server.collect(3);
+        resps.sort_by_key(|r| r.id);
+        assert!(resps[0].is_ok());
+        assert_eq!(resps[1].result, Err(ServeError::CapacityExhausted { capacity: 16 }));
+        assert!(resps[2].is_ok(), "worker must survive a refused decode");
+        assert_eq!(resps[2].seq_len(), 16, "refused decode must not grow the cache");
         server.shutdown();
     }
 
@@ -256,26 +840,36 @@ mod tests {
 
     #[test]
     fn throughput_under_load() {
-        let server = CamformerServer::start(
-            ServerConfig { heads: 4, ..Default::default() },
-            |_| FunctionalBackend::new(256, 64),
-            |h| test_kv(256, h as u64),
-        );
-        let mut rng = Rng::new(122);
+        let cfg = ServerConfig { heads: 4, kv_capacity: 256, ..Default::default() };
+        let server = functional_server(cfg);
+        let mut rng = Rng::new(123);
+        for h in 0..4usize {
+            server
+                .submit(Request::Prefill {
+                    id: 1000 + h as u64,
+                    session: 1,
+                    head: h,
+                    keys: rng.normal_vec(256 * 64),
+                    values: rng.normal_vec(256 * 64),
+                })
+                .unwrap();
+        }
         let n = 200u64;
         for i in 0..n {
             server
-                .submit(Request {
+                .submit(Request::Attend {
                     id: i,
+                    session: 1,
                     head: (i % 4) as usize,
                     query: rng.normal_vec(64),
                 })
                 .unwrap();
         }
-        let resps = server.collect(n as usize);
-        assert_eq!(resps.len(), n as usize);
+        let resps = server.collect(n as usize + 4);
+        assert_eq!(resps.len(), n as usize + 4);
         let (metrics, window) = server.shutdown();
-        assert_eq!(metrics.completed, n);
+        assert_eq!(metrics.completed, n + 4);
+        assert_eq!(metrics.attends, n);
         assert!(metrics.throughput_per_s(window) > 50.0);
     }
 }

@@ -1,0 +1,47 @@
+//! A live serving session: one request stream's growing KV state on one
+//! head worker.
+//!
+//! In the paper's deployment (Sec. III-A / IV-C) the XPU writes each
+//! generated token's (k, v) into the accelerator-resident memory and the
+//! next decode step searches the grown cache. `Session` is the serving
+//! unit of that state: the coordinator keeps one per (session id, shard,
+//! head) inside the owning worker thread, so all mutation is
+//! single-threaded and lock-free.
+
+use super::kv_store::KvStore;
+
+/// Stable caller-chosen session identifier (also the shard-routing key).
+pub type SessionId = u64;
+
+/// Live per-(session, head) state owned by a worker thread.
+#[derive(Clone, Debug)]
+pub struct Session {
+    pub id: SessionId,
+    /// The capacity-provisioned KV memory (grows via `Decode` appends).
+    pub store: KvStore,
+}
+
+impl Session {
+    pub fn new(id: SessionId, store: KvStore) -> Self {
+        Session { id, store }
+    }
+
+    /// Current context length (tokens resident in the KV cache).
+    pub fn seq_len(&self) -> usize {
+        self.store.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracks_store_growth() {
+        let mut s = Session::new(3, KvStore::new(4, 2, 2));
+        assert_eq!(s.seq_len(), 0);
+        s.store.append(&[1.0, 2.0], &[3.0, 4.0]).unwrap();
+        assert_eq!(s.seq_len(), 1);
+        assert_eq!(s.id, 3);
+    }
+}

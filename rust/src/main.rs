@@ -32,9 +32,11 @@ Paper experiments:
   dse      design-space exploration (MAC balance, CAM geometry, ADC bits)
 
 Serving / demo:
-  serve    run the coordinator over the PJRT artifacts
-           [--requests N] [--heads H] [--backend pjrt|functional|arch]
-  quickstart  one query end-to-end through every layer
+  serve    session-oriented decode serving through the coordinator:
+           prefill + live KV-append decode steps per session
+           [--sessions N] [--steps N] [--prefill ROWS] [--heads H]
+           [--backend functional|arch|pjrt]
+  quickstart  one query end-to-end through every layer (needs artifacts)
 
 Common options:
   --seed S         RNG seed (default 42)

@@ -1,0 +1,85 @@
+//! Offline stand-in for `executable.rs`, compiled when the `pjrt` feature
+//! is off (the default: the `xla` bindings and their native library are
+//! not vendored). Presents the identical public surface so the
+//! coordinator's `PjrtBackend`, the CLI and the examples type-check
+//! unchanged; every constructor/execution path returns a descriptive
+//! error instead of running.
+
+use anyhow::{bail, Result};
+use std::path::Path;
+
+use super::manifest::ManifestEntry;
+
+const UNAVAILABLE: &str =
+    "PJRT runtime unavailable: this build has no `xla` bindings (rebuild with \
+     `--features pjrt` after adding the xla dependency)";
+
+/// One compiled entry point (never constructed in stub builds).
+pub struct LoadedExecutable {
+    pub entry: ManifestEntry,
+}
+
+impl LoadedExecutable {
+    /// Execute with f32 inputs (stub: always errors).
+    pub fn run_f32(&self, _inputs: &[&[f32]]) -> Result<Vec<f32>> {
+        bail!("{}: {UNAVAILABLE}", self.entry.name)
+    }
+
+    /// Execute with one s32 input (stub: always errors).
+    pub fn run_s32(&self, _tokens: &[i32]) -> Result<Vec<f32>> {
+        bail!("{}: {UNAVAILABLE}", self.entry.name)
+    }
+}
+
+/// The runtime engine (stub: construction always errors, so `Engine`
+/// values never exist in offline builds).
+pub struct Engine {
+    never: std::convert::Infallible,
+}
+
+impl Engine {
+    /// Create a CPU engine over an artifacts directory (stub: errors).
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        bail!("{UNAVAILABLE} (artifacts dir {artifacts_dir:?})")
+    }
+
+    /// Compile (or fetch the cached) entry point by manifest name.
+    pub fn load(&mut self, _name: &str) -> Result<&LoadedExecutable> {
+        match self.never {}
+    }
+
+    /// Names of all available entry points.
+    pub fn available(&self) -> Vec<&str> {
+        match self.never {}
+    }
+}
+
+/// Locate the artifacts directory: $CAMFORMER_ARTIFACTS or ./artifacts
+/// relative to the crate root. (Duplicated from `executable.rs` so both
+/// cfg variants expose it.)
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    if let Ok(d) = std::env::var("CAMFORMER_ARTIFACTS") {
+        return d.into();
+    }
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_reports_unavailable() {
+        let err = Engine::new(Path::new("/nonexistent")).err().expect("stub must error");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("PJRT runtime unavailable"), "{msg}");
+    }
+
+    #[test]
+    fn artifacts_dir_override() {
+        // default resolves under the crate root when the env var is unset
+        if std::env::var("CAMFORMER_ARTIFACTS").is_err() {
+            assert!(default_artifacts_dir().ends_with("artifacts"));
+        }
+    }
+}

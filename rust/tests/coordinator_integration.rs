@@ -1,6 +1,7 @@
-//! Coordinator integration: serving flows over the functional and
-//! arch-sim backends (the PJRT serving flow is covered by
-//! `runtime_integration` and the examples).
+//! Coordinator integration: session-oriented serving flows over the
+//! functional and arch-sim backends (the PJRT serving flow is covered by
+//! `runtime_integration` and the examples; the decode acceptance test
+//! lives in `decode_serving.rs`).
 
 use std::time::Duration;
 
@@ -21,65 +22,89 @@ fn serving_is_deterministic_and_correct_under_load() {
     let n = 512;
     let heads = 3;
     let kvs: Vec<(Vec<f32>, Vec<f32>)> = (0..heads).map(|h| kv(n, 100 + h as u64)).collect();
-    let kvc = kvs.clone();
     let server = CamformerServer::start(
         ServerConfig {
             heads,
+            kv_capacity: n,
             batch: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(500) },
+            ..Default::default()
         },
         |_| FunctionalBackend::new(n, 64),
-        move |h| kvc[h].clone(),
     );
+    for (h, (keys, values)) in kvs.iter().enumerate() {
+        server
+            .submit(Request::Prefill {
+                id: 10_000 + h as u64,
+                session: 1,
+                head: h,
+                keys: keys.clone(),
+                values: values.clone(),
+            })
+            .unwrap();
+    }
     let mut rng = Rng::new(200);
     let queries: Vec<Vec<f32>> = (0..120).map(|_| rng.normal_vec(64)).collect();
     for (i, q) in queries.iter().enumerate() {
         server
-            .submit(Request { id: i as u64, head: i % heads, query: q.clone() })
+            .submit(Request::Attend {
+                id: i as u64,
+                session: 1,
+                head: i % heads,
+                query: q.clone(),
+            })
             .unwrap();
     }
-    let mut resps = server.collect(120);
+    let mut resps = server.collect(120 + heads);
+    resps.retain(|r| r.id < 10_000);
     resps.sort_by_key(|r| r.id);
+    assert_eq!(resps.len(), 120);
 
     let cfg = AttnConfig::paper(n, 64);
     for r in &resps {
         let (k, v) = &kvs[r.head];
         let want = functional::camformer_attention(&queries[r.id as usize], k, v, &cfg);
-        assert_eq!(r.output, want, "request {}", r.id);
+        assert_eq!(r.output(), &want[..], "request {}", r.id);
     }
     let (m, _) = server.shutdown();
-    assert_eq!(m.completed, 120);
+    assert_eq!(m.completed, 120 + heads as u64);
+    assert_eq!(m.attends, 120);
     assert_eq!(m.errors, 0);
-    assert!(m.batches <= 120); // batching actually coalesced some work
+    assert!(m.batches <= 120 + heads as u64); // batching coalesced some work
 }
 
 #[test]
 fn arch_backend_serves_with_latency_annotation() {
     let n = 256;
     let (keys, values) = kv(n, 300);
-    let kc = keys.clone();
-    let vc = values.clone();
     let server = CamformerServer::start(
-        ServerConfig::default(),
+        ServerConfig { kv_capacity: n, ..Default::default() },
         |_| ArchSimBackend::new(n),
-        move |_| (kc.clone(), vc.clone()),
     );
+    server
+        .submit(Request::Prefill {
+            id: 100,
+            session: 0,
+            head: 0,
+            keys: keys.clone(),
+            values: values.clone(),
+        })
+        .unwrap();
     let mut rng = Rng::new(301);
-    for i in 0..10u64 {
+    let queries: Vec<Vec<f32>> = (0..10).map(|_| rng.normal_vec(64)).collect();
+    for (i, q) in queries.iter().enumerate() {
         server
-            .submit(Request { id: i, head: 0, query: rng.normal_vec(64) })
+            .submit(Request::Attend { id: i as u64, session: 0, head: 0, query: q.clone() })
             .unwrap();
     }
-    let resps = server.collect(10);
+    let mut resps = server.collect(11);
+    resps.retain(|r| r.id < 100);
+    resps.sort_by_key(|r| r.id);
     assert_eq!(resps.len(), 10);
     // outputs agree with the functional model
     let cfg = AttnConfig::paper(n, 64);
-    let mut rng2 = Rng::new(301);
-    let mut sorted = resps;
-    sorted.sort_by_key(|r| r.id);
-    for r in &sorted {
-        let q = rng2.normal_vec(64);
-        let want = functional::camformer_attention(&q, &keys, &values, &cfg);
-        for (a, b) in r.output.iter().zip(&want) {
+    for r in &resps {
+        let want = functional::camformer_attention(&queries[r.id as usize], &keys, &values, &cfg);
+        for (a, b) in r.output().iter().zip(&want) {
             assert!((a - b).abs() < 0.05);
         }
     }
@@ -88,7 +113,8 @@ fn arch_backend_serves_with_latency_annotation() {
 
 #[test]
 fn decode_style_kv_growth_through_store() {
-    // simulate causal decoding: KV cache grows, each step queries it
+    // the KvStore layer alone: causal decoding against the zero-copy
+    // padded view, exercising cache invalidation on the backend
     let mut store = KvStore::new(64, 64, 64);
     let mut rng = Rng::new(400);
     let mut backend = FunctionalBackend::new(64, 64);
@@ -96,15 +122,96 @@ fn decode_style_kv_growth_through_store() {
         let k = rng.normal_vec(64);
         let v = rng.normal_vec(64);
         store.append(&k, &v).unwrap();
-        // pad to the backend's fixed geometry
-        let (kp, vp, valid) = store.padded_view(64);
+        backend.on_kv_update();
+        let rows = backend.required_rows(store.len(), 16);
+        let (kp, vp, valid) = store.padded(rows.min(64));
         assert_eq!(valid, step);
         let q = rng.normal_vec(64);
-        let out = backend.attend(&q, &kp, &vp).unwrap();
+        let out = backend.attend(&q, kp, vp).unwrap();
         assert_eq!(out.len(), 64);
         assert!(out.iter().all(|x| x.is_finite()));
     }
     assert!(store.append(&rng.normal_vec(64), &rng.normal_vec(64)).is_err());
+}
+
+#[test]
+fn sessions_are_isolated_across_shards() {
+    // two sessions with different caches on different shards: each query
+    // must see only its own session's memory
+    let n = 128;
+    let (k0, v0) = kv(n, 500);
+    let (k1, v1) = kv(n, 501);
+    let server = CamformerServer::start(
+        ServerConfig { shards: 2, kv_capacity: n, ..Default::default() },
+        |_| FunctionalBackend::new(n, 64),
+    );
+    // session 2 -> shard 0, session 3 -> shard 1
+    server
+        .submit(Request::Prefill { id: 0, session: 2, head: 0, keys: k0.clone(), values: v0.clone() })
+        .unwrap();
+    server
+        .submit(Request::Prefill { id: 1, session: 3, head: 0, keys: k1.clone(), values: v1.clone() })
+        .unwrap();
+    let mut rng = Rng::new(502);
+    let q = rng.normal_vec(64);
+    server.submit(Request::Attend { id: 2, session: 2, head: 0, query: q.clone() }).unwrap();
+    server.submit(Request::Attend { id: 3, session: 3, head: 0, query: q.clone() }).unwrap();
+    let mut resps = server.collect(4);
+    resps.sort_by_key(|r| r.id);
+    let cfg = AttnConfig::paper(n, 64);
+    let want0 = functional::camformer_attention(&q, &k0, &v0, &cfg);
+    let want1 = functional::camformer_attention(&q, &k1, &v1, &cfg);
+    assert_eq!(resps[2].output(), &want0[..]);
+    assert_eq!(resps[3].output(), &want1[..]);
+    assert_ne!(resps[2].output(), resps[3].output());
+    server.shutdown();
+}
+
+#[test]
+fn attend_after_decode_sees_fresh_cache() {
+    // regression for the packed-key cache: the KV buffer mutates in place
+    // (same pointer), so a stale cache would silently serve old scores
+    let n = 64;
+    let cfg = ServerConfig { kv_capacity: n, ..Default::default() };
+    let quantum = cfg.pad_quantum;
+    let server = CamformerServer::start(cfg, |_| FunctionalBackend::new(n, 64));
+    let mut rng = Rng::new(600);
+    let mut mirror = KvStore::new(n, 64, 64);
+    // 20 rows pad to 32 both before and after one append, so the K buffer
+    // keeps the same pointer AND length across the mutation — the exact
+    // situation where only on_kv_update can save the packed cache
+    let keys = rng.normal_vec(20 * 64);
+    let values = rng.normal_vec(20 * 64);
+    mirror.load(&keys, &values).unwrap();
+    server
+        .submit(Request::Prefill { id: 0, session: 0, head: 0, keys, values })
+        .unwrap();
+    let q = rng.normal_vec(64);
+    // attend (primes the cache), decode (mutates in place), attend again
+    server.submit(Request::Attend { id: 1, session: 0, head: 0, query: q.clone() }).unwrap();
+    let nk = rng.normal_vec(64);
+    let nv = rng.normal_vec(64);
+    mirror.append(&nk, &nv).unwrap();
+    server
+        .submit(Request::Decode {
+            id: 2,
+            session: 0,
+            head: 0,
+            query: q.clone(),
+            new_key: nk,
+            new_value: nv,
+        })
+        .unwrap();
+    server.submit(Request::Attend { id: 3, session: 0, head: 0, query: q.clone() }).unwrap();
+    let mut resps = server.collect(4);
+    resps.sort_by_key(|r| r.id);
+    let rows = mirror.len().div_ceil(quantum) * quantum;
+    let (kp, vp, _) = mirror.padded(rows);
+    let want = functional::camformer_attention(&q, kp, vp, &AttnConfig::paper(rows, 64));
+    assert_eq!(resps[2].output(), &want[..], "decode must see the appended row");
+    assert_eq!(resps[3].output(), &want[..], "attend must not serve a stale cache");
+    assert_eq!(resps[3].seq_len(), 21);
+    server.shutdown();
 }
 
 #[test]
@@ -113,20 +220,23 @@ fn partial_batches_flush_on_timeout() {
     let (keys, values) = kv(n, 500);
     let server = CamformerServer::start(
         ServerConfig {
-            heads: 1,
+            kv_capacity: n,
             batch: BatchPolicy { max_batch: 16, max_wait: Duration::from_millis(1) },
+            ..Default::default()
         },
         |_| FunctionalBackend::new(n, 64),
-        move |_| (keys.clone(), values.clone()),
     );
+    server
+        .submit(Request::Prefill { id: 100, session: 0, head: 0, keys, values })
+        .unwrap();
     let mut rng = Rng::new(501);
     // submit 3 << max_batch and expect them all back quickly
     for i in 0..3u64 {
         server
-            .submit(Request { id: i, head: 0, query: rng.normal_vec(64) })
+            .submit(Request::Attend { id: i, session: 0, head: 0, query: rng.normal_vec(64) })
             .unwrap();
     }
-    let resps = server.collect_timeout(3, Duration::from_secs(5));
-    assert_eq!(resps.len(), 3);
+    let resps = server.collect_timeout(4, Duration::from_secs(5));
+    assert_eq!(resps.len(), 4);
     server.shutdown();
 }

@@ -1,0 +1,164 @@
+//! Decode-serving acceptance (ISSUE 1): ≥2 concurrent sessions, prefill
+//! then ≥32 live `Decode` steps each (every step appends to the session's
+//! `KvStore`), outputs bit-equal to the functional reference applied to
+//! the accumulated K/V, and `Metrics` reporting non-zero p50/p99.
+
+use std::time::Duration;
+
+use camformer::accuracy::functional::{self, AttnConfig};
+use camformer::coordinator::backend::FunctionalBackend;
+use camformer::coordinator::batcher::BatchPolicy;
+use camformer::coordinator::kv_store::KvStore;
+use camformer::coordinator::server::{CamformerServer, Request, ServerConfig};
+use camformer::coordinator::ServeError;
+use camformer::util::rng::Rng;
+
+#[test]
+fn decode_loop_matches_functional_reference_across_sessions() {
+    let d = 64usize;
+    let capacity = 128usize;
+    let prefill_rows = 24usize;
+    let steps = 32usize;
+    let session_ids: &[u64] = &[11, 42, 99];
+
+    let cfg = ServerConfig {
+        shards: 2,
+        kv_capacity: capacity,
+        batch: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(500) },
+        ..Default::default()
+    };
+    // the reference mirrors must replay the server's execution geometry
+    let quantum = cfg.pad_quantum;
+    let server = CamformerServer::start(cfg, |_| FunctionalBackend::new(capacity, 64));
+
+    // mirror stores accumulate the same K/V for the reference computation
+    let mut mirror: Vec<KvStore> =
+        session_ids.iter().map(|_| KvStore::new(capacity, d, d)).collect();
+    let mut rng = Rng::new(7000);
+    let mut next_id = 0u64;
+
+    for (si, &sid) in session_ids.iter().enumerate() {
+        let keys = rng.normal_vec(prefill_rows * d);
+        let values = rng.normal_vec(prefill_rows * d);
+        mirror[si].load(&keys, &values).unwrap();
+        server
+            .submit(Request::Prefill { id: next_id, session: sid, head: 0, keys, values })
+            .unwrap();
+        next_id += 1;
+    }
+    for ack in server.collect(session_ids.len()) {
+        assert!(ack.is_ok(), "prefill failed: {:?}", ack.result);
+        assert_eq!(ack.seq_len(), prefill_rows);
+    }
+
+    // interleaved decode streams: session A step t executes between
+    // session B's steps, so cross-session contamination would be caught
+    let mut expected: Vec<(u64, Vec<f32>, usize)> = Vec::new();
+    for _step in 0..steps {
+        for (si, &sid) in session_ids.iter().enumerate() {
+            let q = rng.normal_vec(d);
+            let nk = rng.normal_vec(d);
+            let nv = rng.normal_vec(d);
+            mirror[si].append(&nk, &nv).unwrap();
+            // the reference runs over the same padded execution geometry
+            let rows = mirror[si].len().div_ceil(quantum) * quantum;
+            let (kp, vp, _) = mirror[si].padded(rows);
+            let want = functional::camformer_attention(&q, kp, vp, &AttnConfig::paper(rows, d));
+            expected.push((next_id, want, mirror[si].len()));
+            server
+                .submit(Request::Decode {
+                    id: next_id,
+                    session: sid,
+                    head: 0,
+                    query: q,
+                    new_key: nk,
+                    new_value: nv,
+                })
+                .unwrap();
+            next_id += 1;
+        }
+    }
+
+    let total = steps * session_ids.len();
+    let mut resps = server.collect(total);
+    resps.sort_by_key(|r| r.id);
+    assert_eq!(resps.len(), total);
+    for (r, (id, want, seq_len)) in resps.iter().zip(&expected) {
+        assert_eq!(r.id, *id);
+        assert_eq!(
+            r.output(),
+            &want[..],
+            "decode response {id} diverged from the functional reference"
+        );
+        assert_eq!(r.seq_len(), *seq_len, "response {id}: wrong live KV length");
+    }
+
+    let (m, _window) = server.shutdown();
+    assert_eq!(m.prefills, session_ids.len() as u64);
+    assert_eq!(m.decodes, total as u64);
+    assert_eq!(m.errors, 0);
+    assert!(m.p50_us() > 0.0, "p50 latency must be non-zero");
+    assert!(m.p99_us() > 0.0, "p99 latency must be non-zero");
+    assert!(m.p99() >= m.p50());
+}
+
+#[test]
+fn decode_past_capacity_yields_typed_error() {
+    let cfg = ServerConfig { kv_capacity: 16, ..Default::default() };
+    let server = CamformerServer::start(cfg, |_| FunctionalBackend::new(16, 64));
+    let mut rng = Rng::new(7100);
+    server
+        .submit(Request::Prefill {
+            id: 0,
+            session: 5,
+            head: 0,
+            keys: rng.normal_vec(16 * 64),
+            values: rng.normal_vec(16 * 64),
+        })
+        .unwrap();
+    server
+        .submit(Request::Decode {
+            id: 1,
+            session: 5,
+            head: 0,
+            query: rng.normal_vec(64),
+            new_key: rng.normal_vec(64),
+            new_value: rng.normal_vec(64),
+        })
+        .unwrap();
+    // the refused decode must not have committed its append: the session
+    // still serves, at the original context length
+    server
+        .submit(Request::Attend { id: 2, session: 5, head: 0, query: rng.normal_vec(64) })
+        .unwrap();
+    let mut resps = server.collect(3);
+    resps.sort_by_key(|r| r.id);
+    assert!(resps[0].is_ok());
+    assert_eq!(resps[1].result, Err(ServeError::CapacityExhausted { capacity: 16 }));
+    assert!(resps[2].is_ok());
+    assert_eq!(resps[2].seq_len(), 16);
+    let (m, _) = server.shutdown();
+    assert_eq!(m.errors, 1);
+}
+
+#[test]
+fn decode_against_unknown_session_is_typed() {
+    let server = CamformerServer::start(
+        ServerConfig { kv_capacity: 64, ..Default::default() },
+        |_| FunctionalBackend::new(64, 64),
+    );
+    let mut rng = Rng::new(7200);
+    server
+        .submit(Request::Decode {
+            id: 9,
+            session: 1234,
+            head: 0,
+            query: rng.normal_vec(64),
+            new_key: rng.normal_vec(64),
+            new_value: rng.normal_vec(64),
+        })
+        .unwrap();
+    let r = server.collect(1).remove(0);
+    assert_eq!(r.result, Err(ServeError::UnknownSession { session: 1234 }));
+    server.shutdown();
+}
