@@ -207,7 +207,12 @@ pub fn topk_indices(scores: &[f64], k: usize) -> Vec<usize> {
 }
 
 /// Hierarchical two-stage top-k mask (Sec. III-C4).
-pub fn two_stage_topk_mask(scores: &[f64], group: usize, stage1_k: usize, final_k: usize) -> Vec<bool> {
+pub fn two_stage_topk_mask(
+    scores: &[f64],
+    group: usize,
+    stage1_k: usize,
+    final_k: usize,
+) -> Vec<bool> {
     let n = scores.len();
     assert_eq!(n % group, 0, "N={n} not a multiple of group={group}");
     let mut survive = vec![false; n];

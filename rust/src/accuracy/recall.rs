@@ -204,7 +204,13 @@ pub fn margin_guarantees_recall(scores_exact: &[f64], eps: f64, k: usize) -> boo
 
 /// Exhaustively verify the margin theorem on perturbed scores: if the
 /// margin holds, ANY eps-bounded perturbation keeps the same top-k *set*.
-pub fn check_margin_theorem(scores: &[f64], eps: f64, k: usize, trials: usize, rng: &mut Rng) -> bool {
+pub fn check_margin_theorem(
+    scores: &[f64],
+    eps: f64,
+    k: usize,
+    trials: usize,
+    rng: &mut Rng,
+) -> bool {
     if !margin_guarantees_recall(scores, eps, k) {
         return true; // theorem vacuous
     }

@@ -130,7 +130,9 @@ mod tests {
             let kstar = probe - PROBE_BASE;
             let target = toks[..511]
                 .iter()
-                .filter(|&&t| (t - PAIR_BASE) / N_CLASSES == kstar && t >= PAIR_BASE && t < PROBE_BASE)
+                .filter(|&&t| {
+                    (t - PAIR_BASE) / N_CLASSES == kstar && t >= PAIR_BASE && t < PROBE_BASE
+                })
                 .count();
             assert_eq!(target, 1, "exactly one target pair");
             // and it encodes the label

@@ -15,14 +15,14 @@ pub struct ArchConfig {
     pub final_k: usize,
     /// Parallel BF16 MAC units in contextualization (DSE: 8 balances).
     pub mac_units: usize,
-    /// System clock [GHz] (Table II runs at 1 GHz).
+    /// System clock \[GHz\] (Table II runs at 1 GHz).
     pub clock_ghz: f64,
     /// SAR ADC bits (6) and ADC instances per array (1 = shared).
     pub adc_bits: u32,
     pub adcs_per_array: usize,
     /// CAM phase count (precharge/broadcast/match/share).
     pub cam_phases: u64,
-    /// Pipelined BF16 divider end-to-end latency [cycles].
+    /// Pipelined BF16 divider end-to-end latency \[cycles\].
     pub t_div: u64,
 }
 

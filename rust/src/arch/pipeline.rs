@@ -8,7 +8,7 @@ use super::config::ArchConfig;
 use super::contextualization::ContextualizationStage;
 use super::normalization::NormalizationStage;
 
-/// Per-stage latency for one query [cycles].
+/// Per-stage latency for one query \[cycles\].
 #[derive(Clone, Copy, Debug)]
 pub struct StageLatency {
     pub association: u64,
@@ -94,7 +94,7 @@ impl PipelineModel {
         }
     }
 
-    /// Single-query end-to-end latency [ns] (stages in series).
+    /// Single-query end-to-end latency \[ns\] (stages in series).
     pub fn query_latency_ns(&self) -> f64 {
         self.latencies().total() as f64 * self.cfg.cycle_ns()
     }

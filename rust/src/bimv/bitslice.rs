@@ -15,8 +15,8 @@
 use super::engine::BimvEngine;
 
 /// Decompose unsigned ints (< 2^bits) into ±1 bit slices, LSB first.
-/// Returns `bits` matrices of shape [n][d]: slice[s][r][c] in {true,false}
-/// (true = +1 = bit set).
+/// Returns `bits` matrices of shape `[n][d]`: `slice[s][r][c]` in
+/// {true,false} (true = +1 = bit set).
 pub fn decompose(values: &[Vec<u32>], bits: u32) -> Vec<Vec<Vec<bool>>> {
     let n = values.len();
     (0..bits)

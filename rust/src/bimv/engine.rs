@@ -144,7 +144,7 @@ impl BimvEngine {
             .collect()
     }
 
-    /// Total energy of the run so far [J] under the given model.
+    /// Total energy of the run so far \[J\] under the given model.
     pub fn energy(&self, model: &EnergyModel) -> f64 {
         self.stats.programs as f64 * model.program_tile()
             + self.stats.searches as f64 * model.search_tile()

@@ -13,9 +13,9 @@ use crate::util::rng::Rng;
 #[derive(Clone, Copy, Debug)]
 pub struct SarAdc {
     pub bits: u32,
-    /// Full-scale input voltage [V] (the matchline rail).
+    /// Full-scale input voltage \[V\] (the matchline rail).
     pub vref: f64,
-    /// Input-referred RMS noise [V] (comparator + DAC settling).
+    /// Input-referred RMS noise \[V\] (comparator + DAC settling).
     pub noise_v: f64,
 }
 

@@ -11,11 +11,11 @@ use crate::util::rng::Rng;
 /// Electrical parameters of one cell (65 nm nominal values from Sec. II).
 #[derive(Clone, Copy, Debug)]
 pub struct CellParams {
-    /// Match-result MIM capacitor [F]. Paper: 22 fF.
+    /// Match-result MIM capacitor \[F\]. Paper: 22 fF.
     pub cap_f: f64,
-    /// Supply voltage [V]. Paper: 1.2 V (Table I).
+    /// Supply voltage \[V\]. Paper: 1.2 V (Table I).
     pub vdd: f64,
-    /// Residual voltage left on a *discharged* capacitor [V] — the pull-down
+    /// Residual voltage left on a *discharged* capacitor \[V\] — the pull-down
     /// path is not ideal; nominally ~0.
     pub v_residual: f64,
 }
@@ -35,7 +35,7 @@ impl Default for CellParams {
 pub struct Cell {
     /// Stored key bit.
     pub bit: bool,
-    /// Actual capacitance after process mismatch [F].
+    /// Actual capacitance after process mismatch \[F\].
     pub cap_f: f64,
 }
 
@@ -73,7 +73,7 @@ impl Cell {
         }
     }
 
-    /// Charge held after the match phase [C].
+    /// Charge held after the match phase \[C\].
     pub fn post_match_charge(&self, query_bit: bool, params: &CellParams) -> f64 {
         self.cap_f * self.post_match_voltage(query_bit, params)
     }

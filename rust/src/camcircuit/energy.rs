@@ -19,13 +19,13 @@ use super::cell::CellParams;
 pub struct EnergyModel {
     pub cam_h: usize,
     pub cam_w: usize,
-    /// Write energy per cell [J] (SRAM write, 65 nm): ~50 fJ/bit.
+    /// Write energy per cell \[J\] (SRAM write, 65 nm): ~50 fJ/bit.
     pub e_write_cell: f64,
-    /// Precharge energy per cell [J]: C * V_DD^2 (the cap charges from 0).
+    /// Precharge energy per cell \[J\]: C * V_DD^2 (the cap charges from 0).
     pub e_precharge_cell: f64,
-    /// Query broadcast driver energy per column [J]: wire + gate load.
+    /// Query broadcast driver energy per column \[J\]: wire + gate load.
     pub e_broadcast_col: f64,
-    /// One 6-bit SAR conversion [J] (Chen et al. [39]).
+    /// One 6-bit SAR conversion \[J\] (Chen et al. [39]).
     pub e_adc_conv: f64,
 }
 
@@ -43,12 +43,12 @@ impl EnergyModel {
         }
     }
 
-    /// Energy to program one full tile [J].
+    /// Energy to program one full tile \[J\].
     pub fn program_tile(&self) -> f64 {
         self.e_write_cell * (self.cam_h * self.cam_w) as f64
     }
 
-    /// Energy for one search (query broadcast over the whole tile) [J]:
+    /// Energy for one search (query broadcast over the whole tile) \[J\]:
     /// every cap precharges, every column broadcasts, every row converts
     /// through the shared ADC (CAM_H sequential conversions).
     pub fn search_tile(&self) -> f64 {

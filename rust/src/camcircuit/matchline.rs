@@ -18,10 +18,10 @@ const BOLTZMANN: f64 = 1.380649e-23;
 #[derive(Clone, Debug)]
 pub struct Matchline {
     pub cells: Vec<Cell>,
-    /// Parasitic wire capacitance [F] added to the share node (scales with
+    /// Parasitic wire capacitance \[F\] added to the share node (scales with
     /// row width; ~0.2 fF/cell of routing is a reasonable 65 nm estimate).
     pub wire_cap_f: f64,
-    /// Equivalent share-switch resistance [Ohm] (sets the RC settle time).
+    /// Equivalent share-switch resistance \[Ohm\] (sets the RC settle time).
     pub switch_r_ohm: f64,
 }
 
@@ -70,7 +70,7 @@ impl Matchline {
             .count()
     }
 
-    /// Final settled matchline voltage [V] after ideal charge sharing
+    /// Final settled matchline voltage \[V\] after ideal charge sharing
     /// (capacitance-weighted average; wire parasitics start discharged).
     pub fn settled_voltage(&self, query: &[bool], params: &CellParams) -> f64 {
         let mut charge = 0.0;
@@ -83,7 +83,13 @@ impl Matchline {
     }
 
     /// Settled voltage plus kT/C thermal sampling noise.
-    pub fn sensed_voltage(&self, query: &[bool], params: &CellParams, temp_k: f64, rng: &mut Rng) -> f64 {
+    pub fn sensed_voltage(
+        &self,
+        query: &[bool],
+        params: &CellParams,
+        temp_k: f64,
+        rng: &mut Rng,
+    ) -> f64 {
         let total_cap: f64 = self.wire_cap_f + self.cells.iter().map(|c| c.cap_f).sum::<f64>();
         let v = self.settled_voltage(query, params);
         let ktc_sigma = (BOLTZMANN * temp_k / total_cap).sqrt();

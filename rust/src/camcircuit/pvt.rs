@@ -59,7 +59,7 @@ impl Corner {
         }
     }
 
-    /// Junction temperature [K].
+    /// Junction temperature \[K\].
     pub fn temp_k(&self) -> f64 {
         match self {
             Corner::TT => 300.0,

@@ -10,7 +10,10 @@
 //! Backends see K/V as row-major buffers whose row count is whatever the
 //! serving layer padded to ([`AttentionBackend::required_rows`]); flexible
 //! backends derive n per call so a session's growing KV cache needs no
-//! re-construction.
+//! re-construction. The batched entry point
+//! ([`AttentionBackend::attend_batch`]) takes each query bound to *its
+//! own* session's K/V view, so one dispatch can span decode steps of
+//! different sessions (key-stationary amortisation, Fig. 5).
 
 use anyhow::Result;
 use std::path::Path;
@@ -18,6 +21,19 @@ use std::path::Path;
 use crate::accuracy::functional::{self, AttnConfig};
 use crate::arch::{config::ArchConfig, pipeline};
 use crate::runtime::executable::Engine;
+
+/// One query of a (possibly cross-session) batched dispatch, bound to the
+/// padded K/V execution view of the session it attends over. The borrows
+/// come straight out of the owning worker's `KvStore`s — building a batch
+/// never copies cache contents.
+#[derive(Clone, Copy)]
+pub struct AttendItem<'a> {
+    pub query: &'a [f32],
+    /// Row-major padded keys (`rows x d_k`).
+    pub keys: &'a [f32],
+    /// Row-major padded values (`rows x d_v`).
+    pub values: &'a [f32],
+}
 
 /// An attention executor over a (query, keys, values) triple.
 /// `k`/`v` are row-major; implementations derive the row count from the
@@ -27,9 +43,36 @@ pub trait AttentionBackend: Send {
     /// Compute Eq. 1 for one query. `k`/`v` are row-major n x d.
     fn attend(&mut self, q: &[f32], k: &[f32], v: &[f32]) -> Result<Vec<f32>>;
 
-    /// Batched variant; default loops over rows.
-    fn attend_batch(&mut self, qs: &[Vec<f32>], k: &[f32], v: &[f32]) -> Result<Vec<Vec<f32>>> {
-        qs.iter().map(|q| self.attend(q, k, v)).collect()
+    /// Serve a batch of queries, each against its own K/V view, in one
+    /// dispatch. Items of the same session share the same `keys` /
+    /// `values` borrow, so implementations can detect runs by buffer
+    /// identity and amortise per-memory work (packing, artifact batch
+    /// slots) across them. The default loops [`AttentionBackend::attend`]
+    /// per item, so every backend works unchanged; outputs are returned
+    /// in item order and must be bit-equal to the per-item loop.
+    ///
+    /// # Example
+    ///
+    /// ```
+    /// use camformer::coordinator::backend::{AttendItem, AttentionBackend, FunctionalBackend};
+    ///
+    /// let mut be = FunctionalBackend::new(16, 64);
+    /// // two sessions with distinct key memories, one query each
+    /// let (k_a, v_a) = (vec![1.0f32; 16 * 64], vec![0.5f32; 16 * 64]);
+    /// let (k_b, v_b) = (vec![-1.0f32; 16 * 64], vec![2.0f32; 16 * 64]);
+    /// let q = vec![1.0f32; 64];
+    /// let outs = be
+    ///     .attend_batch(&[
+    ///         AttendItem { query: &q, keys: &k_a, values: &v_a },
+    ///         AttendItem { query: &q, keys: &k_b, values: &v_b },
+    ///     ])
+    ///     .unwrap();
+    /// assert_eq!(outs.len(), 2);
+    /// assert_eq!(outs[0], be.attend(&q, &k_a, &v_a).unwrap());
+    /// assert_eq!(outs[1], be.attend(&q, &k_b, &v_b).unwrap());
+    /// ```
+    fn attend_batch(&mut self, items: &[AttendItem<'_>]) -> Result<Vec<Vec<f32>>> {
+        items.iter().map(|it| self.attend(it.query, it.keys, it.values)).collect()
     }
 
     /// Execution-geometry rows for `rows` valid keys: flexible backends
@@ -55,7 +98,10 @@ pub trait AttentionBackend: Send {
 /// on the K buffer identity — one XNOR+popcount per 64 key bits
 /// thereafter. Identity alone is NOT enough under in-place KV mutation;
 /// the serving layer busts the cache through
-/// [`AttentionBackend::on_kv_update`].
+/// [`AttentionBackend::on_kv_update`]. Cross-session batches arrive with
+/// same-session items adjacent (the server sorts them), so the
+/// single-entry cache re-packs each session's keys at most once per
+/// dispatch.
 pub struct FunctionalBackend {
     pub cfg: AttnConfig,
     packed: Option<(usize, usize, functional::PackedKeys)>, // (ptr, len) identity
@@ -149,15 +195,10 @@ impl PjrtBackend {
             batch: 16,
         })
     }
-}
 
-impl AttentionBackend for PjrtBackend {
-    fn attend(&mut self, q: &[f32], k: &[f32], v: &[f32]) -> Result<Vec<f32>> {
-        let exe = self.engine.load("attn_single_query")?;
-        exe.run_f32(&[q, k, v])
-    }
-
-    fn attend_batch(&mut self, qs: &[Vec<f32>], k: &[f32], v: &[f32]) -> Result<Vec<Vec<f32>>> {
+    /// Serve `qs` against one shared K/V: full `batch`-sized slices go
+    /// through the `attn_batch` artifact, stragglers run single.
+    fn run_shared_kv(&mut self, qs: &[&[f32]], k: &[f32], v: &[f32]) -> Result<Vec<Vec<f32>>> {
         let mut out = Vec::with_capacity(qs.len());
         let mut i = 0;
         while i < qs.len() {
@@ -175,9 +216,46 @@ impl AttentionBackend for PjrtBackend {
                 i += self.batch;
             } else {
                 let exe = self.engine.load("attn_single_query")?;
-                out.push(exe.run_f32(&[&qs[i], k, v])?);
+                out.push(exe.run_f32(&[qs[i], k, v])?);
                 i += 1;
             }
+        }
+        Ok(out)
+    }
+}
+
+impl AttentionBackend for PjrtBackend {
+    fn attend(&mut self, q: &[f32], k: &[f32], v: &[f32]) -> Result<Vec<f32>> {
+        let exe = self.engine.load("attn_single_query")?;
+        exe.run_f32(&[q, k, v])
+    }
+
+    /// Cross-session batches are served run-by-run: consecutive items
+    /// sharing a K/V buffer (same session) form a run that reuses the
+    /// shared-KV artifact path; the artifacts bake the key memory into
+    /// the dispatch, so runs over *different* memories cannot share one
+    /// artifact call.
+    fn attend_batch(&mut self, items: &[AttendItem<'_>]) -> Result<Vec<Vec<f32>>> {
+        let mut out = Vec::with_capacity(items.len());
+        let mut start = 0;
+        while start < items.len() {
+            // run detection must match BOTH buffers: keys identity alone
+            // would silently serve a run that rebinds the values tensor
+            // against the first item's V
+            let (kp, kl) = (items[start].keys.as_ptr(), items[start].keys.len());
+            let (vp, vl) = (items[start].values.as_ptr(), items[start].values.len());
+            let mut end = start + 1;
+            while end < items.len()
+                && items[end].keys.as_ptr() == kp
+                && items[end].keys.len() == kl
+                && items[end].values.as_ptr() == vp
+                && items[end].values.len() == vl
+            {
+                end += 1;
+            }
+            let qs: Vec<&[f32]> = items[start..end].iter().map(|it| it.query).collect();
+            out.extend(self.run_shared_kv(&qs, items[start].keys, items[start].values)?);
+            start = end;
         }
         Ok(out)
     }
@@ -224,11 +302,45 @@ mod tests {
         let k = rng.normal_vec(128 * 64);
         let v = rng.normal_vec(128 * 64);
         let qs: Vec<Vec<f32>> = (0..3).map(|_| rng.normal_vec(64)).collect();
+        let items: Vec<AttendItem<'_>> = qs
+            .iter()
+            .map(|q| AttendItem { query: q, keys: &k, values: &v })
+            .collect();
         let mut f = FunctionalBackend::new(128, 64);
-        let batch = f.attend_batch(&qs, &k, &v).unwrap();
+        let batch = f.attend_batch(&items).unwrap();
         assert_eq!(batch.len(), 3);
         for (i, q) in qs.iter().enumerate() {
             assert_eq!(batch[i], f.attend(q, &k, &v).unwrap());
+        }
+    }
+
+    #[test]
+    fn batch_spanning_sessions_matches_per_item_attends() {
+        // interleaved items over two distinct key memories: the batched
+        // entry point must keep each query bound to its own cache
+        let mut rng = Rng::new(114);
+        let k0 = rng.normal_vec(64 * 64);
+        let v0 = rng.normal_vec(64 * 64);
+        let k1 = rng.normal_vec(64 * 64);
+        let v1 = rng.normal_vec(64 * 64);
+        let qs: Vec<Vec<f32>> = (0..6).map(|_| rng.normal_vec(64)).collect();
+        let items: Vec<AttendItem<'_>> = qs
+            .iter()
+            .enumerate()
+            .map(|(i, q)| {
+                if i % 2 == 0 {
+                    AttendItem { query: q, keys: &k0, values: &v0 }
+                } else {
+                    AttendItem { query: q, keys: &k1, values: &v1 }
+                }
+            })
+            .collect();
+        let mut f = FunctionalBackend::new(64, 64);
+        let outs = f.attend_batch(&items).unwrap();
+        let mut fresh = FunctionalBackend::new(64, 64);
+        for (i, q) in qs.iter().enumerate() {
+            let (k, v) = if i % 2 == 0 { (&k0, &v0) } else { (&k1, &v1) };
+            assert_eq!(outs[i], fresh.attend(q, k, v).unwrap(), "item {i}");
         }
     }
 

@@ -1,9 +1,39 @@
-//! Dynamic batcher: accumulate queries up to the batch size or a deadline,
-//! whichever first — the standard serving trade between utilisation (the
-//! `attn_batch` artifact amortises dispatch) and tail latency.
+//! Dynamic batching for the serving hot path.
+//!
+//! Two layers:
+//!
+//! * [`next_batch`] — the wire batcher: accumulate queued requests up to
+//!   the batch size or a deadline, whichever first. The standard serving
+//!   trade between utilisation and tail latency.
+//! * [`DecodeBatcher`] — the request-aware planner on top: partition one
+//!   wire batch into [`DispatchGroup`]s so that decode steps and
+//!   read-only attends of *different sessions* execute as a single
+//!   backend dispatch against their own (stationary) key memories. This
+//!   is the paper's key-stationary amortisation (Fig. 5): the BA-CAM
+//!   search cost is paid once per dispatch, not once per query.
+//!
+//! # Batch-safety invariant
+//!
+//! A dispatch group executes as "apply every `Decode`'s KV append first
+//! (in program order), then one batched attend over the resulting
+//! caches". That is bit-equal to sequential execution if and only if no
+//! query in the group would observe an append that, sequentially,
+//! happens *after* it. Per session that means:
+//!
+//! * at most one `Decode` per session per group (a second one would leak
+//!   its append into the first's query), and
+//! * a `Decode` must be its session's *first* item in the group (an
+//!   `Attend` enqueued before it must not see its append).
+//!
+//! `Prefill` is a bulk cache replacement and always executes alone, as a
+//! barrier. [`DecodeBatcher::plan`] enforces all three rules by starting
+//! a new group at each violation; everything else coalesces.
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};
+
+use super::server::Request;
+use super::session::SessionId;
 
 /// Batching policy.
 #[derive(Clone, Copy, Debug)]
@@ -48,6 +78,116 @@ pub fn next_batch<T>(rx: &Receiver<T>, policy: &BatchPolicy) -> Option<Vec<T>> {
         }
     }
     Some(batch)
+}
+
+/// One unit of backend work planned by [`DecodeBatcher::plan`].
+#[derive(Debug)]
+pub enum DispatchGroup {
+    /// A `Prefill` barrier: bulk cache replacement, executes alone.
+    Barrier(Request, Instant),
+    /// `Decode` / `Attend` steps of (possibly distinct) sessions that are
+    /// safe to execute as one backend dispatch: all appends first, then a
+    /// single batched attend over each item's own session cache.
+    Batch(Vec<(Request, Instant)>),
+}
+
+/// Request-aware planner for cross-session batched decode.
+///
+/// Wraps the wire-level [`next_batch`] and partitions what it pulls into
+/// [`DispatchGroup`]s under the batch-safety invariant (module docs). A
+/// worker drives it in a loop: every `Batch` group becomes exactly one
+/// [`AttentionBackend::attend_batch`] call.
+///
+/// [`AttentionBackend::attend_batch`]: super::backend::AttentionBackend::attend_batch
+///
+/// # Example
+///
+/// ```
+/// use std::time::Instant;
+/// use camformer::coordinator::batcher::{DecodeBatcher, DispatchGroup};
+/// use camformer::coordinator::Request;
+///
+/// let now = Instant::now();
+/// let step = |id, session| {
+///     (
+///         Request::Decode {
+///             id,
+///             session,
+///             head: 0,
+///             query: vec![0.0; 64],
+///             new_key: vec![0.0; 64],
+///             new_value: vec![0.0; 64],
+///         },
+///         now,
+///     )
+/// };
+///
+/// // one decode step from each of four sessions: a single dispatch
+/// let groups = DecodeBatcher::plan(vec![step(0, 1), step(1, 2), step(2, 3), step(3, 4)]);
+/// assert!(matches!(&groups[..], [DispatchGroup::Batch(items)] if items.len() == 4));
+///
+/// // a session's *second* step must not share a dispatch with its first
+/// let groups = DecodeBatcher::plan(vec![step(0, 1), step(1, 2), step(2, 1)]);
+/// assert_eq!(groups.len(), 2);
+/// ```
+pub struct DecodeBatcher {
+    pub policy: BatchPolicy,
+}
+
+impl DecodeBatcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        DecodeBatcher { policy }
+    }
+
+    /// Pull one wire batch and plan it. `None` when the request channel
+    /// is closed and drained (worker shutdown).
+    pub fn next_groups(&self, rx: &Receiver<(Request, Instant)>) -> Option<Vec<DispatchGroup>> {
+        next_batch(rx, &self.policy).map(Self::plan)
+    }
+
+    /// Partition a wire batch into dispatch groups, preserving arrival
+    /// order, under the batch-safety invariant:
+    ///
+    /// * `Prefill` flushes the open group and becomes a [`DispatchGroup::Barrier`];
+    /// * `Decode` on a session already present in the open group flushes
+    ///   first (its append must stay invisible to the group's queries);
+    /// * `Attend` always joins the open group.
+    pub fn plan(items: Vec<(Request, Instant)>) -> Vec<DispatchGroup> {
+        let mut groups: Vec<DispatchGroup> = Vec::new();
+        let mut open: Vec<(Request, Instant)> = Vec::new();
+        // sessions with an item in `open`; wire batches are small (max 16
+        // by default), so a linear scan beats a hash set here
+        let mut touched: Vec<SessionId> = Vec::new();
+        for (req, enq) in items {
+            match &req {
+                Request::Prefill { .. } => {
+                    if !open.is_empty() {
+                        groups.push(DispatchGroup::Batch(std::mem::take(&mut open)));
+                        touched.clear();
+                    }
+                    groups.push(DispatchGroup::Barrier(req, enq));
+                }
+                Request::Decode { session, .. } => {
+                    if touched.contains(session) {
+                        groups.push(DispatchGroup::Batch(std::mem::take(&mut open)));
+                        touched.clear();
+                    }
+                    touched.push(*session);
+                    open.push((req, enq));
+                }
+                Request::Attend { session, .. } => {
+                    if !touched.contains(session) {
+                        touched.push(*session);
+                    }
+                    open.push((req, enq));
+                }
+            }
+        }
+        if !open.is_empty() {
+            groups.push(DispatchGroup::Batch(open));
+        }
+        groups
+    }
 }
 
 #[cfg(test)]
@@ -120,5 +260,107 @@ mod tests {
             got.extend(b);
         }
         assert_eq!(got, vec![0, 1, 2, 3, 4]);
+    }
+
+    // ---- DecodeBatcher planning ----
+
+    fn decode(id: u64, session: u64) -> (Request, Instant) {
+        (
+            Request::Decode {
+                id,
+                session,
+                head: 0,
+                query: vec![0.0; 4],
+                new_key: vec![0.0; 4],
+                new_value: vec![0.0; 4],
+            },
+            Instant::now(),
+        )
+    }
+
+    fn attend(id: u64, session: u64) -> (Request, Instant) {
+        (Request::Attend { id, session, head: 0, query: vec![0.0; 4] }, Instant::now())
+    }
+
+    fn prefill(id: u64, session: u64) -> (Request, Instant) {
+        (
+            Request::Prefill { id, session, head: 0, keys: vec![0.0; 4], values: vec![0.0; 4] },
+            Instant::now(),
+        )
+    }
+
+    fn batch_sizes(groups: &[DispatchGroup]) -> Vec<usize> {
+        groups
+            .iter()
+            .map(|g| match g {
+                DispatchGroup::Barrier(..) => 0,
+                DispatchGroup::Batch(items) => items.len(),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn distinct_sessions_coalesce_into_one_dispatch() {
+        let groups = DecodeBatcher::plan(vec![
+            decode(0, 10),
+            decode(1, 11),
+            attend(2, 12),
+            decode(3, 13),
+        ]);
+        assert_eq!(batch_sizes(&groups), vec![4]);
+    }
+
+    #[test]
+    fn second_decode_of_a_session_starts_a_new_group() {
+        // round-robin decode over 2 sessions, 2 steps each: two groups
+        let groups =
+            DecodeBatcher::plan(vec![decode(0, 1), decode(1, 2), decode(2, 1), decode(3, 2)]);
+        assert_eq!(batch_sizes(&groups), vec![2, 2]);
+    }
+
+    #[test]
+    fn decode_after_attend_on_same_session_is_a_barrier() {
+        // the attend must not observe the decode's append
+        let groups = DecodeBatcher::plan(vec![attend(0, 1), decode(1, 1)]);
+        assert_eq!(batch_sizes(&groups), vec![1, 1]);
+    }
+
+    #[test]
+    fn attends_after_decode_share_its_group() {
+        // sequentially these attends all see the post-append cache, which
+        // is exactly what appends-first batched execution gives them
+        let groups = DecodeBatcher::plan(vec![decode(0, 1), attend(1, 1), attend(2, 1)]);
+        assert_eq!(batch_sizes(&groups), vec![3]);
+    }
+
+    #[test]
+    fn prefill_is_always_a_barrier() {
+        let groups = DecodeBatcher::plan(vec![decode(0, 1), prefill(1, 2), decode(2, 3)]);
+        assert_eq!(batch_sizes(&groups), vec![1, 0, 1]);
+        assert!(matches!(groups[1], DispatchGroup::Barrier(Request::Prefill { .. }, _)));
+    }
+
+    #[test]
+    fn plan_preserves_arrival_order() {
+        let groups = DecodeBatcher::plan(vec![
+            attend(0, 1),
+            decode(1, 2),
+            attend(2, 1),
+            decode(3, 1), // flush: session 1 already present
+            attend(4, 2),
+        ]);
+        let ids: Vec<Vec<u64>> = groups
+            .iter()
+            .map(|g| match g {
+                DispatchGroup::Barrier(r, _) => vec![r.id()],
+                DispatchGroup::Batch(items) => items.iter().map(|(r, _)| r.id()).collect(),
+            })
+            .collect();
+        assert_eq!(ids, vec![vec![0, 1, 2], vec![3, 4]]);
+    }
+
+    #[test]
+    fn empty_plan_is_empty() {
+        assert!(DecodeBatcher::plan(Vec::new()).is_empty());
     }
 }

@@ -13,6 +13,12 @@
 //! buffers mutate in place, pointer identity does NOT change when content
 //! does: any layer caching a derivative of the keys must be invalidated
 //! explicitly (see `AttentionBackend::on_kv_update`).
+//!
+//! Cross-session batched decode leans on the same property: one dispatch
+//! group borrows the padded views of *several* stores at once (they are
+//! disjoint allocations, all owned by one worker), and the buffer
+//! identity doubles as the session-run marker batched backends use to
+//! amortise per-memory work across a dispatch.
 
 use super::error::ServeError;
 
@@ -79,7 +85,11 @@ impl KvStore {
             return Err(ServeError::DimMismatch { what: "keys", got: keys.len(), want: self.d_k });
         }
         if values.len() % self.d_v != 0 {
-            return Err(ServeError::DimMismatch { what: "values", got: values.len(), want: self.d_v });
+            return Err(ServeError::DimMismatch {
+                what: "values",
+                got: values.len(),
+                want: self.d_v,
+            });
         }
         let n = keys.len() / self.d_k;
         if n != values.len() / self.d_v {
@@ -201,5 +211,4 @@ mod tests {
         s.append(&rng.normal_vec(64), &rng.normal_vec(64)).unwrap();
         assert_eq!(s.padded(64).0.as_ptr(), ptr_before);
     }
-
 }

@@ -15,6 +15,14 @@ pub struct Metrics {
     pub prefills: u64,
     pub decodes: u64,
     pub attends: u64,
+    /// Batched backend dispatches issued (one per dispatch group).
+    pub dispatches: u64,
+    /// Queries served through those dispatches; `dispatched_queries /
+    /// dispatches` is the batch occupancy — how many decode/attend steps
+    /// each BA-CAM search amortised over (1.0 = no amortisation).
+    pub dispatched_queries: u64,
+    /// Largest single dispatch.
+    pub max_occupancy: u64,
 }
 
 impl Metrics {
@@ -27,9 +35,25 @@ impl Metrics {
         self.completed += 1;
     }
 
-    /// Count a coalesced batch (latencies recorded per response).
+    /// Count a coalesced wire batch (latencies recorded per response).
     pub fn note_batch(&mut self) {
         self.batches += 1;
+    }
+
+    /// Count one batched backend dispatch serving `occupancy` queries.
+    pub fn note_dispatch(&mut self, occupancy: usize) {
+        self.dispatches += 1;
+        self.dispatched_queries += occupancy as u64;
+        self.max_occupancy = self.max_occupancy.max(occupancy as u64);
+    }
+
+    /// Mean queries per backend dispatch; 0.0 before the first dispatch.
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.dispatches == 0 {
+            0.0
+        } else {
+            self.dispatched_queries as f64 / self.dispatches as f64
+        }
     }
 
     pub fn record_error(&mut self) {
@@ -44,6 +68,9 @@ impl Metrics {
         self.prefills += other.prefills;
         self.decodes += other.decodes;
         self.attends += other.attends;
+        self.dispatches += other.dispatches;
+        self.dispatched_queries += other.dispatched_queries;
+        self.max_occupancy = self.max_occupancy.max(other.max_occupancy);
     }
 
     pub fn mean_latency_us(&self) -> f64 {
@@ -79,13 +106,16 @@ impl Metrics {
 
     pub fn summary(&self, window: Duration) -> String {
         format!(
-            "completed={} (prefill={} decode={} attend={}) batches={} errors={} \
+            "completed={} (prefill={} decode={} attend={}) batches={} \
+             occupancy={:.2}x (max {}) errors={} \
              thruput={:.1}/s mean={:.1}us p50={:.1}us p95={:.1}us p99={:.1}us",
             self.completed,
             self.prefills,
             self.decodes,
             self.attends,
             self.batches,
+            self.mean_occupancy(),
+            self.max_occupancy,
             self.errors,
             self.throughput_per_s(window),
             self.mean_latency_us(),
@@ -128,6 +158,23 @@ mod tests {
         assert_eq!(a.errors, 1);
         assert_eq!(a.decodes, 1);
         assert_eq!(a.attends, 1);
+    }
+
+    #[test]
+    fn occupancy_tracks_queries_per_dispatch() {
+        let mut m = Metrics::new();
+        assert_eq!(m.mean_occupancy(), 0.0);
+        m.note_dispatch(8);
+        m.note_dispatch(2);
+        assert_eq!(m.dispatches, 2);
+        assert_eq!(m.dispatched_queries, 10);
+        assert_eq!(m.max_occupancy, 8);
+        assert!((m.mean_occupancy() - 5.0).abs() < 1e-12);
+        let mut other = Metrics::new();
+        other.note_dispatch(12);
+        m.merge(&other);
+        assert_eq!(m.dispatches, 3);
+        assert_eq!(m.max_occupancy, 12);
     }
 
     #[test]

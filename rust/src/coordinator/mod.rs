@@ -15,34 +15,65 @@
 //! * [`server`]    — [`CamformerServer`]: `Prefill` / `Decode` / `Attend`
 //!   request enum, capacity-aware typed admission, worker-per-(shard,
 //!   head) routing, shutdown;
-//! * [`batcher`]   — dynamic batching of incoming requests (batch = 16
-//!   uses the `attn_batch` artifact; stragglers run single);
+//! * [`batcher`]   — cross-session batched decode: the request-aware
+//!   [`DecodeBatcher`] plans each wire batch into dispatch groups so
+//!   decode steps and read-only attends of *different* sessions on the
+//!   same head execute as one backend dispatch (appends applied first,
+//!   then a single batched attend — the paper's key-stationary
+//!   amortisation, Fig. 5). `Prefill` is a barrier; a session's second
+//!   decode step starts a new group, so batched execution stays
+//!   bit-equal to sequential dispatch;
 //! * [`backend`]   — pluggable execution: PJRT artifacts (the real hot
 //!   path, `pjrt` feature), the pure-Rust functional model, or the
-//!   cycle-annotated architecture simulator;
+//!   cycle-annotated architecture simulator; all take whole dispatch
+//!   groups through [`AttentionBackend::attend_batch`];
 //! * [`error`]     — [`ServeError`]: every admission / serving failure as
-//!   a typed variant;
-//! * [`metrics`]   — per-op counters, latency percentiles (p50/p95/p99)
-//!   and throughput for the examples and benches.
+//!   a typed variant, reported per request (one refused batch member
+//!   never poisons its batch-mates);
+//! * [`metrics`]   — per-op counters, batch-occupancy (queries amortised
+//!   per backend dispatch), latency percentiles (p50/p95/p99) and
+//!   throughput for the examples and benches.
 //!
-//! # Serving API sketch
+//! # Serving API
 //!
-//! ```ignore
-//! let cfg = ServerConfig { shards: 2, heads: 4, kv_capacity: 1024, ..Default::default() };
-//! let server = CamformerServer::start(cfg, |_| FunctionalBackend::new(1024, 64));
+//! ```
+//! use camformer::coordinator::{CamformerServer, FunctionalBackend, Request, ServerConfig};
+//!
+//! # fn main() -> Result<(), camformer::coordinator::ServeError> {
+//! let cfg = ServerConfig { shards: 1, heads: 1, kv_capacity: 64, ..Default::default() };
+//! let server = CamformerServer::start(cfg, |_| FunctionalBackend::new(64, 64));
+//!
+//! // prefill a 4-token prompt, then run one live decode step against it
+//! let (keys, values) = (vec![1.0_f32; 4 * 64], vec![0.5_f32; 4 * 64]);
 //! server.submit(Request::Prefill { id: 0, session: 7, head: 0, keys, values })?;
-//! server.submit(Request::Decode  { id: 1, session: 7, head: 0, query, new_key, new_value })?;
-//! let resp = server.collect(2);            // acks + attention outputs
-//! let (metrics, window) = server.shutdown(); // p50/p99, per-op counts
+//! server.submit(Request::Decode {
+//!     id: 1,
+//!     session: 7,
+//!     head: 0,
+//!     query: vec![1.0; 64],
+//!     new_key: vec![-1.0; 64],
+//!     new_value: vec![0.25; 64],
+//! })?;
+//!
+//! let mut responses = server.collect(2); // acks + attention outputs
+//! responses.sort_by_key(|r| r.id);
+//! assert_eq!(responses[1].output().len(), 64);
+//! assert_eq!(responses[1].seq_len(), 5); // the decode appended one row
+//!
+//! let (metrics, _window) = server.shutdown(); // p50/p99, per-op counts
+//! assert_eq!(metrics.prefills, 1);
+//! assert_eq!(metrics.decodes, 1);
+//! # Ok(())
+//! # }
 //! ```
 //!
 //! # Test matrix
 //!
-//! | layer       | kind        | where |
-//! |-------------|-------------|-------|
-//! | batcher/kv/metrics/session | unit | in-module `#[cfg(test)]` |
+//! | layer | kind | where |
+//! |-------|------|-------|
+//! | batcher (incl. dispatch planning), kv, metrics, session | unit | in-module `#[cfg(test)]` |
 //! | scorers, masks, BIMV tiles | property (seeded, `util::check`) | `accuracy::functional`, `bimv::engine` |
-//! | decode serving (≥2 sessions, live append, bit-equality vs functional reference) | integration | `rust/tests/decode_serving.rs` |
+//! | decode serving (interleaved sessions, live append, batched vs sequential bit-equality, per-item admission failures) | integration | `rust/tests/decode_serving.rs` |
 //! | serving flows over functional/arch backends | integration | `rust/tests/coordinator_integration.rs` |
 //! | PJRT artifacts vs functional model | golden (skips without artifacts) | `rust/tests/runtime_integration.rs` |
 //!
@@ -56,7 +87,8 @@ pub mod metrics;
 pub mod server;
 pub mod session;
 
-pub use backend::{AttentionBackend, FunctionalBackend};
+pub use backend::{AttendItem, AttentionBackend, FunctionalBackend};
+pub use batcher::{BatchPolicy, DecodeBatcher, DispatchGroup};
 pub use error::ServeError;
 pub use kv_store::KvStore;
 pub use metrics::Metrics;

@@ -6,7 +6,7 @@
 //! one worker thread per head, so a request routes session id -> shard ->
 //! head worker. Each worker owns its backend (PJRT clients are not shared
 //! across threads), the live KV state of every session assigned to it
-//! (one [`KvStore`] per session), and a dynamic batcher. Responses flow
+//! (one [`KvStore`] per session), and a [`DecodeBatcher`]. Responses flow
 //! back over a shared channel keyed by request id.
 //!
 //! Request lifecycle:
@@ -16,18 +16,28 @@
 //!   the query over the grown cache — one autoregressive step;
 //! * [`Request::Attend`] is a read-only query over the current cache.
 //!
+//! Execution is cross-session batched: the worker pulls a wire batch,
+//! plans it into dispatch groups (see [`DecodeBatcher`]), applies every
+//! group's KV appends first, then runs *one* batched attend over
+//! zero-copy padded views of each item's own session cache. Outputs are
+//! bit-equal to sequential dispatch; the planner's batch-safety invariant
+//! guarantees no query can observe an append that sequentially happens
+//! after it.
+//!
 //! Admission is capacity-aware and typed ([`ServeError`]): dimension and
 //! provisioning violations are rejected synchronously at `submit`;
 //! state-dependent failures (unknown session, per-worker session limit,
-//! exhausted KV capacity) come back inside the [`Response`].
+//! exhausted KV capacity) come back inside the [`Response`] — and are
+//! strictly per-request, so one refused item never poisons its
+//! batch-mates.
 
 use std::collections::HashMap;
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use super::backend::AttentionBackend;
-use super::batcher::{next_batch, BatchPolicy};
+use super::backend::{AttendItem, AttentionBackend};
+use super::batcher::{BatchPolicy, DecodeBatcher, DispatchGroup};
 use super::error::ServeError;
 use super::kv_store::KvStore;
 use super::metrics::Metrics;
@@ -389,143 +399,190 @@ fn padded_rows<B: AttentionBackend>(
     Ok(rows)
 }
 
-fn attend_one<B: AttentionBackend>(
-    backend: &mut B,
-    cfg: &ServerConfig,
-    s: &Session,
-    q: &[f32],
-) -> Result<Vec<f32>, ServeError> {
-    let rows = padded_rows(backend, cfg, s.store.len())?;
-    let (k, v, _) = s.store.padded(rows);
-    backend.attend(q, k, v).map_err(|e| ServeError::Backend(format!("{e:#}")))
-}
-
-fn attend_batch_on<B: AttentionBackend>(
-    backend: &mut B,
-    cfg: &ServerConfig,
-    s: &Session,
-    qs: &[Vec<f32>],
-) -> Result<Vec<Vec<f32>>, ServeError> {
-    let rows = padded_rows(backend, cfg, s.store.len())?;
-    let (k, v, _) = s.store.padded(rows);
-    backend
-        .attend_batch(qs, k, v)
-        .map_err(|e| ServeError::Backend(format!("{e:#}")))
-}
-
-/// Execute one mutating request (Prefill/Decode) against the worker's
-/// session table.
-fn handle_mutating<B: AttentionBackend>(
+/// Execute a `Prefill` barrier against the worker's session table.
+fn handle_prefill<B: AttentionBackend>(
     backend: &mut B,
     cfg: &ServerConfig,
     sessions: &mut HashMap<SessionId, Session>,
-    req: Request,
+    session: SessionId,
+    keys: Vec<f32>,
+    values: Vec<f32>,
 ) -> Result<Output, ServeError> {
-    match req {
-        Request::Prefill { session, keys, values, .. } => {
-            if !sessions.contains_key(&session) {
-                if sessions.len() >= cfg.max_sessions {
-                    return Err(ServeError::SessionLimit { max_sessions: cfg.max_sessions });
-                }
-                sessions.insert(
-                    session,
-                    Session::new(session, KvStore::new(cfg.kv_capacity, cfg.d_k, cfg.d_v)),
-                );
-            }
-            let s = sessions.get_mut(&session).unwrap();
-            s.store.load(&keys, &values)?;
-            backend.on_kv_update();
-            Ok(Output { output: Vec::new(), seq_len: s.store.len() })
+    if !sessions.contains_key(&session) {
+        if sessions.len() >= cfg.max_sessions {
+            return Err(ServeError::SessionLimit { max_sessions: cfg.max_sessions });
         }
-        Request::Decode { session, query, new_key, new_value, .. } => {
-            let s = sessions
-                .get_mut(&session)
-                .ok_or(ServeError::UnknownSession { session })?;
-            // admission for the *grown* cache runs before the append so a
-            // refused Decode leaves the session state untouched (a client
-            // retry must not double-append its token)
-            padded_rows(backend, cfg, s.store.len() + 1)?;
-            s.store.append(&new_key, &new_value)?;
-            backend.on_kv_update();
-            let out = attend_one(backend, cfg, s, &query)?;
-            Ok(Output { output: out, seq_len: s.store.len() })
-        }
-        Request::Attend { .. } => unreachable!("Attend is handled by flush_attends"),
+        sessions.insert(
+            session,
+            Session::new(session, KvStore::new(cfg.kv_capacity, cfg.d_k, cfg.d_v)),
+        );
     }
+    let s = sessions.get_mut(&session).unwrap();
+    s.store.load(&keys, &values)?;
+    backend.on_kv_update();
+    Ok(Output { output: Vec::new(), seq_len: s.store.len() })
 }
 
-/// Execute a run of read-only Attends that share a session as one backend
-/// batch.
-#[allow(clippy::too_many_arguments)]
-fn flush_attends<B: AttentionBackend>(
+/// A query surviving the append phase, waiting for the batched attend.
+struct PendingQuery {
+    id: u64,
+    session: SessionId,
+    op: Op,
+    query: Vec<f32>,
+    enq: Instant,
+}
+
+/// Execute one cross-session dispatch group: apply every `Decode`'s KV
+/// append first (in program order), then run a *single* batched attend
+/// over zero-copy padded views of each item's own session cache.
+///
+/// Failures are strictly per-request: an item refused at admission
+/// (unknown session, exhausted capacity) is answered with its typed
+/// error and dropped from the dispatch, and the rest of the batch
+/// proceeds untouched. Only a backend execution failure — which has no
+/// per-item attribution — fails the whole dispatch.
+fn execute_batch<B: AttentionBackend>(
     backend: &mut B,
     cfg: &ServerConfig,
-    sessions: &HashMap<SessionId, Session>,
-    session: SessionId,
-    pending: &mut Vec<(u64, Vec<f32>, Instant)>,
+    sessions: &mut HashMap<SessionId, Session>,
+    items: Vec<(Request, Instant)>,
     head: usize,
     metrics: &mut Metrics,
     resp_tx: &Sender<Response>,
 ) {
+    // Phase 1 — the mutating half of each Decode, in program order. The
+    // planner guarantees at most one append per session per group, so no
+    // query below can observe a "future" append.
+    let mut pending: Vec<PendingQuery> = Vec::with_capacity(items.len());
+    let mut mutated = false;
+    for (req, enq) in items {
+        match req {
+            Request::Decode { id, session, query, new_key, new_value, .. } => {
+                let appended = match sessions.get_mut(&session) {
+                    None => Err(ServeError::UnknownSession { session }),
+                    Some(s) => {
+                        // admission for the *grown* cache runs before the
+                        // append so a refused Decode leaves the session
+                        // untouched (a client retry must not double-append)
+                        padded_rows(backend, cfg, s.store.len() + 1)
+                            .and_then(|_| s.store.append(&new_key, &new_value))
+                    }
+                };
+                match appended {
+                    Ok(()) => {
+                        mutated = true;
+                        pending.push(PendingQuery { id, session, op: Op::Decode, query, enq });
+                    }
+                    Err(e) => deliver(
+                        resp_tx,
+                        metrics,
+                        Op::Decode,
+                        Response { id, session, head, result: Err(e), latency: enq.elapsed() },
+                    ),
+                }
+            }
+            Request::Attend { id, session, query, .. } => {
+                if sessions.contains_key(&session) {
+                    pending.push(PendingQuery { id, session, op: Op::Attend, query, enq });
+                } else {
+                    deliver(
+                        resp_tx,
+                        metrics,
+                        Op::Attend,
+                        Response {
+                            id,
+                            session,
+                            head,
+                            result: Err(ServeError::UnknownSession { session }),
+                            latency: enq.elapsed(),
+                        },
+                    );
+                }
+            }
+            Request::Prefill { .. } => unreachable!("prefills are Barrier groups"),
+        }
+    }
+    if mutated {
+        // the KV buffers mutate in place; identity-cached backend state is
+        // stale for every session touched above
+        backend.on_kv_update();
+    }
     if pending.is_empty() {
         return;
     }
-    let items = std::mem::take(pending);
-    match sessions.get(&session) {
-        None => {
-            for (id, _, enq) in items {
+
+    // Phase 2 — bind each surviving query to its session's padded view.
+    // Same-session items are made adjacent (stable sort by session) so
+    // identity-cached backends pack each key memory at most once per
+    // dispatch; response identity rides on the pending index.
+    let mut order: Vec<usize> = (0..pending.len()).collect();
+    order.sort_by_key(|&i| pending[i].session);
+    let mut batch: Vec<AttendItem<'_>> = Vec::with_capacity(pending.len());
+    let mut metas: Vec<(usize, usize)> = Vec::with_capacity(pending.len()); // (idx, seq_len)
+    for &i in &order {
+        let p = &pending[i];
+        let s = sessions.get(&p.session).expect("admission checked in phase 1");
+        match padded_rows(backend, cfg, s.store.len()) {
+            Ok(rows) => {
+                let (k, v, _) = s.store.padded(rows);
+                batch.push(AttendItem { query: &p.query, keys: k, values: v });
+                metas.push((i, s.store.len()));
+            }
+            Err(e) => deliver(
+                resp_tx,
+                metrics,
+                p.op,
+                Response {
+                    id: p.id,
+                    session: p.session,
+                    head,
+                    result: Err(e),
+                    latency: p.enq.elapsed(),
+                },
+            ),
+        }
+    }
+    if batch.is_empty() {
+        return;
+    }
+
+    // Phase 3 — one backend dispatch for the whole group. Occupancy is
+    // only recorded for dispatches that actually served their queries.
+    match backend.attend_batch(&batch) {
+        Ok(outs) => {
+            metrics.note_dispatch(batch.len());
+            for ((i, seq_len), out) in metas.into_iter().zip(outs) {
+                let p = &pending[i];
                 deliver(
                     resp_tx,
                     metrics,
-                    Op::Attend,
+                    p.op,
                     Response {
-                        id,
-                        session,
+                        id: p.id,
+                        session: p.session,
                         head,
-                        result: Err(ServeError::UnknownSession { session }),
-                        latency: enq.elapsed(),
+                        result: Ok(Output { output: out, seq_len }),
+                        latency: p.enq.elapsed(),
                     },
                 );
             }
         }
-        Some(s) => {
-            // the queries are already owned — split them out rather than
-            // deep-cloning on the hot path
-            let (metas, qs): (Vec<(u64, Instant)>, Vec<Vec<f32>>) =
-                items.into_iter().map(|(id, q, enq)| ((id, enq), q)).unzip();
-            match attend_batch_on(backend, cfg, s, &qs) {
-                Ok(outs) => {
-                    for ((id, enq), out) in metas.into_iter().zip(outs) {
-                        deliver(
-                            resp_tx,
-                            metrics,
-                            Op::Attend,
-                            Response {
-                                id,
-                                session,
-                                head,
-                                result: Ok(Output { output: out, seq_len: s.store.len() }),
-                                latency: enq.elapsed(),
-                            },
-                        );
-                    }
-                }
-                Err(e) => {
-                    for (id, enq) in metas {
-                        deliver(
-                            resp_tx,
-                            metrics,
-                            Op::Attend,
-                            Response {
-                                id,
-                                session,
-                                head,
-                                result: Err(e.clone()),
-                                latency: enq.elapsed(),
-                            },
-                        );
-                    }
-                }
+        Err(e) => {
+            let err = ServeError::Backend(format!("{e:#}"));
+            for (i, _) in metas {
+                let p = &pending[i];
+                deliver(
+                    resp_tx,
+                    metrics,
+                    p.op,
+                    Response {
+                        id: p.id,
+                        session: p.session,
+                        head,
+                        result: Err(err.clone()),
+                        latency: p.enq.elapsed(),
+                    },
+                );
             }
         }
     }
@@ -541,67 +598,37 @@ fn worker_loop<B: AttentionBackend>(
     let head = worker % cfg.heads;
     let mut metrics = Metrics::new();
     let mut sessions: HashMap<SessionId, Session> = HashMap::new();
-    while let Some(batch) = next_batch(&rx, &cfg.batch) {
+    let batcher = DecodeBatcher::new(cfg.batch);
+    while let Some(groups) = batcher.next_groups(&rx) {
         metrics.note_batch();
-        // Consecutive read-only Attends on the same session coalesce into
-        // one backend batch; mutating ops (Prefill/Decode) are barriers,
-        // so per-session program order is preserved.
-        let mut pending: Vec<(u64, Vec<f32>, Instant)> = Vec::new();
-        let mut pending_session: SessionId = 0;
-        for (req, enq) in batch {
-            match req {
-                Request::Attend { id, session, query, .. } => {
-                    if !pending.is_empty() && pending_session != session {
-                        flush_attends(
-                            &mut backend,
-                            &cfg,
-                            &sessions,
-                            pending_session,
-                            &mut pending,
-                            head,
-                            &mut metrics,
-                            &resp_tx,
-                        );
-                    }
-                    pending_session = session;
-                    pending.push((id, query, enq));
-                }
-                other => {
-                    flush_attends(
-                        &mut backend,
-                        &cfg,
-                        &sessions,
-                        pending_session,
-                        &mut pending,
-                        head,
-                        &mut metrics,
-                        &resp_tx,
-                    );
-                    let (id, session) = (other.id(), other.session());
-                    let op = match other {
-                        Request::Prefill { .. } => Op::Prefill,
-                        _ => Op::Decode,
+        for group in groups {
+            match group {
+                DispatchGroup::Barrier(req, enq) => {
+                    let (id, session) = (req.id(), req.session());
+                    let result = match req {
+                        Request::Prefill { keys, values, .. } => {
+                            handle_prefill(&mut backend, &cfg, &mut sessions, session, keys, values)
+                        }
+                        _ => unreachable!("only prefills become Barrier groups"),
                     };
-                    let result = handle_mutating(&mut backend, &cfg, &mut sessions, other);
                     deliver(
                         &resp_tx,
                         &mut metrics,
-                        op,
+                        Op::Prefill,
                         Response { id, session, head, result, latency: enq.elapsed() },
                     );
                 }
+                DispatchGroup::Batch(items) => execute_batch(
+                    &mut backend,
+                    &cfg,
+                    &mut sessions,
+                    items,
+                    head,
+                    &mut metrics,
+                    &resp_tx,
+                ),
             }
         }
-        flush_attends(
-            &mut backend,
-            &cfg,
-            &sessions,
-            pending_session,
-            &mut pending,
-            head,
-            &mut metrics,
-            &resp_tx,
-        );
     }
     metrics
 }
@@ -830,6 +857,76 @@ mod tests {
         assert!(resps[2].is_ok(), "worker must survive a refused decode");
         assert_eq!(resps[2].seq_len(), 16, "refused decode must not grow the cache");
         server.shutdown();
+    }
+
+    #[test]
+    fn cross_session_batch_keeps_queries_on_their_own_cache() {
+        // two sessions on ONE worker with contrasting memories; their
+        // decode steps interleave and (usually) share a dispatch — every
+        // output must still be computed against its own session's cache
+        let n = 64usize;
+        let cfg = ServerConfig { kv_capacity: n, ..Default::default() };
+        let quantum = cfg.pad_quantum;
+        let server = functional_server(cfg);
+        let mut rng = Rng::new(125);
+        let mut mirrors = [KvStore::new(n, 64, 64), KvStore::new(n, 64, 64)];
+        for (si, sid) in [2u64, 4u64].iter().enumerate() {
+            let keys = rng.normal_vec(16 * 64);
+            let values = rng.normal_vec(16 * 64);
+            mirrors[si].load(&keys, &values).unwrap();
+            server
+                .submit(Request::Prefill {
+                    id: 100 + si as u64,
+                    session: *sid,
+                    head: 0,
+                    keys,
+                    values,
+                })
+                .unwrap();
+        }
+        let mut expected: Vec<Vec<f32>> = Vec::new();
+        let mut id = 0u64;
+        for _step in 0..8 {
+            for (si, sid) in [2u64, 4u64].iter().enumerate() {
+                let q = rng.normal_vec(64);
+                let nk = rng.normal_vec(64);
+                let nv = rng.normal_vec(64);
+                mirrors[si].append(&nk, &nv).unwrap();
+                let rows = mirrors[si].len().div_ceil(quantum) * quantum;
+                let (kp, vp, _) = mirrors[si].padded(rows);
+                let mut reference = FunctionalBackend::new(n, 64);
+                use crate::coordinator::backend::AttentionBackend as _;
+                expected.push(reference.attend(&q, kp, vp).unwrap());
+                server
+                    .submit(Request::Decode {
+                        id,
+                        session: *sid,
+                        head: 0,
+                        query: q,
+                        new_key: nk,
+                        new_value: nv,
+                    })
+                    .unwrap();
+                id += 1;
+            }
+        }
+        let mut resps = server.collect(2 + 16);
+        resps.retain(|r| r.id < 100);
+        resps.sort_by_key(|r| r.id);
+        for (r, want) in resps.iter().zip(&expected) {
+            assert_eq!(r.output(), &want[..], "request {}", r.id);
+        }
+        let (m, _) = server.shutdown();
+        assert_eq!(m.errors, 0);
+        assert_eq!(m.decodes, 16);
+        assert!(m.dispatches >= 1);
+        assert!(m.mean_occupancy() >= 1.0);
+        server_metrics_sane(&m);
+    }
+
+    fn server_metrics_sane(m: &Metrics) {
+        assert!(m.dispatched_queries >= m.dispatches);
+        assert!(m.max_occupancy as f64 >= m.mean_occupancy());
     }
 
     #[test]

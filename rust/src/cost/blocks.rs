@@ -14,9 +14,9 @@
 pub struct BlockCost {
     /// Silicon area [mm^2] at 45 nm.
     pub area_mm2: f64,
-    /// Dynamic energy per operation [J] (op defined per block below).
+    /// Dynamic energy per operation \[J\] (op defined per block below).
     pub energy_per_op: f64,
-    /// Leakage + clock power [W] when instantiated.
+    /// Leakage + clock power \[W\] when instantiated.
     pub static_w: f64,
 }
 
@@ -154,7 +154,8 @@ mod tests {
     fn top32_is_area_hog_among_logic() {
         // Fig. 8: the Top-32 module is the single largest non-SRAM block
         let t32 = top32_sorter().area_mm2;
-        for b in [ba_cam_array(), sar_adc(), top2_sorter(), softmax_engine(), bf16_mac(), dma_mc()] {
+        for b in [ba_cam_array(), sar_adc(), top2_sorter(), softmax_engine(), bf16_mac(), dma_mc()]
+        {
             assert!(t32 > b.area_mm2);
         }
     }

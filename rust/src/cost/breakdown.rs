@@ -26,7 +26,7 @@ fn to_components(raw: Vec<(&'static str, f64)>) -> Vec<Component> {
         .collect()
 }
 
-/// Per-query energy by component [J] (Fig. 8 left).
+/// Per-query energy by component \[J\] (Fig. 8 left).
 pub fn energy_breakdown(cfg: &SystemConfig) -> Vec<Component> {
     let ops = OpCounts::for_query(cfg);
     to_components(vec![

@@ -4,7 +4,7 @@
 //! factors, which is how the paper moves 65 nm synthesis numbers to the
 //! 45 nm comparison plane of Table II and projects 45 -> 22 nm in Fig. 10.
 
-/// Process node [nm].
+/// Process node \[nm\].
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Node {
     N65,
@@ -58,7 +58,7 @@ pub fn scale_area(area_mm2: f64, from: Node, to: Node) -> f64 {
     area_mm2 * (to.nm() / from.nm()).powi(2)
 }
 
-/// Scale dynamic energy [J] between nodes via the Stillmaker factors.
+/// Scale dynamic energy \[J\] between nodes via the Stillmaker factors.
 pub fn scale_energy(energy_j: f64, from: Node, to: Node) -> f64 {
     energy_j * to.energy_factor() / from.energy_factor()
 }

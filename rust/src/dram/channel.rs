@@ -4,11 +4,11 @@
 /// HBM3 channel timing/geometry (JESD238 ballpark; t_RC from [33]).
 #[derive(Clone, Copy, Debug)]
 pub struct DramConfig {
-    /// Row cycle time [ns] — min time between ACT of the same bank.
+    /// Row cycle time \[ns\] — min time between ACT of the same bank.
     pub t_rc_ns: f64,
-    /// CAS latency for an open-row hit [ns].
+    /// CAS latency for an open-row hit \[ns\].
     pub t_cas_ns: f64,
-    /// Page (row buffer) size [bytes]. Paper: 8 KB.
+    /// Page (row buffer) size \[bytes\]. Paper: 8 KB.
     pub page_bytes: usize,
     /// Banks per channel.
     pub banks: usize,
@@ -48,7 +48,7 @@ pub struct HbmChannel {
     pub cfg: DramConfig,
     /// Open row id per bank (None = precharged).
     open_rows: Vec<Option<u64>>,
-    /// Earliest time each bank can activate again [ns].
+    /// Earliest time each bank can activate again \[ns\].
     bank_ready_ns: Vec<f64>,
     /// Running totals.
     pub bytes_read: u64,
@@ -77,7 +77,7 @@ impl HbmChannel {
     }
 
     /// Read `bytes` at `addr` starting no earlier than `now_ns`.
-    /// Returns (completion time [ns], access kind).
+    /// Returns (completion time \[ns\], access kind).
     pub fn read(&mut self, now_ns: f64, addr: u64, bytes: usize) -> (f64, AccessKind) {
         let (bank, row) = self.locate(addr);
         let transfer_ns = bytes as f64 / (self.cfg.peak_gbps * 1e9) * 1e9;
@@ -106,7 +106,7 @@ impl HbmChannel {
         (done, kind)
     }
 
-    /// Total DRAM access energy so far [J].
+    /// Total DRAM access energy so far \[J\].
     pub fn energy_j(&self) -> f64 {
         self.bytes_read as f64 * 8.0 * self.cfg.energy_nj_per_bit * 1e-9
     }

@@ -10,9 +10,9 @@ use super::channel::{DramConfig, HbmChannel};
 pub struct PrefetchStats {
     pub issued: usize,
     pub bytes: u64,
-    /// Latest completion time [ns] relative to issue start.
+    /// Latest completion time \[ns\] relative to issue start.
     pub last_done_ns: f64,
-    /// How much of the fetch latency the pipeline could NOT hide [ns]
+    /// How much of the fetch latency the pipeline could NOT hide \[ns\]
     /// (0 = fully hidden).
     pub exposed_ns: f64,
 }

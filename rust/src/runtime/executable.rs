@@ -28,7 +28,11 @@ impl LoadedExecutable {
     /// Execute with one s32 input (classifier tokens) -> f32 output.
     pub fn run_s32(&self, tokens: &[i32]) -> Result<Vec<f32>> {
         if self.entry.inputs.len() != 1 {
-            bail!("{}: expected 1 input, manifest has {}", self.entry.name, self.entry.inputs.len());
+            bail!(
+                "{}: expected 1 input, manifest has {}",
+                self.entry.name,
+                self.entry.inputs.len()
+            );
         }
         let spec = &self.entry.inputs[0];
         if spec.dtype != "s32" || tokens.len() != spec.elements() {

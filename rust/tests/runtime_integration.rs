@@ -67,7 +67,8 @@ fn attn_single_query_matches_functional_model() {
     let v: Vec<f32> = rng.normal_vec(1024 * 64);
     let got = exe.run_f32(&[&q, &k, &v]).expect("run");
 
-    let want = functional::camformer_attention(&q, &k, &v, &functional::AttnConfig::paper(1024, 64));
+    let want =
+        functional::camformer_attention(&q, &k, &v, &functional::AttnConfig::paper(1024, 64));
     for (i, (g, w)) in got.iter().zip(&want).enumerate() {
         assert!(
             (*g - *w).abs() < 1e-2,
