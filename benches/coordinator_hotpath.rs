@@ -7,7 +7,7 @@ use std::time::Duration;
 
 use camformer::arch::softmax::SoftmaxEngine;
 use camformer::coordinator::backend::FunctionalBackend;
-use camformer::coordinator::batcher::BatchPolicy;
+use camformer::coordinator::batcher::{BatchPolicy, PlanMode};
 use camformer::coordinator::server::{CamformerServer, Request, ServerConfig};
 use camformer::util::bench::Bencher;
 use camformer::util::{bf16, rng::Rng};
@@ -35,10 +35,7 @@ fn main() {
                 ServerConfig {
                     heads,
                     kv_capacity: n,
-                    batch: BatchPolicy {
-                        max_batch: 16,
-                        max_wait: Duration::from_micros(200),
-                    },
+                    batch: BatchPolicy::bounds(16, Duration::from_micros(200)),
                     ..Default::default()
                 },
                 |_| FunctionalBackend::new(n, 64),
@@ -84,10 +81,7 @@ fn main() {
                 ServerConfig {
                     kv_capacity: capacity,
                     max_sessions: sessions,
-                    batch: BatchPolicy {
-                        max_batch: 16,
-                        max_wait: Duration::from_micros(200),
-                    },
+                    batch: BatchPolicy::bounds(16, Duration::from_micros(200)),
                     ..Default::default()
                 },
                 |_| FunctionalBackend::new(capacity, 64),
@@ -129,9 +123,10 @@ fn main() {
         });
     }
 
-    // macro: cross-session batched decode — the tentpole comparison. The
-    // same interleaved multi-session decode stream runs once with every
-    // request dispatched alone (max_batch = 1) and once through the
+    // macro: cross-session batched decode (pinned to conservative
+    // planning — the ISSUE 2 comparison). The same interleaved
+    // multi-session decode stream runs once with every request
+    // dispatched alone (max_batch = 1) and once through the
     // DecodeBatcher (max_batch = 16), which coalesces one step from each
     // session into a single backend dispatch (key-stationary
     // amortisation, Fig. 5). Payloads are pre-generated so the submit
@@ -170,7 +165,7 @@ fn main() {
                     ServerConfig {
                         kv_capacity: capacity,
                         max_sessions: sessions,
-                        batch: BatchPolicy { max_batch, max_wait: Duration::from_millis(2) },
+                        batch: BatchPolicy::conservative(max_batch, Duration::from_millis(2)),
                         ..Default::default()
                     },
                     |_| FunctionalBackend::new(capacity, 64),
@@ -218,6 +213,92 @@ fn main() {
                     "interleaved-session decode must amortise dispatches \
                      (occupancy {best_occupancy:.2}x)"
                 );
+            }
+        }
+    }
+
+    // macro: speculative multi-step fusion (ISSUE 3) — a deep
+    // single-session decode burst, the dominant decode-serving shape.
+    // Conservative planning flushes at every step of the burst and
+    // degrades to occupancy 1; speculative fusion packs many steps of
+    // the one session into each dispatch (each attending over its own
+    // causal prefix view) and must exceed occupancy 1. Bit-equality of
+    // the two modes is proven by rust/tests/batcher_fuzz.rs, not here.
+    {
+        let steps = 64usize;
+        let capacity = 256usize;
+        let prefill_rows = 64usize;
+        let mut payload_rng = Rng::new(13);
+        let prefill = (
+            payload_rng.normal_vec(prefill_rows * 64),
+            payload_rng.normal_vec(prefill_rows * 64),
+        );
+        let decodes: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = (0..steps)
+            .map(|_| {
+                let q = payload_rng.normal_vec(64);
+                let nk = payload_rng.normal_vec(64);
+                let nv = payload_rng.normal_vec(64);
+                (q, nk, nv)
+            })
+            .collect();
+        let modes = [("conservative", PlanMode::Conservative), ("fused", PlanMode::Speculative)];
+        for (label, mode) in modes {
+            let batch = BatchPolicy { max_batch: 16, max_wait: Duration::from_millis(2), mode };
+            let mut bc = Bencher::coarse();
+            let mut best_occupancy = 0.0f64;
+            bc.bench(&format!("deep_burst_{label}_1sess_{steps}steps"), || {
+                let server = CamformerServer::start(
+                    ServerConfig {
+                        kv_capacity: capacity,
+                        max_sessions: 1,
+                        batch,
+                        ..Default::default()
+                    },
+                    |_| FunctionalBackend::new(capacity, 64),
+                );
+                server
+                    .submit(Request::Prefill {
+                        id: 100_000,
+                        session: 0,
+                        head: 0,
+                        keys: prefill.0.clone(),
+                        values: prefill.1.clone(),
+                    })
+                    .unwrap();
+                for (id, (q, nk, nv)) in decodes.iter().enumerate() {
+                    server
+                        .submit(Request::Decode {
+                            id: id as u64,
+                            session: 0,
+                            head: 0,
+                            query: q.clone(),
+                            new_key: nk.clone(),
+                            new_value: nv.clone(),
+                        })
+                        .unwrap();
+                }
+                let resps = server.collect(steps + 1);
+                assert_eq!(resps.len(), steps + 1);
+                assert!(resps.iter().all(|r| r.is_ok()));
+                let (m, w) = server.shutdown();
+                best_occupancy = best_occupancy.max(m.mean_occupancy());
+                (m.decodes, w)
+            });
+            println!(
+                "      deep_burst_{label}: batch occupancy {best_occupancy:.2}x \
+                 (queries per backend dispatch, best iteration)"
+            );
+            match mode {
+                PlanMode::Speculative => assert!(
+                    best_occupancy > 1.0,
+                    "deep single-session burst must fuse multiple steps per dispatch \
+                     (occupancy {best_occupancy:.2}x)"
+                ),
+                PlanMode::Conservative => assert!(
+                    (best_occupancy - 1.0).abs() < 1e-9,
+                    "conservative planning serves a deep burst one step per dispatch \
+                     (occupancy {best_occupancy:.2}x)"
+                ),
             }
         }
     }

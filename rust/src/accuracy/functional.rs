@@ -109,10 +109,24 @@ impl PackedKeys {
 
     /// Scores for one query against the packed memory.
     pub fn scores(&self, q: &[f32], adc_bits: u32) -> Vec<f64> {
+        self.scores_prefix(q, adc_bits, self.n)
+    }
+
+    /// As [`PackedKeys::scores`], but rows at or beyond `valid_rows` are
+    /// scored as the pad pattern (all-(+1) keys, `KvStore::KEY_PAD`)
+    /// regardless of what the packed buffer holds there. This is the
+    /// speculative-fusion prefix contract: a fused decode burst applies
+    /// every KV append up front, so the buffer behind an early step's
+    /// view already holds that session's *later* keys — which that step,
+    /// sequentially, would have seen as pre-written pad rows. A pad row
+    /// matches exactly the query's non-negative lanes, so its score is
+    /// computed analytically, bit-identical to packing a literal pad row.
+    pub fn scores_prefix(&self, q: &[f32], adc_bits: u32, valid_rows: usize) -> Vec<f64> {
         assert_eq!(q.len(), self.d_k);
+        assert!(valid_rows <= self.n, "prefix {valid_rows} beyond packed n {}", self.n);
         let qp = pack_signs(q, self.words);
         let mut out = Vec::with_capacity(self.n);
-        for r in 0..self.n {
+        for r in 0..valid_rows {
             let row = &self.bits[r * self.words..(r + 1) * self.words];
             let mut matches = 0u32;
             for w in 0..self.words {
@@ -123,6 +137,13 @@ impl PackedKeys {
                 matches += eq.count_ones();
             }
             out.push(quantize_matches(matches, self.d_k, adc_bits));
+        }
+        if valid_rows < self.n {
+            // an all-ones pad row turns !(qp ^ row) into qp itself, and
+            // pack_signs never sets bits past d_k, so the match count is
+            // just the query's non-negative-lane popcount
+            let pad_matches: u32 = qp.iter().map(|w| w.count_ones()).sum();
+            out.resize(self.n, quantize_matches(pad_matches, self.d_k, adc_bits));
         }
         out
     }
@@ -135,10 +156,27 @@ pub fn camformer_attention_packed(
     v: &[f32],
     cfg: &AttnConfig,
 ) -> Vec<f32> {
-    let scores = keys.scores(q, cfg.adc_bits);
+    camformer_attention_packed_prefix(q, keys, v, cfg, cfg.n)
+}
+
+/// Eq. 1 against a pre-packed key memory of which only the first
+/// `valid_rows` rows are live for this query (its causal prefix under
+/// speculative multi-step fusion). Rows at or beyond the prefix behave
+/// exactly like the pre-written pad rows a sequential dispatch would
+/// have seen there — pad-pattern scores, zero V contribution — so a
+/// fused burst's per-step outputs are bit-equal to stepping one
+/// dispatch at a time.
+pub fn camformer_attention_packed_prefix(
+    q: &[f32],
+    keys: &PackedKeys,
+    v: &[f32],
+    cfg: &AttnConfig,
+    valid_rows: usize,
+) -> Vec<f32> {
+    let scores = keys.scores_prefix(q, cfg.adc_bits, valid_rows);
     let mask = two_stage_topk_mask(&scores, cfg.group, cfg.stage1_k, cfg.final_k);
     let a = lut_softmax(&scores, &mask, cfg.d_k);
-    weighted_sum_bf16(&a, v, cfg.n, cfg.d_k)
+    weighted_sum_bf16_prefix(&a, v, cfg.n, cfg.d_k, valid_rows)
 }
 
 /// The pre-optimisation scorer (float inner product): kept as the §Perf
@@ -307,12 +345,33 @@ pub fn exact_attention(q: &[f32], k: &[f32], v: &[f32], n: usize, d_k: usize) ->
 }
 
 fn weighted_sum_bf16(a: &[f32], v: &[f32], n: usize, d_v: usize) -> Vec<f32> {
+    weighted_sum_bf16_prefix(a, v, n, d_v, n)
+}
+
+/// BF16 contextualization where rows at or beyond `valid_rows` read a
+/// zero V row (what a sequential dispatch's pad rows hold) instead of
+/// the buffer contents. A selected pad row still adds an explicit
+/// `ar * 0.0` per lane so even the sign of a zero accumulator matches
+/// sequential execution bit for bit.
+fn weighted_sum_bf16_prefix(
+    a: &[f32],
+    v: &[f32],
+    n: usize,
+    d_v: usize,
+    valid_rows: usize,
+) -> Vec<f32> {
     let mut out = vec![0f32; d_v];
     for r in 0..n {
         if a[r] == 0.0 {
             continue; // sparse: only top-k rows contribute
         }
         let ar = bf16::round(a[r]);
+        if r >= valid_rows {
+            for c in 0..d_v {
+                out[c] += ar * 0.0;
+            }
+            continue;
+        }
         for c in 0..d_v {
             out[c] += ar * bf16::round(v[r * d_v + c]);
         }
@@ -375,6 +434,56 @@ mod tests {
             camformer_attention(&q, &k, &v, &cfg),
             camformer_attention_packed(&q, &packed, &v, &cfg)
         );
+    }
+
+    #[test]
+    fn property_prefix_scores_match_literal_pad_rows() {
+        // masking rows at/beyond the prefix analytically must be
+        // bit-identical to scoring a buffer whose tail literally holds
+        // the all-(+1) pad pattern, whatever the masked rows contain
+        check("prefix scores = literal pad", 40, |rng| {
+            let d_k = [16usize, 48, 64, 96][rng.index(4)];
+            let n = 1 + rng.index(48);
+            let prefix = rng.index(n + 1);
+            let q = rng.normal_vec(d_k);
+            let k = rng.normal_vec(n * d_k); // rows >= prefix: live garbage
+            let mut k_pad = k.clone();
+            for x in &mut k_pad[prefix * d_k..] {
+                *x = 1.0; // KvStore::KEY_PAD
+            }
+            let bits = [4u32, 6, 8][rng.index(3)];
+            let masked = PackedKeys::new(&k, d_k).scores_prefix(&q, bits, prefix);
+            let literal = PackedKeys::new(&k_pad, d_k).scores(&q, bits);
+            assert_eq!(masked, literal, "d_k={d_k} n={n} prefix={prefix}");
+        });
+    }
+
+    #[test]
+    fn property_prefix_attention_matches_literal_pad_buffer() {
+        // end-to-end Eq. 1 over a prefix view == Eq. 1 over a buffer
+        // with a literal pad tail (keys all +1, values all zero)
+        check("prefix attention = literal pad", 30, |rng| {
+            let d = 64usize;
+            let n = 16 * (1 + rng.index(6));
+            let prefix = rng.index(n + 1);
+            let q = rng.normal_vec(d);
+            let k = rng.normal_vec(n * d);
+            let v = rng.normal_vec(n * d);
+            let (mut k_pad, mut v_pad) = (k.clone(), v.clone());
+            for x in &mut k_pad[prefix * d..] {
+                *x = 1.0;
+            }
+            for x in &mut v_pad[prefix * d..] {
+                *x = 0.0;
+            }
+            let cfg = AttnConfig::paper(n, d);
+            let packed = PackedKeys::new(&k, d);
+            assert_eq!(
+                camformer_attention_packed_prefix(&q, &packed, &v, &cfg, prefix),
+                camformer_attention(&q, &k_pad, &v_pad, &cfg),
+                "n={n} prefix={prefix}"
+            );
+        });
     }
 
     #[test]

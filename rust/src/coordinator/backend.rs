@@ -13,7 +13,11 @@
 //! re-construction. The batched entry point
 //! ([`AttentionBackend::attend_batch`]) takes each query bound to *its
 //! own* session's K/V view, so one dispatch can span decode steps of
-//! different sessions (key-stationary amortisation, Fig. 5).
+//! different sessions (key-stationary amortisation, Fig. 5) — and, since
+//! speculative multi-step fusion, several decode steps of the *same*
+//! session: each item carries the causal prefix length it is allowed to
+//! see ([`AttendItem::prefix_rows`]), and rows at or beyond it must
+//! behave as pad.
 
 use anyhow::Result;
 use std::path::Path;
@@ -33,6 +37,12 @@ pub struct AttendItem<'a> {
     pub keys: &'a [f32],
     /// Row-major padded values (`rows x d_v`).
     pub values: &'a [f32],
+    /// Leading rows live for THIS query — its causal prefix under
+    /// speculative multi-step fusion. Rows at or beyond it must be
+    /// treated as pad (`KEY_PAD` keys, zero values). The serving layer
+    /// guarantees such rows literally ARE pad unless the backend reports
+    /// [`AttentionBackend::supports_prefix_views`].
+    pub prefix_rows: usize,
 }
 
 /// An attention executor over a (query, keys, values) triple.
@@ -46,10 +56,13 @@ pub trait AttentionBackend: Send {
     /// Serve a batch of queries, each against its own K/V view, in one
     /// dispatch. Items of the same session share the same `keys` /
     /// `values` borrow, so implementations can detect runs by buffer
-    /// identity and amortise per-memory work (packing, artifact batch
-    /// slots) across them. The default loops [`AttentionBackend::attend`]
-    /// per item, so every backend works unchanged; outputs are returned
-    /// in item order and must be bit-equal to the per-item loop.
+    /// identity (plus [`AttendItem::prefix_rows`]) and amortise
+    /// per-memory work (packing, artifact batch slots) across them. The
+    /// default loops [`AttentionBackend::attend`] per item, so every
+    /// backend works unchanged — the serving layer only hands a default
+    /// implementation buffers whose beyond-prefix rows are literal pad;
+    /// outputs are returned in item order and must be bit-equal to
+    /// sequential per-item dispatch.
     ///
     /// # Example
     ///
@@ -63,8 +76,8 @@ pub trait AttentionBackend: Send {
     /// let q = vec![1.0f32; 64];
     /// let outs = be
     ///     .attend_batch(&[
-    ///         AttendItem { query: &q, keys: &k_a, values: &v_a },
-    ///         AttendItem { query: &q, keys: &k_b, values: &v_b },
+    ///         AttendItem { query: &q, keys: &k_a, values: &v_a, prefix_rows: 16 },
+    ///         AttendItem { query: &q, keys: &k_b, values: &v_b, prefix_rows: 16 },
     ///     ])
     ///     .unwrap();
     /// assert_eq!(outs.len(), 2);
@@ -73,6 +86,16 @@ pub trait AttentionBackend: Send {
     /// ```
     fn attend_batch(&mut self, items: &[AttendItem<'_>]) -> Result<Vec<Vec<f32>>> {
         items.iter().map(|it| self.attend(it.query, it.keys, it.values)).collect()
+    }
+
+    /// Whether this backend natively honours [`AttendItem::prefix_rows`]
+    /// when the buffers hold live (non-pad) data beyond the prefix — the
+    /// zero-copy fused-burst path. When `false` (the default), the
+    /// serving layer materialises a literal-pad copy of the causal
+    /// prefix before dispatching such items, so the default per-item
+    /// [`AttentionBackend::attend`] loop stays bit-correct.
+    fn supports_prefix_views(&self) -> bool {
+        false
     }
 
     /// Execution-geometry rows for `rows` valid keys: flexible backends
@@ -134,6 +157,33 @@ impl AttentionBackend for FunctionalBackend {
         cfg.n = k.len() / cfg.d_k; // geometry follows the (padded) cache
         let packed = self.packed_for(k);
         Ok(functional::camformer_attention_packed(q, packed, v, &cfg))
+    }
+
+    /// Serves each item over its own causal prefix: scoring and V reads
+    /// are masked at [`AttendItem::prefix_rows`] (see
+    /// `functional::camformer_attention_packed_prefix`), bit-equal to a
+    /// literal-pad tail. Fused multi-step groups therefore stay zero-copy
+    /// — items of one session share a buffer (and the packed-key cache)
+    /// while attending over different prefixes of it.
+    fn attend_batch(&mut self, items: &[AttendItem<'_>]) -> Result<Vec<Vec<f32>>> {
+        let mut out = Vec::with_capacity(items.len());
+        for it in items {
+            let mut cfg = self.cfg;
+            cfg.n = it.keys.len() / cfg.d_k;
+            let packed = self.packed_for(it.keys);
+            out.push(functional::camformer_attention_packed_prefix(
+                it.query,
+                packed,
+                it.values,
+                &cfg,
+                it.prefix_rows.min(cfg.n),
+            ));
+        }
+        Ok(out)
+    }
+
+    fn supports_prefix_views(&self) -> bool {
+        true
     }
 
     fn on_kv_update(&mut self) {
@@ -231,25 +281,31 @@ impl AttentionBackend for PjrtBackend {
     }
 
     /// Cross-session batches are served run-by-run: consecutive items
-    /// sharing a K/V buffer (same session) form a run that reuses the
-    /// shared-KV artifact path; the artifacts bake the key memory into
-    /// the dispatch, so runs over *different* memories cannot share one
-    /// artifact call.
+    /// sharing a K/V buffer (same session) AND the same causal prefix
+    /// form a run that reuses the shared-KV artifact path; the artifacts
+    /// bake the key memory into the dispatch, so runs over *different*
+    /// memories — or different prefixes of one memory, which fused
+    /// bursts produce — cannot share one artifact call. (This backend
+    /// does not claim [`AttentionBackend::supports_prefix_views`], so
+    /// the serving layer hands it literal-pad buffers per prefix.)
     fn attend_batch(&mut self, items: &[AttendItem<'_>]) -> Result<Vec<Vec<f32>>> {
         let mut out = Vec::with_capacity(items.len());
         let mut start = 0;
         while start < items.len() {
             // run detection must match BOTH buffers: keys identity alone
             // would silently serve a run that rebinds the values tensor
-            // against the first item's V
+            // against the first item's V — and since speculative fusion,
+            // the prefix too: same-KV-same-prefix, not just same-KV
             let (kp, kl) = (items[start].keys.as_ptr(), items[start].keys.len());
             let (vp, vl) = (items[start].values.as_ptr(), items[start].values.len());
+            let prefix = items[start].prefix_rows;
             let mut end = start + 1;
             while end < items.len()
                 && items[end].keys.as_ptr() == kp
                 && items[end].keys.len() == kl
                 && items[end].values.as_ptr() == vp
                 && items[end].values.len() == vl
+                && items[end].prefix_rows == prefix
             {
                 end += 1;
             }
@@ -296,6 +352,24 @@ mod tests {
         assert!(a.last_latency.is_some());
     }
 
+    /// Backend that keeps the trait's default `attend_batch` (and thus
+    /// default `supports_prefix_views` = false).
+    struct DefaultLoop(FunctionalBackend);
+
+    impl AttentionBackend for DefaultLoop {
+        fn attend(&mut self, q: &[f32], k: &[f32], v: &[f32]) -> Result<Vec<f32>> {
+            self.0.attend(q, k, v)
+        }
+
+        fn on_kv_update(&mut self) {
+            self.0.on_kv_update();
+        }
+
+        fn name(&self) -> &'static str {
+            "default-loop"
+        }
+    }
+
     #[test]
     fn default_batch_loops() {
         let mut rng = Rng::new(111);
@@ -304,9 +378,10 @@ mod tests {
         let qs: Vec<Vec<f32>> = (0..3).map(|_| rng.normal_vec(64)).collect();
         let items: Vec<AttendItem<'_>> = qs
             .iter()
-            .map(|q| AttendItem { query: q, keys: &k, values: &v })
+            .map(|q| AttendItem { query: q, keys: &k, values: &v, prefix_rows: 128 })
             .collect();
-        let mut f = FunctionalBackend::new(128, 64);
+        let mut f = DefaultLoop(FunctionalBackend::new(128, 64));
+        assert!(!f.supports_prefix_views());
         let batch = f.attend_batch(&items).unwrap();
         assert_eq!(batch.len(), 3);
         for (i, q) in qs.iter().enumerate() {
@@ -329,9 +404,9 @@ mod tests {
             .enumerate()
             .map(|(i, q)| {
                 if i % 2 == 0 {
-                    AttendItem { query: q, keys: &k0, values: &v0 }
+                    AttendItem { query: q, keys: &k0, values: &v0, prefix_rows: 64 }
                 } else {
-                    AttendItem { query: q, keys: &k1, values: &v1 }
+                    AttendItem { query: q, keys: &k1, values: &v1, prefix_rows: 64 }
                 }
             })
             .collect();
@@ -341,6 +416,39 @@ mod tests {
         for (i, q) in qs.iter().enumerate() {
             let (k, v) = if i % 2 == 0 { (&k0, &v0) } else { (&k1, &v1) };
             assert_eq!(outs[i], fresh.attend(q, k, v).unwrap(), "item {i}");
+        }
+    }
+
+    #[test]
+    fn prefix_masked_batch_matches_literal_pad_buffers() {
+        // a fused burst's view: one buffer holding the FINAL cache, three
+        // items attending over growing causal prefixes of it — each must
+        // equal a plain attend over a buffer whose tail is literal pad
+        use crate::coordinator::kv_store::KEY_PAD;
+        let mut rng = Rng::new(115);
+        let rows = 32usize;
+        let k = rng.normal_vec(rows * 64);
+        let v = rng.normal_vec(rows * 64);
+        let qs: Vec<Vec<f32>> = (0..3).map(|_| rng.normal_vec(64)).collect();
+        let prefixes = [18usize, 19, 20];
+        let items: Vec<AttendItem<'_>> = qs
+            .iter()
+            .zip(prefixes)
+            .map(|(q, p)| AttendItem { query: q, keys: &k, values: &v, prefix_rows: p })
+            .collect();
+        let mut f = FunctionalBackend::new(rows, 64);
+        assert!(f.supports_prefix_views());
+        let outs = f.attend_batch(&items).unwrap();
+        for (i, p) in prefixes.into_iter().enumerate() {
+            let (mut kp, mut vp) = (k.clone(), v.clone());
+            for x in &mut kp[p * 64..] {
+                *x = KEY_PAD;
+            }
+            for x in &mut vp[p * 64..] {
+                *x = 0.0;
+            }
+            let mut fresh = FunctionalBackend::new(rows, 64);
+            assert_eq!(outs[i], fresh.attend(&qs[i], &kp, &vp).unwrap(), "prefix {p}");
         }
     }
 

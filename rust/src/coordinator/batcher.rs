@@ -17,17 +17,38 @@
 //! A dispatch group executes as "apply every `Decode`'s KV append first
 //! (in program order), then one batched attend over the resulting
 //! caches". That is bit-equal to sequential execution if and only if no
-//! query in the group would observe an append that, sequentially,
-//! happens *after* it. Per session that means:
+//! query in the group observes an append that, sequentially, happens
+//! *after* it. The two planning modes ([`PlanMode`]) discharge that
+//! obligation differently:
 //!
-//! * at most one `Decode` per session per group (a second one would leak
-//!   its append into the first's query), and
-//! * a `Decode` must be its session's *first* item in the group (an
-//!   `Attend` enqueued before it must not see its append).
+//! * [`PlanMode::Conservative`] ([`DecodeBatcher::plan`]) *avoids* the
+//!   hazard: at most one `Decode` per session per group (a second one
+//!   would leak its append into the first's query), and a `Decode` must
+//!   be its session's *first* item in the group (an `Attend` enqueued
+//!   before it must not see its append). Every query then attends over
+//!   its session's final in-group cache, which equals its sequential
+//!   view. The cost: a deep single-session decode burst — the dominant
+//!   decode-serving shape — flushes at every step and degrades to
+//!   dispatch occupancy 1, forfeiting the paper's key-stationary
+//!   amortisation (Fig. 5).
 //!
-//! `Prefill` is a bulk cache replacement and always executes alone, as a
-//! barrier. [`DecodeBatcher::plan`] enforces all three rules by starting
-//! a new group at each violation; everything else coalesces.
+//! * [`PlanMode::Speculative`] ([`DecodeBatcher::plan_speculative`], the
+//!   default) *represents* the hazard instead of splitting on it:
+//!   several decode steps of one session may share a group, because the
+//!   worker records each query's **causal prefix** — the session KV
+//!   length at the query's own program position — while applying the
+//!   appends in program order, and each query then attends over a
+//!   prefix view of its session's store
+//!   (`KvStore::padded_prefix_view`, `AttendItem::prefix_rows`). Rows
+//!   at or beyond a query's prefix are scored and contextualised
+//!   exactly as the pre-written pad rows they replace, so every step's
+//!   output is bit-equal to sequential dispatch; mid-burst admission
+//!   refusals leave the store untouched and never poison batch-mates,
+//!   and a failed dispatch rolls all speculative appends back.
+//!
+//! `Prefill` is a bulk cache replacement (it can shrink the cache, which
+//! no prefix view can represent) and always executes alone, as a
+//! barrier, in both modes.
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};
@@ -35,11 +56,25 @@ use std::time::{Duration, Instant};
 use super::server::Request;
 use super::session::SessionId;
 
+/// How [`DecodeBatcher`] fuses one wire batch into dispatch groups (see
+/// the module docs for the batch-safety invariant each mode upholds).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlanMode {
+    /// Split at every same-session hazard: at most one `Decode` per
+    /// session per group, `Decode` first. Deep per-session bursts run at
+    /// occupancy 1.
+    Conservative,
+    /// Speculative multi-step fusion: fuse same-session steps into one
+    /// dispatch; each query attends over its own causal prefix view.
+    Speculative,
+}
+
 /// Batching policy.
 #[derive(Clone, Copy, Debug)]
 pub struct BatchPolicy {
     pub max_batch: usize,
     pub max_wait: Duration,
+    pub mode: PlanMode,
 }
 
 impl Default for BatchPolicy {
@@ -47,7 +82,21 @@ impl Default for BatchPolicy {
         BatchPolicy {
             max_batch: 16, // the attn_batch artifact's geometry
             max_wait: Duration::from_millis(2),
+            mode: PlanMode::Speculative,
         }
+    }
+}
+
+impl BatchPolicy {
+    /// Policy with the given wire-batch bounds and the default
+    /// (speculative) planning mode.
+    pub fn bounds(max_batch: usize, max_wait: Duration) -> Self {
+        BatchPolicy { max_batch, max_wait, ..Default::default() }
+    }
+
+    /// Same bounds, conservative planning.
+    pub fn conservative(max_batch: usize, max_wait: Duration) -> Self {
+        BatchPolicy { max_batch, max_wait, mode: PlanMode::Conservative }
     }
 }
 
@@ -94,8 +143,9 @@ pub enum DispatchGroup {
 /// Request-aware planner for cross-session batched decode.
 ///
 /// Wraps the wire-level [`next_batch`] and partitions what it pulls into
-/// [`DispatchGroup`]s under the batch-safety invariant (module docs). A
-/// worker drives it in a loop: every `Batch` group becomes exactly one
+/// [`DispatchGroup`]s under the batch-safety invariant (module docs) of
+/// the policy's [`PlanMode`]. A worker drives it in a loop: every
+/// `Batch` group becomes exactly one
 /// [`AttentionBackend::attend_batch`] call.
 ///
 /// [`AttentionBackend::attend_batch`]: super::backend::AttentionBackend::attend_batch
@@ -126,9 +176,15 @@ pub enum DispatchGroup {
 /// let groups = DecodeBatcher::plan(vec![step(0, 1), step(1, 2), step(2, 3), step(3, 4)]);
 /// assert!(matches!(&groups[..], [DispatchGroup::Batch(items)] if items.len() == 4));
 ///
-/// // a session's *second* step must not share a dispatch with its first
+/// // conservatively, a session's *second* step must not share a
+/// // dispatch with its first…
 /// let groups = DecodeBatcher::plan(vec![step(0, 1), step(1, 2), step(2, 1)]);
 /// assert_eq!(groups.len(), 2);
+///
+/// // …while speculative fusion serves even a deep single-session burst
+/// // as ONE dispatch (each step attends over its own causal prefix)
+/// let groups = DecodeBatcher::plan_speculative(vec![step(0, 1), step(1, 1), step(2, 1)]);
+/// assert!(matches!(&groups[..], [DispatchGroup::Batch(items)] if items.len() == 3));
 /// ```
 pub struct DecodeBatcher {
     pub policy: BatchPolicy,
@@ -139,14 +195,47 @@ impl DecodeBatcher {
         DecodeBatcher { policy }
     }
 
-    /// Pull one wire batch and plan it. `None` when the request channel
-    /// is closed and drained (worker shutdown).
+    /// Pull one wire batch and plan it under the policy's mode. `None`
+    /// when the request channel is closed and drained (worker shutdown).
     pub fn next_groups(&self, rx: &Receiver<(Request, Instant)>) -> Option<Vec<DispatchGroup>> {
-        next_batch(rx, &self.policy).map(Self::plan)
+        next_batch(rx, &self.policy).map(|items| Self::plan_mode(self.policy.mode, items))
     }
 
-    /// Partition a wire batch into dispatch groups, preserving arrival
-    /// order, under the batch-safety invariant:
+    /// Plan under an explicit [`PlanMode`].
+    pub fn plan_mode(mode: PlanMode, items: Vec<(Request, Instant)>) -> Vec<DispatchGroup> {
+        match mode {
+            PlanMode::Conservative => Self::plan(items),
+            PlanMode::Speculative => Self::plan_speculative(items),
+        }
+    }
+
+    /// Speculative multi-step fusion: partition a wire batch into
+    /// dispatch groups, preserving arrival order, splitting ONLY at
+    /// `Prefill` barriers — same-session decode runs fuse, and the
+    /// worker's prefix views carry the causal ordering (module docs).
+    pub fn plan_speculative(items: Vec<(Request, Instant)>) -> Vec<DispatchGroup> {
+        let mut groups: Vec<DispatchGroup> = Vec::new();
+        let mut open: Vec<(Request, Instant)> = Vec::new();
+        for (req, enq) in items {
+            match &req {
+                Request::Prefill { .. } => {
+                    if !open.is_empty() {
+                        groups.push(DispatchGroup::Batch(std::mem::take(&mut open)));
+                    }
+                    groups.push(DispatchGroup::Barrier(req, enq));
+                }
+                _ => open.push((req, enq)),
+            }
+        }
+        if !open.is_empty() {
+            groups.push(DispatchGroup::Batch(open));
+        }
+        groups
+    }
+
+    /// Conservative planning: partition a wire batch into dispatch
+    /// groups, preserving arrival order, splitting at every same-session
+    /// hazard:
     ///
     /// * `Prefill` flushes the open group and becomes a [`DispatchGroup::Barrier`];
     /// * `Decode` on a session already present in the open group flushes
@@ -202,7 +291,7 @@ mod tests {
         for i in 0..20 {
             tx.send(i).unwrap();
         }
-        let policy = BatchPolicy { max_batch: 16, max_wait: Duration::from_millis(50) };
+        let policy = BatchPolicy::bounds(16, Duration::from_millis(50));
         let b = next_batch(&rx, &policy).unwrap();
         assert_eq!(b.len(), 16);
         let b2 = next_batch(&rx, &policy).unwrap();
@@ -217,7 +306,7 @@ mod tests {
     fn times_out_with_partial_batch() {
         let (tx, rx) = mpsc::channel();
         tx.send(1).unwrap();
-        let policy = BatchPolicy { max_batch: 16, max_wait: Duration::from_millis(10) };
+        let policy = BatchPolicy::bounds(16, Duration::from_millis(10));
         let t0 = Instant::now();
         let b = next_batch(&rx, &policy).unwrap();
         assert_eq!(b.len(), 1);
@@ -253,7 +342,7 @@ mod tests {
             // tx drops here: the channel disconnects once drained
         });
         h.join().unwrap();
-        let policy = BatchPolicy { max_batch: 3, max_wait: Duration::from_secs(5) };
+        let policy = BatchPolicy::bounds(3, Duration::from_secs(5));
         let mut got = Vec::new();
         while let Some(b) = next_batch(&rx, &policy) {
             assert!(b.len() <= 3);
@@ -362,5 +451,61 @@ mod tests {
     #[test]
     fn empty_plan_is_empty() {
         assert!(DecodeBatcher::plan(Vec::new()).is_empty());
+        assert!(DecodeBatcher::plan_speculative(Vec::new()).is_empty());
+    }
+
+    // ---- speculative fusion ----
+
+    #[test]
+    fn speculative_fuses_deep_single_session_burst() {
+        let groups = DecodeBatcher::plan_speculative(vec![
+            decode(0, 1),
+            decode(1, 1),
+            decode(2, 1),
+            decode(3, 1),
+        ]);
+        assert_eq!(batch_sizes(&groups), vec![4]);
+    }
+
+    #[test]
+    fn speculative_fuses_attend_before_and_after_decode() {
+        // representable with prefix views: the leading attend's prefix
+        // stops before the appends, the trailing one sees them
+        let groups = DecodeBatcher::plan_speculative(vec![
+            attend(0, 1),
+            decode(1, 1),
+            decode(2, 1),
+            attend(3, 1),
+        ]);
+        assert_eq!(batch_sizes(&groups), vec![4]);
+    }
+
+    #[test]
+    fn speculative_still_treats_prefill_as_barrier() {
+        let groups = DecodeBatcher::plan_speculative(vec![
+            decode(0, 1),
+            decode(1, 1),
+            prefill(2, 1),
+            decode(3, 1),
+        ]);
+        assert_eq!(batch_sizes(&groups), vec![2, 0, 1]);
+        assert!(matches!(groups[1], DispatchGroup::Barrier(Request::Prefill { .. }, _)));
+    }
+
+    #[test]
+    fn plan_mode_dispatches_to_the_right_planner() {
+        let items = || vec![decode(0, 1), decode(1, 1)];
+        let cons = DecodeBatcher::plan_mode(PlanMode::Conservative, items());
+        assert_eq!(batch_sizes(&cons), vec![1, 1]);
+        let spec = DecodeBatcher::plan_mode(PlanMode::Speculative, items());
+        assert_eq!(batch_sizes(&spec), vec![2]);
+    }
+
+    #[test]
+    fn policy_constructors_set_mode() {
+        let b = BatchPolicy::bounds(4, Duration::from_millis(1));
+        assert_eq!((b.max_batch, b.mode), (4, PlanMode::Speculative));
+        let c = BatchPolicy::conservative(4, Duration::from_millis(1));
+        assert_eq!((c.max_batch, c.mode), (4, PlanMode::Conservative));
     }
 }

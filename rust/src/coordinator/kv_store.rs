@@ -19,6 +19,12 @@
 //! disjoint allocations, all owned by one worker), and the buffer
 //! identity doubles as the session-run marker batched backends use to
 //! amortise per-memory work across a dispatch.
+//!
+//! Speculative multi-step fusion adds the third view kind: a fused burst
+//! applies every step's append up front, then each step attends over
+//! [`KvStore::padded_prefix_view`] — the causal prefix at its own program
+//! position, with the later appends still resident behind it (and
+//! [`KvStore::truncate`] rolls them back if the dispatch fails).
 
 use super::error::ServeError;
 
@@ -120,17 +126,47 @@ impl KvStore {
     /// path). Requires `len <= pad_to <= capacity`; the pad rows are
     /// pre-written, so this is a pure borrow.
     pub fn padded(&self, pad_to: usize) -> (&[f32], &[f32], usize) {
+        self.padded_prefix_view(self.len, pad_to)
+    }
+
+    /// Length-bounded execution view for speculative multi-step fusion:
+    /// the first `prefix` rows are the causal prefix one query is allowed
+    /// to see, and the slices run out to `pad_to` rows. Requires
+    /// `prefix <= len` and `prefix <= pad_to <= capacity`; still a pure
+    /// borrow.
+    ///
+    /// When `prefix < len` (a fused burst applied later appends already),
+    /// the rows in `[prefix, len)` hold live data, NOT the pad pattern —
+    /// the consumer must honour the prefix, either natively
+    /// (`AttentionBackend::supports_prefix_views`) or by letting the
+    /// serving layer materialise a literal-pad copy. `padded` is the
+    /// full-prefix special case.
+    pub fn padded_prefix_view(&self, prefix: usize, pad_to: usize) -> (&[f32], &[f32], usize) {
+        assert!(prefix <= self.len, "prefix {prefix} beyond live length {}", self.len);
         assert!(
-            pad_to >= self.len && pad_to <= self.capacity,
-            "pad_to {pad_to} outside [{}, {}]",
-            self.len,
+            pad_to >= prefix && pad_to <= self.capacity,
+            "pad_to {pad_to} outside [{prefix}, {}]",
             self.capacity
         );
         (
             &self.keys[..pad_to * self.d_k],
             &self.values[..pad_to * self.d_v],
-            self.len,
+            prefix,
         )
+    }
+
+    /// Roll back to `len` rows (the failed-dispatch path of speculative
+    /// fusion): discards rows `[len, self.len)` and restores the padding
+    /// pattern over them so later `padded*` views stay pure borrows.
+    pub fn truncate(&mut self, len: usize) {
+        assert!(len <= self.len, "truncate to {len} beyond live length {}", self.len);
+        for x in &mut self.keys[len * self.d_k..self.len * self.d_k] {
+            *x = KEY_PAD;
+        }
+        for x in &mut self.values[len * self.d_v..self.len * self.d_v] {
+            *x = 0.0;
+        }
+        self.len = len;
     }
 
     /// The valid (unpadded) key rows.
@@ -187,6 +223,50 @@ mod tests {
         assert!(kp[2 * 2..].iter().all(|&x| x == KEY_PAD));
         assert!(vp[2 * 2..].iter().all(|&x| x == 0.0));
         assert!(s.load(&vec![0.0; 2 * 9], &vec![0.0; 2 * 9]).is_err());
+    }
+
+    #[test]
+    fn prefix_view_bounds_and_content() {
+        let mut s = KvStore::new(8, 2, 2);
+        for i in 0..5 {
+            s.append(&[i as f32; 2], &[-(i as f32); 2]).unwrap();
+        }
+        // prefix 3 padded to 8: the first 3 rows are the causal prefix;
+        // rows 3..5 expose the speculative appends, rows 5..8 the pad
+        let (k, v, n) = s.padded_prefix_view(3, 8);
+        assert_eq!(n, 3);
+        assert_eq!(k.len(), 16);
+        assert_eq!(&k[..6], &[0.0, 0.0, 1.0, 1.0, 2.0, 2.0]);
+        assert_eq!(&k[6..10], &[3.0, 3.0, 4.0, 4.0]);
+        assert!(k[10..].iter().all(|&x| x == KEY_PAD));
+        assert!(v[10..].iter().all(|&x| x == 0.0));
+        // padded() is the full-prefix special case
+        assert_eq!(s.padded(8), s.padded_prefix_view(5, 8));
+    }
+
+    #[test]
+    #[should_panic(expected = "beyond live length")]
+    fn prefix_view_beyond_live_length_panics() {
+        KvStore::new(4, 2, 2).padded_prefix_view(1, 4);
+    }
+
+    #[test]
+    fn truncate_restores_pad_pattern() {
+        let mut s = KvStore::new(4, 2, 2);
+        for _ in 0..3 {
+            s.append(&[9.0, 9.0], &[8.0, 8.0]).unwrap();
+        }
+        s.truncate(1);
+        assert_eq!(s.len(), 1);
+        let (k, v, n) = s.padded(4);
+        assert_eq!(n, 1);
+        assert_eq!(&k[..2], &[9.0, 9.0]);
+        assert!(k[2..].iter().all(|&x| x == KEY_PAD));
+        assert!(v[2..].iter().all(|&x| x == 0.0));
+        // a rolled-back row can be re-appended
+        s.append(&[1.0, 2.0], &[3.0, 4.0]).unwrap();
+        assert_eq!(s.len(), 2);
+        assert_eq!(&s.keys()[2..], &[1.0, 2.0]);
     }
 
     #[test]

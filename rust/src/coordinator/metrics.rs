@@ -94,6 +94,11 @@ impl Metrics {
         Duration::from_secs_f64(self.p50_us() / 1e6)
     }
 
+    /// 95th-percentile latency as a `Duration`.
+    pub fn p95(&self) -> Duration {
+        Duration::from_secs_f64(self.p95_us() / 1e6)
+    }
+
     /// Tail latency as a `Duration`.
     pub fn p99(&self) -> Duration {
         Duration::from_secs_f64(self.p99_us() / 1e6)
@@ -158,6 +163,22 @@ mod tests {
         assert_eq!(a.errors, 1);
         assert_eq!(a.decodes, 1);
         assert_eq!(a.attends, 1);
+    }
+
+    #[test]
+    fn duration_accessors_cover_all_percentiles() {
+        // p50/p95/p99 each have BOTH a µs accessor and a Duration
+        // accessor, and the pairs agree (p95 used to be µs-only)
+        let mut m = Metrics::new();
+        for i in 1..=100 {
+            m.record(Duration::from_micros(i));
+        }
+        for (us, d) in [(m.p50_us(), m.p50()), (m.p95_us(), m.p95()), (m.p99_us(), m.p99())] {
+            // Duration rounds to whole nanoseconds, so agree within 1ns
+            assert!((d.as_secs_f64() * 1e6 - us).abs() < 1e-3, "{d:?} vs {us}us");
+            assert!(d > Duration::ZERO);
+        }
+        assert!(m.p50() <= m.p95() && m.p95() <= m.p99());
     }
 
     #[test]

@@ -15,14 +15,16 @@
 //! * [`server`]    — [`CamformerServer`]: `Prefill` / `Decode` / `Attend`
 //!   request enum, capacity-aware typed admission, worker-per-(shard,
 //!   head) routing, shutdown;
-//! * [`batcher`]   — cross-session batched decode: the request-aware
-//!   [`DecodeBatcher`] plans each wire batch into dispatch groups so
-//!   decode steps and read-only attends of *different* sessions on the
-//!   same head execute as one backend dispatch (appends applied first,
-//!   then a single batched attend — the paper's key-stationary
-//!   amortisation, Fig. 5). `Prefill` is a barrier; a session's second
-//!   decode step starts a new group, so batched execution stays
-//!   bit-equal to sequential dispatch;
+//! * [`batcher`]   — batched decode with speculative multi-step fusion:
+//!   the request-aware [`DecodeBatcher`] plans each wire batch into
+//!   dispatch groups so decode steps and read-only attends — of
+//!   different sessions AND, under [`PlanMode::Speculative`] (default),
+//!   several steps of the *same* session — execute as one backend
+//!   dispatch (the paper's key-stationary amortisation, Fig. 5). All
+//!   appends apply first in program order; each query then attends over
+//!   its own *causal prefix view* of its session cache, so even a deep
+//!   single-session burst amortises dispatches while staying bit-equal
+//!   to sequential execution. `Prefill` remains a barrier;
 //! * [`backend`]   — pluggable execution: PJRT artifacts (the real hot
 //!   path, `pjrt` feature), the pure-Rust functional model, or the
 //!   cycle-annotated architecture simulator; all take whole dispatch
@@ -71,8 +73,9 @@
 //!
 //! | layer | kind | where |
 //! |-------|------|-------|
-//! | batcher (incl. dispatch planning), kv, metrics, session | unit | in-module `#[cfg(test)]` |
-//! | scorers, masks, BIMV tiles | property (seeded, `util::check`) | `accuracy::functional`, `bimv::engine` |
+//! | batcher (incl. both planning modes), kv (incl. prefix views), metrics, session | unit | in-module `#[cfg(test)]` |
+//! | scorers, masks, prefix masking, BIMV tiles | property (seeded, `util::check`) | `accuracy::functional`, `bimv::engine` |
+//! | randomized batched-vs-sequential equivalence + planner invariants + fused-burst prefix boundaries | fuzz/property | `rust/tests/batcher_fuzz.rs` |
 //! | decode serving (interleaved sessions, live append, batched vs sequential bit-equality, per-item admission failures) | integration | `rust/tests/decode_serving.rs` |
 //! | serving flows over functional/arch backends | integration | `rust/tests/coordinator_integration.rs` |
 //! | PJRT artifacts vs functional model | golden (skips without artifacts) | `rust/tests/runtime_integration.rs` |
@@ -88,7 +91,7 @@ pub mod server;
 pub mod session;
 
 pub use backend::{AttendItem, AttentionBackend, FunctionalBackend};
-pub use batcher::{BatchPolicy, DecodeBatcher, DispatchGroup};
+pub use batcher::{BatchPolicy, DecodeBatcher, DispatchGroup, PlanMode};
 pub use error::ServeError;
 pub use kv_store::KvStore;
 pub use metrics::Metrics;

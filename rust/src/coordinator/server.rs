@@ -16,13 +16,18 @@
 //!   the query over the grown cache — one autoregressive step;
 //! * [`Request::Attend`] is a read-only query over the current cache.
 //!
-//! Execution is cross-session batched: the worker pulls a wire batch,
-//! plans it into dispatch groups (see [`DecodeBatcher`]), applies every
-//! group's KV appends first, then runs *one* batched attend over
-//! zero-copy padded views of each item's own session cache. Outputs are
-//! bit-equal to sequential dispatch; the planner's batch-safety invariant
-//! guarantees no query can observe an append that sequentially happens
-//! after it.
+//! Execution is cross-session batched with speculative multi-step
+//! fusion: the worker pulls a wire batch, plans it into dispatch groups
+//! (see [`DecodeBatcher`]), applies every group's KV appends first —
+//! recording each query's *causal prefix*, the session KV length at its
+//! own program position — then runs *one* batched attend in which each
+//! query sees a prefix view of its own session cache. Outputs are
+//! bit-equal to sequential dispatch: a group may hold many decode steps
+//! of one session, but every query attends over exactly the rows it
+//! would have observed sequentially (later speculative appends behave
+//! as pad — natively for prefix-aware backends, via a materialised
+//! literal-pad copy otherwise), and a failed dispatch rolls every
+//! speculative append back before reporting.
 //!
 //! Admission is capacity-aware and typed ([`ServeError`]): dimension and
 //! provisioning violations are rejected synchronously at `submit`;
@@ -39,7 +44,7 @@ use std::time::{Duration, Instant};
 use super::backend::{AttendItem, AttentionBackend};
 use super::batcher::{BatchPolicy, DecodeBatcher, DispatchGroup};
 use super::error::ServeError;
-use super::kv_store::KvStore;
+use super::kv_store::{KvStore, KEY_PAD};
 use super::metrics::Metrics;
 use super::session::{Session, SessionId};
 
@@ -430,17 +435,37 @@ struct PendingQuery {
     op: Op,
     query: Vec<f32>,
     enq: Instant,
+    /// Causal prefix: the session KV length at this query's own program
+    /// position. Speculative fusion may grow the store past it before
+    /// the dispatch runs, so the attend is bounded to these rows.
+    prefix: usize,
 }
 
-/// Execute one cross-session dispatch group: apply every `Decode`'s KV
-/// append first (in program order), then run a *single* batched attend
-/// over zero-copy padded views of each item's own session cache.
+/// Where a planned item's K/V execution view comes from.
+enum ViewSource {
+    /// Zero-copy prefix view of the session store.
+    Store { rows: usize },
+    /// Materialised literal-pad prefix copy (index into the dispatch's
+    /// scratch arena) — the fallback for backends without native prefix
+    /// support when the store already holds rows past the prefix.
+    Scratch(usize),
+}
+
+/// Execute one dispatch group: apply every `Decode`'s KV append first
+/// (in program order), recording each query's causal prefix, then run a
+/// *single* batched attend in which each query sees a view of its own
+/// session cache bounded at that prefix — so speculative fusion of many
+/// same-session steps stays bit-equal to sequential dispatch.
 ///
 /// Failures are strictly per-request: an item refused at admission
-/// (unknown session, exhausted capacity) is answered with its typed
-/// error and dropped from the dispatch, and the rest of the batch
-/// proceeds untouched. Only a backend execution failure — which has no
-/// per-item attribution — fails the whole dispatch.
+/// (unknown session, exhausted capacity — including mid-burst, where the
+/// refusal leaves the store untouched and later burst steps simply see
+/// the shorter prefix) is answered with its typed error and dropped from
+/// the dispatch, and the rest of the batch proceeds untouched. Only a
+/// backend execution failure — which has no per-item attribution — fails
+/// the whole dispatch; it rolls every speculative append of the group
+/// back, so an errored request never leaves state behind (a client retry
+/// must not double-append).
 fn execute_batch<B: AttentionBackend>(
     backend: &mut B,
     cfg: &ServerConfig,
@@ -450,10 +475,12 @@ fn execute_batch<B: AttentionBackend>(
     metrics: &mut Metrics,
     resp_tx: &Sender<Response>,
 ) {
-    // Phase 1 — the mutating half of each Decode, in program order. The
-    // planner guarantees at most one append per session per group, so no
-    // query below can observe a "future" append.
+    // Phase 1 — the mutating half of each Decode, in program order.
+    // Every query's causal prefix is captured here, so later appends of
+    // the same session (speculative fusion) cannot leak into it.
     let mut pending: Vec<PendingQuery> = Vec::with_capacity(items.len());
+    // pre-group KV length per mutated session, for failed-dispatch rollback
+    let mut baseline: Vec<(SessionId, usize)> = Vec::new();
     let mut mutated = false;
     for (req, enq) in items {
         match req {
@@ -464,14 +491,28 @@ fn execute_batch<B: AttentionBackend>(
                         // admission for the *grown* cache runs before the
                         // append so a refused Decode leaves the session
                         // untouched (a client retry must not double-append)
-                        padded_rows(backend, cfg, s.store.len() + 1)
-                            .and_then(|_| s.store.append(&new_key, &new_value))
+                        padded_rows(backend, cfg, s.store.len() + 1).and_then(|_| {
+                            let before = s.store.len();
+                            s.store.append(&new_key, &new_value).map(|()| {
+                                if !baseline.iter().any(|&(sid, _)| sid == session) {
+                                    baseline.push((session, before));
+                                }
+                                before + 1
+                            })
+                        })
                     }
                 };
                 match appended {
-                    Ok(()) => {
+                    Ok(prefix) => {
                         mutated = true;
-                        pending.push(PendingQuery { id, session, op: Op::Decode, query, enq });
+                        pending.push(PendingQuery {
+                            id,
+                            session,
+                            op: Op::Decode,
+                            query,
+                            enq,
+                            prefix,
+                        });
                     }
                     Err(e) => deliver(
                         resp_tx,
@@ -481,24 +522,24 @@ fn execute_batch<B: AttentionBackend>(
                     ),
                 }
             }
-            Request::Attend { id, session, query, .. } => {
-                if sessions.contains_key(&session) {
-                    pending.push(PendingQuery { id, session, op: Op::Attend, query, enq });
-                } else {
-                    deliver(
-                        resp_tx,
-                        metrics,
-                        Op::Attend,
-                        Response {
-                            id,
-                            session,
-                            head,
-                            result: Err(ServeError::UnknownSession { session }),
-                            latency: enq.elapsed(),
-                        },
-                    );
+            Request::Attend { id, session, query, .. } => match sessions.get(&session) {
+                Some(s) => {
+                    let prefix = s.store.len();
+                    pending.push(PendingQuery { id, session, op: Op::Attend, query, enq, prefix });
                 }
-            }
+                None => deliver(
+                    resp_tx,
+                    metrics,
+                    Op::Attend,
+                    Response {
+                        id,
+                        session,
+                        head,
+                        result: Err(ServeError::UnknownSession { session }),
+                        latency: enq.elapsed(),
+                    },
+                ),
+            },
             Request::Prefill { .. } => unreachable!("prefills are Barrier groups"),
         }
     }
@@ -511,22 +552,50 @@ fn execute_batch<B: AttentionBackend>(
         return;
     }
 
-    // Phase 2 — bind each surviving query to its session's padded view.
-    // Same-session items are made adjacent (stable sort by session) so
-    // identity-cached backends pack each key memory at most once per
-    // dispatch; response identity rides on the pending index.
+    // Phase 2 — bind each surviving query to a view of its own causal
+    // prefix. Same-session items are made adjacent (stable sort by
+    // session, program order within a session) so identity-cached
+    // backends pack each key memory at most once per dispatch; response
+    // identity rides on the pending index.
     let mut order: Vec<usize> = (0..pending.len()).collect();
     order.sort_by_key(|&i| pending[i].session);
-    let mut batch: Vec<AttendItem<'_>> = Vec::with_capacity(pending.len());
-    let mut metas: Vec<(usize, usize)> = Vec::with_capacity(pending.len()); // (idx, seq_len)
+    // (pending idx, seq_len reported, view source) per dispatched item
+    let mut planned: Vec<(usize, usize, ViewSource)> = Vec::with_capacity(pending.len());
+    let mut scratch: Vec<(Vec<f32>, Vec<f32>)> = Vec::new();
+    let mut scratch_tags: Vec<(SessionId, usize, usize)> = Vec::new();
     for &i in &order {
         let p = &pending[i];
         let s = sessions.get(&p.session).expect("admission checked in phase 1");
-        match padded_rows(backend, cfg, s.store.len()) {
+        match padded_rows(backend, cfg, p.prefix) {
             Ok(rows) => {
-                let (k, v, _) = s.store.padded(rows);
-                batch.push(AttendItem { query: &p.query, keys: k, values: v });
-                metas.push((i, s.store.len()));
+                // masking only matters when the view would expose rows
+                // appended after this query's program position
+                let needs_mask = rows > p.prefix && s.store.len() > p.prefix;
+                let source = if !needs_mask || backend.supports_prefix_views() {
+                    ViewSource::Store { rows }
+                } else {
+                    // materialise the sequential view: causal prefix +
+                    // literal pad tail. One copy per (session, prefix,
+                    // rows) — burst-mates at the same prefix share it, so
+                    // run-detecting backends still see one buffer.
+                    let tag = (p.session, p.prefix, rows);
+                    let slot = match scratch_tags.iter().position(|&t| t == tag) {
+                        Some(j) => j,
+                        None => {
+                            let live_k = &s.store.keys()[..p.prefix * cfg.d_k];
+                            let live_v = &s.store.values()[..p.prefix * cfg.d_v];
+                            let mut k = vec![KEY_PAD; rows * cfg.d_k];
+                            k[..live_k.len()].copy_from_slice(live_k);
+                            let mut v = vec![0.0f32; rows * cfg.d_v];
+                            v[..live_v.len()].copy_from_slice(live_v);
+                            scratch.push((k, v));
+                            scratch_tags.push(tag);
+                            scratch.len() - 1
+                        }
+                    };
+                    ViewSource::Scratch(slot)
+                };
+                planned.push((i, p.prefix, source));
             }
             Err(e) => deliver(
                 resp_tx,
@@ -542,16 +611,32 @@ fn execute_batch<B: AttentionBackend>(
             ),
         }
     }
-    if batch.is_empty() {
+    if planned.is_empty() {
         return;
+    }
+    let mut batch: Vec<AttendItem<'_>> = Vec::with_capacity(planned.len());
+    for (i, _, source) in &planned {
+        let p = &pending[*i];
+        let (keys, values) = match source {
+            ViewSource::Store { rows } => {
+                let s = sessions.get(&p.session).expect("still resident");
+                let (k, v, _) = s.store.padded_prefix_view(p.prefix, *rows);
+                (k, v)
+            }
+            ViewSource::Scratch(j) => (&scratch[*j].0[..], &scratch[*j].1[..]),
+        };
+        batch.push(AttendItem { query: &p.query, keys, values, prefix_rows: p.prefix });
     }
 
     // Phase 3 — one backend dispatch for the whole group. Occupancy is
     // only recorded for dispatches that actually served their queries.
-    match backend.attend_batch(&batch) {
+    let result = backend.attend_batch(&batch);
+    let occupancy = batch.len();
+    drop(batch); // release the session borrows before any rollback
+    match result {
         Ok(outs) => {
-            metrics.note_dispatch(batch.len());
-            for ((i, seq_len), out) in metas.into_iter().zip(outs) {
+            metrics.note_dispatch(occupancy);
+            for ((i, seq_len, _), out) in planned.into_iter().zip(outs) {
                 let p = &pending[i];
                 deliver(
                     resp_tx,
@@ -568,8 +653,18 @@ fn execute_batch<B: AttentionBackend>(
             }
         }
         Err(e) => {
+            // every item of this dispatch answers with an error, so none
+            // of the group's speculative appends may survive
+            for &(session, len) in &baseline {
+                if let Some(s) = sessions.get_mut(&session) {
+                    s.store.truncate(len);
+                }
+            }
+            if !baseline.is_empty() {
+                backend.on_kv_update();
+            }
             let err = ServeError::Backend(format!("{e:#}"));
-            for (i, _) in metas {
+            for (i, _, _) in planned {
                 let p = &pending[i];
                 deliver(
                     resp_tx,
@@ -927,6 +1022,181 @@ mod tests {
     fn server_metrics_sane(m: &Metrics) {
         assert!(m.dispatched_queries >= m.dispatches);
         assert!(m.max_occupancy as f64 >= m.mean_occupancy());
+    }
+
+    /// Backend whose dispatches fail while the shared flag is set (the
+    /// flag outlives the move into the worker thread).
+    struct FaultInjected {
+        inner: FunctionalBackend,
+        fail: std::sync::Arc<std::sync::atomic::AtomicBool>,
+    }
+
+    impl AttentionBackend for FaultInjected {
+        fn attend(&mut self, q: &[f32], k: &[f32], v: &[f32]) -> anyhow::Result<Vec<f32>> {
+            self.inner.attend(q, k, v)
+        }
+
+        fn attend_batch(&mut self, items: &[AttendItem<'_>]) -> anyhow::Result<Vec<Vec<f32>>> {
+            if self.fail.load(std::sync::atomic::Ordering::SeqCst) {
+                anyhow::bail!("injected dispatch failure");
+            }
+            self.inner.attend_batch(items)
+        }
+
+        fn supports_prefix_views(&self) -> bool {
+            self.inner.supports_prefix_views()
+        }
+
+        fn on_kv_update(&mut self) {
+            self.inner.on_kv_update();
+        }
+
+        fn name(&self) -> &'static str {
+            "fault-injected"
+        }
+    }
+
+    #[test]
+    fn failed_dispatch_rolls_back_speculative_appends() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::sync::Arc;
+        let n = 64usize;
+        let prefill_rows = 8usize;
+        let fail = Arc::new(AtomicBool::new(false));
+        let cfg = ServerConfig { kv_capacity: n, ..Default::default() };
+        let server = {
+            let fail = fail.clone();
+            CamformerServer::start(cfg, move |_| FaultInjected {
+                inner: FunctionalBackend::new(n, 64),
+                fail: fail.clone(),
+            })
+        };
+        let mut rng = Rng::new(126);
+        let keys = rng.normal_vec(prefill_rows * 64);
+        let values = rng.normal_vec(prefill_rows * 64);
+        server
+            .submit(Request::Prefill {
+                id: 0,
+                session: 0,
+                head: 0,
+                keys: keys.clone(),
+                values: values.clone(),
+            })
+            .unwrap();
+        assert!(server.collect(1).remove(0).is_ok());
+
+        // every dispatch fails while the flag is set: however the wire
+        // batcher groups these decodes, each group's appends roll back
+        fail.store(true, Ordering::SeqCst);
+        for id in 1..=3u64 {
+            server
+                .submit(Request::Decode {
+                    id,
+                    session: 0,
+                    head: 0,
+                    query: rng.normal_vec(64),
+                    new_key: rng.normal_vec(64),
+                    new_value: rng.normal_vec(64),
+                })
+                .unwrap();
+        }
+        for r in server.collect(3) {
+            assert!(matches!(r.result, Err(ServeError::Backend(_))), "{:?}", r.result);
+        }
+
+        // heal the backend: the session must serve at its pre-burst
+        // length with its pre-burst contents (errored decodes committed
+        // nothing)
+        fail.store(false, Ordering::SeqCst);
+        let q = rng.normal_vec(64);
+        server
+            .submit(Request::Attend { id: 9, session: 0, head: 0, query: q.clone() })
+            .unwrap();
+        let r = server.collect(1).remove(0);
+        assert!(r.is_ok(), "{:?}", r.result);
+        assert_eq!(r.seq_len(), prefill_rows, "rolled-back appends must not linger");
+        let mut mirror = KvStore::new(n, 64, 64);
+        mirror.load(&keys, &values).unwrap();
+        let (kp, vp, _) = mirror.padded(16);
+        let mut reference = FunctionalBackend::new(n, 64);
+        use crate::coordinator::backend::AttentionBackend as _;
+        assert_eq!(r.output(), &reference.attend(&q, kp, vp).unwrap()[..]);
+        let (m, _) = server.shutdown();
+        assert_eq!(m.errors, 3);
+        server_metrics_sane(&m);
+    }
+
+    /// Backend without native prefix views: keeps the trait defaults, so
+    /// fused bursts must be served through the serving layer's
+    /// materialised literal-pad copies.
+    struct NoPrefixViews(FunctionalBackend);
+
+    impl AttentionBackend for NoPrefixViews {
+        fn attend(&mut self, q: &[f32], k: &[f32], v: &[f32]) -> anyhow::Result<Vec<f32>> {
+            self.0.attend(q, k, v)
+        }
+
+        fn on_kv_update(&mut self) {
+            self.0.on_kv_update();
+        }
+
+        fn name(&self) -> &'static str {
+            "no-prefix-views"
+        }
+    }
+
+    #[test]
+    fn fused_burst_over_non_prefix_backend_matches_reference() {
+        // a single-session decode burst through a backend that cannot
+        // mask prefixes natively: whatever grouping the wire batcher
+        // achieves, each step must see exactly its causal prefix (the
+        // scratch materialisation path when steps do fuse)
+        let n = 64usize;
+        let steps = 12usize;
+        let cfg = ServerConfig { kv_capacity: n, ..Default::default() };
+        let quantum = cfg.pad_quantum;
+        let server = CamformerServer::start(cfg, |_| NoPrefixViews(FunctionalBackend::new(n, 64)));
+        let mut rng = Rng::new(127);
+        let keys = rng.normal_vec(8 * 64);
+        let values = rng.normal_vec(8 * 64);
+        let mut mirror = KvStore::new(n, 64, 64);
+        mirror.load(&keys, &values).unwrap();
+        server
+            .submit(Request::Prefill { id: 1000, session: 0, head: 0, keys, values })
+            .unwrap();
+        let mut expected: Vec<(Vec<f32>, usize)> = Vec::new();
+        for id in 0..steps as u64 {
+            let q = rng.normal_vec(64);
+            let nk = rng.normal_vec(64);
+            let nv = rng.normal_vec(64);
+            mirror.append(&nk, &nv).unwrap();
+            let rows = mirror.len().div_ceil(quantum) * quantum;
+            let (kp, vp, _) = mirror.padded(rows);
+            let mut reference = FunctionalBackend::new(n, 64);
+            use crate::coordinator::backend::AttentionBackend as _;
+            expected.push((reference.attend(&q, kp, vp).unwrap(), mirror.len()));
+            server
+                .submit(Request::Decode {
+                    id,
+                    session: 0,
+                    head: 0,
+                    query: q,
+                    new_key: nk,
+                    new_value: nv,
+                })
+                .unwrap();
+        }
+        let mut resps = server.collect(steps + 1);
+        resps.retain(|r| r.id < 1000);
+        resps.sort_by_key(|r| r.id);
+        for (r, (want, seq_len)) in resps.iter().zip(&expected) {
+            assert_eq!(r.output(), &want[..], "step {}", r.id);
+            assert_eq!(r.seq_len(), *seq_len, "step {}", r.id);
+        }
+        let (m, _) = server.shutdown();
+        assert_eq!(m.errors, 0);
+        assert_eq!(m.decodes, steps as u64);
+        server_metrics_sane(&m);
     }
 
     #[test]

@@ -27,7 +27,7 @@ fn serving_is_deterministic_and_correct_under_load() {
         ServerConfig {
             heads,
             kv_capacity: n,
-            batch: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(500) },
+            batch: BatchPolicy::bounds(8, Duration::from_micros(500)),
             ..Default::default()
         },
         |_| FunctionalBackend::new(n, 64),
@@ -238,7 +238,7 @@ fn cross_session_attends_share_dispatches_and_stay_isolated() {
     let server = CamformerServer::start(
         ServerConfig {
             kv_capacity: n,
-            batch: BatchPolicy { max_batch: 16, max_wait: Duration::from_millis(2) },
+            batch: BatchPolicy::bounds(16, Duration::from_millis(2)),
             ..Default::default()
         },
         |_| FunctionalBackend::new(n, 64),
@@ -293,7 +293,7 @@ fn partial_batches_flush_on_timeout() {
     let server = CamformerServer::start(
         ServerConfig {
             kv_capacity: n,
-            batch: BatchPolicy { max_batch: 16, max_wait: Duration::from_millis(1) },
+            batch: BatchPolicy::bounds(16, Duration::from_millis(1)),
             ..Default::default()
         },
         |_| FunctionalBackend::new(n, 64),

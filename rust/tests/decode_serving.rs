@@ -28,7 +28,7 @@ fn decode_loop_matches_functional_reference_across_sessions() {
     let cfg = ServerConfig {
         shards: 2,
         kv_capacity: capacity,
-        batch: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(500) },
+        batch: BatchPolicy::bounds(8, Duration::from_micros(500)),
         ..Default::default()
     };
     // the reference mirrors must replay the server's execution geometry
@@ -118,7 +118,7 @@ fn run_workload(
 ) -> (Vec<camformer::coordinator::Response>, camformer::coordinator::Metrics) {
     let cfg = ServerConfig {
         kv_capacity: capacity,
-        batch: BatchPolicy { max_batch, max_wait },
+        batch: BatchPolicy::bounds(max_batch, max_wait),
         ..Default::default()
     };
     let server = CamformerServer::start(cfg, |_| FunctionalBackend::new(capacity, 64));
