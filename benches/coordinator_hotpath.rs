@@ -1,13 +1,17 @@
 //! Bench: the Layer-3 serving hot path — prefill/decode/attend round
 //! trips through the session-oriented coordinator, the cross-session
-//! batched decode loop (batched vs single dispatch), plus the
-//! micro-costs (bf16 dot, softmax engine) that dominate it.
+//! batched decode loop (batched vs single dispatch), the long-context
+//! dense-vs-sparse / repack-vs-incremental comparison (ISSUE 4, emitted
+//! machine-readably to `BENCH_hotpath.json`), plus the micro-costs
+//! (bf16 dot, softmax engine) that dominate it.
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
+use camformer::accuracy::functional::{self, AttnConfig};
 use camformer::arch::softmax::SoftmaxEngine;
-use camformer::coordinator::backend::FunctionalBackend;
+use camformer::coordinator::backend::{AttendItem, AttentionBackend, FunctionalBackend};
 use camformer::coordinator::batcher::{BatchPolicy, PlanMode};
+use camformer::coordinator::kv_store::KvStore;
 use camformer::coordinator::server::{CamformerServer, Request, ServerConfig};
 use camformer::util::bench::Bencher;
 use camformer::util::{bf16, rng::Rng};
@@ -302,6 +306,134 @@ fn main() {
             }
         }
     }
+
+    // macro: long-context single-session decode (ISSUE 4) — the
+    // asymptotic comparison behind the survivor-list sparse pipeline and
+    // incremental key packing. Three per-step recipes over the same
+    // growing KV cache:
+    //   dense_full_repack  — the pre-ISSUE-4 hot path: re-pack the whole
+    //                        padded buffer after every append (what
+    //                        on_kv_update + the identity cache forced),
+    //                        then walk all rows through the dense mask
+    //                        pipeline: O(n·d) per step, twice over;
+    //   dense_incremental  — store-owned bits (append packs ONE row) but
+    //                        dense softmax/contextualization: O(n·d);
+    //   sparse_incremental — the new serving hot path: store-owned bits +
+    //                        survivor-list pipeline: O(n + k·d) per step.
+    // All three are asserted bit-identical step by step, and the work
+    // counters pin the asymptotics: sparse contextualization touches
+    // ≤ final_k V rows per step and every append packs exactly one row.
+    let mut hotpath_json: Vec<(String, f64)> = Vec::new();
+    {
+        let d = 64usize;
+        let quantum = 16usize;
+        for steps in [256usize, 1024, 4096] {
+            let mut payload_rng = Rng::new(20 + steps as u64);
+            let decodes: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = (0..steps)
+                .map(|_| {
+                    (
+                        payload_rng.normal_vec(d),
+                        payload_rng.normal_vec(d),
+                        payload_rng.normal_vec(d),
+                    )
+                })
+                .collect();
+
+            // (a) dense contextualization + full re-pack per step
+            let mut dense_outs: Vec<Vec<f32>> = Vec::with_capacity(steps);
+            let mut store = KvStore::new(steps, d, d);
+            let t0 = Instant::now();
+            for (q, nk, nv) in &decodes {
+                store.append(nk, nv).unwrap();
+                let rows = store.len().div_ceil(quantum) * quantum;
+                let (kp, vp, valid) = store.padded(rows);
+                let packed = functional::PackedKeys::new(kp, d); // O(n·d) re-pack
+                let cfg = AttnConfig::paper(rows, d);
+                let out =
+                    functional::camformer_attention_packed_prefix(q, &packed, vp, &cfg, valid);
+                dense_outs.push(out);
+            }
+            let ns_dense = t0.elapsed().as_nanos() as f64 / steps as f64;
+
+            // (b) dense contextualization over store-owned incremental bits
+            let mut dense_inc_outs: Vec<Vec<f32>> = Vec::with_capacity(steps);
+            let mut store = KvStore::new(steps, d, d);
+            let mut backend = FunctionalBackend::new_dense(steps, d);
+            let t0 = Instant::now();
+            for (q, nk, nv) in &decodes {
+                store.append(nk, nv).unwrap();
+                let rows = store.len().div_ceil(quantum) * quantum;
+                let (kp, vp, valid) = store.padded(rows);
+                let item = AttendItem {
+                    query: q,
+                    keys: kp,
+                    values: vp,
+                    prefix_rows: valid,
+                    packed: Some(store.packed_view(rows)),
+                };
+                dense_inc_outs.push(backend.attend_batch(&[item]).unwrap().remove(0));
+            }
+            let ns_dense_inc = t0.elapsed().as_nanos() as f64 / steps as f64;
+
+            // (c) the serving hot path: sparse pipeline + incremental bits
+            let mut sparse_outs: Vec<Vec<f32>> = Vec::with_capacity(steps);
+            let mut store = KvStore::new(steps, d, d);
+            let mut backend = FunctionalBackend::new(steps, d);
+            let t0 = Instant::now();
+            for (q, nk, nv) in &decodes {
+                store.append(nk, nv).unwrap();
+                let rows = store.len().div_ceil(quantum) * quantum;
+                let (kp, vp, valid) = store.padded(rows);
+                let item = AttendItem {
+                    query: q,
+                    keys: kp,
+                    values: vp,
+                    prefix_rows: valid,
+                    packed: Some(store.packed_view(rows)),
+                };
+                sparse_outs.push(backend.attend_batch(&[item]).unwrap().remove(0));
+            }
+            let ns_sparse = t0.elapsed().as_nanos() as f64 / steps as f64;
+
+            assert_eq!(dense_outs, dense_inc_outs, "incremental bits diverged at n={steps}");
+            assert_eq!(dense_outs, sparse_outs, "sparse pipeline diverged at n={steps}");
+            // the asymptotic contract, in exact work counters:
+            let w = backend.work;
+            assert_eq!(w.attends, steps as u64);
+            assert!(
+                w.v_rows_touched <= w.attends * 32,
+                "sparse contextualization must touch ≤ final_k rows/step \
+                 (touched {} over {} steps)",
+                w.v_rows_touched,
+                w.attends
+            );
+            assert_eq!(w.fallback_rows_packed, 0, "store bits must reach the backend");
+            assert_eq!(
+                store.packed_rows_total(),
+                steps as u64,
+                "each append must pack exactly one row (no full repack)"
+            );
+            for (label, ns) in [
+                ("dense_full_repack", ns_dense),
+                ("dense_incremental", ns_dense_inc),
+                ("sparse_incremental", ns_sparse),
+            ] {
+                println!("bench long_context_{label}_n{steps:<5} {:>12.2} us/step", ns / 1e3);
+                hotpath_json.push((format!("long_context_{label}_n{steps}"), ns));
+            }
+        }
+    }
+
+    // machine-readable perf trajectory (scenario -> ns/step), tracked
+    // across PRs
+    let mut json = String::from("{\n");
+    for (i, (name, ns)) in hotpath_json.iter().enumerate() {
+        let sep = if i + 1 < hotpath_json.len() { "," } else { "" };
+        json.push_str(&format!("  \"{name}\": {ns:.1}{sep}\n"));
+    }
+    json.push_str("}\n");
+    std::fs::write("BENCH_hotpath.json", &json).expect("write BENCH_hotpath.json");
+    println!("      wrote BENCH_hotpath.json ({} scenarios)", hotpath_json.len());
 
     print!("{}", b.summary());
 }

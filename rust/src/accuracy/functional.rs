@@ -4,6 +4,36 @@
 //! runtime integration tests assert the PJRT-executed Pallas artifacts,
 //! this model and the jnp oracle all agree. It is also the model the
 //! coordinator uses for golden checks on the serving path.
+//!
+//! # §Perf iterations (the serving hot path)
+//!
+//! 1. Per-call bit-packing of Q and K — **reverted**: packing cost more
+//!    than the XNOR+popcount saved when K is packed again every call.
+//! 2. Branchless u8 sign-match scorer ([`bacam_scores_cfg`]) — the
+//!    autovectoriser turns the equality count into SIMD lanes.
+//! 3. [`PackedKeys`]: pack K once, score many queries with one
+//!    XNOR+popcount per 64 bits — serving reuses K across requests, so
+//!    packing amortises to zero.
+//! 4. Survivor-list sparsity ([`two_stage_topk_indices`],
+//!    [`lut_softmax_sparse`], [`weighted_sum_bf16_sparse`]): the two-stage
+//!    top-k keeps ≤ `final_k` rows (Sec. III-C4), so softmax and BF16
+//!    contextualization walk the ≤ `final_k` survivors instead of a
+//!    length-n boolean mask — O(k·d) instead of O(n·d) per query, and
+//!    bit-identical to the dense mask path (adding a masked lane's 0.0 to
+//!    a finite f32 accumulator is exact, and survivor order stays
+//!    ascending). Stage-1 selection itself is allocation-free: an
+//!    in-place insertion scan per tile into one reused scratch buffer
+//!    ([`TopkScratch`]) replaced a heap-allocated `topk_indices` call per
+//!    16-row tile.
+//! 5. Incremental key packing: the packed bits moved *into* the serving
+//!    KV store (`KvStore` packs exactly the appended row, O(d) per decode
+//!    step, instead of the backend re-packing all n rows after every
+//!    append) and execution borrows them through [`PackedKeysView`] — see
+//!    `coordinator::kv_store`.
+//!
+//! The dense mask path is kept, unoptimised, as the cross-check baseline
+//! for the sparse pipeline (`FunctionalBackend::new_dense`, the
+//! `batcher_fuzz` harness, and the property tests below).
 
 use crate::util::bf16;
 
@@ -79,8 +109,13 @@ fn quantize_matches(matches: u32, d_k: usize, adc_bits: u32) -> f64 {
 }
 
 /// Sign-packed key memory: pack K once, score many queries with one
-/// XNOR+popcount per 64 bits (§Perf iteration 3 — the serving path
-/// reuses K across every request, so packing amortises to zero).
+/// XNOR+popcount per 64 bits (§Perf iteration 3). Since §Perf iteration 5
+/// the packing is maintainable *incrementally* ([`PackedKeys::all_pad`] +
+/// [`PackedKeys::set_row`] / [`PackedKeys::pad_rows`]) so a growing KV
+/// cache packs exactly the appended row per decode step, and execution
+/// layers borrow the bits through [`PackedKeys::view`] instead of
+/// re-deriving them.
+#[derive(Clone, Debug)]
 pub struct PackedKeys {
     pub n: usize,
     pub d_k: usize,
@@ -93,17 +128,59 @@ impl PackedKeys {
     pub fn new(k: &[f32], d_k: usize) -> Self {
         assert_eq!(k.len() % d_k, 0);
         let n = k.len() / d_k;
-        let words = d_k.div_ceil(64);
-        let mut bits = vec![0u64; n * words];
+        let mut packed = Self::all_pad(n, d_k);
         for r in 0..n {
-            pack_signs_into(&k[r * d_k..(r + 1) * d_k], &mut bits[r * words..(r + 1) * words]);
+            packed.set_row(r, &k[r * d_k..(r + 1) * d_k]);
         }
-        PackedKeys {
-            n,
+        packed
+    }
+
+    /// A packed memory of `rows` rows all holding the pad pattern
+    /// (all-(+1) keys, `KvStore::KEY_PAD`): every lane below `d_k` set.
+    pub fn all_pad(rows: usize, d_k: usize) -> Self {
+        let words = d_k.div_ceil(64);
+        let tail_mask = if d_k % 64 == 0 { u64::MAX } else { (1u64 << (d_k % 64)) - 1 };
+        let mut packed = PackedKeys {
+            n: rows,
             d_k,
             words,
-            tail_mask: if d_k % 64 == 0 { u64::MAX } else { (1u64 << (d_k % 64)) - 1 },
-            bits,
+            tail_mask,
+            bits: vec![u64::MAX; rows * words],
+        };
+        // lanes at or beyond d_k stay clear, like pack_signs_into leaves them
+        for r in 0..rows {
+            packed.bits[(r + 1) * words - 1] = tail_mask;
+        }
+        packed
+    }
+
+    /// Re-pack one row in place — O(d_k), the incremental-append hot path.
+    pub fn set_row(&mut self, r: usize, key: &[f32]) {
+        assert_eq!(key.len(), self.d_k);
+        pack_signs_into(key, &mut self.bits[r * self.words..(r + 1) * self.words]);
+    }
+
+    /// Restore the pad pattern over rows `[from, to)` (load shrink /
+    /// speculative rollback).
+    pub fn pad_rows(&mut self, from: usize, to: usize) {
+        for r in from..to {
+            let row = &mut self.bits[r * self.words..(r + 1) * self.words];
+            for w in row.iter_mut() {
+                *w = u64::MAX;
+            }
+            row[self.words - 1] = self.tail_mask;
+        }
+    }
+
+    /// Borrowed scoring view over the first `rows` rows.
+    pub fn view(&self, rows: usize) -> PackedKeysView<'_> {
+        assert!(rows <= self.n, "view rows {rows} beyond packed n {}", self.n);
+        PackedKeysView {
+            n: rows,
+            d_k: self.d_k,
+            words: self.words,
+            tail_mask: self.tail_mask,
+            bits: &self.bits[..rows * self.words],
         }
     }
 
@@ -113,19 +190,49 @@ impl PackedKeys {
     }
 
     /// As [`PackedKeys::scores`], but rows at or beyond `valid_rows` are
-    /// scored as the pad pattern (all-(+1) keys, `KvStore::KEY_PAD`)
-    /// regardless of what the packed buffer holds there. This is the
-    /// speculative-fusion prefix contract: a fused decode burst applies
-    /// every KV append up front, so the buffer behind an early step's
-    /// view already holds that session's *later* keys — which that step,
-    /// sequentially, would have seen as pre-written pad rows. A pad row
-    /// matches exactly the query's non-negative lanes, so its score is
-    /// computed analytically, bit-identical to packing a literal pad row.
+    /// scored as the pad pattern — see [`PackedKeysView::scores_prefix_into`].
     pub fn scores_prefix(&self, q: &[f32], adc_bits: u32, valid_rows: usize) -> Vec<f64> {
+        self.view(self.n).scores_prefix(q, adc_bits, valid_rows)
+    }
+}
+
+/// Borrowed view over a sign-packed key memory: what the serving layer
+/// hands backends (`AttendItem::packed`) so they score store-owned bits
+/// instead of re-packing the K buffer. `Copy`, so batch items stay cheap.
+#[derive(Clone, Copy, Debug)]
+pub struct PackedKeysView<'a> {
+    /// Rows visible through this view (the padded execution geometry).
+    pub n: usize,
+    pub d_k: usize,
+    words: usize,
+    tail_mask: u64,
+    bits: &'a [u64], // row-major n x words
+}
+
+impl PackedKeysView<'_> {
+    /// Scores into a caller-owned buffer (allocation-free after warmup).
+    ///
+    /// Rows at or beyond `valid_rows` are scored as the pad pattern
+    /// (all-(+1) keys, `KvStore::KEY_PAD`) regardless of what the packed
+    /// buffer holds there. This is the speculative-fusion prefix
+    /// contract: a fused decode burst applies every KV append up front,
+    /// so the buffer behind an early step's view already holds that
+    /// session's *later* keys — which that step, sequentially, would
+    /// have seen as pre-written pad rows. A pad row matches exactly the
+    /// query's non-negative lanes, so its score is computed analytically,
+    /// bit-identical to packing a literal pad row.
+    pub fn scores_prefix_into(
+        &self,
+        q: &[f32],
+        adc_bits: u32,
+        valid_rows: usize,
+        out: &mut Vec<f64>,
+    ) {
         assert_eq!(q.len(), self.d_k);
         assert!(valid_rows <= self.n, "prefix {valid_rows} beyond packed n {}", self.n);
         let qp = pack_signs(q, self.words);
-        let mut out = Vec::with_capacity(self.n);
+        out.clear();
+        out.reserve(self.n);
         for r in 0..valid_rows {
             let row = &self.bits[r * self.words..(r + 1) * self.words];
             let mut matches = 0u32;
@@ -145,6 +252,12 @@ impl PackedKeys {
             let pad_matches: u32 = qp.iter().map(|w| w.count_ones()).sum();
             out.resize(self.n, quantize_matches(pad_matches, self.d_k, adc_bits));
         }
+    }
+
+    /// Allocating convenience for [`PackedKeysView::scores_prefix_into`].
+    pub fn scores_prefix(&self, q: &[f32], adc_bits: u32, valid_rows: usize) -> Vec<f64> {
+        let mut out = Vec::new();
+        self.scores_prefix_into(q, adc_bits, valid_rows, &mut out);
         out
     }
 }
@@ -173,10 +286,75 @@ pub fn camformer_attention_packed_prefix(
     cfg: &AttnConfig,
     valid_rows: usize,
 ) -> Vec<f32> {
+    camformer_attention_view_dense(q, &keys.view(keys.n), v, cfg, valid_rows)
+}
+
+/// The dense-mask pipeline over a borrowed packed view: every stage walks
+/// all n rows. Kept as the cross-check baseline for
+/// [`camformer_attention_view_sparse`] (§Perf iteration 4), to which it
+/// is bit-identical.
+pub fn camformer_attention_view_dense(
+    q: &[f32],
+    keys: &PackedKeysView<'_>,
+    v: &[f32],
+    cfg: &AttnConfig,
+    valid_rows: usize,
+) -> Vec<f32> {
     let scores = keys.scores_prefix(q, cfg.adc_bits, valid_rows);
     let mask = two_stage_topk_mask(&scores, cfg.group, cfg.stage1_k, cfg.final_k);
     let a = lut_softmax(&scores, &mask, cfg.d_k);
     weighted_sum_bf16_prefix(&a, v, cfg.n, cfg.d_k, valid_rows)
+}
+
+/// Reusable buffers for [`camformer_attention_view_sparse`]: scores,
+/// selection scratch and the survivor list. One per backend/query stream;
+/// after warmup the sparse pipeline allocates only its ≤ `final_k`-entry
+/// weight vector and the d_v-lane output.
+#[derive(Clone, Debug, Default)]
+pub struct AttnScratch {
+    scores: Vec<f64>,
+    topk: TopkScratch,
+    survivors: Vec<usize>,
+}
+
+impl AttnScratch {
+    /// Survivor indices of the most recent sparse attention call (the
+    /// rows contextualization actually touched).
+    pub fn survivors(&self) -> &[usize] {
+        &self.survivors
+    }
+}
+
+/// Eq. 1 over a borrowed packed view through the survivor-list pipeline
+/// (§Perf iteration 4): score all rows, select the ≤ `final_k` survivors
+/// once, then softmax + BF16-contextualise only those rows — O(n + k·d)
+/// per query instead of the dense path's O(n·d). Bit-identical to
+/// [`camformer_attention_view_dense`]: a masked lane contributes exactly
+/// 0.0 to the softmax normaliser and is skipped by the dense
+/// contextualization loop, and survivors are visited in the same
+/// ascending order either way. (The identity assumes the selection is
+/// non-degenerate — `final_k >= 1` and `stage1_k >= 1`, as every paper
+/// config has; with an empty survivor set the dense path's 0.0/0.0
+/// normalisation yields NaN where this path yields zeros.)
+pub fn camformer_attention_view_sparse(
+    q: &[f32],
+    keys: &PackedKeysView<'_>,
+    v: &[f32],
+    cfg: &AttnConfig,
+    valid_rows: usize,
+    scratch: &mut AttnScratch,
+) -> Vec<f32> {
+    keys.scores_prefix_into(q, cfg.adc_bits, valid_rows, &mut scratch.scores);
+    two_stage_topk_indices_into(
+        &scratch.scores,
+        cfg.group,
+        cfg.stage1_k,
+        cfg.final_k,
+        &mut scratch.topk,
+        &mut scratch.survivors,
+    );
+    let w = lut_softmax_sparse(&scratch.scores, &scratch.survivors, cfg.d_k);
+    weighted_sum_bf16_sparse(&w, &scratch.survivors, v, cfg.d_k, valid_rows)
 }
 
 /// The pre-optimisation scorer (float inner product): kept as the §Perf
@@ -244,6 +422,97 @@ pub fn topk_indices(scores: &[f64], k: usize) -> Vec<usize> {
     idx
 }
 
+/// Reusable buffers for [`two_stage_topk_indices_into`]: one per query
+/// stream, so selection performs no heap allocation after warmup (§Perf
+/// iteration 4 — the previous mask builder heap-allocated a fresh index
+/// vector per 16-row tile, n/16 allocations per attend).
+#[derive(Clone, Debug, Default)]
+pub struct TopkScratch {
+    /// Stage-1 winners of the current tile / stage-2 selection buffer.
+    sel: Vec<usize>,
+    /// Stage-1 survivors across all tiles, ascending.
+    candidates: Vec<usize>,
+}
+
+/// Stable top-k selection over candidate indices (visited in ascending
+/// index order) by (score desc, index asc), via an in-place insertion
+/// scan: a candidate not beating the current k-th is rejected with one
+/// comparison, so the common case is O(1) per candidate.
+fn select_topk_into(
+    scores: &[f64],
+    cand: impl Iterator<Item = usize>,
+    k: usize,
+    buf: &mut Vec<usize>,
+) {
+    buf.clear();
+    if k == 0 {
+        return;
+    }
+    for i in cand {
+        let si = scores[i];
+        let mut pos = buf.len();
+        // strict `<` keeps ties on the earlier (lower-index) entry, which
+        // was inserted first because candidates arrive in ascending order
+        while pos > 0 && scores[buf[pos - 1]] < si {
+            pos -= 1;
+        }
+        if pos < k {
+            if buf.len() == k {
+                buf.pop();
+            }
+            buf.insert(pos, i);
+        }
+    }
+}
+
+/// Hierarchical two-stage top-k (Sec. III-C4) as a survivor list: the
+/// ≤ `final_k` indices that survive both stages, ascending. The sparse
+/// counterpart of [`two_stage_topk_mask`] — same selection, but the
+/// output is sized by k, not n, so downstream stages can walk only the
+/// survivors.
+pub fn two_stage_topk_indices(
+    scores: &[f64],
+    group: usize,
+    stage1_k: usize,
+    final_k: usize,
+) -> Vec<usize> {
+    let mut scratch = TopkScratch::default();
+    let mut out = Vec::new();
+    two_stage_topk_indices_into(scores, group, stage1_k, final_k, &mut scratch, &mut out);
+    out
+}
+
+/// Allocation-free core of [`two_stage_topk_indices`]: stage-1 top-k per
+/// tile and stage-2 top-`final_k` over the survivors run as in-place
+/// insertion scans over `scratch`; `out` ends ascending.
+pub fn two_stage_topk_indices_into(
+    scores: &[f64],
+    group: usize,
+    stage1_k: usize,
+    final_k: usize,
+    scratch: &mut TopkScratch,
+    out: &mut Vec<usize>,
+) {
+    let n = scores.len();
+    assert_eq!(n % group, 0, "N={n} not a multiple of group={group}");
+    scratch.candidates.clear();
+    for t in 0..n / group {
+        select_topk_into(scores, t * group..(t + 1) * group, stage1_k, &mut scratch.sel);
+        // ascending within the tile so stage 2 sees globally ascending
+        // candidates (its tie-break relies on arrival order)
+        scratch.sel.sort_unstable();
+        scratch.candidates.extend_from_slice(&scratch.sel);
+    }
+    out.clear();
+    if scratch.candidates.len() <= final_k {
+        out.extend_from_slice(&scratch.candidates);
+    } else {
+        select_topk_into(scores, scratch.candidates.iter().copied(), final_k, &mut scratch.sel);
+        out.extend_from_slice(&scratch.sel);
+        out.sort_unstable();
+    }
+}
+
 /// Hierarchical two-stage top-k mask (Sec. III-C4).
 pub fn two_stage_topk_mask(
     scores: &[f64],
@@ -251,26 +520,9 @@ pub fn two_stage_topk_mask(
     stage1_k: usize,
     final_k: usize,
 ) -> Vec<bool> {
-    let n = scores.len();
-    assert_eq!(n % group, 0, "N={n} not a multiple of group={group}");
-    let mut survive = vec![false; n];
-    for t in 0..n / group {
-        let tile = &scores[t * group..(t + 1) * group];
-        for i in topk_indices(tile, stage1_k) {
-            survive[t * group + i] = true;
-        }
-    }
-    // stage 2 over survivors
-    let masked: Vec<f64> = scores
-        .iter()
-        .zip(&survive)
-        .map(|(&s, &ok)| if ok { s } else { f64::NEG_INFINITY })
-        .collect();
-    let mut keep = vec![false; n];
-    for i in topk_indices(&masked, final_k) {
-        if survive[i] {
-            keep[i] = true;
-        }
+    let mut keep = vec![false; scores.len()];
+    for i in two_stage_topk_indices(scores, group, stage1_k, final_k) {
+        keep[i] = true;
     }
     keep
 }
@@ -300,6 +552,32 @@ pub fn lut_softmax(scores: &[f64], mask: &[bool], d_k: usize) -> Vec<f32> {
         .collect();
     let sum: f32 = es.iter().sum();
     es.iter().map(|&e| e / sum).collect()
+}
+
+/// Sparse LUT softmax: weights for the survivor rows only (`survivors`
+/// ascending, as [`two_stage_topk_indices`] emits them), aligned with
+/// `survivors`. Bit-identical to [`lut_softmax`] over the equivalent
+/// mask at the survivor positions: a masked lane is -inf to the running
+/// max (the identity) and exactly 0.0 to the f32 normaliser sum, and
+/// adding 0.0 to the non-negative accumulator never changes a bit.
+pub fn lut_softmax_sparse(scores: &[f64], survivors: &[usize], d_k: usize) -> Vec<f32> {
+    let scale = 1.0 / (d_k as f32).sqrt();
+    let mut mx = f32::NEG_INFINITY;
+    for &i in survivors {
+        mx = mx.max(scores[i] as f32 * scale);
+    }
+    let mut es: Vec<f32> = survivors
+        .iter()
+        .map(|&i| {
+            let x = scores[i] as f32 * scale;
+            if x.is_finite() { (x - mx).exp() } else { 0.0 }
+        })
+        .collect();
+    let sum: f32 = es.iter().sum();
+    for e in &mut es {
+        *e /= sum;
+    }
+    es
 }
 
 /// Eq. 1 end to end. `v`: row-major N x d_v (d_v = d_k here). BF16
@@ -379,6 +657,40 @@ fn weighted_sum_bf16_prefix(
     out.iter().map(|&x| bf16::round(x)).collect()
 }
 
+/// Sparse BF16 contextualization: gather only the survivor V rows
+/// (`survivors` ascending, `weights` aligned with it) — O(k·d_v) per
+/// query. Bit-identical to the dense prefix walk: non-survivors carry
+/// weight exactly 0.0 there and are skipped by its `a[r] == 0.0` guard,
+/// so both paths execute the same accumulations in the same order,
+/// including the explicit `ar * 0.0` lane adds for selected pad rows at
+/// or beyond `valid_rows`.
+pub fn weighted_sum_bf16_sparse(
+    weights: &[f32],
+    survivors: &[usize],
+    v: &[f32],
+    d_v: usize,
+    valid_rows: usize,
+) -> Vec<f32> {
+    let mut out = vec![0f32; d_v];
+    for (&w, &r) in weights.iter().zip(survivors) {
+        if w == 0.0 {
+            continue; // underflowed survivor: the dense path skips it too
+        }
+        let ar = bf16::round(w);
+        if r >= valid_rows {
+            for c in 0..d_v {
+                out[c] += ar * 0.0;
+            }
+            continue;
+        }
+        let row = &v[r * d_v..(r + 1) * d_v];
+        for c in 0..d_v {
+            out[c] += ar * bf16::round(row[c]);
+        }
+    }
+    out.iter().map(|&x| bf16::round(x)).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -437,6 +749,40 @@ mod tests {
     }
 
     #[test]
+    fn property_incremental_packing_equals_full_repack() {
+        // §Perf iteration 5: a memory grown row by row (all_pad +
+        // set_row) and rolled back (pad_rows) must score bit-identically
+        // to packing the equivalent buffer from scratch
+        check("incremental packing = full repack", 40, |rng| {
+            let d_k = [16usize, 48, 64, 96][rng.index(4)];
+            let capacity = 4 + rng.index(28);
+            let live = rng.index(capacity + 1);
+            let k = rng.normal_vec(live * d_k);
+            let mut inc = PackedKeys::all_pad(capacity, d_k);
+            // over-fill, then roll the tail back to `live` rows
+            let extra = rng.index(capacity - live + 1);
+            for r in 0..live + extra {
+                let row = if r < live {
+                    k[r * d_k..(r + 1) * d_k].to_vec()
+                } else {
+                    rng.normal_vec(d_k)
+                };
+                inc.set_row(r, &row);
+            }
+            inc.pad_rows(live, live + extra);
+            let mut k_pad = k.clone();
+            k_pad.resize(capacity * d_k, 1.0); // KvStore::KEY_PAD
+            let full = PackedKeys::new(&k_pad, d_k);
+            let q = rng.normal_vec(d_k);
+            assert_eq!(
+                inc.scores(&q, 6),
+                full.scores(&q, 6),
+                "d_k={d_k} capacity={capacity} live={live} extra={extra}"
+            );
+        });
+    }
+
+    #[test]
     fn property_prefix_scores_match_literal_pad_rows() {
         // masking rows at/beyond the prefix analytically must be
         // bit-identical to scoring a buffer whose tail literally holds
@@ -487,6 +833,86 @@ mod tests {
     }
 
     #[test]
+    fn property_survivor_list_matches_mask() {
+        // the sparse survivor list and the dense mask are the same
+        // selection in two encodings, and the list is ascending
+        check("survivors = mask positions", 50, |rng| {
+            let group = [8usize, 16, 32][rng.index(3)];
+            let n = group * (1 + rng.index(16));
+            let stage1_k = 1 + rng.index(3);
+            let final_k = [4usize, 32, 64][rng.index(3)];
+            let scores: Vec<f64> = (0..n).map(|_| rng.normal(0.0, 8.0)).collect();
+            let idx = two_stage_topk_indices(&scores, group, stage1_k, final_k);
+            assert!(idx.windows(2).all(|w| w[0] < w[1]), "not ascending: {idx:?}");
+            assert!(idx.len() <= final_k);
+            let mask = two_stage_topk_mask(&scores, group, stage1_k, final_k);
+            let from_mask: Vec<usize> = (0..n).filter(|&i| mask[i]).collect();
+            assert_eq!(idx, from_mask, "group={group} stage1_k={stage1_k} final_k={final_k}");
+        });
+    }
+
+    #[test]
+    fn property_sparse_attention_bitwise_equals_dense() {
+        // ISSUE 4 acceptance: the survivor-list pipeline is bit-identical
+        // to the dense mask path over random shapes, prefix views and
+        // degenerate all-pad prefixes
+        check("sparse attention = dense attention", 40, |rng| {
+            let d_k = [48usize, 64, 96][rng.index(3)];
+            let group = 16usize;
+            let n = group * [1usize, 3, 4, 7][rng.index(4)];
+            let valid_rows = match rng.index(4) {
+                0 => 0,
+                1 => 1,
+                2 => n,
+                _ => rng.index(n + 1),
+            };
+            let q = rng.normal_vec(d_k);
+            let k = rng.normal_vec(n * d_k);
+            let v = rng.normal_vec(n * d_k);
+            let cfg = AttnConfig::paper(n, d_k);
+            let packed = PackedKeys::new(&k, d_k);
+            let dense = camformer_attention_packed_prefix(&q, &packed, &v, &cfg, valid_rows);
+            let mut scratch = AttnScratch::default();
+            let sparse = camformer_attention_view_sparse(
+                &q,
+                &packed.view(n),
+                &v,
+                &cfg,
+                valid_rows,
+                &mut scratch,
+            );
+            assert_eq!(dense, sparse, "d_k={d_k} n={n} valid_rows={valid_rows}");
+            assert!(scratch.survivors().len() <= cfg.final_k);
+        });
+    }
+
+    #[test]
+    fn sparse_scratch_is_stateless_across_calls() {
+        // reusing one scratch across different queries/geometries must
+        // not leak state between calls
+        let mut rng = Rng::new(46);
+        let mut scratch = AttnScratch::default();
+        for n in [32usize, 128, 64] {
+            let q = rng.normal_vec(64);
+            let k = rng.normal_vec(n * 64);
+            let v = rng.normal_vec(n * 64);
+            let cfg = AttnConfig::paper(n, 64);
+            let packed = PackedKeys::new(&k, 64);
+            let reused =
+                camformer_attention_view_sparse(&q, &packed.view(n), &v, &cfg, n, &mut scratch);
+            let fresh = camformer_attention_view_sparse(
+                &q,
+                &packed.view(n),
+                &v,
+                &cfg,
+                n,
+                &mut AttnScratch::default(),
+            );
+            assert_eq!(reused, fresh, "n={n}");
+        }
+    }
+
+    #[test]
     fn property_mask_counts() {
         check("two-stage mask count", 50, |rng| {
             let n = 16 * (1 + rng.index(64));
@@ -531,6 +957,20 @@ mod tests {
             } else {
                 assert!(*p > 0.0);
             }
+        }
+    }
+
+    #[test]
+    fn sparse_softmax_matches_dense_at_survivors() {
+        let mut rng = Rng::new(47);
+        let scores: Vec<f64> = (0..128).map(|_| rng.range(0, 129) as f64 - 64.0).collect();
+        let survivors = two_stage_topk_indices(&scores, 16, 2, 32);
+        let sparse = lut_softmax_sparse(&scores, &survivors, 64);
+        let mask = two_stage_topk_mask(&scores, 16, 2, 32);
+        let dense = lut_softmax(&scores, &mask, 64);
+        assert_eq!(sparse.len(), survivors.len());
+        for (&i, &w) in survivors.iter().zip(&sparse) {
+            assert_eq!(w, dense[i], "survivor {i}");
         }
     }
 
@@ -596,6 +1036,9 @@ mod tests {
             let scores = vec![v; n];
             let idx = topk_indices(&scores, 5);
             assert_eq!(idx, vec![0, 1, 2, 3, 4]);
+            // the in-place survivor selection breaks ties the same way
+            let surv = two_stage_topk_indices(&scores, 16, 2, 5);
+            assert_eq!(surv, vec![0, 1, 16, 17, 32]);
         });
     }
 }

@@ -17,12 +17,15 @@
 //! speculative multi-step fusion, several decode steps of the *same*
 //! session: each item carries the causal prefix length it is allowed to
 //! see ([`AttendItem::prefix_rows`]), and rows at or beyond it must
-//! behave as pad.
+//! behave as pad. Items dispatched from a live `KvStore` additionally
+//! carry the store-owned sign-packed key bits ([`AttendItem::packed`]),
+//! so bit-level backends score without re-deriving them — the serving
+//! hot path packs each key row exactly once, at append time.
 
 use anyhow::Result;
 use std::path::Path;
 
-use crate::accuracy::functional::{self, AttnConfig};
+use crate::accuracy::functional::{self, AttnConfig, PackedKeysView};
 use crate::arch::{config::ArchConfig, pipeline};
 use crate::runtime::executable::Engine;
 
@@ -43,6 +46,12 @@ pub struct AttendItem<'a> {
     /// guarantees such rows literally ARE pad unless the backend reports
     /// [`AttentionBackend::supports_prefix_views`].
     pub prefix_rows: usize,
+    /// Store-owned sign-packed bits of `keys` (same rows), when the item
+    /// is served from a live `KvStore` (`KvStore::packed_view`). `None`
+    /// for detached buffers (the serving layer's materialised literal-pad
+    /// copies, hand-built test items); backends that consume packed bits
+    /// fall back to packing `keys` themselves then.
+    pub packed: Option<PackedKeysView<'a>>,
 }
 
 /// An attention executor over a (query, keys, values) triple.
@@ -57,9 +66,9 @@ pub trait AttentionBackend: Send {
     /// dispatch. Items of the same session share the same `keys` /
     /// `values` borrow, so implementations can detect runs by buffer
     /// identity (plus [`AttendItem::prefix_rows`]) and amortise
-    /// per-memory work (packing, artifact batch slots) across them. The
-    /// default loops [`AttentionBackend::attend`] per item, so every
-    /// backend works unchanged — the serving layer only hands a default
+    /// per-memory work (artifact batch slots) across them. The default
+    /// loops [`AttentionBackend::attend`] per item, so every backend
+    /// works unchanged — the serving layer only hands a default
     /// implementation buffers whose beyond-prefix rows are literal pad;
     /// outputs are returned in item order and must be bit-equal to
     /// sequential per-item dispatch.
@@ -76,8 +85,8 @@ pub trait AttentionBackend: Send {
     /// let q = vec![1.0f32; 64];
     /// let outs = be
     ///     .attend_batch(&[
-    ///         AttendItem { query: &q, keys: &k_a, values: &v_a, prefix_rows: 16 },
-    ///         AttendItem { query: &q, keys: &k_b, values: &v_b, prefix_rows: 16 },
+    ///         AttendItem { query: &q, keys: &k_a, values: &v_a, prefix_rows: 16, packed: None },
+    ///         AttendItem { query: &q, keys: &k_b, values: &v_b, prefix_rows: 16, packed: None },
     ///     ])
     ///     .unwrap();
     /// assert_eq!(outs.len(), 2);
@@ -107,87 +116,147 @@ pub trait AttentionBackend: Send {
 
     /// Invalidate any cached derivative of the key memory. The serving
     /// layer calls this after every KV mutation: the KV buffers mutate in
-    /// place (see `KvStore`), so pointer identity alone cannot detect
-    /// staleness.
+    /// place (see `KvStore`), so a backend caching by pointer identity
+    /// cannot detect staleness on its own. Since the store took ownership
+    /// of the packed key bits this is a no-op for every in-tree backend,
+    /// but the hook remains the contract for custom backends that derive
+    /// per-memory state.
     fn on_kv_update(&mut self) {}
 
     fn name(&self) -> &'static str;
 }
 
+/// Hot-path work accounting for [`FunctionalBackend`], read by the
+/// long-context bench to pin the sparse path's asymptotics (ISSUE 4).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WorkStats {
+    /// Queries served (single attends + batch items).
+    pub attends: u64,
+    /// V rows contextualization actually walked: ≤ `final_k` per query
+    /// on the sparse path, the full padded context on the dense baseline.
+    pub v_rows_touched: u64,
+    /// Key rows the backend packed itself because no store-owned packed
+    /// view was supplied — the O(n·d_k) fallback that incremental
+    /// `KvStore` packing retires from the serving hot path (must stay 0
+    /// when every item carries `AttendItem::packed`).
+    pub fallback_rows_packed: u64,
+}
+
 /// Pure-Rust functional backend.
 ///
-/// §Perf: read-heavy serving scores the *same* key memory on every
-/// request, so the backend caches a sign-packed copy (`PackedKeys`) keyed
-/// on the K buffer identity — one XNOR+popcount per 64 key bits
-/// thereafter. Identity alone is NOT enough under in-place KV mutation;
-/// the serving layer busts the cache through
-/// [`AttentionBackend::on_kv_update`]. Cross-session batches arrive with
-/// same-session items adjacent (the server sorts them), so the
-/// single-entry cache re-packs each session's keys at most once per
-/// dispatch.
+/// §Perf: serves through the survivor-list sparse pipeline by default
+/// (`functional::camformer_attention_view_sparse`) — softmax and BF16
+/// contextualization walk only the ≤ `final_k` top-k survivors, and
+/// batch items dispatched from a live `KvStore` carry the store-owned
+/// packed key bits (`AttendItem::packed`), so a decode step costs
+/// O(n + k·d) instead of the former O(n·d) score-walk plus the
+/// per-mutation full re-pack behind the retired identity cache +
+/// `on_kv_update` dance. [`FunctionalBackend::new_dense`] keeps the
+/// dense boolean-mask path as the bit-identical cross-check baseline
+/// (enforced by the randomized `batcher_fuzz` harness and the
+/// `accuracy::functional` property tests).
 pub struct FunctionalBackend {
     pub cfg: AttnConfig,
-    packed: Option<(usize, usize, functional::PackedKeys)>, // (ptr, len) identity
+    /// Survivor-list sparse pipeline (default) vs dense mask baseline;
+    /// both produce bit-identical outputs.
+    pub use_sparse: bool,
+    /// Work counters (see [`WorkStats`]).
+    pub work: WorkStats,
+    scratch: functional::AttnScratch,
 }
 
 impl FunctionalBackend {
+    /// Sparse survivor-list serving (the hot path).
     pub fn new(n: usize, d_k: usize) -> Self {
         FunctionalBackend {
             cfg: AttnConfig::paper(n, d_k),
-            packed: None,
+            use_sparse: true,
+            work: WorkStats::default(),
+            scratch: functional::AttnScratch::default(),
         }
     }
 
-    fn packed_for(&mut self, k: &[f32]) -> &functional::PackedKeys {
-        let id = (k.as_ptr() as usize, k.len());
-        let stale = match &self.packed {
-            Some((p, l, _)) => (*p, *l) != id,
-            None => true,
-        };
-        if stale {
-            self.packed = Some((id.0, id.1, functional::PackedKeys::new(k, self.cfg.d_k)));
+    /// Dense-mask baseline: every stage walks all n rows. Kept as the
+    /// cross-check the sparse path is asserted bit-identical against.
+    pub fn new_dense(n: usize, d_k: usize) -> Self {
+        FunctionalBackend { use_sparse: false, ..Self::new(n, d_k) }
+    }
+
+    /// One query over a packed view bounded at `valid_rows`, through the
+    /// configured (sparse or dense) pipeline.
+    fn run(
+        &mut self,
+        q: &[f32],
+        view: &PackedKeysView<'_>,
+        v: &[f32],
+        cfg: &AttnConfig,
+        valid_rows: usize,
+    ) -> Vec<f32> {
+        self.work.attends += 1;
+        if self.use_sparse {
+            let out = functional::camformer_attention_view_sparse(
+                q,
+                view,
+                v,
+                cfg,
+                valid_rows,
+                &mut self.scratch,
+            );
+            self.work.v_rows_touched += self.scratch.survivors().len() as u64;
+            out
+        } else {
+            self.work.v_rows_touched += cfg.n as u64;
+            functional::camformer_attention_view_dense(q, view, v, cfg, valid_rows)
         }
-        &self.packed.as_ref().unwrap().2
     }
 }
 
 impl AttentionBackend for FunctionalBackend {
+    /// Packs `k` on every call (counted in `WorkStats::fallback_rows_packed`):
+    /// with the identity cache retired, a detached buffer has no packed
+    /// bits to reuse. The serving hot path never takes this route — it
+    /// dispatches through `attend_batch` with store-owned bits attached
+    /// ([`AttendItem::packed`]).
     fn attend(&mut self, q: &[f32], k: &[f32], v: &[f32]) -> Result<Vec<f32>> {
         let mut cfg = self.cfg;
         cfg.n = k.len() / cfg.d_k; // geometry follows the (padded) cache
-        let packed = self.packed_for(k);
-        Ok(functional::camformer_attention_packed(q, packed, v, &cfg))
+        let packed = functional::PackedKeys::new(k, cfg.d_k);
+        self.work.fallback_rows_packed += cfg.n as u64;
+        Ok(self.run(q, &packed.view(cfg.n), v, &cfg, cfg.n))
     }
 
     /// Serves each item over its own causal prefix: scoring and V reads
-    /// are masked at [`AttendItem::prefix_rows`] (see
-    /// `functional::camformer_attention_packed_prefix`), bit-equal to a
-    /// literal-pad tail. Fused multi-step groups therefore stay zero-copy
-    /// — items of one session share a buffer (and the packed-key cache)
-    /// while attending over different prefixes of it.
+    /// are masked at [`AttendItem::prefix_rows`], bit-equal to a
+    /// literal-pad tail, so fused multi-step groups stay zero-copy —
+    /// items of one session share a buffer while attending over
+    /// different prefixes of it. Items carrying [`AttendItem::packed`]
+    /// score the store-owned bits directly (no packing at all on the
+    /// serving path); detached items fall back to a one-off pack.
     fn attend_batch(&mut self, items: &[AttendItem<'_>]) -> Result<Vec<Vec<f32>>> {
         let mut out = Vec::with_capacity(items.len());
         for it in items {
             let mut cfg = self.cfg;
             cfg.n = it.keys.len() / cfg.d_k;
-            let packed = self.packed_for(it.keys);
-            out.push(functional::camformer_attention_packed_prefix(
-                it.query,
-                packed,
-                it.values,
-                &cfg,
-                it.prefix_rows.min(cfg.n),
-            ));
+            let fallback;
+            let view = match it.packed {
+                Some(view) => {
+                    debug_assert_eq!(view.n, cfg.n, "packed view rows != K buffer rows");
+                    debug_assert_eq!(view.d_k, cfg.d_k, "packed view d_k != backend d_k");
+                    view
+                }
+                None => {
+                    fallback = functional::PackedKeys::new(it.keys, cfg.d_k);
+                    self.work.fallback_rows_packed += cfg.n as u64;
+                    fallback.view(cfg.n)
+                }
+            };
+            out.push(self.run(it.query, &view, it.values, &cfg, it.prefix_rows.min(cfg.n)));
         }
         Ok(out)
     }
 
     fn supports_prefix_views(&self) -> bool {
         true
-    }
-
-    fn on_kv_update(&mut self) {
-        self.packed = None;
     }
 
     fn name(&self) -> &'static str {
@@ -287,7 +356,9 @@ impl AttentionBackend for PjrtBackend {
     /// memories — or different prefixes of one memory, which fused
     /// bursts produce — cannot share one artifact call. (This backend
     /// does not claim [`AttentionBackend::supports_prefix_views`], so
-    /// the serving layer hands it literal-pad buffers per prefix.)
+    /// the serving layer hands it literal-pad buffers per prefix; the
+    /// binarisation happens inside the artifact, so
+    /// [`AttendItem::packed`] is ignored.)
     fn attend_batch(&mut self, items: &[AttendItem<'_>]) -> Result<Vec<Vec<f32>>> {
         let mut out = Vec::with_capacity(items.len());
         let mut start = 0;
@@ -334,6 +405,7 @@ unsafe impl Send for PjrtBackend {}
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::kv_store::KvStore;
     use crate::util::rng::Rng;
 
     #[test]
@@ -361,10 +433,6 @@ mod tests {
             self.0.attend(q, k, v)
         }
 
-        fn on_kv_update(&mut self) {
-            self.0.on_kv_update();
-        }
-
         fn name(&self) -> &'static str {
             "default-loop"
         }
@@ -378,7 +446,7 @@ mod tests {
         let qs: Vec<Vec<f32>> = (0..3).map(|_| rng.normal_vec(64)).collect();
         let items: Vec<AttendItem<'_>> = qs
             .iter()
-            .map(|q| AttendItem { query: q, keys: &k, values: &v, prefix_rows: 128 })
+            .map(|q| AttendItem { query: q, keys: &k, values: &v, prefix_rows: 128, packed: None })
             .collect();
         let mut f = DefaultLoop(FunctionalBackend::new(128, 64));
         assert!(!f.supports_prefix_views());
@@ -404,9 +472,9 @@ mod tests {
             .enumerate()
             .map(|(i, q)| {
                 if i % 2 == 0 {
-                    AttendItem { query: q, keys: &k0, values: &v0, prefix_rows: 64 }
+                    AttendItem { query: q, keys: &k0, values: &v0, prefix_rows: 64, packed: None }
                 } else {
-                    AttendItem { query: q, keys: &k1, values: &v1, prefix_rows: 64 }
+                    AttendItem { query: q, keys: &k1, values: &v1, prefix_rows: 64, packed: None }
                 }
             })
             .collect();
@@ -434,7 +502,13 @@ mod tests {
         let items: Vec<AttendItem<'_>> = qs
             .iter()
             .zip(prefixes)
-            .map(|(q, p)| AttendItem { query: q, keys: &k, values: &v, prefix_rows: p })
+            .map(|(q, p)| AttendItem {
+                query: q,
+                keys: &k,
+                values: &v,
+                prefix_rows: p,
+                packed: None,
+            })
             .collect();
         let mut f = FunctionalBackend::new(rows, 64);
         assert!(f.supports_prefix_views());
@@ -453,6 +527,71 @@ mod tests {
     }
 
     #[test]
+    fn store_packed_views_match_fallback_packing_and_skip_it() {
+        // items carrying KvStore-owned packed bits must produce the same
+        // outputs as detached items — without the backend packing anything
+        let mut rng = Rng::new(116);
+        let mut store = KvStore::new(64, 64, 64);
+        for _ in 0..24 {
+            store.append(&rng.normal_vec(64), &rng.normal_vec(64)).unwrap();
+        }
+        let rows = 32usize;
+        let qs: Vec<Vec<f32>> = (0..4).map(|_| rng.normal_vec(64)).collect();
+        let prefixes = [21usize, 22, 23, 24];
+        let (kp, vp, _) = store.padded_prefix_view(21, rows);
+        let with_bits: Vec<AttendItem<'_>> = qs
+            .iter()
+            .zip(prefixes)
+            .map(|(q, p)| AttendItem {
+                query: q,
+                keys: kp,
+                values: vp,
+                prefix_rows: p,
+                packed: Some(store.packed_view(rows)),
+            })
+            .collect();
+        let without: Vec<AttendItem<'_>> = with_bits
+            .iter()
+            .map(|it| AttendItem { packed: None, ..*it })
+            .collect();
+        let mut f = FunctionalBackend::new(64, 64);
+        let outs_bits = f.attend_batch(&with_bits).unwrap();
+        assert_eq!(f.work.fallback_rows_packed, 0, "store bits must be used as-is");
+        assert_eq!(f.work.attends, 4);
+        assert!(f.work.v_rows_touched <= 4 * f.cfg.final_k as u64);
+        let outs_fallback = f.attend_batch(&without).unwrap();
+        assert_eq!(f.work.fallback_rows_packed, 4 * rows as u64);
+        assert_eq!(outs_bits, outs_fallback);
+    }
+
+    #[test]
+    fn dense_and_sparse_pipelines_agree_bitwise() {
+        let mut rng = Rng::new(117);
+        let k = rng.normal_vec(96 * 64);
+        let v = rng.normal_vec(96 * 64);
+        let qs: Vec<Vec<f32>> = (0..5).map(|_| rng.normal_vec(64)).collect();
+        let items: Vec<AttendItem<'_>> = qs
+            .iter()
+            .enumerate()
+            .map(|(i, q)| AttendItem {
+                query: q,
+                keys: &k,
+                values: &v,
+                prefix_rows: 90 + i,
+                packed: None,
+            })
+            .collect();
+        let mut sparse = FunctionalBackend::new(96, 64);
+        let mut dense = FunctionalBackend::new_dense(96, 64);
+        assert_eq!(sparse.attend_batch(&items).unwrap(), dense.attend_batch(&items).unwrap());
+        assert_eq!(sparse.attend(&qs[0], &k, &v).unwrap(), dense.attend(&qs[0], &k, &v).unwrap());
+        // the sparse path walks only survivors; the dense baseline walks
+        // the whole context every query
+        assert!(sparse.work.v_rows_touched <= sparse.work.attends * 32);
+        assert_eq!(dense.work.v_rows_touched, dense.work.attends * 96);
+    }
+
+    #[test]
     fn geometry_follows_buffer_length() {
         // constructed for n=1024, served with a 64-row padded cache
         let mut rng = Rng::new(113);
@@ -466,19 +605,20 @@ mod tests {
     }
 
     #[test]
-    fn kv_update_invalidates_packed_cache() {
+    fn in_place_kv_mutation_is_visible_without_invalidation() {
+        // the backend holds no derivative of K anymore (the store owns
+        // the packed bits): mutating K in place — same pointer, same
+        // length — must be visible on the very next attend, with no
+        // on_kv_update call
         let mut rng = Rng::new(112);
         let q = rng.normal_vec(64);
         let mut k = rng.normal_vec(32 * 64);
         let v = rng.normal_vec(32 * 64);
         let mut f = FunctionalBackend::new(32, 64);
         let first = f.attend(&q, &k, &v).unwrap();
-        // mutate K in place: same pointer, same length — identity checks
-        // cannot see this, only the explicit invalidation hook can
         for x in k.iter_mut() {
             *x = -*x;
         }
-        f.on_kv_update();
         let second = f.attend(&q, &k, &v).unwrap();
         let mut fresh = FunctionalBackend::new(32, 64);
         assert_eq!(second, fresh.attend(&q, &k, &v).unwrap());

@@ -39,7 +39,9 @@
 //!   length at the query's own program position — while applying the
 //!   appends in program order, and each query then attends over a
 //!   prefix view of its session's store
-//!   (`KvStore::padded_prefix_view`, `AttendItem::prefix_rows`). Rows
+//!   (`KvStore::padded_prefix_view`, `AttendItem::prefix_rows`) — with
+//!   the store-owned sign-packed key bits riding along
+//!   (`AttendItem::packed`) so backends score without re-packing. Rows
 //!   at or beyond a query's prefix are scored and contextualised
 //!   exactly as the pre-written pad rows they replace, so every step's
 //!   output is bit-equal to sequential dispatch; mid-burst admission

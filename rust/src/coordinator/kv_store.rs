@@ -9,24 +9,34 @@
 //! padding pattern pre-written, so `append` is a row copy and
 //! [`KvStore::padded`] hands the execution layer a borrowed prefix — the
 //! decode hot path never clones the cache (the seed implementation
-//! re-cloned and re-padded the whole K/V on every step). Because the
-//! buffers mutate in place, pointer identity does NOT change when content
-//! does: any layer caching a derivative of the keys must be invalidated
-//! explicitly (see `AttentionBackend::on_kv_update`).
+//! re-cloned and re-padded the whole K/V on every step).
 //!
-//! Cross-session batched decode leans on the same property: one dispatch
+//! §Perf iteration 5 (ISSUE 4): the store also owns the **sign-packed key
+//! bits** the BA-CAM scorer consumes, maintained *incrementally*: `append`
+//! packs exactly the one new row (O(d_k)), `load` packs the loaded rows,
+//! and `truncate` (speculative rollback) restores the pad pattern over the
+//! rolled-back rows. [`KvStore::packed_view`] hands backends a borrowed
+//! [`PackedKeysView`] over the same buffer every execution view shares, so
+//! the previous per-mutation full re-pack (`AttentionBackend::on_kv_update`
+//! busting a backend-side cache, then an O(n·d_k) re-pack before the next
+//! attend) is gone from the decode hot path. `packed_rows_total` counts
+//! rows packed since creation — the long-context bench pins "one append
+//! packs one row" with it.
+//!
+//! Cross-session batched decode leans on disjoint ownership: one dispatch
 //! group borrows the padded views of *several* stores at once (they are
-//! disjoint allocations, all owned by one worker), and the buffer
-//! identity doubles as the session-run marker batched backends use to
-//! amortise per-memory work across a dispatch.
+//! disjoint allocations, all owned by one worker).
 //!
 //! Speculative multi-step fusion adds the third view kind: a fused burst
 //! applies every step's append up front, then each step attends over
 //! [`KvStore::padded_prefix_view`] — the causal prefix at its own program
 //! position, with the later appends still resident behind it (and
 //! [`KvStore::truncate`] rolls them back if the dispatch fails).
+//!
+//! [`PackedKeysView`]: crate::accuracy::functional::PackedKeysView
 
 use super::error::ServeError;
+use crate::accuracy::functional::{PackedKeys, PackedKeysView};
 
 /// Padding element for key rows: all-(+1) rows score mid-range against
 /// random real keys, and their V rows are zero, so an accidentally
@@ -42,6 +52,10 @@ pub struct KvStore {
     pub capacity: usize,
     keys: Vec<f32>,   // capacity x d_k, rows >= len hold KEY_PAD
     values: Vec<f32>, // capacity x d_v, rows >= len hold 0.0
+    /// Sign-packed mirror of `keys` (all capacity rows, pad rows hold the
+    /// packed pad pattern), maintained incrementally on every mutation.
+    packed: PackedKeys,
+    packed_rows_total: u64,
     len: usize,
 }
 
@@ -53,6 +67,8 @@ impl KvStore {
             capacity,
             keys: vec![KEY_PAD; capacity * d_k],
             values: vec![0.0; capacity * d_v],
+            packed: PackedKeys::all_pad(capacity, d_k),
+            packed_rows_total: 0,
             len: 0,
         }
     }
@@ -67,7 +83,8 @@ impl KvStore {
 
     /// Append one (key, value) row. Errors when the provisioned context is
     /// exhausted (the caller decides eviction policy — the paper sizes the
-    /// arrays to the target maximum context).
+    /// arrays to the target maximum context). Packs exactly the one new
+    /// row into the store-owned key bits — O(d_k), never a full re-pack.
     pub fn append(&mut self, key: &[f32], value: &[f32]) -> Result<(), ServeError> {
         if key.len() != self.d_k {
             return Err(ServeError::DimMismatch { what: "key", got: key.len(), want: self.d_k });
@@ -81,6 +98,8 @@ impl KvStore {
         let (kd, vd) = (self.d_k, self.d_v);
         self.keys[self.len * kd..(self.len + 1) * kd].copy_from_slice(key);
         self.values[self.len * vd..(self.len + 1) * vd].copy_from_slice(value);
+        self.packed.set_row(self.len, key);
+        self.packed_rows_total += 1;
         self.len += 1;
         Ok(())
     }
@@ -110,6 +129,10 @@ impl KvStore {
         }
         self.keys[..keys.len()].copy_from_slice(keys);
         self.values[..values.len()].copy_from_slice(values);
+        for r in 0..n {
+            self.packed.set_row(r, &keys[r * self.d_k..(r + 1) * self.d_k]);
+        }
+        self.packed_rows_total += n as u64;
         // restore the padding pattern over rows [n, old_len)
         let repad_to = self.len.max(n);
         for x in &mut self.keys[n * self.d_k..repad_to * self.d_k] {
@@ -118,6 +141,7 @@ impl KvStore {
         for x in &mut self.values[n * self.d_v..repad_to * self.d_v] {
             *x = 0.0;
         }
+        self.packed.pad_rows(n, repad_to);
         self.len = n;
         Ok(())
     }
@@ -155,9 +179,30 @@ impl KvStore {
         )
     }
 
+    /// The store-owned sign-packed key bits of the same `pad_to`-row
+    /// execution geometry as [`KvStore::padded`] /
+    /// [`KvStore::padded_prefix_view`] — what `AttendItem::packed`
+    /// carries so backends score without re-packing. Like the f32 views
+    /// it exposes whatever is resident: rows in `[prefix, len)` hold live
+    /// speculative appends (the scorer masks them per item via its
+    /// `valid_rows` argument), rows at or beyond `len` hold the packed
+    /// pad pattern.
+    pub fn packed_view(&self, pad_to: usize) -> PackedKeysView<'_> {
+        assert!(pad_to <= self.capacity, "pad_to {pad_to} beyond capacity {}", self.capacity);
+        self.packed.view(pad_to)
+    }
+
+    /// Rows packed into the store-owned key bits since creation: one per
+    /// appended/loaded row, never O(n) per mutation (asserted by the
+    /// long-context hot-path bench).
+    pub fn packed_rows_total(&self) -> u64 {
+        self.packed_rows_total
+    }
+
     /// Roll back to `len` rows (the failed-dispatch path of speculative
     /// fusion): discards rows `[len, self.len)` and restores the padding
-    /// pattern over them so later `padded*` views stay pure borrows.
+    /// pattern — f32 and packed-bit — over them so later `padded*` views
+    /// stay pure borrows.
     pub fn truncate(&mut self, len: usize) {
         assert!(len <= self.len, "truncate to {len} beyond live length {}", self.len);
         for x in &mut self.keys[len * self.d_k..self.len * self.d_k] {
@@ -166,6 +211,7 @@ impl KvStore {
         for x in &mut self.values[len * self.d_v..self.len * self.d_v] {
             *x = 0.0;
         }
+        self.packed.pad_rows(len, self.len);
         self.len = len;
     }
 
@@ -183,6 +229,7 @@ impl KvStore {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::check::check;
     use crate::util::rng::Rng;
 
     #[test]
@@ -270,6 +317,55 @@ mod tests {
     }
 
     #[test]
+    fn property_packed_view_matches_full_repack_of_padded_buffer() {
+        // the store-owned bits must stay bit-equivalent to packing the
+        // padded f32 view from scratch, across every mutation kind
+        use crate::accuracy::functional::PackedKeys;
+        check("store packed bits = full repack", 30, |rng| {
+            let d_k = [16usize, 48, 64][rng.index(3)];
+            let capacity = 8 + rng.index(24);
+            let mut s = KvStore::new(capacity, d_k, d_k);
+            for _ in 0..12 {
+                match rng.index(6) {
+                    0 => {
+                        let rows = rng.index(capacity) + 1;
+                        let _ = s.load(&rng.normal_vec(rows * d_k), &rng.normal_vec(rows * d_k));
+                    }
+                    1 => s.truncate(rng.index(s.len() + 1)),
+                    _ => {
+                        let _ = s.append(&rng.normal_vec(d_k), &rng.normal_vec(d_k));
+                    }
+                }
+                let pad_to = s.len() + rng.index(capacity - s.len() + 1);
+                let (kp, _, _) = s.padded(pad_to);
+                let full = PackedKeys::new(kp, d_k);
+                let q = rng.normal_vec(d_k);
+                let prefix = rng.index(s.len() + 1);
+                assert_eq!(
+                    s.packed_view(pad_to).scores_prefix(&q, 6, prefix),
+                    full.scores_prefix(&q, 6, prefix),
+                    "capacity={capacity} len={} pad_to={pad_to} prefix={prefix}",
+                    s.len()
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn packing_is_incremental_one_row_per_append() {
+        let mut s = KvStore::new(16, 4, 4);
+        assert_eq!(s.packed_rows_total(), 0);
+        for i in 1..=10u64 {
+            s.append(&[1.0; 4], &[0.0; 4]).unwrap();
+            assert_eq!(s.packed_rows_total(), i, "append must pack exactly one row");
+        }
+        s.truncate(3); // rollback restores pad, packs nothing
+        assert_eq!(s.packed_rows_total(), 10);
+        s.load(&vec![0.5; 5 * 4], &vec![0.5; 5 * 4]).unwrap();
+        assert_eq!(s.packed_rows_total(), 15, "load packs the loaded rows");
+    }
+
+    #[test]
     fn padded_is_zero_copy_and_stable() {
         let mut s = KvStore::new(100, 64, 64);
         let mut rng = Rng::new(7);
@@ -285,8 +381,9 @@ mod tests {
         assert_eq!(v.len(), 64 * 64);
         assert!(k[50 * 64..].iter().all(|&x| x == KEY_PAD));
         assert!(v[50 * 64..].iter().all(|&x| x == 0.0));
-        // appends must not move the buffer (the serving layer relies on
-        // explicit invalidation, not reallocation, for cache busting)
+        // appends must not move the buffer (batched dispatch borrows
+        // several stores' views at once and backends detect same-session
+        // runs by buffer identity)
         drop((k, v));
         s.append(&rng.normal_vec(64), &rng.normal_vec(64)).unwrap();
         assert_eq!(s.padded(64).0.as_ptr(), ptr_before);

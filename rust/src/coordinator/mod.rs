@@ -11,7 +11,11 @@
 //! * [`session`]   — [`Session`]: live per-(session, head) KV state owned
 //!   by a worker thread; sessions route session id -> shard -> head;
 //! * [`kv_store`]  — [`KvStore`]: capacity-provisioned K/V memory with
-//!   O(row) decode append and zero-copy padded execution views;
+//!   O(row) decode append, zero-copy padded execution views, and the
+//!   store-owned sign-packed key bits, maintained *incrementally* (an
+//!   append packs exactly one row) and lent to backends per dispatch
+//!   item (`AttendItem::packed`) so the hot path never re-packs a
+//!   session's keys;
 //! * [`server`]    — [`CamformerServer`]: `Prefill` / `Decode` / `Attend`
 //!   request enum, capacity-aware typed admission, worker-per-(shard,
 //!   head) routing, shutdown;
@@ -26,9 +30,12 @@
 //!   single-session burst amortises dispatches while staying bit-equal
 //!   to sequential execution. `Prefill` remains a barrier;
 //! * [`backend`]   — pluggable execution: PJRT artifacts (the real hot
-//!   path, `pjrt` feature), the pure-Rust functional model, or the
-//!   cycle-annotated architecture simulator; all take whole dispatch
-//!   groups through [`AttentionBackend::attend_batch`];
+//!   path, `pjrt` feature), the pure-Rust functional model (serving
+//!   through the survivor-list sparse pipeline by default — softmax and
+//!   BF16 contextualization walk only the ≤ final_k top-k survivors,
+//!   O(n + k·d) per decode step, bit-identical to the dense baseline),
+//!   or the cycle-annotated architecture simulator; all take whole
+//!   dispatch groups through [`AttentionBackend::attend_batch`];
 //! * [`error`]     — [`ServeError`]: every admission / serving failure as
 //!   a typed variant, reported per request (one refused batch member
 //!   never poisons its batch-mates);
@@ -75,7 +82,7 @@
 //! |-------|------|-------|
 //! | batcher (incl. both planning modes), kv (incl. prefix views), metrics, session | unit | in-module `#[cfg(test)]` |
 //! | scorers, masks, prefix masking, BIMV tiles | property (seeded, `util::check`) | `accuracy::functional`, `bimv::engine` |
-//! | randomized batched-vs-sequential equivalence + planner invariants + fused-burst prefix boundaries | fuzz/property | `rust/tests/batcher_fuzz.rs` |
+//! | randomized batched-vs-sequential equivalence (dispatch configs × dense/sparse pipelines) + planner invariants + fused-burst prefix boundaries | fuzz/property | `rust/tests/batcher_fuzz.rs` |
 //! | decode serving (interleaved sessions, live append, batched vs sequential bit-equality, per-item admission failures) | integration | `rust/tests/decode_serving.rs` |
 //! | serving flows over functional/arch backends | integration | `rust/tests/coordinator_integration.rs` |
 //! | PJRT artifacts vs functional model | golden (skips without artifacts) | `rust/tests/runtime_integration.rs` |

@@ -544,8 +544,9 @@ fn execute_batch<B: AttentionBackend>(
         }
     }
     if mutated {
-        // the KV buffers mutate in place; identity-cached backend state is
-        // stale for every session touched above
+        // the KV buffers mutate in place; the stores maintain their own
+        // packed key bits incrementally, but a custom backend caching a
+        // derivative by buffer identity still needs the explicit signal
         backend.on_kv_update();
     }
     if pending.is_empty() {
@@ -554,8 +555,9 @@ fn execute_batch<B: AttentionBackend>(
 
     // Phase 2 — bind each surviving query to a view of its own causal
     // prefix. Same-session items are made adjacent (stable sort by
-    // session, program order within a session) so identity-cached
-    // backends pack each key memory at most once per dispatch; response
+    // session, program order within a session) so backends that detect
+    // same-memory runs by buffer identity (the PJRT artifact path) see
+    // each key memory as one contiguous run per dispatch; response
     // identity rides on the pending index.
     let mut order: Vec<usize> = (0..pending.len()).collect();
     order.sort_by_key(|&i| pending[i].session);
@@ -617,15 +619,18 @@ fn execute_batch<B: AttentionBackend>(
     let mut batch: Vec<AttendItem<'_>> = Vec::with_capacity(planned.len());
     for (i, _, source) in &planned {
         let p = &pending[*i];
-        let (keys, values) = match source {
+        // store-backed items also carry the store-owned sign-packed key
+        // bits, so bit-level backends score without re-packing (the
+        // scratch copies are detached buffers and carry none)
+        let (keys, values, packed) = match source {
             ViewSource::Store { rows } => {
                 let s = sessions.get(&p.session).expect("still resident");
                 let (k, v, _) = s.store.padded_prefix_view(p.prefix, *rows);
-                (k, v)
+                (k, v, Some(s.store.packed_view(*rows)))
             }
-            ViewSource::Scratch(j) => (&scratch[*j].0[..], &scratch[*j].1[..]),
+            ViewSource::Scratch(j) => (&scratch[*j].0[..], &scratch[*j].1[..], None),
         };
-        batch.push(AttendItem { query: &p.query, keys, values, prefix_rows: p.prefix });
+        batch.push(AttendItem { query: &p.query, keys, values, prefix_rows: p.prefix, packed });
     }
 
     // Phase 3 — one backend dispatch for the whole group. Occupancy is
@@ -905,10 +910,6 @@ mod tests {
             16
         }
 
-        fn on_kv_update(&mut self) {
-            self.0.on_kv_update();
-        }
-
         fn name(&self) -> &'static str {
             "fixed16"
         }
@@ -1047,10 +1048,6 @@ mod tests {
             self.inner.supports_prefix_views()
         }
 
-        fn on_kv_update(&mut self) {
-            self.inner.on_kv_update();
-        }
-
         fn name(&self) -> &'static str {
             "fault-injected"
         }
@@ -1134,10 +1131,6 @@ mod tests {
     impl AttentionBackend for NoPrefixViews {
         fn attend(&mut self, q: &[f32], k: &[f32], v: &[f32]) -> anyhow::Result<Vec<f32>> {
             self.0.attend(q, k, v)
-        }
-
-        fn on_kv_update(&mut self) {
-            self.0.on_kv_update();
         }
 
         fn name(&self) -> &'static str {

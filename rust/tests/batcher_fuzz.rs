@@ -1,4 +1,5 @@
-//! Randomized batched-vs-sequential equivalence harness (ISSUE 3).
+//! Randomized batched-vs-sequential equivalence harness (ISSUE 3,
+//! extended for the survivor-list sparse pipeline in ISSUE 4).
 //!
 //! Speculative multi-step fusion changes the core batching invariant:
 //! a dispatch group may hold many decode steps of one session, each
@@ -7,13 +8,14 @@
 //! this harness generates ~200 arbitrary interleaved
 //! Prefill/Decode/Attend streams across sessions — including
 //! capacity-refusal and unknown-session cases — and asserts, for every
-//! stream, that batched dispatch (conservative AND speculative, over
-//! prefix-native AND prefix-oblivious backends) is bit-equal to
-//! sequential dispatch, plus the planner invariants (prefill is a
-//! barrier; order preservation; group occupancy bounds) on every
-//! generated wire batch. A deterministic boundary property test pins the
-//! prefix-view semantics at fused-burst lengths {1, 2, cam-1, cam,
-//! cam+1}.
+//! stream, that every dispatch config (sequential / conservative /
+//! fused / fused-scratch) crossed with both functional pipelines
+//! (dense mask baseline × survivor-list sparse, the serving default) is
+//! bit-equal to sequential dense dispatch, plus the planner invariants
+//! (prefill is a barrier; order preservation; group occupancy bounds)
+//! on every generated wire batch. A deterministic boundary property
+//! test pins the prefix-view semantics at fused-burst lengths {1, 2,
+//! cam-1, cam, cam+1}.
 
 use std::time::{Duration, Instant};
 
@@ -117,12 +119,19 @@ impl AttentionBackend for NoPrefixViews {
         self.0.attend(q, k, v)
     }
 
-    fn on_kv_update(&mut self) {
-        self.0.on_kv_update();
-    }
-
     fn name(&self) -> &'static str {
         "no-prefix-views"
+    }
+}
+
+/// The functional backend in either pipeline mode (ISSUE 4): `sparse` is
+/// the serving default (survivor-list softmax + contextualization over
+/// store-owned packed bits), dense is the cross-check baseline.
+fn pipeline_backend(sparse: bool) -> FunctionalBackend {
+    if sparse {
+        FunctionalBackend::new(CAPACITY, D)
+    } else {
+        FunctionalBackend::new_dense(CAPACITY, D)
     }
 }
 
@@ -134,39 +143,53 @@ fn batched_dispatch_bit_equals_sequential_on_random_streams() {
         let ops = 8 + crng.index(25);
         let stream = gen_stream(&mut crng, ops);
 
-        // ground truth: one request per dispatch, in submission order
+        // ground truth: one request per dispatch, in submission order,
+        // through the dense baseline pipeline
         let (sequential, m_seq) = run_stream(
             &stream,
             BatchPolicy::conservative(1, Duration::from_micros(50)),
-            |_| FunctionalBackend::new(CAPACITY, D),
+            |_| pipeline_backend(false),
         );
-        // conservative cross-session batching (the PR 2 invariant)
-        let (conservative, _) = run_stream(
-            &stream,
-            BatchPolicy::conservative(16, Duration::from_millis(1)),
-            |_| FunctionalBackend::new(CAPACITY, D),
-        );
-        assert_equivalent(case, "conservative", &sequential, &conservative);
-        // speculative multi-step fusion, prefix-native backend
-        let (fused, m_fused) = run_stream(
-            &stream,
-            BatchPolicy::bounds(16, Duration::from_millis(1)),
-            |_| FunctionalBackend::new(CAPACITY, D),
-        );
-        assert_equivalent(case, "fused", &sequential, &fused);
-        // speculative fusion again, over a backend that cannot mask
-        // prefixes natively (the scratch-materialisation path)
-        let (scratch, _) = run_stream(
-            &stream,
-            BatchPolicy::bounds(16, Duration::from_millis(1)),
-            |_| NoPrefixViews(FunctionalBackend::new(CAPACITY, D)),
-        );
-        assert_equivalent(case, "fused/scratch", &sequential, &scratch);
+        for sparse in [false, true] {
+            let tag = if sparse { "/sparse" } else { "" };
+            // sequential dispatch through the sparse pipeline (the dense
+            // one IS the ground truth above)
+            if sparse {
+                let (seq_sparse, _) = run_stream(
+                    &stream,
+                    BatchPolicy::conservative(1, Duration::from_micros(50)),
+                    |_| pipeline_backend(true),
+                );
+                assert_equivalent(case, "sequential/sparse", &sequential, &seq_sparse);
+            }
+            // conservative cross-session batching (the PR 2 invariant)
+            let (conservative, _) = run_stream(
+                &stream,
+                BatchPolicy::conservative(16, Duration::from_millis(1)),
+                |_| pipeline_backend(sparse),
+            );
+            assert_equivalent(case, &format!("conservative{tag}"), &sequential, &conservative);
+            // speculative multi-step fusion, prefix-native backend
+            let (fused, m_fused) = run_stream(
+                &stream,
+                BatchPolicy::bounds(16, Duration::from_millis(1)),
+                |_| pipeline_backend(sparse),
+            );
+            assert_equivalent(case, &format!("fused{tag}"), &sequential, &fused);
+            // speculative fusion again, over a backend that cannot mask
+            // prefixes natively (the scratch-materialisation path)
+            let (scratch, _) = run_stream(
+                &stream,
+                BatchPolicy::bounds(16, Duration::from_millis(1)),
+                |_| NoPrefixViews(pipeline_backend(sparse)),
+            );
+            assert_equivalent(case, &format!("fused/scratch{tag}"), &sequential, &scratch);
 
-        // amortisation accounting: the same queries were served, through
-        // no more dispatches than one-at-a-time execution used
-        assert_eq!(m_fused.dispatched_queries, m_seq.dispatched_queries, "case {case}");
-        assert!(m_fused.dispatches <= m_seq.dispatches, "case {case}");
+            // amortisation accounting: the same queries were served,
+            // through no more dispatches than one-at-a-time execution
+            assert_eq!(m_fused.dispatched_queries, m_seq.dispatched_queries, "case {case}");
+            assert!(m_fused.dispatches <= m_seq.dispatches, "case {case}");
+        }
     }
 }
 
@@ -272,13 +295,29 @@ fn fused_burst_sees_exact_causal_prefix_at_boundary_lengths() {
                 let prefix = prefill_rows + i + 1;
                 let rows = prefix.div_ceil(cam) * cam;
                 let (keys, values, _) = store.padded_prefix_view(prefix, rows);
-                AttendItem { query: q, keys, values, prefix_rows: prefix }
+                // store-owned packed bits ride along, as the worker's
+                // dispatch builder attaches them
+                let packed = Some(store.packed_view(rows));
+                AttendItem { query: q, keys, values, prefix_rows: prefix, packed }
             })
             .collect();
-        let mut backend = FunctionalBackend::new(capacity, d);
-        let outs = backend.attend_batch(&items).unwrap();
-        for (i, (out, want)) in outs.iter().zip(&reference).enumerate() {
-            assert_eq!(out, want, "burst {burst} step {i}: prefix view diverged");
+        let mut sparse_be = FunctionalBackend::new(capacity, d);
+        let mut dense_be = FunctionalBackend::new_dense(capacity, d);
+        for backend in [&mut sparse_be, &mut dense_be] {
+            let outs = backend.attend_batch(&items).unwrap();
+            for (i, (out, want)) in outs.iter().zip(&reference).enumerate() {
+                assert_eq!(
+                    out,
+                    want,
+                    "burst {burst} step {i} ({}): prefix view diverged",
+                    if backend.use_sparse { "sparse" } else { "dense" }
+                );
+            }
+            assert_eq!(
+                backend.work.fallback_rows_packed,
+                0,
+                "items carried store-owned bits; the backend must not re-pack"
+            );
         }
     }
 }

@@ -115,7 +115,10 @@ fn arch_backend_serves_with_latency_annotation() {
 #[test]
 fn decode_style_kv_growth_through_store() {
     // the KvStore layer alone: causal decoding against the zero-copy
-    // padded view, exercising cache invalidation on the backend
+    // padded view plus the store-owned packed key bits (no backend-side
+    // cache to invalidate anymore — the store packs each appended row
+    // incrementally and the dispatch view carries the bits)
+    use camformer::coordinator::backend::AttendItem;
     let mut store = KvStore::new(64, 64, 64);
     let mut rng = Rng::new(400);
     let mut backend = FunctionalBackend::new(64, 64);
@@ -123,15 +126,27 @@ fn decode_style_kv_growth_through_store() {
         let k = rng.normal_vec(64);
         let v = rng.normal_vec(64);
         store.append(&k, &v).unwrap();
-        backend.on_kv_update();
-        let rows = backend.required_rows(store.len(), 16);
-        let (kp, vp, valid) = store.padded(rows.min(64));
+        let rows = backend.required_rows(store.len(), 16).min(64);
+        let (kp, vp, valid) = store.padded(rows);
         assert_eq!(valid, step);
         let q = rng.normal_vec(64);
-        let out = backend.attend(&q, kp, vp).unwrap();
+        let item = AttendItem {
+            query: &q,
+            keys: kp,
+            values: vp,
+            prefix_rows: valid,
+            packed: Some(store.packed_view(rows)),
+        };
+        let out = backend.attend_batch(&[item]).unwrap().remove(0);
         assert_eq!(out.len(), 64);
         assert!(out.iter().all(|x| x.is_finite()));
     }
+    assert_eq!(
+        backend.work.fallback_rows_packed,
+        0,
+        "decode served entirely from store-owned packed bits"
+    );
+    assert_eq!(store.packed_rows_total(), 64, "one packed row per append");
     assert!(store.append(&rng.normal_vec(64), &rng.normal_vec(64)).is_err());
 }
 
@@ -182,8 +197,10 @@ fn sessions_are_isolated_across_shards() {
 
 #[test]
 fn attend_after_decode_sees_fresh_cache() {
-    // regression for the packed-key cache: the KV buffer mutates in place
-    // (same pointer), so a stale cache would silently serve old scores
+    // staleness regression: the KV buffer mutates in place (same
+    // pointer), so any layer serving a stale key derivative — once the
+    // backend's identity cache, now the store-owned incremental packed
+    // bits — would silently return old scores
     let n = 64;
     let cfg = ServerConfig { kv_capacity: n, ..Default::default() };
     let quantum = cfg.pad_quantum;
@@ -192,7 +209,8 @@ fn attend_after_decode_sees_fresh_cache() {
     let mut mirror = KvStore::new(n, 64, 64);
     // 20 rows pad to 32 both before and after one append, so the K buffer
     // keeps the same pointer AND length across the mutation — the exact
-    // situation where only on_kv_update can save the packed cache
+    // situation where identity checks cannot detect staleness and the
+    // packed bits must have been updated at append time
     let keys = rng.normal_vec(20 * 64);
     let values = rng.normal_vec(20 * 64);
     mirror.load(&keys, &values).unwrap();
