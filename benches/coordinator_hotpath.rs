@@ -12,7 +12,8 @@ use camformer::arch::softmax::SoftmaxEngine;
 use camformer::coordinator::backend::{AttendItem, AttentionBackend, FunctionalBackend};
 use camformer::coordinator::batcher::{BatchPolicy, PlanMode};
 use camformer::coordinator::kv_store::KvStore;
-use camformer::coordinator::server::{CamformerServer, Request, ServerConfig};
+use camformer::coordinator::server::{CamformerServer, ReclaimPolicy, Request, ServerConfig};
+use camformer::coordinator::SessionHandle;
 use camformer::util::bench::Bencher;
 use camformer::util::{bf16, rng::Rng};
 
@@ -305,6 +306,70 @@ fn main() {
                 ),
             }
         }
+    }
+
+    // macro: session lifecycle churn (ISSUE 5) — a 16-session population
+    // served through a worker capped at max_sessions = 4 under
+    // LruEvictIdle: every over-limit `open` must evict the LRU idle
+    // session instead of failing terminally (previously SessionLimit),
+    // half the handles close explicitly, and the lifecycle counters
+    // (evictions, closes, KV rows released) must come back non-zero.
+    {
+        let capacity = 128usize;
+        let max_sessions = 4usize;
+        let population = 16usize;
+        let steps_per_session = 4usize;
+        let mut bc = Bencher::coarse();
+        let mut last = (0u64, 0u64, 0u64);
+        bc.bench("session_churn_lru_16sess_cap4", || {
+            let server = CamformerServer::start(
+                ServerConfig {
+                    kv_capacity: capacity,
+                    max_sessions,
+                    reclaim: ReclaimPolicy::LruEvictIdle { min_idle: Duration::ZERO },
+                    batch: BatchPolicy::bounds(16, Duration::from_micros(200)),
+                    ..Default::default()
+                },
+                |_| FunctionalBackend::new(capacity, 64),
+            );
+            let mut rng2 = Rng::new(14);
+            let mut served = 0u64;
+            // keep the odd handles alive so capacity pressure is
+            // resolved by the reclaim policy, not by our closes
+            let mut resident: Vec<SessionHandle<'_>> = Vec::new();
+            for sid in 0..population as u64 {
+                let h = server
+                    .open(sid, rng2.normal_vec(16 * 64), rng2.normal_vec(16 * 64))
+                    .expect("LruEvictIdle must admit by evicting the LRU idle session");
+                let tickets: Vec<_> = (0..steps_per_session)
+                    .map(|_| {
+                        h.decode(rng2.normal_vec(64), rng2.normal_vec(64), rng2.normal_vec(64))
+                            .unwrap()
+                    })
+                    .collect();
+                for t in tickets {
+                    assert!(t.wait().is_ok(), "churn decode failed");
+                    served += 1;
+                }
+                if sid % 2 == 0 {
+                    h.close().unwrap();
+                } else {
+                    resident.push(h);
+                }
+            }
+            drop(resident);
+            let (m, w) = server.shutdown();
+            assert!(m.evictions > 0, "over-subscribed opens must evict");
+            assert!(m.closes > 0, "explicit closes must be counted");
+            assert!(m.kv_rows_released > 0, "lifecycle must release KV capacity");
+            last = (m.evictions, m.closes, m.kv_rows_released);
+            (served, w)
+        });
+        println!(
+            "      session_churn: evictions={} closes={} kv_rows_released={} \
+             (16 opens through a 4-session worker)",
+            last.0, last.1, last.2
+        );
     }
 
     // macro: long-context single-session decode (ISSUE 4) — the

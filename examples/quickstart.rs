@@ -1,49 +1,62 @@
-//! Quickstart: one attention query through every layer of the stack.
+//! Quickstart: one attention query through every layer of the stack,
+//! ending at the serving API (`open` -> ticket `decode` -> `close`).
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart          # offline functional path
+//! make artifacts && cargo run --release --example quickstart  # + PJRT replay
 //! ```
 //!
-//! Flow: PJRT loads the AOT'd Pallas BA-CAM kernel (L1) inside the JAX
-//! attention graph (L2); the pure-Rust functional model and the cycle-
-//! annotated architecture simulator (L3) cross-check the numbers.
+//! Flow: the pure-Rust functional model computes Eq. 1 (always
+//! available); when this build has the `pjrt` feature and AOT'd Pallas
+//! artifacts, PJRT replays the BA-CAM kernel (L1) and the JAX attention
+//! graph (L2) and is cross-checked against it; the cycle-annotated
+//! architecture simulator annotates latency; and the Layer-3 coordinator
+//! serves a live decode step through a `SessionHandle`. Offline (no
+//! artifacts, CI) every step except the PJRT replay still runs.
+
+use std::time::Duration;
 
 use anyhow::Result;
 use camformer::accuracy::functional::{self, AttnConfig};
 use camformer::arch::{config::ArchConfig, pipeline};
+use camformer::coordinator::{CamformerServer, FunctionalBackend, ReclaimPolicy, ServerConfig};
 use camformer::runtime::executable::{default_artifacts_dir, Engine};
 use camformer::util::rng::Rng;
 
 fn main() -> Result<()> {
-    let dir = default_artifacts_dir();
-    println!("loading artifacts from {dir:?}");
-    let mut engine = Engine::new(&dir)?;
-
     // synthesize a query against a 1024-entry key/value memory
     let mut rng = Rng::new(1);
     let q = rng.normal_vec(64);
     let k = rng.normal_vec(1024 * 64);
     let v = rng.normal_vec(1024 * 64);
 
-    // L1: the BA-CAM association kernel alone
-    let scores = engine.load("bacam_scores")?.run_f32(&[&q, &k])?;
-    let best = scores
-        .iter()
-        .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-        .unwrap();
-    println!("BA-CAM: best-matching key = #{} (score {})", best.0, best.1);
-
-    // L1+L2: full Eq. 1 through PJRT
-    let out = engine.load("attn_single_query")?.run_f32(&[&q, &k, &v])?;
-    println!("attention output (first 4 dims): {:?}", &out[..4]);
-
-    // L3 cross-checks
+    // L3 functional model: the golden Eq. 1 reference, always available
     let want = functional::camformer_attention(&q, &k, &v, &AttnConfig::paper(1024, 64));
-    let diff = out.iter().zip(&want).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
-    println!("PJRT vs functional model: max |diff| = {diff:.6}");
-    assert!(diff < 1e-2);
+    println!("functional model output (first 4 dims): {:?}", &want[..4]);
 
+    // L1/L2: the AOT Pallas BA-CAM kernel + attention graph through
+    // PJRT, when artifacts and the `pjrt` feature are present; the
+    // quickstart stays fully functional offline
+    let dir = default_artifacts_dir();
+    match Engine::new(&dir) {
+        Ok(mut engine) => {
+            let scores = engine.load("bacam_scores")?.run_f32(&[&q, &k])?;
+            let best = scores
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap();
+            println!("BA-CAM: best-matching key = #{} (score {})", best.0, best.1);
+            let out = engine.load("attn_single_query")?.run_f32(&[&q, &k, &v])?;
+            let diff =
+                out.iter().zip(&want).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+            println!("PJRT vs functional model: max |diff| = {diff:.6}");
+            assert!(diff < 1e-2);
+        }
+        Err(e) => println!("PJRT replay skipped ({e:#})"),
+    }
+
+    // L3 architecture simulation: cycle-accurate latency annotation
     let (_, lat) = pipeline::simulate_query(ArchConfig::default(), &q, &k, &v);
     println!(
         "simulated hardware: {} cycles/query ({:.1} us at 1 GHz), throughput {:.0} qry/ms",
@@ -51,6 +64,29 @@ fn main() -> Result<()> {
         lat.total() as f64 / 1000.0,
         pipeline::PipelineModel::paper().throughput_qry_per_ms(),
     );
+
+    // L3 serving: the session-handle API — open admits the session
+    // shard-wide, each decode returns a typed per-request ticket, close
+    // releases the provisioned KV capacity
+    let cfg = ServerConfig {
+        kv_capacity: 1024,
+        reclaim: ReclaimPolicy::LruEvictIdle { min_idle: Duration::ZERO },
+        ..Default::default()
+    };
+    let server = CamformerServer::start(cfg, |_| FunctionalBackend::new(1024, 64));
+    let session = server.open(1, k[..512 * 64].to_vec(), v[..512 * 64].to_vec())?;
+    let ticket = session.decode(q.clone(), rng.normal_vec(64), rng.normal_vec(64))?;
+    let resp = ticket.wait();
+    println!(
+        "serving: decode step grew session {} to {} rows and returned {} dims",
+        session.id(),
+        resp.seq_len(),
+        resp.output().len()
+    );
+    session.close()?;
+    let (metrics, window) = server.shutdown();
+    println!("serving metrics: {}", metrics.summary(window));
+
     println!("quickstart OK");
     Ok(())
 }

@@ -1,23 +1,32 @@
 //! Serving scenario: session-oriented decode serving through the Layer-3
-//! coordinator — prefill a prompt per session, then stream live decode
-//! steps whose (k, v) pairs append to each session's KV cache ("CAM
-//! search over a growing KV cache each step", Sec. IV-C).
+//! coordinator's session-handle API — `open` a handle per session (one
+//! shard-wide prefill fan-out), stream live decode steps whose (k, v)
+//! pairs append to each session's KV cache ("CAM search over a growing
+//! KV cache each step", Sec. IV-C) with each step's result arriving on
+//! its own typed `Ticket`, then `close` every session. A lifecycle
+//! epilogue over-subscribes a small worker under
+//! `ReclaimPolicy::LruEvictIdle` to show admission evicting idle
+//! sessions instead of failing.
 //!
 //! ```bash
 //! cargo run --release --example serve_attention \
 //!     [-- --sessions 8 --steps 64 --heads 4 --backend functional|arch|pjrt]
 //! ```
 //!
-//! Reports serving latency percentiles (p50/p99) and throughput, and
-//! golden-checks a final query per session against the pure-Rust
-//! functional model applied to the accumulated K/V. The `pjrt` backend
-//! needs `make artifacts` and a build with `--features pjrt`.
+//! Reports serving latency percentiles (p50/p99), throughput and the
+//! session lifecycle counters, and golden-checks a final query per
+//! session against the pure-Rust functional model applied to the
+//! accumulated K/V. The `pjrt` backend needs `make artifacts` and a
+//! build with `--features pjrt`.
+
+use std::time::Duration;
 
 use anyhow::Result;
 use camformer::accuracy::functional::{self, AttnConfig};
 use camformer::coordinator::backend::{ArchSimBackend, FunctionalBackend, PjrtBackend};
 use camformer::coordinator::kv_store::KvStore;
-use camformer::coordinator::server::{CamformerServer, Request, ServerConfig};
+use camformer::coordinator::server::{CamformerServer, ReclaimPolicy, ServerConfig};
+use camformer::coordinator::{SessionHandle, Ticket};
 use camformer::runtime::executable::default_artifacts_dir;
 use camformer::util::cli::Args;
 use camformer::util::rng::Rng;
@@ -58,70 +67,55 @@ fn main() -> Result<()> {
         other => anyhow::bail!("unknown backend {other:?} (functional|arch|pjrt)"),
     };
 
-    // per-(session, head) mirrors so the golden check can replay the
-    // accumulated K/V (in a real deployment the XPU owns these tensors)
+    // one `open` per session broadcasts the prompt K/V to every head of
+    // the shard (all-or-nothing), so a single head-0 mirror per session
+    // is enough for the golden replay (in a real deployment the XPU
+    // owns these tensors)
     let mut rng = Rng::new(7);
-    let mut mirrors: Vec<Vec<KvStore>> = (0..sessions)
-        .map(|_| (0..heads).map(|_| KvStore::new(capacity, d, d)).collect())
-        .collect();
-
-    let mut next_id = 0u64;
+    let mut mirrors: Vec<KvStore> =
+        (0..sessions).map(|_| KvStore::new(capacity, d, d)).collect();
+    let mut handles: Vec<SessionHandle<'_>> = Vec::with_capacity(sessions);
     for sid in 0..sessions as u64 {
-        for h in 0..heads {
-            let keys = rng.normal_vec(prefill_rows * d);
-            let values = rng.normal_vec(prefill_rows * d);
-            mirrors[sid as usize][h].load(&keys, &values).map_err(anyhow::Error::msg)?;
-            server
-                .submit(Request::Prefill { id: next_id, session: sid, head: h, keys, values })
-                .map_err(anyhow::Error::msg)?;
-            next_id += 1;
-        }
+        let keys = rng.normal_vec(prefill_rows * d);
+        let values = rng.normal_vec(prefill_rows * d);
+        mirrors[sid as usize].load(&keys, &values)?;
+        handles.push(server.open(sid, keys, values)?);
     }
-    let acks = server.collect(sessions * heads);
-    anyhow::ensure!(acks.iter().all(|a| a.is_ok()), "prefill failed");
 
-    // interleaved decode streams: every step appends one (k, v) per head
+    // interleaved decode streams: every step appends one (k, v) per
+    // head; the whole workload is submitted before any wait so the
+    // workers' wire batches stay full, and every step's response comes
+    // back on its own ticket (no id correlation)
+    let mut tickets: Vec<Ticket> = Vec::with_capacity(sessions * heads * steps);
     for _step in 0..steps {
-        for sid in 0..sessions as u64 {
+        for (sid, handle) in handles.iter().enumerate() {
             for h in 0..heads {
                 let q = rng.normal_vec(d);
                 let nk = rng.normal_vec(d);
                 let nv = rng.normal_vec(d);
-                mirrors[sid as usize][h].append(&nk, &nv).map_err(anyhow::Error::msg)?;
-                server
-                    .submit(Request::Decode {
-                        id: next_id,
-                        session: sid,
-                        head: h,
-                        query: q,
-                        new_key: nk,
-                        new_value: nv,
-                    })
-                    .map_err(anyhow::Error::msg)?;
-                next_id += 1;
+                if h == 0 {
+                    mirrors[sid].append(&nk, &nv)?;
+                }
+                tickets.push(handle.decode_on(h, q, nk, nv)?);
             }
         }
     }
-    let total = sessions * heads * steps;
-    let resps = server.collect(total);
-    let failed = resps.iter().filter(|r| !r.is_ok()).count();
-    anyhow::ensure!(failed == 0, "{failed} decode steps failed");
+    let total = tickets.len();
+    let mut failed = 0usize;
+    for t in tickets {
+        if t.wait().result.is_err() {
+            failed += 1;
+        }
+    }
+    anyhow::ensure!(failed == 0, "{failed} of {total} decode steps failed");
 
     // golden check: one final Attend per session against the functional
     // model over the accumulated cache
-    let mut golden_q = Vec::new();
-    for sid in 0..sessions as u64 {
+    for (sid, handle) in handles.iter().enumerate() {
         let q = rng.normal_vec(d);
-        server
-            .submit(Request::Attend { id: next_id, session: sid, head: 0, query: q.clone() })
-            .map_err(anyhow::Error::msg)?;
-        golden_q.push((next_id, sid, q));
-        next_id += 1;
-    }
-    let finals = server.collect(sessions);
-    for r in &finals {
-        let (_, sid, q) = golden_q.iter().find(|(id, _, _)| *id == r.id).unwrap();
-        let store = &mirrors[*sid as usize][0];
+        let r = handle.attend(q.clone())?.wait();
+        anyhow::ensure!(r.is_ok(), "golden attend failed: {:?}", r.result);
+        let store = &mirrors[sid];
         // the reference must replay the backend's execution geometry: the
         // PJRT artifacts are compiled for a fixed 1024-row context, the
         // flexible backends pad to the stage-1 group quantum
@@ -130,16 +124,59 @@ fn main() -> Result<()> {
             _ => store.len().div_ceil(quantum) * quantum,
         };
         let (kp, vp, _) = store.padded(rows);
-        let want = functional::camformer_attention(q, kp, vp, &AttnConfig::paper(rows, d));
+        let want = functional::camformer_attention(&q, kp, vp, &AttnConfig::paper(rows, d));
         for (a, b) in r.output().iter().zip(&want) {
             anyhow::ensure!((a - b).abs() < 5e-2, "golden mismatch: {a} vs {b}");
         }
     }
-    println!("golden checks passed ({} sessions, live cache length {})", sessions,
-             prefill_rows + steps);
+    println!(
+        "golden checks passed ({} sessions, live cache length {})",
+        sessions,
+        prefill_rows + steps
+    );
 
+    // explicit lifecycle teardown: every close frees the session's
+    // provisioned KV capacity on all heads
+    for handle in handles {
+        handle.close()?;
+    }
     let (metrics, window) = server.shutdown();
     println!("{}", metrics.summary(window));
+
+    // lifecycle epilogue: a worker capped at 2 sessions keeps admitting
+    // an 8-session population because LruEvictIdle reclaims the
+    // least-recently-used idle session per over-limit open — previously
+    // these opens were terminal SessionLimit errors
+    let churn_cfg = ServerConfig {
+        kv_capacity: 64,
+        max_sessions: 2,
+        reclaim: ReclaimPolicy::LruEvictIdle { min_idle: Duration::ZERO },
+        ..Default::default()
+    };
+    let churn = CamformerServer::start(churn_cfg, |_| FunctionalBackend::new(64, d));
+    let mut resident: Vec<SessionHandle<'_>> = Vec::new();
+    for sid in 0..8u64 {
+        let h = churn.open(sid, rng.normal_vec(16 * d), rng.normal_vec(16 * d))?;
+        let r = h
+            .decode(rng.normal_vec(d), rng.normal_vec(d), rng.normal_vec(d))?
+            .wait();
+        anyhow::ensure!(r.is_ok(), "churn decode failed: {:?}", r.result);
+        // keep every handle alive: capacity pressure must be resolved by
+        // the reclaim policy, not by our closes
+        resident.push(h);
+    }
+    drop(resident);
+    let (m, w) = churn.shutdown();
+    anyhow::ensure!(m.evictions > 0, "over-subscribed opens must have evicted");
+    println!(
+        "lifecycle: 8 opens on a 2-session worker -> {} evictions, {} closes, \
+         {} KV rows released ({})",
+        m.evictions,
+        m.closes,
+        m.kv_rows_released,
+        m.summary(w)
+    );
+
     println!(
         "\n(simulated CAMformer silicon would serve this at {:.0} qry/ms/head — `camformer table2`)",
         camformer::arch::pipeline::PipelineModel::paper().throughput_qry_per_ms()

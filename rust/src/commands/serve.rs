@@ -3,11 +3,13 @@
 
 use anyhow::{Context, Result};
 use std::path::PathBuf;
+use std::time::Duration;
 
 use camformer::accuracy::functional::{self, AttnConfig};
 use camformer::coordinator::backend::{ArchSimBackend, FunctionalBackend, PjrtBackend};
 use camformer::coordinator::kv_store::KvStore;
-use camformer::coordinator::server::{CamformerServer, Request, ServerConfig};
+use camformer::coordinator::server::{CamformerServer, ReclaimPolicy, ServerConfig};
+use camformer::coordinator::Ticket;
 use camformer::runtime::executable::{default_artifacts_dir, Engine};
 use camformer::util::cli::Args;
 use camformer::util::rng::Rng;
@@ -18,33 +20,43 @@ fn artifacts_dir(args: &Args) -> PathBuf {
         .unwrap_or_else(default_artifacts_dir)
 }
 
-/// Run the coordinator over a synthetic decode-serving workload:
-/// `--sessions` streams, each prefilled with `--prefill` rows and decoded
-/// for `--steps` live KV-append steps across `--heads` heads.
+/// Run the coordinator over a synthetic decode-serving workload through
+/// the session-handle API: `--sessions` streams are `open`ed (one
+/// shard-wide prefill fan-out each, `--prefill` rows), decoded for
+/// `--steps` live KV-append steps across `--heads` heads via per-request
+/// tickets, golden-checked, then explicitly closed. `--reclaim lru`
+/// swaps the admission policy from Deny to LRU idle eviction.
 pub fn serve(args: &Args) -> Result<()> {
     let heads = args.get_usize("heads", 4);
     let sessions = args.get_usize("sessions", 4);
     let steps = args.get_usize("steps", 32);
     let prefill_rows = args.get_usize("prefill", 128);
     let backend_kind = args.get_or("backend", "functional");
+    let reclaim_kind = args.get_or("reclaim", "deny");
     let seed = args.get_u64("seed", 42);
     let capacity = 1024usize;
     let d = 64usize;
 
     println!(
         "camformer serve: {sessions} sessions x {steps} decode steps over {heads} heads, \
-         backend={backend_kind}"
+         backend={backend_kind}, reclaim={reclaim_kind}"
     );
     anyhow::ensure!(
         prefill_rows + steps <= capacity,
         "prefill {prefill_rows} + steps {steps} exceeds the provisioned context {capacity}"
     );
+    let reclaim = match reclaim_kind {
+        "deny" => ReclaimPolicy::Deny,
+        "lru" => ReclaimPolicy::LruEvictIdle { min_idle: Duration::ZERO },
+        other => anyhow::bail!("unknown reclaim policy {other:?} (deny|lru)"),
+    };
 
     let dir = artifacts_dir(args);
     let cfg = ServerConfig {
         heads,
         kv_capacity: capacity,
         max_sessions: sessions.max(1),
+        reclaim,
         ..Default::default()
     };
     let quantum = cfg.pad_quantum;
@@ -59,65 +71,53 @@ pub fn serve(args: &Args) -> Result<()> {
         other => anyhow::bail!("unknown backend {other:?} (pjrt|functional|arch)"),
     };
 
-    // head-0 mirror per session for the golden cross-check
+    // one open per session: the broadcast prefill lands on every head,
+    // so a single head-0 mirror per session covers the golden check
     let mut rng = Rng::new(seed);
     let mut mirrors: Vec<KvStore> =
         (0..sessions).map(|_| KvStore::new(capacity, d, d)).collect();
-
-    let mut next_id = 0u64;
+    let mut handles = Vec::with_capacity(sessions);
     for sid in 0..sessions as u64 {
-        for h in 0..heads {
-            let keys = rng.normal_vec(prefill_rows * d);
-            let values = rng.normal_vec(prefill_rows * d);
-            if h == 0 {
-                mirrors[sid as usize].load(&keys, &values)?;
-            }
-            server.submit(Request::Prefill { id: next_id, session: sid, head: h, keys, values })?;
-            next_id += 1;
-        }
+        let keys = rng.normal_vec(prefill_rows * d);
+        let values = rng.normal_vec(prefill_rows * d);
+        mirrors[sid as usize].load(&keys, &values)?;
+        handles.push(server.open(sid, keys, values)?);
     }
-    let acks = server.collect(sessions * heads);
-    anyhow::ensure!(acks.iter().all(|a| a.is_ok()), "prefill failed");
 
+    // every decode step returns a ticket; submitting the whole workload
+    // before waiting keeps the workers' wire batches full
+    let mut tickets: Vec<Ticket> = Vec::with_capacity(sessions * heads * steps);
     for _step in 0..steps {
-        for sid in 0..sessions as u64 {
+        for (sid, handle) in handles.iter().enumerate() {
             for h in 0..heads {
                 let q = rng.normal_vec(d);
                 let nk = rng.normal_vec(d);
                 let nv = rng.normal_vec(d);
                 if h == 0 {
-                    mirrors[sid as usize].append(&nk, &nv)?;
+                    mirrors[sid].append(&nk, &nv)?;
                 }
-                server.submit(Request::Decode {
-                    id: next_id,
-                    session: sid,
-                    head: h,
-                    query: q,
-                    new_key: nk,
-                    new_value: nv,
-                })?;
-                next_id += 1;
+                tickets.push(handle.decode_on(h, q, nk, nv)?);
             }
         }
     }
-    let total = sessions * heads * steps;
-    let resps = server.collect(total);
-    let failed = resps.iter().filter(|r| !r.is_ok()).count();
+    let total = tickets.len();
+    let mut failed = 0usize;
+    for t in tickets {
+        if t.wait().result.is_err() {
+            failed += 1;
+        }
+    }
     anyhow::ensure!(failed == 0, "{failed} of {total} decode steps failed");
 
     // golden cross-check: a final head-0 query per session against the
-    // functional model over the accumulated cache
+    // functional model over the accumulated cache — the ticket resolves
+    // to exactly its session's response, no id bookkeeping needed
     let mut checked = 0;
-    let mut goldens = Vec::new();
-    for sid in 0..sessions as u64 {
+    for (sid, handle) in handles.iter().enumerate() {
         let q = rng.normal_vec(d);
-        server.submit(Request::Attend { id: next_id, session: sid, head: 0, query: q.clone() })?;
-        goldens.push((next_id, sid, q));
-        next_id += 1;
-    }
-    for r in server.collect(sessions) {
-        let (_, sid, q) = goldens.iter().find(|(id, _, _)| *id == r.id).unwrap();
-        let store = &mirrors[*sid as usize];
+        let r = handle.attend(q.clone())?.wait();
+        anyhow::ensure!(r.is_ok(), "golden attend failed: {:?}", r.result);
+        let store = &mirrors[sid];
         // replay the backend's execution geometry: PJRT serves over its
         // fixed 1024-row context, flexible backends over the group quantum
         let rows = match backend_kind {
@@ -125,13 +125,18 @@ pub fn serve(args: &Args) -> Result<()> {
             _ => store.len().div_ceil(quantum) * quantum,
         };
         let (kp, vp, _) = store.padded(rows);
-        let want = functional::camformer_attention(q, kp, vp, &AttnConfig::paper(rows, d));
+        let want = functional::camformer_attention(&q, kp, vp, &AttnConfig::paper(rows, d));
         for (a, b) in r.output().iter().zip(&want) {
             anyhow::ensure!((a - b).abs() < 0.05, "golden check failed: {a} vs {b}");
         }
         checked += 1;
     }
 
+    // explicit lifecycle teardown: each close releases the session's
+    // provisioned KV capacity on every head of its shard
+    for handle in handles {
+        handle.close()?;
+    }
     let (metrics, window) = server.shutdown();
     println!("golden-checked {checked} sessions against the functional model: OK");
     println!("{}", metrics.summary(window));

@@ -6,11 +6,12 @@
 //!   the batch size or a deadline, whichever first. The standard serving
 //!   trade between utilisation and tail latency.
 //! * [`DecodeBatcher`] — the request-aware planner on top: partition one
-//!   wire batch into [`DispatchGroup`]s so that decode steps and
-//!   read-only attends of *different sessions* execute as a single
-//!   backend dispatch against their own (stationary) key memories. This
-//!   is the paper's key-stationary amortisation (Fig. 5): the BA-CAM
-//!   search cost is paid once per dispatch, not once per query.
+//!   wire batch of [`Envelope`]s into [`DispatchGroup`]s so that decode
+//!   steps and read-only attends of *different sessions* execute as a
+//!   single backend dispatch against their own (stationary) key
+//!   memories. This is the paper's key-stationary amortisation (Fig. 5):
+//!   the BA-CAM search cost is paid once per dispatch, not once per
+//!   query.
 //!
 //! # Batch-safety invariant
 //!
@@ -51,11 +52,19 @@
 //! `Prefill` is a bulk cache replacement (it can shrink the cache, which
 //! no prefix view can represent) and always executes alone, as a
 //! barrier, in both modes.
+//!
+//! `Close` (ISSUE 5) is a **same-session barrier** in both modes: it may
+//! join the open group (the worker executes closes *after* the group's
+//! dispatch, and every same-session batch-mate planned before it still
+//! sees the live store), but any later item of the *closed* session must
+//! start a new group — sequentially it runs after the close and must
+//! observe the session gone. Items of *other* sessions keep fusing
+//! around a close, so lifecycle traffic does not forfeit occupancy.
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};
 
-use super::server::Request;
+use super::server::{Envelope, Request};
 use super::session::SessionId;
 
 /// How [`DecodeBatcher`] fuses one wire batch into dispatch groups (see
@@ -135,11 +144,12 @@ pub fn next_batch<T>(rx: &Receiver<T>, policy: &BatchPolicy) -> Option<Vec<T>> {
 #[derive(Debug)]
 pub enum DispatchGroup {
     /// A `Prefill` barrier: bulk cache replacement, executes alone.
-    Barrier(Request, Instant),
-    /// `Decode` / `Attend` steps of (possibly distinct) sessions that are
-    /// safe to execute as one backend dispatch: all appends first, then a
-    /// single batched attend over each item's own session cache.
-    Batch(Vec<(Request, Instant)>),
+    Barrier(Envelope),
+    /// `Decode` / `Attend` / `Close` steps of (possibly distinct)
+    /// sessions that are safe to execute as one backend dispatch: all
+    /// appends first, then a single batched attend over each item's own
+    /// session cache, then the group's closes.
+    Batch(Vec<Envelope>),
 }
 
 /// Request-aware planner for cross-session batched decode.
@@ -155,24 +165,20 @@ pub enum DispatchGroup {
 /// # Example
 ///
 /// ```
-/// use std::time::Instant;
 /// use camformer::coordinator::batcher::{DecodeBatcher, DispatchGroup};
-/// use camformer::coordinator::Request;
+/// use camformer::coordinator::{Envelope, Request};
 ///
-/// let now = Instant::now();
 /// let step = |id, session| {
-///     (
-///         Request::Decode {
-///             id,
-///             session,
-///             head: 0,
-///             query: vec![0.0; 64],
-///             new_key: vec![0.0; 64],
-///             new_value: vec![0.0; 64],
-///         },
-///         now,
-///     )
+///     Envelope::pool(Request::Decode {
+///         id,
+///         session,
+///         head: 0,
+///         query: vec![0.0; 64],
+///         new_key: vec![0.0; 64],
+///         new_value: vec![0.0; 64],
+///     })
 /// };
+/// let close = |id, session| Envelope::pool(Request::Close { id, session, head: 0 });
 ///
 /// // one decode step from each of four sessions: a single dispatch
 /// let groups = DecodeBatcher::plan(vec![step(0, 1), step(1, 2), step(2, 3), step(3, 4)]);
@@ -187,6 +193,19 @@ pub enum DispatchGroup {
 /// // as ONE dispatch (each step attends over its own causal prefix)
 /// let groups = DecodeBatcher::plan_speculative(vec![step(0, 1), step(1, 1), step(2, 1)]);
 /// assert!(matches!(&groups[..], [DispatchGroup::Batch(items)] if items.len() == 3));
+///
+/// // a Close is a same-session barrier: a later item of ITS session
+/// // starts a new group, while other sessions keep fusing around it
+/// let groups =
+///     DecodeBatcher::plan_speculative(vec![step(0, 1), close(1, 1), step(2, 2), step(3, 1)]);
+/// let sizes: Vec<usize> = groups
+///     .iter()
+///     .map(|g| match g {
+///         DispatchGroup::Batch(items) => items.len(),
+///         DispatchGroup::Barrier(..) => 0,
+///     })
+///     .collect();
+/// assert_eq!(sizes, vec![3, 1]);
 /// ```
 pub struct DecodeBatcher {
     pub policy: BatchPolicy,
@@ -199,12 +218,12 @@ impl DecodeBatcher {
 
     /// Pull one wire batch and plan it under the policy's mode. `None`
     /// when the request channel is closed and drained (worker shutdown).
-    pub fn next_groups(&self, rx: &Receiver<(Request, Instant)>) -> Option<Vec<DispatchGroup>> {
+    pub fn next_groups(&self, rx: &Receiver<Envelope>) -> Option<Vec<DispatchGroup>> {
         next_batch(rx, &self.policy).map(|items| Self::plan_mode(self.policy.mode, items))
     }
 
     /// Plan under an explicit [`PlanMode`].
-    pub fn plan_mode(mode: PlanMode, items: Vec<(Request, Instant)>) -> Vec<DispatchGroup> {
+    pub fn plan_mode(mode: PlanMode, items: Vec<Envelope>) -> Vec<DispatchGroup> {
         match mode {
             PlanMode::Conservative => Self::plan(items),
             PlanMode::Speculative => Self::plan_speculative(items),
@@ -213,20 +232,35 @@ impl DecodeBatcher {
 
     /// Speculative multi-step fusion: partition a wire batch into
     /// dispatch groups, preserving arrival order, splitting ONLY at
-    /// `Prefill` barriers — same-session decode runs fuse, and the
-    /// worker's prefix views carry the causal ordering (module docs).
-    pub fn plan_speculative(items: Vec<(Request, Instant)>) -> Vec<DispatchGroup> {
+    /// `Prefill` barriers and at items following a same-session `Close`
+    /// — same-session decode runs fuse, and the worker's prefix views
+    /// carry the causal ordering (module docs).
+    pub fn plan_speculative(items: Vec<Envelope>) -> Vec<DispatchGroup> {
         let mut groups: Vec<DispatchGroup> = Vec::new();
-        let mut open: Vec<(Request, Instant)> = Vec::new();
-        for (req, enq) in items {
-            match &req {
+        let mut open: Vec<Envelope> = Vec::new();
+        // sessions with a Close in `open`: their later items must not
+        // share the group (they run after the close, sequentially)
+        let mut closed: Vec<SessionId> = Vec::new();
+        for env in items {
+            match &env.req {
                 Request::Prefill { .. } => {
                     if !open.is_empty() {
                         groups.push(DispatchGroup::Batch(std::mem::take(&mut open)));
+                        closed.clear();
                     }
-                    groups.push(DispatchGroup::Barrier(req, enq));
+                    groups.push(DispatchGroup::Barrier(env));
                 }
-                _ => open.push((req, enq)),
+                req => {
+                    let session = req.session();
+                    if closed.contains(&session) {
+                        groups.push(DispatchGroup::Batch(std::mem::take(&mut open)));
+                        closed.clear();
+                    }
+                    if matches!(req, Request::Close { .. }) {
+                        closed.push(session);
+                    }
+                    open.push(env);
+                }
             }
         }
         if !open.is_empty() {
@@ -242,35 +276,58 @@ impl DecodeBatcher {
     /// * `Prefill` flushes the open group and becomes a [`DispatchGroup::Barrier`];
     /// * `Decode` on a session already present in the open group flushes
     ///   first (its append must stay invisible to the group's queries);
-    /// * `Attend` always joins the open group.
-    pub fn plan(items: Vec<(Request, Instant)>) -> Vec<DispatchGroup> {
+    /// * `Attend` joins the open group unless its session was closed in
+    ///   it;
+    /// * `Close` joins the open group (it executes after the dispatch)
+    ///   and bars later same-session items from it.
+    pub fn plan(items: Vec<Envelope>) -> Vec<DispatchGroup> {
         let mut groups: Vec<DispatchGroup> = Vec::new();
-        let mut open: Vec<(Request, Instant)> = Vec::new();
+        let mut open: Vec<Envelope> = Vec::new();
         // sessions with an item in `open`; wire batches are small (max 16
-        // by default), so a linear scan beats a hash set here
+        // by default), so linear scans beat hash sets here
         let mut touched: Vec<SessionId> = Vec::new();
-        for (req, enq) in items {
-            match &req {
+        let mut closed: Vec<SessionId> = Vec::new();
+        for env in items {
+            match &env.req {
                 Request::Prefill { .. } => {
                     if !open.is_empty() {
                         groups.push(DispatchGroup::Batch(std::mem::take(&mut open)));
                         touched.clear();
+                        closed.clear();
                     }
-                    groups.push(DispatchGroup::Barrier(req, enq));
+                    groups.push(DispatchGroup::Barrier(env));
                 }
                 Request::Decode { session, .. } => {
-                    if touched.contains(session) {
+                    if touched.contains(session) || closed.contains(session) {
                         groups.push(DispatchGroup::Batch(std::mem::take(&mut open)));
                         touched.clear();
+                        closed.clear();
                     }
                     touched.push(*session);
-                    open.push((req, enq));
+                    open.push(env);
                 }
                 Request::Attend { session, .. } => {
+                    if closed.contains(session) {
+                        groups.push(DispatchGroup::Batch(std::mem::take(&mut open)));
+                        touched.clear();
+                        closed.clear();
+                    }
                     if !touched.contains(session) {
                         touched.push(*session);
                     }
-                    open.push((req, enq));
+                    open.push(env);
+                }
+                Request::Close { session, .. } => {
+                    if closed.contains(session) {
+                        groups.push(DispatchGroup::Batch(std::mem::take(&mut open)));
+                        touched.clear();
+                        closed.clear();
+                    }
+                    if !touched.contains(session) {
+                        touched.push(*session);
+                    }
+                    closed.push(*session);
+                    open.push(env);
                 }
             }
         }
@@ -355,29 +412,33 @@ mod tests {
 
     // ---- DecodeBatcher planning ----
 
-    fn decode(id: u64, session: u64) -> (Request, Instant) {
-        (
-            Request::Decode {
-                id,
-                session,
-                head: 0,
-                query: vec![0.0; 4],
-                new_key: vec![0.0; 4],
-                new_value: vec![0.0; 4],
-            },
-            Instant::now(),
-        )
+    fn decode(id: u64, session: u64) -> Envelope {
+        Envelope::pool(Request::Decode {
+            id,
+            session,
+            head: 0,
+            query: vec![0.0; 4],
+            new_key: vec![0.0; 4],
+            new_value: vec![0.0; 4],
+        })
     }
 
-    fn attend(id: u64, session: u64) -> (Request, Instant) {
-        (Request::Attend { id, session, head: 0, query: vec![0.0; 4] }, Instant::now())
+    fn attend(id: u64, session: u64) -> Envelope {
+        Envelope::pool(Request::Attend { id, session, head: 0, query: vec![0.0; 4] })
     }
 
-    fn prefill(id: u64, session: u64) -> (Request, Instant) {
-        (
-            Request::Prefill { id, session, head: 0, keys: vec![0.0; 4], values: vec![0.0; 4] },
-            Instant::now(),
-        )
+    fn prefill(id: u64, session: u64) -> Envelope {
+        Envelope::pool(Request::Prefill {
+            id,
+            session,
+            head: 0,
+            keys: vec![0.0; 4],
+            values: vec![0.0; 4],
+        })
+    }
+
+    fn close(id: u64, session: u64) -> Envelope {
+        Envelope::pool(Request::Close { id, session, head: 0 })
     }
 
     fn batch_sizes(groups: &[DispatchGroup]) -> Vec<usize> {
@@ -428,7 +489,10 @@ mod tests {
     fn prefill_is_always_a_barrier() {
         let groups = DecodeBatcher::plan(vec![decode(0, 1), prefill(1, 2), decode(2, 3)]);
         assert_eq!(batch_sizes(&groups), vec![1, 0, 1]);
-        assert!(matches!(groups[1], DispatchGroup::Barrier(Request::Prefill { .. }, _)));
+        assert!(matches!(
+            &groups[1],
+            DispatchGroup::Barrier(Envelope { req: Request::Prefill { .. }, .. })
+        ));
     }
 
     #[test]
@@ -443,8 +507,8 @@ mod tests {
         let ids: Vec<Vec<u64>> = groups
             .iter()
             .map(|g| match g {
-                DispatchGroup::Barrier(r, _) => vec![r.id()],
-                DispatchGroup::Batch(items) => items.iter().map(|(r, _)| r.id()).collect(),
+                DispatchGroup::Barrier(e) => vec![e.req.id()],
+                DispatchGroup::Batch(items) => items.iter().map(|e| e.req.id()).collect(),
             })
             .collect();
         assert_eq!(ids, vec![vec![0, 1, 2], vec![3, 4]]);
@@ -491,7 +555,56 @@ mod tests {
             decode(3, 1),
         ]);
         assert_eq!(batch_sizes(&groups), vec![2, 0, 1]);
-        assert!(matches!(groups[1], DispatchGroup::Barrier(Request::Prefill { .. }, _)));
+        assert!(matches!(
+            &groups[1],
+            DispatchGroup::Barrier(Envelope { req: Request::Prefill { .. }, .. })
+        ));
+    }
+
+    // ---- Close planning (ISSUE 5) ----
+
+    #[test]
+    fn speculative_close_bars_only_its_own_session() {
+        // the close joins the group; a LATER item of the closed session
+        // starts a new group, while another session fuses right through
+        let groups = DecodeBatcher::plan_speculative(vec![
+            decode(0, 1),
+            close(1, 1),
+            decode(2, 2),
+            decode(3, 1),
+            attend(4, 2),
+        ]);
+        assert_eq!(batch_sizes(&groups), vec![3, 2]);
+    }
+
+    #[test]
+    fn speculative_close_before_decode_of_same_session_splits() {
+        let groups = DecodeBatcher::plan_speculative(vec![close(0, 1), decode(1, 1)]);
+        assert_eq!(batch_sizes(&groups), vec![1, 1]);
+    }
+
+    #[test]
+    fn double_close_splits_in_both_modes() {
+        // the second close must observe the first one's effect
+        // (UnknownSession), so it cannot share the group
+        for mode in [PlanMode::Conservative, PlanMode::Speculative] {
+            let groups = DecodeBatcher::plan_mode(mode, vec![close(0, 1), close(1, 1)]);
+            assert_eq!(batch_sizes(&groups), vec![1, 1], "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn conservative_close_rules() {
+        // decode-then-close fuses (close runs after the dispatch);
+        // attend-after-close splits; close counts as the session's item,
+        // so a decode after it splits too
+        let groups = DecodeBatcher::plan(vec![decode(0, 1), close(1, 1), attend(2, 1)]);
+        assert_eq!(batch_sizes(&groups), vec![2, 1]);
+        let groups = DecodeBatcher::plan(vec![close(0, 1), decode(1, 1)]);
+        assert_eq!(batch_sizes(&groups), vec![1, 1]);
+        // a close does not bar OTHER sessions from the group
+        let groups = DecodeBatcher::plan(vec![close(0, 1), decode(1, 2), attend(2, 3)]);
+        assert_eq!(batch_sizes(&groups), vec![3]);
     }
 
     #[test]

@@ -1,0 +1,309 @@
+//! The session-handle client surface (ISSUE 5): typed per-request
+//! tickets and explicit session lifecycle over the serving internals.
+//!
+//! The PR-1 surface was fire-and-forget: `submit(Request)` plus an
+//! unordered `collect(n)` pool that made every caller hand-correlate
+//! responses by id. This module replaces it as the primary API:
+//!
+//! * [`CamformerServer::open`] performs a **shard-wide prefill
+//!   fan-out** — one broadcast `Prefill` per head of the session's
+//!   shard, admitted **all-or-nothing** (a partial admission is rolled
+//!   back by closing the heads that succeeded) — and returns an owned
+//!   [`SessionHandle`];
+//! * [`SessionHandle::decode`] / [`SessionHandle::attend`] return a
+//!   [`Ticket`] — a `#[must_use]` per-request completion slot that
+//!   resolves to exactly that request's [`Response`] via
+//!   [`Ticket::wait`] / [`Ticket::try_wait`] / [`Ticket::wait_timeout`];
+//! * [`SessionHandle::close`] (and `Drop`) retires the session on every
+//!   head, releasing its provisioned KV capacity through
+//!   [`Request::Close`].
+//!
+//! The completion slot IS the ticket's private channel: a dropped
+//! ticket discards its response with nothing left behind, and a worker
+//! that dies with the request in flight surfaces as
+//! [`ServeError::WorkerGone`] from `wait` (the slot's sender drops with
+//! the worker's queue).
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
+use std::time::Duration;
+
+use super::error::ServeError;
+use super::server::{CamformerServer, Request, Response};
+use super::session::SessionId;
+
+/// A per-request completion slot: resolves to exactly one [`Response`],
+/// the one for the request that issued it. Must be consumed — an
+/// unwaited ticket is almost always a lost result (dropping one is
+/// legal and leaks nothing, but do it on purpose).
+#[must_use = "a Ticket resolves to its Response only through wait()/try_wait()/wait_timeout()"]
+#[derive(Debug)]
+pub struct Ticket {
+    id: u64,
+    session: SessionId,
+    head: usize,
+    worker: usize,
+    rx: Receiver<Response>,
+}
+
+impl Ticket {
+    pub(crate) fn new(
+        id: u64,
+        session: SessionId,
+        head: usize,
+        worker: usize,
+        rx: Receiver<Response>,
+    ) -> Self {
+        Ticket { id, session, head, worker, rx }
+    }
+
+    /// The request id this ticket resolves (echoed on the response).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// The session the request targeted.
+    pub fn session(&self) -> SessionId {
+        self.session
+    }
+
+    /// The response synthesized when the owning worker died with this
+    /// request in flight (its queue — and our slot's sender — dropped).
+    fn worker_gone(&self) -> Response {
+        Response {
+            id: self.id,
+            session: self.session,
+            head: self.head,
+            result: Err(ServeError::WorkerGone { worker: self.worker }),
+            latency: Duration::ZERO,
+        }
+    }
+
+    /// Block until the response arrives. A dead worker yields
+    /// `Err(WorkerGone)` inside the response rather than hanging.
+    pub fn wait(self) -> Response {
+        match self.rx.recv() {
+            Ok(r) => r,
+            Err(_) => self.worker_gone(),
+        }
+    }
+
+    /// Non-blocking poll: the response if it already completed, the
+    /// ticket back otherwise.
+    pub fn try_wait(self) -> Result<Response, Ticket> {
+        match self.rx.try_recv() {
+            Ok(r) => Ok(r),
+            Err(TryRecvError::Empty) => Err(self),
+            Err(TryRecvError::Disconnected) => Ok(self.worker_gone()),
+        }
+    }
+
+    /// Wait up to `timeout`; on expiry the ticket comes back and can be
+    /// waited again (the request stays in flight — timing out does not
+    /// cancel it).
+    pub fn wait_timeout(self, timeout: Duration) -> Result<Response, Ticket> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(r) => Ok(r),
+            Err(RecvTimeoutError::Timeout) => Err(self),
+            Err(RecvTimeoutError::Disconnected) => Ok(self.worker_gone()),
+        }
+    }
+}
+
+/// An open serving session: the owned client-side handle to the KV
+/// state [`CamformerServer::open`] admitted on every head of the
+/// session's shard. Requests issued through the handle return
+/// [`Ticket`]s; dropping the handle closes the session (prefer the
+/// explicit [`SessionHandle::close`], which confirms the release).
+#[derive(Debug)]
+pub struct SessionHandle<'srv> {
+    server: &'srv CamformerServer,
+    session: SessionId,
+    heads: usize,
+    closed: bool,
+}
+
+impl SessionHandle<'_> {
+    /// The session id this handle owns.
+    pub fn id(&self) -> SessionId {
+        self.session
+    }
+
+    /// One autoregressive step on head 0 (the single-head convenience —
+    /// multi-head callers use [`SessionHandle::decode_on`] per head):
+    /// append `(new_key, new_value)`, attend `query` over the grown
+    /// cache.
+    pub fn decode(
+        &self,
+        query: Vec<f32>,
+        new_key: Vec<f32>,
+        new_value: Vec<f32>,
+    ) -> Result<Ticket, ServeError> {
+        self.decode_on(0, query, new_key, new_value)
+    }
+
+    /// One autoregressive step on the given head.
+    pub fn decode_on(
+        &self,
+        head: usize,
+        query: Vec<f32>,
+        new_key: Vec<f32>,
+        new_value: Vec<f32>,
+    ) -> Result<Ticket, ServeError> {
+        self.server.submit_ticket(Request::Decode {
+            id: self.server.alloc_id(),
+            session: self.session,
+            head,
+            query,
+            new_key,
+            new_value,
+        })
+    }
+
+    /// Read-only attention over the current cache on head 0.
+    pub fn attend(&self, query: Vec<f32>) -> Result<Ticket, ServeError> {
+        self.attend_on(0, query)
+    }
+
+    /// Read-only attention on the given head.
+    pub fn attend_on(&self, head: usize, query: Vec<f32>) -> Result<Ticket, ServeError> {
+        self.server.submit_ticket(Request::Attend {
+            id: self.server.alloc_id(),
+            session: self.session,
+            head,
+            query,
+        })
+    }
+
+    /// Issue a `Close` to every head of the shard (without waiting).
+    /// Best-effort per head: one dead worker must not stop the closes
+    /// for the live ones (their slots would otherwise leak until
+    /// shutdown). Returns the issued tickets and the first per-head
+    /// submission error, if any.
+    fn close_tickets(&self) -> (Vec<Ticket>, Option<ServeError>) {
+        let mut tickets = Vec::with_capacity(self.heads);
+        let mut first_err = None;
+        for head in 0..self.heads {
+            let close = self.server.submit_ticket(Request::Close {
+                id: self.server.alloc_id(),
+                session: self.session,
+                head,
+            });
+            match close {
+                Ok(t) => tickets.push(t),
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+            }
+        }
+        (tickets, first_err)
+    }
+
+    /// Close the session on every head of its shard, waiting for each
+    /// release to be confirmed. Every head is closed even if an earlier
+    /// one fails (a dead worker must not leak the live workers' slots);
+    /// the first per-head error is returned afterwards (e.g.
+    /// [`ServeError::Evicted`] when the reclaim policy already took a
+    /// head's slot). On `Ok`, the session's provisioned KV capacity is
+    /// free for new admissions on all heads.
+    pub fn close(mut self) -> Result<(), ServeError> {
+        self.closed = true;
+        let (tickets, mut first_err) = self.close_tickets();
+        for ticket in tickets {
+            if let Err(e) = ticket.wait().result {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+}
+
+impl Drop for SessionHandle<'_> {
+    /// Fire-and-forget close on every head: the session does not leak
+    /// its KV capacity when a handle goes out of scope. Errors (and the
+    /// acks) are discarded — call [`SessionHandle::close`] to confirm
+    /// the release.
+    fn drop(&mut self) {
+        if !self.closed {
+            self.closed = true;
+            let (tickets, _) = self.close_tickets();
+            drop(tickets);
+        }
+    }
+}
+
+impl CamformerServer {
+    /// Open a serving session: broadcast one `Prefill` of `keys`/`values`
+    /// to **every head of the session's shard** and admit the session
+    /// all-or-nothing — if any head refuses (session limit with
+    /// [`ReclaimPolicy::Deny`], capacity, dimensions), the heads that
+    /// admitted are closed again and the first error is returned, so a
+    /// failed `open` never leaves per-head state behind.
+    ///
+    /// Re-opening a live session id resets its cache on every head (and
+    /// revives an evicted id). The returned [`SessionHandle`] borrows
+    /// the server; close (or drop) all handles before `shutdown`.
+    ///
+    /// [`ReclaimPolicy::Deny`]: super::server::ReclaimPolicy::Deny
+    pub fn open(
+        &self,
+        session: SessionId,
+        keys: Vec<f32>,
+        values: Vec<f32>,
+    ) -> Result<SessionHandle<'_>, ServeError> {
+        let heads = self.config().heads;
+        let mut pending: Vec<(usize, Ticket)> = Vec::with_capacity(heads);
+        let mut refused: Option<ServeError> = None;
+        for head in 0..heads {
+            let req = Request::Prefill {
+                id: self.alloc_id(),
+                session,
+                head,
+                keys: keys.clone(),
+                values: values.clone(),
+            };
+            // a synchronous refusal (dims on head 0, WorkerGone on any)
+            // must still let the already-issued heads finish and roll back
+            match self.submit_ticket(req) {
+                Ok(t) => pending.push((head, t)),
+                Err(e) => {
+                    if refused.is_none() {
+                        refused = Some(e);
+                    }
+                }
+            }
+        }
+        let mut admitted: Vec<usize> = Vec::with_capacity(heads);
+        for (head, ticket) in pending {
+            match ticket.wait().result {
+                Ok(_) => admitted.push(head),
+                Err(e) => {
+                    if refused.is_none() {
+                        refused = Some(e);
+                    }
+                }
+            }
+        }
+        if let Some(e) = refused {
+            // roll back the partial admission, confirming each release
+            for head in admitted {
+                let close = self.submit_ticket(Request::Close {
+                    id: self.alloc_id(),
+                    session,
+                    head,
+                });
+                if let Ok(t) = close {
+                    let _ = t.wait();
+                }
+            }
+            return Err(e);
+        }
+        Ok(SessionHandle { server: self, session, heads, closed: false })
+    }
+}

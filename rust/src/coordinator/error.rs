@@ -8,6 +8,7 @@
 
 use std::fmt;
 
+use super::server::ReclaimPolicy;
 use super::session::SessionId;
 
 /// Everything that can go wrong admitting or serving a request.
@@ -19,8 +20,12 @@ pub enum ServeError {
     /// worker.
     UnknownSession { session: SessionId },
     /// Admission refused: the worker already holds its maximum number of
-    /// live sessions.
+    /// live sessions (and the reclaim policy found no evictable victim).
     SessionLimit { max_sessions: usize },
+    /// The session was reclaimed by `ReclaimPolicy::LruEvictIdle` to
+    /// admit a newer session; its state is gone. Re-`open` (re-prefill)
+    /// to continue on this worker.
+    Evicted { session: SessionId },
     /// The session's provisioned KV context is exhausted (the paper sizes
     /// the BA-CAM/V arrays to the target maximum context; eviction is the
     /// caller's policy).
@@ -37,6 +42,39 @@ pub enum ServeError {
     Backend(String),
 }
 
+impl ServeError {
+    /// Whether retrying the same request (possibly after a short wait)
+    /// can succeed under the server's [`ReclaimPolicy`]:
+    ///
+    /// * `SessionLimit` / `CapacityExhausted` are terminal under
+    ///   [`ReclaimPolicy::Deny`] (nothing ever frees capacity without
+    ///   the caller closing sessions) but retryable under an eviction
+    ///   policy, where idle sessions are reclaimed on demand. Caveat:
+    ///   eviction frees *session slots*, so this applies to
+    ///   admission-time failures (`open`/`Prefill`); a `Decode` that
+    ///   exhausted its own session's provisioned context needs a
+    ///   re-`open` with a shorter prompt or larger provisioning, not a
+    ///   retry;
+    /// * `Backend` is retryable everywhere: a failed dispatch rolls its
+    ///   speculative appends back, so a retry never double-appends;
+    /// * shape/routing errors (`DimMismatch`, `UnknownHead`) and
+    ///   state-gone errors (`UnknownSession`, `Evicted`, `WorkerGone`)
+    ///   need a different request (or a re-`open`), not a retry.
+    pub fn is_retryable(&self, policy: &ReclaimPolicy) -> bool {
+        match self {
+            ServeError::SessionLimit { .. } | ServeError::CapacityExhausted { .. } => {
+                !matches!(policy, ReclaimPolicy::Deny)
+            }
+            ServeError::Backend(_) => true,
+            ServeError::UnknownHead { .. }
+            | ServeError::UnknownSession { .. }
+            | ServeError::Evicted { .. }
+            | ServeError::DimMismatch { .. }
+            | ServeError::WorkerGone { .. } => false,
+        }
+    }
+}
+
 impl fmt::Display for ServeError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
@@ -48,6 +86,9 @@ impl fmt::Display for ServeError {
             }
             ServeError::SessionLimit { max_sessions } => {
                 write!(f, "admission refused: worker at its {max_sessions}-session limit")
+            }
+            ServeError::Evicted { session } => {
+                write!(f, "session {session} was evicted to reclaim capacity (re-open to continue)")
             }
             ServeError::CapacityExhausted { capacity } => {
                 write!(f, "provisioned KV capacity {capacity} exhausted")
@@ -73,6 +114,7 @@ mod tests {
             (ServeError::UnknownHead { head: 5, heads: 2 }, "head 5"),
             (ServeError::UnknownSession { session: 9 }, "session 9"),
             (ServeError::SessionLimit { max_sessions: 4 }, "4-session"),
+            (ServeError::Evicted { session: 8 }, "session 8 was evicted"),
             (ServeError::CapacityExhausted { capacity: 64 }, "capacity 64"),
             (
                 ServeError::DimMismatch { what: "decode query", got: 3, want: 64 },
@@ -91,5 +133,33 @@ mod tests {
     fn is_a_std_error() {
         fn takes_err<E: std::error::Error>(_: E) {}
         takes_err(ServeError::WorkerGone { worker: 0 });
+    }
+
+    #[test]
+    fn retryability_depends_on_the_reclaim_policy() {
+        use std::time::Duration;
+        let deny = ReclaimPolicy::Deny;
+        let lru = ReclaimPolicy::LruEvictIdle { min_idle: Duration::ZERO };
+        // capacity errors: terminal under Deny, retryable under eviction
+        for e in [
+            ServeError::SessionLimit { max_sessions: 4 },
+            ServeError::CapacityExhausted { capacity: 64 },
+        ] {
+            assert!(!e.is_retryable(&deny), "{e}");
+            assert!(e.is_retryable(&lru), "{e}");
+        }
+        // a failed dispatch rolled its state back: always safe to retry
+        assert!(ServeError::Backend("boom".into()).is_retryable(&deny));
+        // shape, routing and state-gone errors are never retryable
+        for e in [
+            ServeError::DimMismatch { what: "query", got: 3, want: 64 },
+            ServeError::UnknownHead { head: 5, heads: 2 },
+            ServeError::UnknownSession { session: 9 },
+            ServeError::Evicted { session: 9 },
+            ServeError::WorkerGone { worker: 0 },
+        ] {
+            assert!(!e.is_retryable(&deny), "{e}");
+            assert!(!e.is_retryable(&lru), "{e}");
+        }
     }
 }

@@ -215,6 +215,17 @@ impl KvStore {
         self.len = len;
     }
 
+    /// Release the provisioned buffers (session close / LRU eviction):
+    /// consumes the store — the K/V buffers and packed key bits are
+    /// freed here, not lazily at some later drop — and returns the
+    /// provisioned row capacity reclaimed, which the serving layer
+    /// accounts in `Metrics::kv_rows_released`.
+    pub fn release(self) -> usize {
+        // moving `self` in drops keys/values/packed right now; returning
+        // the capacity first makes the reclaimed provisioning explicit
+        self.capacity
+    }
+
     /// The valid (unpadded) key rows.
     pub fn keys(&self) -> &[f32] {
         &self.keys[..self.len * self.d_k]
@@ -363,6 +374,15 @@ mod tests {
         assert_eq!(s.packed_rows_total(), 10);
         s.load(&vec![0.5; 5 * 4], &vec![0.5; 5 * 4]).unwrap();
         assert_eq!(s.packed_rows_total(), 15, "load packs the loaded rows");
+    }
+
+    #[test]
+    fn release_reports_provisioned_capacity() {
+        let mut s = KvStore::new(8, 2, 2);
+        s.append(&[1.0, 2.0], &[3.0, 4.0]).unwrap();
+        // the reclaimed provisioning is the full capacity, not the live
+        // length — eviction frees what admission reserved
+        assert_eq!(s.release(), 8);
     }
 
     #[test]

@@ -15,6 +15,12 @@ pub struct Metrics {
     pub prefills: u64,
     pub decodes: u64,
     pub attends: u64,
+    /// Session lifecycle (ISSUE 5): explicit `Close` requests served
+    /// (handle close / drop), LRU reclaims performed to admit new
+    /// sessions, and the provisioned KV rows those two paths released.
+    pub closes: u64,
+    pub evictions: u64,
+    pub kv_rows_released: u64,
     /// Batched backend dispatches issued (one per dispatch group).
     pub dispatches: u64,
     /// Queries served through those dispatches; `dispatched_queries /
@@ -68,6 +74,9 @@ impl Metrics {
         self.prefills += other.prefills;
         self.decodes += other.decodes;
         self.attends += other.attends;
+        self.closes += other.closes;
+        self.evictions += other.evictions;
+        self.kv_rows_released += other.kv_rows_released;
         self.dispatches += other.dispatches;
         self.dispatched_queries += other.dispatched_queries;
         self.max_occupancy = self.max_occupancy.max(other.max_occupancy);
@@ -111,13 +120,15 @@ impl Metrics {
 
     pub fn summary(&self, window: Duration) -> String {
         format!(
-            "completed={} (prefill={} decode={} attend={}) batches={} \
+            "completed={} (prefill={} decode={} attend={} close={}) evictions={} batches={} \
              occupancy={:.2}x (max {}) errors={} \
              thruput={:.1}/s mean={:.1}us p50={:.1}us p95={:.1}us p99={:.1}us",
             self.completed,
             self.prefills,
             self.decodes,
             self.attends,
+            self.closes,
+            self.evictions,
             self.batches,
             self.mean_occupancy(),
             self.max_occupancy,
@@ -158,11 +169,27 @@ mod tests {
         b.record(Duration::from_micros(20));
         b.attends += 1;
         b.record_error();
+        b.closes += 2;
+        b.evictions += 1;
+        b.kv_rows_released += 64;
         a.merge(&b);
         assert_eq!(a.completed, 2);
         assert_eq!(a.errors, 1);
         assert_eq!(a.decodes, 1);
         assert_eq!(a.attends, 1);
+        assert_eq!(a.closes, 2);
+        assert_eq!(a.evictions, 1);
+        assert_eq!(a.kv_rows_released, 64);
+    }
+
+    #[test]
+    fn summary_reports_lifecycle_counters() {
+        let mut m = Metrics::new();
+        m.closes = 3;
+        m.evictions = 2;
+        let s = m.summary(Duration::from_secs(1));
+        assert!(s.contains("close=3"), "{s}");
+        assert!(s.contains("evictions=2"), "{s}");
     }
 
     #[test]

@@ -8,17 +8,28 @@
 //! growing KV cache each step (causal)", Sec. IV-C — so this module is a
 //! decode-serving simulator, not a one-shot attention demo:
 //!
+//! * [`client`]    — the primary client surface (ISSUE 5):
+//!   [`CamformerServer::open`] admits a session **shard-wide** (one
+//!   broadcast `Prefill` per head, all-or-nothing with rollback) and
+//!   returns an owned [`SessionHandle`]; `decode`/`attend` return typed
+//!   `#[must_use]` [`Ticket`]s backed by per-request completion slots
+//!   (`wait` / `try_wait` / `wait_timeout`), and `close`/`Drop` retire
+//!   the session, releasing its provisioned KV capacity;
 //! * [`session`]   — [`Session`]: live per-(session, head) KV state owned
-//!   by a worker thread; sessions route session id -> shard -> head;
+//!   by a worker thread, with lifecycle bookkeeping (logical last-touch
+//!   position for deterministic LRU, pin counts while a dispatch is in
+//!   flight); sessions route session id -> shard -> head;
 //! * [`kv_store`]  — [`KvStore`]: capacity-provisioned K/V memory with
-//!   O(row) decode append, zero-copy padded execution views, and the
-//!   store-owned sign-packed key bits, maintained *incrementally* (an
-//!   append packs exactly one row) and lent to backends per dispatch
-//!   item (`AttendItem::packed`) so the hot path never re-packs a
-//!   session's keys;
+//!   O(row) decode append, zero-copy padded execution views, the
+//!   store-owned sign-packed key bits maintained *incrementally* and
+//!   lent to backends per dispatch item (`AttendItem::packed`), and
+//!   explicit release on close/eviction;
 //! * [`server`]    — [`CamformerServer`]: `Prefill` / `Decode` / `Attend`
-//!   request enum, capacity-aware typed admission, worker-per-(shard,
-//!   head) routing, shutdown;
+//!   / `Close` request enum, capacity-aware typed admission,
+//!   worker-per-(shard, head) routing, [`ReclaimPolicy`] (deny, or LRU
+//!   eviction of idle sessions when admission hits the session limit),
+//!   shutdown — plus the deprecated legacy `submit`/`collect` shim,
+//!   rebuilt on the same [`Envelope`]/[`ResponseSink`] internals;
 //! * [`batcher`]   — batched decode with speculative multi-step fusion:
 //!   the request-aware [`DecodeBatcher`] plans each wire batch into
 //!   dispatch groups so decode steps and read-only attends — of
@@ -28,7 +39,8 @@
 //!   appends apply first in program order; each query then attends over
 //!   its own *causal prefix view* of its session cache, so even a deep
 //!   single-session burst amortises dispatches while staying bit-equal
-//!   to sequential execution. `Prefill` remains a barrier;
+//!   to sequential execution. `Prefill` remains a barrier; `Close` is a
+//!   same-session barrier (other sessions fuse around it);
 //! * [`backend`]   — pluggable execution: PJRT artifacts (the real hot
 //!   path, `pjrt` feature), the pure-Rust functional model (serving
 //!   through the survivor-list sparse pipeline by default — softmax and
@@ -38,40 +50,51 @@
 //!   dispatch groups through [`AttentionBackend::attend_batch`];
 //! * [`error`]     — [`ServeError`]: every admission / serving failure as
 //!   a typed variant, reported per request (one refused batch member
-//!   never poisons its batch-mates);
-//! * [`metrics`]   — per-op counters, batch-occupancy (queries amortised
-//!   per backend dispatch), latency percentiles (p50/p95/p99) and
-//!   throughput for the examples and benches.
+//!   never poisons its batch-mates), with
+//!   [`ServeError::is_retryable`] keyed to the reclaim policy;
+//! * [`metrics`]   — per-op counters (including session lifecycle:
+//!   closes, evictions, KV rows released), batch-occupancy (queries
+//!   amortised per backend dispatch), latency percentiles
+//!   (p50/p95/p99) and throughput for the examples and benches.
 //!
 //! # Serving API
 //!
 //! ```
-//! use camformer::coordinator::{CamformerServer, FunctionalBackend, Request, ServerConfig};
+//! use std::time::Duration;
+//! use camformer::coordinator::{
+//!     CamformerServer, FunctionalBackend, ReclaimPolicy, ServerConfig,
+//! };
 //!
 //! # fn main() -> Result<(), camformer::coordinator::ServeError> {
-//! let cfg = ServerConfig { shards: 1, heads: 1, kv_capacity: 64, ..Default::default() };
+//! let cfg = ServerConfig {
+//!     kv_capacity: 64,
+//!     // admission past max_sessions evicts the LRU idle session
+//!     // instead of failing terminally
+//!     reclaim: ReclaimPolicy::LruEvictIdle { min_idle: Duration::ZERO },
+//!     ..Default::default()
+//! };
 //! let server = CamformerServer::start(cfg, |_| FunctionalBackend::new(64, 64));
 //!
-//! // prefill a 4-token prompt, then run one live decode step against it
-//! let (keys, values) = (vec![1.0_f32; 4 * 64], vec![0.5_f32; 4 * 64]);
-//! server.submit(Request::Prefill { id: 0, session: 7, head: 0, keys, values })?;
-//! server.submit(Request::Decode {
-//!     id: 1,
-//!     session: 7,
-//!     head: 0,
-//!     query: vec![1.0; 64],
-//!     new_key: vec![-1.0; 64],
-//!     new_value: vec![0.25; 64],
-//! })?;
+//! // open = one broadcast prefill across every head of the session's
+//! // shard, admitted all-or-nothing; the handle owns the session
+//! let session = server.open(7, vec![1.0_f32; 4 * 64], vec![0.5_f32; 4 * 64])?;
 //!
-//! let mut responses = server.collect(2); // acks + attention outputs
-//! responses.sort_by_key(|r| r.id);
-//! assert_eq!(responses[1].output().len(), 64);
-//! assert_eq!(responses[1].seq_len(), 5); // the decode appended one row
+//! // every request returns a typed Ticket resolving to ITS response —
+//! // no id bookkeeping, no shared collect() pool
+//! let step = session.decode(vec![1.0; 64], vec![-1.0; 64], vec![0.25; 64])?;
+//! let r = step.wait();
+//! assert_eq!(r.output().len(), 64);
+//! assert_eq!(r.seq_len(), 5); // the decode appended one row
+//!
+//! let read = session.attend(vec![1.0; 64])?;
+//! assert_eq!(read.wait().seq_len(), 5);
+//!
+//! session.close()?; // frees the session's KV capacity on every head
 //!
 //! let (metrics, _window) = server.shutdown(); // p50/p99, per-op counts
 //! assert_eq!(metrics.prefills, 1);
 //! assert_eq!(metrics.decodes, 1);
+//! assert_eq!(metrics.closes, 1);
 //! # Ok(())
 //! # }
 //! ```
@@ -80,9 +103,10 @@
 //!
 //! | layer | kind | where |
 //! |-------|------|-------|
-//! | batcher (incl. both planning modes), kv (incl. prefix views), metrics, session | unit | in-module `#[cfg(test)]` |
+//! | batcher (incl. both planning modes + Close barriers), kv (incl. prefix views, release), metrics, session (lifecycle state) | unit | in-module `#[cfg(test)]` |
 //! | scorers, masks, prefix masking, BIMV tiles | property (seeded, `util::check`) | `accuracy::functional`, `bimv::engine` |
-//! | randomized batched-vs-sequential equivalence (dispatch configs × dense/sparse pipelines) + planner invariants + fused-burst prefix boundaries | fuzz/property | `rust/tests/batcher_fuzz.rs` |
+//! | randomized batched-vs-sequential equivalence (dispatch configs × dense/sparse pipelines, incl. Close + LRU-eviction streams) + planner invariants + fused-burst prefix boundaries | fuzz/property | `rust/tests/batcher_fuzz.rs` |
+//! | ticket semantics (out-of-order completion, timeout expiry, dropped tickets, WorkerGone), session handles, open fan-out, eviction | integration | `rust/tests/session_api.rs` |
 //! | decode serving (interleaved sessions, live append, batched vs sequential bit-equality, per-item admission failures) | integration | `rust/tests/decode_serving.rs` |
 //! | serving flows over functional/arch backends | integration | `rust/tests/coordinator_integration.rs` |
 //! | PJRT artifacts vs functional model | golden (skips without artifacts) | `rust/tests/runtime_integration.rs` |
@@ -91,6 +115,7 @@
 
 pub mod backend;
 pub mod batcher;
+pub mod client;
 pub mod error;
 pub mod kv_store;
 pub mod metrics;
@@ -99,8 +124,12 @@ pub mod session;
 
 pub use backend::{AttendItem, AttentionBackend, FunctionalBackend};
 pub use batcher::{BatchPolicy, DecodeBatcher, DispatchGroup, PlanMode};
+pub use client::{SessionHandle, Ticket};
 pub use error::ServeError;
 pub use kv_store::KvStore;
 pub use metrics::Metrics;
-pub use server::{CamformerServer, Output, Request, Response, ServerConfig};
+pub use server::{
+    CamformerServer, Envelope, Output, ReclaimPolicy, Request, Response, ResponseSink,
+    ServerConfig,
+};
 pub use session::{Session, SessionId};

@@ -7,14 +7,19 @@
 //! head worker. Each worker owns its backend (PJRT clients are not shared
 //! across threads), the live KV state of every session assigned to it
 //! (one [`KvStore`] per session), and a [`DecodeBatcher`]. Responses flow
-//! back over a shared channel keyed by request id.
+//! back through each request's [`ResponseSink`]: a per-request completion
+//! slot for the [`Ticket`]-based session-handle API, or the shared
+//! response pool for the legacy `submit`/`collect` shim.
 //!
 //! Request lifecycle:
 //! * [`Request::Prefill`] creates (or resets) the session on the target
-//!   worker and bulk-loads the prompt K/V;
+//!   worker and bulk-loads the prompt K/V — [`CamformerServer::open`]
+//!   broadcasts one prefill to every head of the shard, all-or-nothing;
 //! * [`Request::Decode`] appends one generated (k, v) pair and attends
 //!   the query over the grown cache — one autoregressive step;
-//! * [`Request::Attend`] is a read-only query over the current cache.
+//! * [`Request::Attend`] is a read-only query over the current cache;
+//! * [`Request::Close`] retires the session and releases its provisioned
+//!   KV capacity (issued by `SessionHandle::close` / `Drop`).
 //!
 //! Execution is cross-session batched with speculative multi-step
 //! fusion: the worker pulls a wire batch, plans it into dispatch groups
@@ -27,22 +32,45 @@
 //! would have observed sequentially (later speculative appends behave
 //! as pad — natively for prefix-aware backends, via a materialised
 //! literal-pad copy otherwise), and a failed dispatch rolls every
-//! speculative append back before reporting.
+//! speculative append back. A `Close` rides in the group but executes
+//! after the dispatch (the planner guarantees no same-session item
+//! follows it in-group — the *same-session barrier*), so batch-mates
+//! still borrow the store they were planned against.
 //!
 //! Admission is capacity-aware and typed ([`ServeError`]): dimension and
-//! provisioning violations are rejected synchronously at `submit`;
+//! provisioning violations are rejected synchronously at submission;
 //! state-dependent failures (unknown session, per-worker session limit,
 //! exhausted KV capacity) come back inside the [`Response`] — and are
 //! strictly per-request, so one refused item never poisons its
-//! batch-mates.
+//! batch-mates. Under [`ReclaimPolicy::LruEvictIdle`] a `Prefill` that
+//! hits the session limit evicts the least-recently-used idle session
+//! instead of failing terminally; the victim's state is released and
+//! its subsequent requests answer [`ServeError::Evicted`] until it is
+//! re-opened. Eviction can only run inside a `Prefill` barrier — never
+//! while a dispatch group is mid-flight — which is the structural
+//! guarantee that a session with in-flight (fused speculative) queries
+//! is never victimized; the pin counts on [`Session`] restate that
+//! invariant as defense-in-depth. LRU order is a per-worker *logical*
+//! clock (program-order request positions), so with `min_idle = ZERO`
+//! victim choice is deterministic and batched execution stays bit-equal
+//! to sequential dispatch (a non-zero `min_idle` gate reads the wall
+//! clock and is inherently timing-dependent). Eviction is per *worker*:
+//! each head evicts by its own clock, so a shard-wide session can be
+//! reclaimed on one head while staying live on others — the victim's
+//! handle sees [`ServeError::Evicted`] only on the affected heads (see
+//! the ROADMAP's shard-coordinated reclamation item).
+//!
+//! [`Ticket`]: super::client::Ticket
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::backend::{AttendItem, AttentionBackend};
 use super::batcher::{BatchPolicy, DecodeBatcher, DispatchGroup};
+use super::client::Ticket;
 use super::error::ServeError;
 use super::kv_store::{KvStore, KEY_PAD};
 use super::metrics::Metrics;
@@ -78,6 +106,14 @@ pub enum Request {
         head: usize,
         query: Vec<f32>,
     },
+    /// Retire the session on this head worker and release its
+    /// provisioned KV capacity. Acknowledged with an empty [`Output`]
+    /// whose `seq_len` is the context length at close time.
+    Close {
+        id: u64,
+        session: SessionId,
+        head: usize,
+    },
 }
 
 impl Request {
@@ -85,7 +121,8 @@ impl Request {
         match self {
             Request::Prefill { id, .. }
             | Request::Decode { id, .. }
-            | Request::Attend { id, .. } => *id,
+            | Request::Attend { id, .. }
+            | Request::Close { id, .. } => *id,
         }
     }
 
@@ -93,7 +130,8 @@ impl Request {
         match self {
             Request::Prefill { session, .. }
             | Request::Decode { session, .. }
-            | Request::Attend { session, .. } => *session,
+            | Request::Attend { session, .. }
+            | Request::Close { session, .. } => *session,
         }
     }
 
@@ -101,7 +139,8 @@ impl Request {
         match self {
             Request::Prefill { head, .. }
             | Request::Decode { head, .. }
-            | Request::Attend { head, .. } => *head,
+            | Request::Attend { head, .. }
+            | Request::Close { head, .. } => *head,
         }
     }
 }
@@ -109,7 +148,7 @@ impl Request {
 /// Successful payload of a served request.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Output {
-    /// Attention output (empty for `Prefill` acks).
+    /// Attention output (empty for `Prefill` / `Close` acks).
     pub output: Vec<f32>,
     /// Session KV length after the operation.
     pub seq_len: usize,
@@ -147,6 +186,64 @@ impl Response {
     }
 }
 
+/// Where a request's [`Response`] is delivered: the per-request
+/// completion slot backing a [`Ticket`], or the server-wide pool the
+/// legacy `collect` shim drains.
+///
+/// [`Ticket`]: super::client::Ticket
+#[derive(Debug)]
+pub enum ResponseSink {
+    /// The shared response pool ([`CamformerServer::collect`]).
+    Pool,
+    /// A per-request completion slot; dropping the receiving [`Ticket`]
+    /// simply discards the response (nothing leaks — the slot IS the
+    /// channel).
+    ///
+    /// [`Ticket`]: super::client::Ticket
+    Slot(Sender<Response>),
+}
+
+/// One queued unit of serving work: the request, its enqueue time (for
+/// latency accounting) and the sink its response goes to. This is what
+/// worker channels carry and what the [`DecodeBatcher`] plans over.
+#[derive(Debug)]
+pub struct Envelope {
+    pub req: Request,
+    pub enq: Instant,
+    pub sink: ResponseSink,
+}
+
+impl Envelope {
+    /// Wrap a request for the shared response pool (the legacy
+    /// `submit`/`collect` surface; also the convenient constructor for
+    /// planner tests).
+    pub fn pool(req: Request) -> Self {
+        Envelope { req, enq: Instant::now(), sink: ResponseSink::Pool }
+    }
+}
+
+/// What a worker does when a `Prefill` needs a session slot and the
+/// worker is at `max_sessions`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum ReclaimPolicy {
+    /// Refuse admission with [`ServeError::SessionLimit`] (the pre-PR-5
+    /// behavior): capacity only frees when the caller closes sessions.
+    #[default]
+    Deny,
+    /// Evict the least-recently-used session that has been idle for at
+    /// least `min_idle` and has no in-flight dispatch queries (pinned
+    /// sessions are never victims). The victim's subsequent requests
+    /// answer [`ServeError::Evicted`] until it is re-opened.
+    ///
+    /// Scope and determinism: eviction is per *worker* — each (shard,
+    /// head) worker picks victims by its own logical clock, so a
+    /// session opened shard-wide may be reclaimed on some heads and not
+    /// others. `min_idle = Duration::ZERO` makes victim choice fully
+    /// deterministic (the logical clock alone decides); a non-zero gate
+    /// compares wall-clock idle time and is timing-dependent by nature.
+    LruEvictIdle { min_idle: Duration },
+}
+
 /// Server configuration.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
@@ -163,6 +260,8 @@ pub struct ServerConfig {
     pub d_v: usize,
     /// Admission bound: live sessions per worker.
     pub max_sessions: usize,
+    /// What to do when a `Prefill` hits `max_sessions` on a worker.
+    pub reclaim: ReclaimPolicy,
     /// Flexible backends pad the live KV length up to a multiple of this
     /// (the stage-1 group size g); fixed-geometry backends override it
     /// via `AttentionBackend::required_rows`.
@@ -179,6 +278,7 @@ impl Default for ServerConfig {
             d_k: 64,
             d_v: 64,
             max_sessions: 64,
+            reclaim: ReclaimPolicy::Deny,
             pad_quantum: 16,
             batch: BatchPolicy::default(),
         }
@@ -191,14 +291,14 @@ impl ServerConfig {
         self.shards * self.heads
     }
 
-    fn worker_index(&self, session: SessionId, head: usize) -> usize {
+    pub(crate) fn worker_index(&self, session: SessionId, head: usize) -> usize {
         let shard = (session % self.shards as u64) as usize;
         shard * self.heads + head
     }
 }
 
 struct Worker {
-    tx: Sender<(Request, Instant)>,
+    tx: Sender<Envelope>,
     handle: JoinHandle<Metrics>,
 }
 
@@ -208,12 +308,17 @@ pub struct CamformerServer {
     workers: Vec<Worker>,
     resp_rx: Receiver<Response>,
     started: Instant,
+    /// Ids for internally-issued requests (session-handle tickets, open
+    /// fan-out, drop-closes). They live in the top half of the id space
+    /// so they never collide with caller-chosen legacy `submit` ids.
+    next_id: AtomicU64,
 }
 
 impl CamformerServer {
     /// Start `shards * heads` workers. `make_backend(w)` builds the
     /// backend owned by worker `w` (`w = shard * heads + head`). Sessions
-    /// are created lazily by `Prefill` requests.
+    /// are created by [`CamformerServer::open`] (or legacy `Prefill`
+    /// requests).
     pub fn start<B, FB>(cfg: ServerConfig, mut make_backend: FB) -> Self
     where
         B: AttentionBackend + 'static,
@@ -223,7 +328,7 @@ impl CamformerServer {
         let (resp_tx, resp_rx) = mpsc::channel::<Response>();
         let mut workers = Vec::with_capacity(cfg.workers());
         for w in 0..cfg.workers() {
-            let (tx, rx) = mpsc::channel::<(Request, Instant)>();
+            let (tx, rx) = mpsc::channel::<Envelope>();
             let backend = make_backend(w);
             let resp_tx = resp_tx.clone();
             let wcfg = cfg.clone();
@@ -235,22 +340,64 @@ impl CamformerServer {
             workers,
             resp_rx,
             started: Instant::now(),
+            next_id: AtomicU64::new(1 << 62),
         }
     }
 
-    /// Submit a request, routed session id -> shard -> head worker.
-    /// Shape/provisioning violations are rejected here, synchronously;
-    /// state-dependent failures arrive as an error [`Response`].
+    /// The configuration this server was started with.
+    pub fn config(&self) -> &ServerConfig {
+        &self.cfg
+    }
+
+    /// Allocate an id for an internally-issued request.
+    pub(crate) fn alloc_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Submit a request and receive a typed [`Ticket`] — a per-request
+    /// completion slot resolving to exactly this request's [`Response`]
+    /// (`wait` / `try_wait` / `wait_timeout`), with no cross-request
+    /// correlation needed. Shape/provisioning violations are rejected
+    /// here, synchronously; state-dependent failures arrive inside the
+    /// ticket's response. This is the primitive under
+    /// [`SessionHandle`]'s `decode`/`attend`/`close`.
+    ///
+    /// [`Ticket`]: super::client::Ticket
+    /// [`SessionHandle`]: super::client::SessionHandle
+    pub fn submit_ticket(&self, req: Request) -> Result<Ticket, ServeError> {
+        self.validate(&req)?;
+        let (id, session, head) = (req.id(), req.session(), req.head());
+        let w = self.cfg.worker_index(session, head);
+        let (tx, rx) = mpsc::channel::<Response>();
+        self.workers[w]
+            .tx
+            .send(Envelope { req, enq: Instant::now(), sink: ResponseSink::Slot(tx) })
+            .map_err(|_| ServeError::WorkerGone { worker: w })?;
+        Ok(Ticket::new(id, session, head, w, rx))
+    }
+
+    /// Submit a request whose response lands in the shared pool, routed
+    /// session id -> shard -> head worker.
+    ///
+    /// Deprecated (PR 5): this is the legacy fire-and-forget surface,
+    /// kept for one PR as a thin shim over the same internals as
+    /// [`CamformerServer::submit_ticket`] — responses must be correlated
+    /// by id out of [`CamformerServer::collect`]'s unordered pool.
+    /// Prefer [`CamformerServer::open`] + the [`SessionHandle`] /
+    /// [`Ticket`] API.
+    ///
+    /// [`Ticket`]: super::client::Ticket
+    /// [`SessionHandle`]: super::client::SessionHandle
     pub fn submit(&self, req: Request) -> Result<(), ServeError> {
         self.validate(&req)?;
         let w = self.cfg.worker_index(req.session(), req.head());
         self.workers[w]
             .tx
-            .send((req, Instant::now()))
+            .send(Envelope::pool(req))
             .map_err(|_| ServeError::WorkerGone { worker: w })
     }
 
-    fn validate(&self, req: &Request) -> Result<(), ServeError> {
+    pub(crate) fn validate(&self, req: &Request) -> Result<(), ServeError> {
         let cfg = &self.cfg;
         let head = req.head();
         if head >= cfg.heads {
@@ -316,18 +463,23 @@ impl CamformerServer {
                     });
                 }
             }
+            // the routing triple is all a Close carries; head was checked
+            Request::Close { .. } => {}
         }
         Ok(())
     }
 
-    /// Collect exactly `n` responses (blocking).
+    /// Collect exactly `n` pool responses (blocking). Deprecated (PR 5):
+    /// only legacy [`CamformerServer::submit`] requests land here;
+    /// ticket responses never do.
     pub fn collect(&self, n: usize) -> Vec<Response> {
         (0..n)
             .map(|_| self.resp_rx.recv().expect("server workers alive"))
             .collect()
     }
 
-    /// Collect responses with a timeout; returns what arrived.
+    /// Collect pool responses with a timeout; returns what arrived.
+    /// Deprecated (PR 5) alongside [`CamformerServer::collect`].
     pub fn collect_timeout(&self, n: usize, timeout: Duration) -> Vec<Response> {
         let deadline = Instant::now() + timeout;
         let mut out = Vec::with_capacity(n);
@@ -367,9 +519,16 @@ enum Op {
     Prefill,
     Decode,
     Attend,
+    Close,
 }
 
-fn deliver(resp_tx: &Sender<Response>, metrics: &mut Metrics, op: Op, resp: Response) {
+fn deliver(
+    pool_tx: &Sender<Response>,
+    metrics: &mut Metrics,
+    op: Op,
+    sink: &ResponseSink,
+    resp: Response,
+) {
     match &resp.result {
         Ok(_) => {
             metrics.record(resp.latency);
@@ -377,11 +536,28 @@ fn deliver(resp_tx: &Sender<Response>, metrics: &mut Metrics, op: Op, resp: Resp
                 Op::Prefill => metrics.prefills += 1,
                 Op::Decode => metrics.decodes += 1,
                 Op::Attend => metrics.attends += 1,
+                Op::Close => metrics.closes += 1,
             }
         }
         Err(_) => metrics.record_error(),
     }
-    let _ = resp_tx.send(resp);
+    // a send error means the consumer is gone (dropped Ticket, server
+    // shutting down): the response is simply discarded
+    let _ = match sink {
+        ResponseSink::Pool => pool_tx.send(resp),
+        ResponseSink::Slot(tx) => tx.send(resp),
+    };
+}
+
+/// The typed miss for a session absent from the worker's table: evicted
+/// sessions answer [`ServeError::Evicted`] until re-opened, everything
+/// else is an [`ServeError::UnknownSession`].
+fn missing_session(evicted: &HashSet<SessionId>, session: SessionId) -> ServeError {
+    if evicted.contains(&session) {
+        ServeError::Evicted { session }
+    } else {
+        ServeError::UnknownSession { session }
+    }
 }
 
 /// Padded execution rows for `len` live keys, admission-checked against
@@ -404,25 +580,63 @@ fn padded_rows<B: AttentionBackend>(
     Ok(rows)
 }
 
-/// Execute a `Prefill` barrier against the worker's session table.
+/// Free one session slot under the worker's [`ReclaimPolicy`]: pick the
+/// least-recently-used (by logical touch position) session that is idle
+/// for at least `min_idle` and not pinned, release its store, and mark
+/// it evicted. `Err(SessionLimit)` when the policy denies reclamation or
+/// no session is eligible.
+fn reclaim_one(
+    cfg: &ServerConfig,
+    sessions: &mut HashMap<SessionId, Session>,
+    evicted: &mut HashSet<SessionId>,
+    metrics: &mut Metrics,
+) -> Result<(), ServeError> {
+    let ReclaimPolicy::LruEvictIdle { min_idle } = cfg.reclaim else {
+        return Err(ServeError::SessionLimit { max_sessions: cfg.max_sessions });
+    };
+    let victim = sessions
+        .values()
+        .filter(|s| !s.is_pinned() && s.idle_for() >= min_idle)
+        .min_by_key(|s| s.last_touch_seq)
+        .map(|s| s.id);
+    let Some(victim) = victim else {
+        return Err(ServeError::SessionLimit { max_sessions: cfg.max_sessions });
+    };
+    let s = sessions.remove(&victim).expect("victim is resident");
+    metrics.kv_rows_released += s.store.release() as u64;
+    metrics.evictions += 1;
+    evicted.insert(victim);
+    Ok(())
+}
+
+/// Execute a `Prefill` barrier against the worker's session table,
+/// reclaiming a slot under the configured policy when the worker is at
+/// its session limit.
+#[allow(clippy::too_many_arguments)]
 fn handle_prefill<B: AttentionBackend>(
     backend: &mut B,
     cfg: &ServerConfig,
     sessions: &mut HashMap<SessionId, Session>,
+    evicted: &mut HashSet<SessionId>,
+    metrics: &mut Metrics,
+    clock: u64,
     session: SessionId,
     keys: Vec<f32>,
     values: Vec<f32>,
 ) -> Result<Output, ServeError> {
     if !sessions.contains_key(&session) {
         if sessions.len() >= cfg.max_sessions {
-            return Err(ServeError::SessionLimit { max_sessions: cfg.max_sessions });
+            reclaim_one(cfg, sessions, evicted, metrics)?;
         }
+        // (re-)opening revives an evicted id
+        evicted.remove(&session);
         sessions.insert(
             session,
             Session::new(session, KvStore::new(cfg.kv_capacity, cfg.d_k, cfg.d_v)),
         );
     }
     let s = sessions.get_mut(&session).unwrap();
+    s.touch(clock);
     s.store.load(&keys, &values)?;
     backend.on_kv_update();
     Ok(Output { output: Vec::new(), seq_len: s.store.len() })
@@ -439,6 +653,18 @@ struct PendingQuery {
     /// position. Speculative fusion may grow the store past it before
     /// the dispatch runs, so the attend is bounded to these rows.
     prefix: usize,
+    sink: ResponseSink,
+}
+
+/// A `Close` admitted in phase 1, executed after the group's dispatch
+/// (its program position is after every same-session batch-mate — the
+/// planner's same-session-barrier rule — and earlier batch-mates still
+/// borrow the store during the dispatch).
+struct PendingClose {
+    id: u64,
+    session: SessionId,
+    enq: Instant,
+    sink: ResponseSink,
 }
 
 /// Where a planned item's K/V execution view comes from.
@@ -451,108 +677,27 @@ enum ViewSource {
     Scratch(usize),
 }
 
-/// Execute one dispatch group: apply every `Decode`'s KV append first
-/// (in program order), recording each query's causal prefix, then run a
-/// *single* batched attend in which each query sees a view of its own
-/// session cache bounded at that prefix — so speculative fusion of many
-/// same-session steps stays bit-equal to sequential dispatch.
+/// Phases 2 and 3 of a dispatch group: bind each surviving query to a
+/// view of its own causal prefix, run ONE backend dispatch, deliver.
 ///
-/// Failures are strictly per-request: an item refused at admission
-/// (unknown session, exhausted capacity — including mid-burst, where the
-/// refusal leaves the store untouched and later burst steps simply see
-/// the shorter prefix) is answered with its typed error and dropped from
-/// the dispatch, and the rest of the batch proceeds untouched. Only a
-/// backend execution failure — which has no per-item attribution — fails
-/// the whole dispatch; it rolls every speculative append of the group
-/// back, so an errored request never leaves state behind (a client retry
-/// must not double-append).
-fn execute_batch<B: AttentionBackend>(
+/// Failures are strictly per-request: an item refused at admission is
+/// answered with its typed error and dropped from the dispatch, and the
+/// rest of the batch proceeds untouched. Only a backend execution
+/// failure — which has no per-item attribution — fails the whole
+/// dispatch; it rolls every speculative append of the group back (via
+/// `baseline`), so an errored request never leaves state behind (a
+/// client retry must not double-append).
+#[allow(clippy::too_many_arguments)]
+fn dispatch_pending<B: AttentionBackend>(
     backend: &mut B,
     cfg: &ServerConfig,
     sessions: &mut HashMap<SessionId, Session>,
-    items: Vec<(Request, Instant)>,
+    pending: &[PendingQuery],
+    baseline: &[(SessionId, usize)],
     head: usize,
     metrics: &mut Metrics,
-    resp_tx: &Sender<Response>,
+    pool_tx: &Sender<Response>,
 ) {
-    // Phase 1 — the mutating half of each Decode, in program order.
-    // Every query's causal prefix is captured here, so later appends of
-    // the same session (speculative fusion) cannot leak into it.
-    let mut pending: Vec<PendingQuery> = Vec::with_capacity(items.len());
-    // pre-group KV length per mutated session, for failed-dispatch rollback
-    let mut baseline: Vec<(SessionId, usize)> = Vec::new();
-    let mut mutated = false;
-    for (req, enq) in items {
-        match req {
-            Request::Decode { id, session, query, new_key, new_value, .. } => {
-                let appended = match sessions.get_mut(&session) {
-                    None => Err(ServeError::UnknownSession { session }),
-                    Some(s) => {
-                        // admission for the *grown* cache runs before the
-                        // append so a refused Decode leaves the session
-                        // untouched (a client retry must not double-append)
-                        padded_rows(backend, cfg, s.store.len() + 1).and_then(|_| {
-                            let before = s.store.len();
-                            s.store.append(&new_key, &new_value).map(|()| {
-                                if !baseline.iter().any(|&(sid, _)| sid == session) {
-                                    baseline.push((session, before));
-                                }
-                                before + 1
-                            })
-                        })
-                    }
-                };
-                match appended {
-                    Ok(prefix) => {
-                        mutated = true;
-                        pending.push(PendingQuery {
-                            id,
-                            session,
-                            op: Op::Decode,
-                            query,
-                            enq,
-                            prefix,
-                        });
-                    }
-                    Err(e) => deliver(
-                        resp_tx,
-                        metrics,
-                        Op::Decode,
-                        Response { id, session, head, result: Err(e), latency: enq.elapsed() },
-                    ),
-                }
-            }
-            Request::Attend { id, session, query, .. } => match sessions.get(&session) {
-                Some(s) => {
-                    let prefix = s.store.len();
-                    pending.push(PendingQuery { id, session, op: Op::Attend, query, enq, prefix });
-                }
-                None => deliver(
-                    resp_tx,
-                    metrics,
-                    Op::Attend,
-                    Response {
-                        id,
-                        session,
-                        head,
-                        result: Err(ServeError::UnknownSession { session }),
-                        latency: enq.elapsed(),
-                    },
-                ),
-            },
-            Request::Prefill { .. } => unreachable!("prefills are Barrier groups"),
-        }
-    }
-    if mutated {
-        // the KV buffers mutate in place; the stores maintain their own
-        // packed key bits incrementally, but a custom backend caching a
-        // derivative by buffer identity still needs the explicit signal
-        backend.on_kv_update();
-    }
-    if pending.is_empty() {
-        return;
-    }
-
     // Phase 2 — bind each surviving query to a view of its own causal
     // prefix. Same-session items are made adjacent (stable sort by
     // session, program order within a session) so backends that detect
@@ -600,9 +745,10 @@ fn execute_batch<B: AttentionBackend>(
                 planned.push((i, p.prefix, source));
             }
             Err(e) => deliver(
-                resp_tx,
+                pool_tx,
                 metrics,
                 p.op,
+                &p.sink,
                 Response {
                     id: p.id,
                     session: p.session,
@@ -644,9 +790,10 @@ fn execute_batch<B: AttentionBackend>(
             for ((i, seq_len, _), out) in planned.into_iter().zip(outs) {
                 let p = &pending[i];
                 deliver(
-                    resp_tx,
+                    pool_tx,
                     metrics,
                     p.op,
+                    &p.sink,
                     Response {
                         id: p.id,
                         session: p.session,
@@ -660,7 +807,7 @@ fn execute_batch<B: AttentionBackend>(
         Err(e) => {
             // every item of this dispatch answers with an error, so none
             // of the group's speculative appends may survive
-            for &(session, len) in &baseline {
+            for &(session, len) in baseline {
                 if let Some(s) = sessions.get_mut(&session) {
                     s.store.truncate(len);
                 }
@@ -672,9 +819,10 @@ fn execute_batch<B: AttentionBackend>(
             for (i, _, _) in planned {
                 let p = &pending[i];
                 deliver(
-                    resp_tx,
+                    pool_tx,
                     metrics,
                     p.op,
+                    &p.sink,
                     Response {
                         id: p.id,
                         session: p.session,
@@ -688,33 +836,236 @@ fn execute_batch<B: AttentionBackend>(
     }
 }
 
+/// Execute one dispatch group: apply every `Decode`'s KV append first
+/// (in program order), recording each query's causal prefix, then run a
+/// *single* batched attend in which each query sees a view of its own
+/// session cache bounded at that prefix — so speculative fusion of many
+/// same-session steps stays bit-equal to sequential dispatch. `Close`
+/// items are admitted in program order (touching the worker's logical
+/// clock like every request) but execute after the dispatch, releasing
+/// the session's provisioned capacity. Sessions with queries in flight
+/// are pinned for the duration of the dispatch.
+#[allow(clippy::too_many_arguments)]
+fn execute_batch<B: AttentionBackend>(
+    backend: &mut B,
+    cfg: &ServerConfig,
+    sessions: &mut HashMap<SessionId, Session>,
+    evicted: &mut HashSet<SessionId>,
+    clock: &mut u64,
+    items: Vec<Envelope>,
+    head: usize,
+    metrics: &mut Metrics,
+    pool_tx: &Sender<Response>,
+) {
+    // Phase 1 — the mutating half of each Decode, in program order.
+    // Every query's causal prefix is captured here, so later appends of
+    // the same session (speculative fusion) cannot leak into it.
+    let mut pending: Vec<PendingQuery> = Vec::with_capacity(items.len());
+    let mut closes: Vec<PendingClose> = Vec::new();
+    // pre-group KV length per mutated session, for failed-dispatch rollback
+    let mut baseline: Vec<(SessionId, usize)> = Vec::new();
+    let mut mutated = false;
+    for env in items {
+        let Envelope { req, enq, sink } = env;
+        *clock += 1;
+        match req {
+            Request::Decode { id, session, query, new_key, new_value, .. } => {
+                let appended = match sessions.get_mut(&session) {
+                    None => Err(missing_session(evicted, session)),
+                    Some(s) => {
+                        s.touch(*clock);
+                        // admission for the *grown* cache runs before the
+                        // append so a refused Decode leaves the session
+                        // untouched (a client retry must not double-append)
+                        match padded_rows(backend, cfg, s.store.len() + 1) {
+                            Err(e) => Err(e),
+                            Ok(_) => {
+                                let before = s.store.len();
+                                match s.store.append(&new_key, &new_value) {
+                                    Err(e) => Err(e),
+                                    Ok(()) => {
+                                        if !baseline.iter().any(|&(sid, _)| sid == session) {
+                                            baseline.push((session, before));
+                                        }
+                                        s.pin();
+                                        Ok(before + 1)
+                                    }
+                                }
+                            }
+                        }
+                    }
+                };
+                match appended {
+                    Ok(prefix) => {
+                        mutated = true;
+                        pending.push(PendingQuery {
+                            id,
+                            session,
+                            op: Op::Decode,
+                            query,
+                            enq,
+                            prefix,
+                            sink,
+                        });
+                    }
+                    Err(e) => deliver(
+                        pool_tx,
+                        metrics,
+                        Op::Decode,
+                        &sink,
+                        Response { id, session, head, result: Err(e), latency: enq.elapsed() },
+                    ),
+                }
+            }
+            Request::Attend { id, session, query, .. } => match sessions.get_mut(&session) {
+                Some(s) => {
+                    s.touch(*clock);
+                    s.pin();
+                    let prefix = s.store.len();
+                    pending.push(PendingQuery {
+                        id,
+                        session,
+                        op: Op::Attend,
+                        query,
+                        enq,
+                        prefix,
+                        sink,
+                    });
+                }
+                None => deliver(
+                    pool_tx,
+                    metrics,
+                    Op::Attend,
+                    &sink,
+                    Response {
+                        id,
+                        session,
+                        head,
+                        result: Err(missing_session(evicted, session)),
+                        latency: enq.elapsed(),
+                    },
+                ),
+            },
+            Request::Close { id, session, .. } => match sessions.get_mut(&session) {
+                Some(s) => {
+                    s.touch(*clock);
+                    closes.push(PendingClose { id, session, enq, sink });
+                }
+                None => {
+                    let err = missing_session(evicted, session);
+                    // a Close of an evicted id acknowledges the eviction
+                    // (handle drop/close does this): forget the tombstone
+                    // so the set stays bounded by un-acknowledged victims
+                    // instead of growing with every id ever evicted
+                    evicted.remove(&session);
+                    deliver(
+                        pool_tx,
+                        metrics,
+                        Op::Close,
+                        &sink,
+                        Response {
+                            id,
+                            session,
+                            head,
+                            result: Err(err),
+                            latency: enq.elapsed(),
+                        },
+                    );
+                }
+            },
+            Request::Prefill { .. } => unreachable!("prefills are Barrier groups"),
+        }
+    }
+    if mutated {
+        // the KV buffers mutate in place; the stores maintain their own
+        // packed key bits incrementally, but a custom backend caching a
+        // derivative by buffer identity still needs the explicit signal
+        backend.on_kv_update();
+    }
+    if !pending.is_empty() {
+        dispatch_pending(backend, cfg, sessions, &pending, &baseline, head, metrics, pool_tx);
+    }
+    // every pending query pinned its session exactly once in phase 1
+    for p in &pending {
+        if let Some(s) = sessions.get_mut(&p.session) {
+            s.unpin();
+        }
+    }
+    // Phase 4 — retire closed sessions, in program order (the planner
+    // guarantees no same-session item followed them in this group). A
+    // Close is not tied to the dispatch outcome: even after a failed
+    // (rolled-back) dispatch the caller asked for the session to go.
+    let closed_any = !closes.is_empty();
+    for c in closes {
+        let seq_len = sessions.get(&c.session).map(|s| s.store.len()).unwrap_or(0);
+        if let Some(s) = sessions.remove(&c.session) {
+            metrics.kv_rows_released += s.store.release() as u64;
+        }
+        deliver(
+            pool_tx,
+            metrics,
+            Op::Close,
+            &c.sink,
+            Response {
+                id: c.id,
+                session: c.session,
+                head,
+                result: Ok(Output { output: Vec::new(), seq_len }),
+                latency: c.enq.elapsed(),
+            },
+        );
+    }
+    if closed_any {
+        // closed stores are gone: bust any backend identity caches
+        backend.on_kv_update();
+    }
+}
+
 fn worker_loop<B: AttentionBackend>(
     worker: usize,
     cfg: ServerConfig,
     mut backend: B,
-    rx: Receiver<(Request, Instant)>,
-    resp_tx: Sender<Response>,
+    rx: Receiver<Envelope>,
+    pool_tx: Sender<Response>,
 ) -> Metrics {
     let head = worker % cfg.heads;
     let mut metrics = Metrics::new();
     let mut sessions: HashMap<SessionId, Session> = HashMap::new();
+    // sessions reclaimed by the policy: their requests answer `Evicted`
+    // (not `UnknownSession`) until the id is re-opened
+    let mut evicted: HashSet<SessionId> = HashSet::new();
+    // the worker's logical clock: one tick per request, in program
+    // order — the deterministic LRU key (wall-clock ties would make
+    // eviction, and therefore outputs, timing-dependent)
+    let mut clock: u64 = 0;
     let batcher = DecodeBatcher::new(cfg.batch);
     while let Some(groups) = batcher.next_groups(&rx) {
         metrics.note_batch();
         for group in groups {
             match group {
-                DispatchGroup::Barrier(req, enq) => {
+                DispatchGroup::Barrier(env) => {
+                    let Envelope { req, enq, sink } = env;
                     let (id, session) = (req.id(), req.session());
+                    clock += 1;
                     let result = match req {
-                        Request::Prefill { keys, values, .. } => {
-                            handle_prefill(&mut backend, &cfg, &mut sessions, session, keys, values)
-                        }
+                        Request::Prefill { keys, values, .. } => handle_prefill(
+                            &mut backend,
+                            &cfg,
+                            &mut sessions,
+                            &mut evicted,
+                            &mut metrics,
+                            clock,
+                            session,
+                            keys,
+                            values,
+                        ),
                         _ => unreachable!("only prefills become Barrier groups"),
                     };
                     deliver(
-                        &resp_tx,
+                        &pool_tx,
                         &mut metrics,
                         Op::Prefill,
+                        &sink,
                         Response { id, session, head, result, latency: enq.elapsed() },
                     );
                 }
@@ -722,10 +1073,12 @@ fn worker_loop<B: AttentionBackend>(
                     &mut backend,
                     &cfg,
                     &mut sessions,
+                    &mut evicted,
+                    &mut clock,
                     items,
                     head,
                     &mut metrics,
-                    &resp_tx,
+                    &pool_tx,
                 ),
             }
         }
@@ -875,7 +1228,7 @@ mod tests {
     }
 
     #[test]
-    fn session_limit_enforced() {
+    fn session_limit_enforced_under_deny() {
         let cfg = ServerConfig { max_sessions: 2, kv_capacity: 16, ..Default::default() };
         let server = functional_server(cfg);
         let mut rng = Rng::new(122);
@@ -895,7 +1248,162 @@ mod tests {
         assert!(resps[0].is_ok());
         assert!(resps[1].is_ok());
         assert_eq!(resps[2].result, Err(ServeError::SessionLimit { max_sessions: 2 }));
-        server.shutdown();
+        let (m, _) = server.shutdown();
+        assert_eq!(m.evictions, 0, "Deny must never evict");
+    }
+
+    #[test]
+    fn lru_policy_evicts_idle_sessions_deterministically() {
+        // max_sessions 2, eviction allowed with no idle gate: every
+        // over-limit prefill evicts the LRU (logical-clock) session, the
+        // victim's later requests answer Evicted, and re-opening revives
+        // the id (evicting the next LRU in turn)
+        let cfg = ServerConfig {
+            max_sessions: 2,
+            kv_capacity: 16,
+            reclaim: ReclaimPolicy::LruEvictIdle { min_idle: Duration::ZERO },
+            ..Default::default()
+        };
+        let server = functional_server(cfg);
+        let mut rng = Rng::new(123);
+        let mut prefill = |id: u64, session: u64| {
+            server
+                .submit(Request::Prefill {
+                    id,
+                    session,
+                    head: 0,
+                    keys: rng.normal_vec(16 * 64),
+                    values: rng.normal_vec(16 * 64),
+                })
+                .unwrap();
+        };
+        prefill(0, 0); // clock 1
+        prefill(1, 1); // clock 2
+        server
+            .submit(Request::Attend { id: 2, session: 0, head: 0, query: vec![0.0; 64] })
+            .unwrap(); // clock 3: session 0 is now the most recent
+        prefill(3, 2); // clock 4: at limit -> evicts session 1 (seq 2)
+        server
+            .submit(Request::Attend { id: 4, session: 1, head: 0, query: vec![0.0; 64] })
+            .unwrap(); // the victim answers Evicted
+        prefill(5, 1); // clock 6: revives 1, evicts session 0 (seq 3)
+        server
+            .submit(Request::Attend { id: 6, session: 0, head: 0, query: vec![0.0; 64] })
+            .unwrap();
+        server
+            .submit(Request::Attend { id: 7, session: 1, head: 0, query: vec![0.0; 64] })
+            .unwrap();
+        let mut resps = server.collect(8);
+        resps.sort_by_key(|r| r.id);
+        assert!(resps[0].is_ok() && resps[1].is_ok() && resps[2].is_ok());
+        assert!(
+            resps[3].is_ok(),
+            "LRU policy must admit the over-limit open: {:?}",
+            resps[3].result
+        );
+        assert_eq!(resps[4].result, Err(ServeError::Evicted { session: 1 }));
+        assert!(resps[5].is_ok(), "re-open of an evicted session: {:?}", resps[5].result);
+        assert_eq!(resps[6].result, Err(ServeError::Evicted { session: 0 }));
+        assert!(resps[7].is_ok(), "revived session must serve: {:?}", resps[7].result);
+        let (m, _) = server.shutdown();
+        assert_eq!(m.evictions, 2);
+        assert_eq!(m.kv_rows_released, 2 * 16);
+        assert_eq!(m.errors, 2);
+    }
+
+    #[test]
+    fn close_frees_the_session_slot() {
+        // with max_sessions = 1 and Deny, a second session is admissible
+        // only because the first was explicitly closed
+        let cfg = ServerConfig { max_sessions: 1, kv_capacity: 16, ..Default::default() };
+        let server = functional_server(cfg);
+        let mut rng = Rng::new(124);
+        server
+            .submit(Request::Prefill {
+                id: 0,
+                session: 0,
+                head: 0,
+                keys: rng.normal_vec(16 * 64),
+                values: rng.normal_vec(16 * 64),
+            })
+            .unwrap();
+        server.submit(Request::Close { id: 1, session: 0, head: 0 }).unwrap();
+        server
+            .submit(Request::Prefill {
+                id: 2,
+                session: 1,
+                head: 0,
+                keys: rng.normal_vec(8 * 64),
+                values: rng.normal_vec(8 * 64),
+            })
+            .unwrap();
+        // a closed (not evicted) session is simply unknown afterwards
+        server
+            .submit(Request::Attend { id: 3, session: 0, head: 0, query: vec![0.0; 64] })
+            .unwrap();
+        let mut resps = server.collect(4);
+        resps.sort_by_key(|r| r.id);
+        assert!(resps[0].is_ok());
+        assert!(resps[1].is_ok(), "close must ack: {:?}", resps[1].result);
+        assert_eq!(resps[1].seq_len(), 16, "close reports the final context length");
+        assert!(resps[2].is_ok(), "closed slot must be reusable: {:?}", resps[2].result);
+        assert_eq!(resps[3].result, Err(ServeError::UnknownSession { session: 0 }));
+        let (m, _) = server.shutdown();
+        assert_eq!(m.closes, 1);
+        assert_eq!(m.kv_rows_released, 16);
+    }
+
+    #[test]
+    fn close_is_a_same_session_barrier_in_the_stream() {
+        // decode, close, decode on ONE session submitted back-to-back:
+        // whatever the wire batcher fuses, the pre-close decode succeeds,
+        // the close acks at the grown length, the post-close decode is
+        // refused — exactly sequential semantics
+        let cfg = ServerConfig { kv_capacity: 32, ..Default::default() };
+        let server = functional_server(cfg);
+        let mut rng = Rng::new(125);
+        server
+            .submit(Request::Prefill {
+                id: 0,
+                session: 5,
+                head: 0,
+                keys: rng.normal_vec(8 * 64),
+                values: rng.normal_vec(8 * 64),
+            })
+            .unwrap();
+        server
+            .submit(Request::Decode {
+                id: 1,
+                session: 5,
+                head: 0,
+                query: rng.normal_vec(64),
+                new_key: rng.normal_vec(64),
+                new_value: rng.normal_vec(64),
+            })
+            .unwrap();
+        server.submit(Request::Close { id: 2, session: 5, head: 0 }).unwrap();
+        server
+            .submit(Request::Decode {
+                id: 3,
+                session: 5,
+                head: 0,
+                query: rng.normal_vec(64),
+                new_key: rng.normal_vec(64),
+                new_value: rng.normal_vec(64),
+            })
+            .unwrap();
+        let mut resps = server.collect(4);
+        resps.sort_by_key(|r| r.id);
+        assert!(resps[0].is_ok());
+        assert!(resps[1].is_ok(), "pre-close decode: {:?}", resps[1].result);
+        assert_eq!(resps[1].seq_len(), 9);
+        assert!(resps[2].is_ok(), "close ack: {:?}", resps[2].result);
+        assert_eq!(resps[2].seq_len(), 9);
+        assert_eq!(resps[3].result, Err(ServeError::UnknownSession { session: 5 }));
+        let (m, _) = server.shutdown();
+        assert_eq!(m.closes, 1);
+        assert_eq!(m.decodes, 1);
+        assert_eq!(m.errors, 1);
     }
 
     /// A backend compiled for a fixed 16-row context, like PJRT but tiny.

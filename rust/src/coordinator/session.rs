@@ -7,6 +7,21 @@
 //! unit of that state: the coordinator keeps one per (session id, shard,
 //! head) inside the owning worker thread, so all mutation is
 //! single-threaded and lock-free.
+//!
+//! Since the session-handle API (ISSUE 5) the session also carries its
+//! **lifecycle state**: a logical last-touch sequence number (the
+//! worker's program-order clock — wall-clock-free, so LRU victim choice
+//! is deterministic and batched execution stays bit-equal to
+//! sequential), a wall-clock last-touch instant (only the
+//! `ReclaimPolicy::LruEvictIdle` idle gate reads it), and a pin count
+//! (> 0 while a dispatch group holds in-flight queries against the
+//! store — a pinned session must never be evicted). The pin count is
+//! defense-in-depth: the worker is single-threaded and eviction only
+//! runs inside `Prefill` barrier groups, after any dispatch group has
+//! unpinned, so the structural guarantee already holds; the count keeps
+//! the invariant explicit (and checkable) if execution ever overlaps.
+
+use std::time::{Duration, Instant};
 
 use super::kv_store::KvStore;
 
@@ -19,16 +34,60 @@ pub struct Session {
     pub id: SessionId,
     /// The capacity-provisioned KV memory (grows via `Decode` appends).
     pub store: KvStore,
+    /// Program-order position of the last request that touched this
+    /// session (the worker's logical clock) — the deterministic LRU key.
+    pub last_touch_seq: u64,
+    /// Wall-clock time of that touch, for `LruEvictIdle`'s `min_idle`
+    /// eligibility gate.
+    pub last_touch_at: Instant,
+    /// In-flight queries of the currently-executing dispatch group that
+    /// attend over this store. Eviction must skip pinned sessions.
+    pins: u32,
 }
 
 impl Session {
     pub fn new(id: SessionId, store: KvStore) -> Self {
-        Session { id, store }
+        Session {
+            id,
+            store,
+            last_touch_seq: 0,
+            last_touch_at: Instant::now(),
+            pins: 0,
+        }
     }
 
     /// Current context length (tokens resident in the KV cache).
     pub fn seq_len(&self) -> usize {
         self.store.len()
+    }
+
+    /// Record a request touching this session at logical position `seq`.
+    pub fn touch(&mut self, seq: u64) {
+        self.last_touch_seq = seq;
+        self.last_touch_at = Instant::now();
+    }
+
+    /// Wall-clock idle time since the last touch.
+    pub fn idle_for(&self) -> Duration {
+        self.last_touch_at.elapsed()
+    }
+
+    /// Pin for the duration of a dispatch (an in-flight query borrows a
+    /// view of the store).
+    pub fn pin(&mut self) {
+        self.pins += 1;
+    }
+
+    /// Release one pin after its query's response is delivered.
+    pub fn unpin(&mut self) {
+        debug_assert!(self.pins > 0, "unpin without matching pin");
+        self.pins = self.pins.saturating_sub(1);
+    }
+
+    /// Whether any dispatch-group query is currently in flight against
+    /// this store (an eviction exclusion).
+    pub fn is_pinned(&self) -> bool {
+        self.pins > 0
     }
 }
 
@@ -43,5 +102,31 @@ mod tests {
         s.store.append(&[1.0, 2.0], &[3.0, 4.0]).unwrap();
         assert_eq!(s.seq_len(), 1);
         assert_eq!(s.id, 3);
+    }
+
+    #[test]
+    fn touch_advances_lru_state() {
+        let mut s = Session::new(1, KvStore::new(2, 2, 2));
+        assert_eq!(s.last_touch_seq, 0);
+        s.touch(7);
+        assert_eq!(s.last_touch_seq, 7);
+        s.touch(9);
+        assert_eq!(s.last_touch_seq, 9);
+        // idle_for is measured from the last touch and only grows
+        let idle = s.idle_for();
+        assert!(s.idle_for() >= idle);
+    }
+
+    #[test]
+    fn pins_balance() {
+        let mut s = Session::new(1, KvStore::new(2, 2, 2));
+        assert!(!s.is_pinned());
+        s.pin();
+        s.pin();
+        assert!(s.is_pinned());
+        s.unpin();
+        assert!(s.is_pinned());
+        s.unpin();
+        assert!(!s.is_pinned());
     }
 }

@@ -33,9 +33,10 @@ Paper experiments:
 
 Serving / demo:
   serve    session-oriented decode serving through the coordinator:
-           prefill + live KV-append decode steps per session
+           open (shard-wide prefill fan-out) + ticketed live KV-append
+           decode steps per session handle, explicit close
            [--sessions N] [--steps N] [--prefill ROWS] [--heads H]
-           [--backend functional|arch|pjrt]
+           [--backend functional|arch|pjrt] [--reclaim deny|lru]
   quickstart  one query end-to-end through every layer (needs artifacts)
 
 Common options:

@@ -1,30 +1,39 @@
 //! Randomized batched-vs-sequential equivalence harness (ISSUE 3,
-//! extended for the survivor-list sparse pipeline in ISSUE 4).
+//! extended for the survivor-list sparse pipeline in ISSUE 4 and for
+//! session lifecycle — `Close` + LRU eviction — in ISSUE 5).
 //!
 //! Speculative multi-step fusion changes the core batching invariant:
 //! a dispatch group may hold many decode steps of one session, each
 //! attending over its own causal prefix view. The invariant is subtle
 //! enough that example-based tests cannot be trusted to pin it down, so
 //! this harness generates ~200 arbitrary interleaved
-//! Prefill/Decode/Attend streams across sessions — including
+//! Prefill/Decode/Attend/Close streams across sessions — including
 //! capacity-refusal and unknown-session cases — and asserts, for every
 //! stream, that every dispatch config (sequential / conservative /
 //! fused / fused-scratch) crossed with both functional pipelines
 //! (dense mask baseline × survivor-list sparse, the serving default) is
 //! bit-equal to sequential dense dispatch, plus the planner invariants
-//! (prefill is a barrier; order preservation; group occupancy bounds)
-//! on every generated wire batch. A deterministic boundary property
-//! test pins the prefix-view semantics at fused-burst lengths {1, 2,
-//! cam-1, cam, cam+1}.
+//! (prefill is a barrier; Close is a same-session barrier; order
+//! preservation; group occupancy bounds) on every generated wire batch.
+//! A second stream family runs workers at `max_sessions = 2` under
+//! `ReclaimPolicy::LruEvictIdle`, so admissions overflow and evict:
+//! victim choice rides on the worker's logical clock, so eviction (and
+//! every downstream `Evicted` response) must also be bit-equal across
+//! dispatch configs — which is also what proves eviction can never
+//! victimize a session with in-flight fused appends (eviction only runs
+//! inside `Prefill` barriers, never mid-group; any violation would
+//! diverge from sequential dispatch here). A deterministic boundary
+//! property test pins the prefix-view semantics at fused-burst lengths
+//! {1, 2, cam-1, cam, cam+1}.
 
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use camformer::accuracy::functional::{self, AttnConfig};
 use camformer::coordinator::backend::{AttendItem, AttentionBackend, FunctionalBackend};
 use camformer::coordinator::batcher::{BatchPolicy, DecodeBatcher, DispatchGroup, PlanMode};
 use camformer::coordinator::kv_store::KvStore;
 use camformer::coordinator::server::{CamformerServer, Request, ServerConfig};
-use camformer::coordinator::{Metrics, Response};
+use camformer::coordinator::{Envelope, Metrics, ReclaimPolicy, Response, ServeError};
 use camformer::util::rng::Rng;
 
 /// Small dimensions keep 200 x 4 server runs fast while still crossing
@@ -33,8 +42,8 @@ const D: usize = 32;
 const CAPACITY: usize = 32;
 
 /// Session pool: 1..3 get prefilled by the stream (usually); 77 never
-/// does, so decodes/attends against it exercise admission failures
-/// inside fused groups.
+/// does, so decodes/attends/closes against it exercise admission
+/// failures inside fused groups.
 const SESSIONS: [u64; 4] = [1, 2, 3, 77];
 
 fn gen_stream(rng: &mut Rng, ops: usize) -> Vec<Request> {
@@ -56,7 +65,7 @@ fn gen_stream(rng: &mut Rng, ops: usize) -> Vec<Request> {
             }
             // decode-heavy: deep same-session bursts arise naturally and
             // eventually overflow CAPACITY (typed refusals mid-burst)
-            2..=14 => Request::Decode {
+            2..=12 => Request::Decode {
                 id,
                 session,
                 head: 0,
@@ -64,6 +73,10 @@ fn gen_stream(rng: &mut Rng, ops: usize) -> Vec<Request> {
                 new_key: rng.normal_vec(D),
                 new_value: rng.normal_vec(D),
             },
+            // lifecycle traffic (ISSUE 5): closes mid-stream — the
+            // session may be live (slot released), already closed
+            // (UnknownSession) or never prefilled (77)
+            13..=14 => Request::Close { id, session, head: 0 },
             _ => Request::Attend { id, session, head: 0, query: rng.normal_vec(D) },
         };
         out.push(req);
@@ -71,7 +84,13 @@ fn gen_stream(rng: &mut Rng, ops: usize) -> Vec<Request> {
     out
 }
 
-fn run_stream<B, F>(stream: &[Request], policy: BatchPolicy, make: F) -> (Vec<Response>, Metrics)
+fn run_stream<B, F>(
+    stream: &[Request],
+    policy: BatchPolicy,
+    max_sessions: usize,
+    reclaim: ReclaimPolicy,
+    make: F,
+) -> (Vec<Response>, Metrics)
 where
     B: AttentionBackend + 'static,
     F: FnMut(usize) -> B,
@@ -80,7 +99,8 @@ where
         kv_capacity: CAPACITY,
         d_k: D,
         d_v: D,
-        max_sessions: 8,
+        max_sessions,
+        reclaim,
         batch: policy,
         ..Default::default()
     };
@@ -148,6 +168,8 @@ fn batched_dispatch_bit_equals_sequential_on_random_streams() {
         let (sequential, m_seq) = run_stream(
             &stream,
             BatchPolicy::conservative(1, Duration::from_micros(50)),
+            8,
+            ReclaimPolicy::Deny,
             |_| pipeline_backend(false),
         );
         for sparse in [false, true] {
@@ -158,6 +180,8 @@ fn batched_dispatch_bit_equals_sequential_on_random_streams() {
                 let (seq_sparse, _) = run_stream(
                     &stream,
                     BatchPolicy::conservative(1, Duration::from_micros(50)),
+                    8,
+                    ReclaimPolicy::Deny,
                     |_| pipeline_backend(true),
                 );
                 assert_equivalent(case, "sequential/sparse", &sequential, &seq_sparse);
@@ -166,6 +190,8 @@ fn batched_dispatch_bit_equals_sequential_on_random_streams() {
             let (conservative, _) = run_stream(
                 &stream,
                 BatchPolicy::conservative(16, Duration::from_millis(1)),
+                8,
+                ReclaimPolicy::Deny,
                 |_| pipeline_backend(sparse),
             );
             assert_equivalent(case, &format!("conservative{tag}"), &sequential, &conservative);
@@ -173,6 +199,8 @@ fn batched_dispatch_bit_equals_sequential_on_random_streams() {
             let (fused, m_fused) = run_stream(
                 &stream,
                 BatchPolicy::bounds(16, Duration::from_millis(1)),
+                8,
+                ReclaimPolicy::Deny,
                 |_| pipeline_backend(sparse),
             );
             assert_equivalent(case, &format!("fused{tag}"), &sequential, &fused);
@@ -181,6 +209,8 @@ fn batched_dispatch_bit_equals_sequential_on_random_streams() {
             let (scratch, _) = run_stream(
                 &stream,
                 BatchPolicy::bounds(16, Duration::from_millis(1)),
+                8,
+                ReclaimPolicy::Deny,
                 |_| NoPrefixViews(pipeline_backend(sparse)),
             );
             assert_equivalent(case, &format!("fused/scratch{tag}"), &sequential, &scratch);
@@ -193,6 +223,74 @@ fn batched_dispatch_bit_equals_sequential_on_random_streams() {
     }
 }
 
+/// ISSUE 5 acceptance: streams with `Close` and admission-overflowing
+/// prefills, run at `max_sessions = 2` so `open`s evict under
+/// `LruEvictIdle` — every dispatch config must stay bit-equal to
+/// sequential dispatch (including every `Evicted` response, which pins
+/// the LRU victim choice itself), with identical eviction/close
+/// counters. Under `Deny` the same streams hit terminal `SessionLimit`
+/// refusals; under the eviction policy none may remain.
+#[test]
+fn eviction_streams_stay_bit_equal_and_lru_unblocks_admission() {
+    let lru = ReclaimPolicy::LruEvictIdle { min_idle: Duration::ZERO };
+    let seq_policy = BatchPolicy::conservative(1, Duration::from_micros(50));
+    let mut rng = Rng::new(0xE71C7);
+    let mut deny_refusals = 0u64;
+    for case in 0..120u64 {
+        let mut crng = rng.split();
+        let ops = 10 + crng.index(30);
+        let stream = gen_stream(&mut crng, ops);
+
+        // Deny baseline: count the terminal session-limit admissions the
+        // eviction policy is supposed to dissolve
+        let (deny_seq, m_deny) =
+            run_stream(&stream, seq_policy, 2, ReclaimPolicy::Deny, |_| pipeline_backend(false));
+        deny_refusals += deny_seq
+            .iter()
+            .filter(|r| matches!(r.result, Err(ServeError::SessionLimit { .. })))
+            .count() as u64;
+        assert_eq!(m_deny.evictions, 0, "case {case}: Deny must never evict");
+
+        // ground truth under eviction: sequential dense dispatch
+        let (sequential, m_seq) =
+            run_stream(&stream, seq_policy, 2, lru, |_| pipeline_backend(false));
+        assert!(
+            sequential
+                .iter()
+                .all(|r| !matches!(r.result, Err(ServeError::SessionLimit { .. }))),
+            "case {case}: with an always-eligible LRU victim no admission may fail"
+        );
+
+        // every batched config: bit-equal responses AND identical
+        // lifecycle counters (eviction runs only in prefill barriers, so
+        // a victim with in-flight fused appends is structurally
+        // impossible — any violation would diverge right here)
+        let configs: [(&str, BatchPolicy); 3] = [
+            ("conservative", BatchPolicy::conservative(16, Duration::from_millis(1))),
+            ("fused", BatchPolicy::bounds(16, Duration::from_millis(1))),
+            ("fused/scratch", BatchPolicy::bounds(16, Duration::from_millis(1))),
+        ];
+        for (label, policy) in configs {
+            let (resps, m) = if label == "fused/scratch" {
+                run_stream(&stream, policy, 2, lru, |_| NoPrefixViews(pipeline_backend(true)))
+            } else {
+                run_stream(&stream, policy, 2, lru, |_| pipeline_backend(true))
+            };
+            assert_equivalent(case, label, &sequential, &resps);
+            assert_eq!(m.evictions, m_seq.evictions, "case {case} {label}: eviction parity");
+            assert_eq!(m.closes, m_seq.closes, "case {case} {label}: close parity");
+            assert_eq!(
+                m.kv_rows_released, m_seq.kv_rows_released,
+                "case {case} {label}: release accounting parity"
+            );
+        }
+    }
+    assert!(
+        deny_refusals > 0,
+        "streams must actually overflow max_sessions, or this test pins nothing"
+    );
+}
+
 #[test]
 fn planner_invariants_hold_on_random_wire_batches() {
     let mut rng = Rng::new(0xBA7C4);
@@ -200,16 +298,15 @@ fn planner_invariants_hold_on_random_wire_batches() {
         let mut crng = rng.split();
         let n = 1 + crng.index(16);
         let stream = gen_stream(&mut crng, n);
-        let now = Instant::now();
-        let items: Vec<(Request, Instant)> = stream.iter().cloned().map(|r| (r, now)).collect();
         for mode in [PlanMode::Conservative, PlanMode::Speculative] {
-            let groups = DecodeBatcher::plan_mode(mode, items.clone());
+            let items: Vec<Envelope> = stream.iter().cloned().map(Envelope::pool).collect();
+            let groups = DecodeBatcher::plan_mode(mode, items);
             // order preservation: flattening the plan restores the batch
             let flat: Vec<u64> = groups
                 .iter()
                 .flat_map(|g| match g {
-                    DispatchGroup::Barrier(r, _) => vec![r.id()],
-                    DispatchGroup::Batch(b) => b.iter().map(|(r, _)| r.id()).collect(),
+                    DispatchGroup::Barrier(e) => vec![e.req.id()],
+                    DispatchGroup::Batch(b) => b.iter().map(|e| e.req.id()).collect(),
                 })
                 .collect();
             let want: Vec<u64> = stream.iter().map(|r| r.id()).collect();
@@ -217,29 +314,45 @@ fn planner_invariants_hold_on_random_wire_batches() {
             for g in &groups {
                 match g {
                     // every prefill is a barrier, and only prefills are
-                    DispatchGroup::Barrier(r, _) => {
-                        assert!(matches!(r, Request::Prefill { .. }), "case {case} {mode:?}");
+                    DispatchGroup::Barrier(e) => {
+                        assert!(
+                            matches!(e.req, Request::Prefill { .. }),
+                            "case {case} {mode:?}"
+                        );
                     }
                     DispatchGroup::Batch(b) => {
                         // occupancy bounds: non-empty, within the wire batch
-                        assert!(!b.is_empty() && b.len() <= items.len(), "case {case}");
+                        assert!(!b.is_empty() && b.len() <= stream.len(), "case {case}");
                         assert!(
-                            b.iter().all(|(r, _)| !matches!(r, Request::Prefill { .. })),
+                            b.iter().all(|e| !matches!(e.req, Request::Prefill { .. })),
                             "case {case} {mode:?}: prefill inside a batch group"
                         );
+                        // Close is a same-session barrier in BOTH modes:
+                        // no item of a session may follow its Close
+                        // within one group (it must observe the close)
+                        let mut closed: Vec<u64> = Vec::new();
+                        for e in b {
+                            assert!(
+                                !closed.contains(&e.req.session()),
+                                "case {case} {mode:?}: item after same-session Close"
+                            );
+                            if matches!(e.req, Request::Close { .. }) {
+                                closed.push(e.req.session());
+                            }
+                        }
                         if mode == PlanMode::Conservative {
                             // at most one decode per session, and a decode
                             // must be its session's first item in the group
                             let mut seen: Vec<u64> = Vec::new();
-                            for (r, _) in b {
-                                if matches!(r, Request::Decode { .. }) {
+                            for e in b {
+                                if matches!(e.req, Request::Decode { .. }) {
                                     assert!(
-                                        !seen.contains(&r.session()),
+                                        !seen.contains(&e.req.session()),
                                         "case {case}: decode after same-session item"
                                     );
                                 }
-                                if !seen.contains(&r.session()) {
-                                    seen.push(r.session());
+                                if !seen.contains(&e.req.session()) {
+                                    seen.push(e.req.session());
                                 }
                             }
                         }

@@ -1,0 +1,331 @@
+//! Session-handle API acceptance (ISSUE 5): shard-wide `open` fan-out
+//! with all-or-nothing admission, typed per-request `Ticket` semantics
+//! (out-of-order completion, `try_wait`/`wait_timeout`, dropped tickets,
+//! `WorkerGone` propagation), explicit `close` lifecycle, and
+//! `ReclaimPolicy::LruEvictIdle` turning terminal admission failures
+//! into evictions.
+
+use std::time::Duration;
+
+use camformer::coordinator::backend::{AttendItem, AttentionBackend, FunctionalBackend};
+use camformer::coordinator::kv_store::KvStore;
+use camformer::coordinator::server::{CamformerServer, Request, ServerConfig};
+use camformer::coordinator::{ReclaimPolicy, ServeError};
+use camformer::util::rng::Rng;
+
+fn functional_server(cfg: ServerConfig) -> CamformerServer {
+    let n = cfg.kv_capacity;
+    CamformerServer::start(cfg, move |_| FunctionalBackend::new(n, 64))
+}
+
+#[test]
+fn open_fans_out_to_every_head_and_close_retires_all_of_them() {
+    let d = 64usize;
+    let capacity = 64usize;
+    let cfg = ServerConfig { heads: 2, kv_capacity: capacity, ..Default::default() };
+    let quantum = cfg.pad_quantum;
+    let server = functional_server(cfg);
+    let mut rng = Rng::new(9100);
+    let keys = rng.normal_vec(16 * d);
+    let values = rng.normal_vec(16 * d);
+    let mut mirror = KvStore::new(capacity, d, d);
+    mirror.load(&keys, &values).unwrap();
+
+    // ONE open call admits the session on BOTH head workers
+    let session = server.open(4, keys, values).expect("open must fan out");
+    let q = rng.normal_vec(d);
+    let t0 = session.attend_on(0, q.clone()).unwrap();
+    let t1 = session.attend_on(1, q.clone()).unwrap();
+    let (r0, r1) = (t0.wait(), t1.wait());
+    assert!(r0.is_ok() && r1.is_ok(), "{:?} / {:?}", r0.result, r1.result);
+    // both heads hold the same broadcast prefill, so both match the
+    // functional reference over the mirrored store
+    let rows = mirror.len().div_ceil(quantum) * quantum;
+    let (kp, vp, _) = mirror.padded(rows);
+    let mut reference = FunctionalBackend::new(capacity, d);
+    let want = reference.attend(&q, kp, vp).unwrap();
+    assert_eq!(r0.output(), &want[..]);
+    assert_eq!(r1.output(), &want[..]);
+    assert_eq!((r0.head, r1.head), (0, 1));
+
+    // close confirms the release on every head: the session is unknown
+    // to both workers afterwards
+    session.close().expect("close must confirm");
+    for head in 0..2 {
+        let t = server
+            .submit_ticket(Request::Attend {
+                id: 900 + head as u64,
+                session: 4,
+                head,
+                query: q.clone(),
+            })
+            .unwrap();
+        assert_eq!(t.wait().result, Err(ServeError::UnknownSession { session: 4 }));
+    }
+    let (m, _) = server.shutdown();
+    assert_eq!(m.prefills, 2, "one broadcast prefill per head");
+    assert_eq!(m.closes, 2, "one close per head");
+    assert_eq!(m.kv_rows_released, 2 * capacity as u64);
+}
+
+#[test]
+fn tickets_resolve_out_of_order_across_sessions() {
+    let d = 64usize;
+    let capacity = 64usize;
+    let cfg = ServerConfig { kv_capacity: capacity, ..Default::default() };
+    let quantum = cfg.pad_quantum;
+    let server = functional_server(cfg);
+    let mut rng = Rng::new(9200);
+
+    let mut mirrors = Vec::new();
+    let mut handles = Vec::new();
+    for sid in [1u64, 2] {
+        let keys = rng.normal_vec(16 * d);
+        let values = rng.normal_vec(16 * d);
+        let mut mirror = KvStore::new(capacity, d, d);
+        mirror.load(&keys, &values).unwrap();
+        mirrors.push(mirror);
+        handles.push(server.open(sid, keys, values).unwrap());
+    }
+
+    // issue decode tickets A then B, but WAIT B before A: each ticket
+    // must resolve to exactly its own request's response
+    let mut tickets = Vec::new();
+    let mut expected = Vec::new();
+    for (si, h) in handles.iter().enumerate() {
+        let q = rng.normal_vec(d);
+        let nk = rng.normal_vec(d);
+        let nv = rng.normal_vec(d);
+        mirrors[si].append(&nk, &nv).unwrap();
+        let rows = mirrors[si].len().div_ceil(quantum) * quantum;
+        let (kp, vp, _) = mirrors[si].padded(rows);
+        let mut reference = FunctionalBackend::new(capacity, d);
+        expected.push(reference.attend(&q, kp, vp).unwrap());
+        tickets.push(h.decode(q, nk, nv).unwrap());
+    }
+    let tb = tickets.pop().unwrap();
+    let ta = tickets.pop().unwrap();
+    let (ida, idb) = (ta.id(), tb.id());
+    let rb = tb.wait();
+    let ra = ta.wait();
+    assert_eq!(rb.id, idb);
+    assert_eq!(ra.id, ida);
+    assert_eq!((ra.session, rb.session), (1, 2));
+    assert_eq!(ra.output(), &expected[0][..]);
+    assert_eq!(rb.output(), &expected[1][..]);
+    assert_eq!(ra.seq_len(), 17);
+    assert_eq!(rb.seq_len(), 17);
+    drop(handles);
+    server.shutdown();
+}
+
+/// Backend whose batched dispatches stall, so responses cannot arrive
+/// before a short ticket timeout expires (prefill barriers don't
+/// dispatch and stay fast).
+struct SlowBackend {
+    inner: FunctionalBackend,
+    delay: Duration,
+}
+
+impl AttentionBackend for SlowBackend {
+    fn attend(&mut self, q: &[f32], k: &[f32], v: &[f32]) -> anyhow::Result<Vec<f32>> {
+        self.inner.attend(q, k, v)
+    }
+
+    fn attend_batch(&mut self, items: &[AttendItem<'_>]) -> anyhow::Result<Vec<Vec<f32>>> {
+        std::thread::sleep(self.delay);
+        self.inner.attend_batch(items)
+    }
+
+    fn supports_prefix_views(&self) -> bool {
+        self.inner.supports_prefix_views()
+    }
+
+    fn name(&self) -> &'static str {
+        "slow"
+    }
+}
+
+#[test]
+fn wait_timeout_expires_then_the_recovered_ticket_still_resolves() {
+    let capacity = 32usize;
+    let cfg = ServerConfig { kv_capacity: capacity, ..Default::default() };
+    let server = CamformerServer::start(cfg, move |_| SlowBackend {
+        inner: FunctionalBackend::new(capacity, 64),
+        delay: Duration::from_millis(300),
+    });
+    let mut rng = Rng::new(9300);
+    let session = server.open(1, rng.normal_vec(8 * 64), rng.normal_vec(8 * 64)).unwrap();
+
+    let ticket = session
+        .decode(rng.normal_vec(64), rng.normal_vec(64), rng.normal_vec(64))
+        .unwrap();
+    // the dispatch sleeps 300ms and the wire batcher waits its full 2ms
+    // deadline first, so a 1ms wait must expire — handing the ticket
+    // back without cancelling the in-flight request
+    let ticket = match ticket.try_wait() {
+        Err(t) => t,
+        Ok(r) => panic!("resolved before the dispatch could run: {:?}", r.result),
+    };
+    let ticket = match ticket.wait_timeout(Duration::from_millis(1)) {
+        Err(t) => t,
+        Ok(r) => panic!("resolved before the timeout: {:?}", r.result),
+    };
+    // the recovered ticket still resolves to the (slow) response
+    let r = ticket.wait();
+    assert!(r.is_ok(), "{:?}", r.result);
+    assert_eq!(r.seq_len(), 9);
+    session.close().unwrap();
+    server.shutdown();
+}
+
+#[test]
+fn dropped_tickets_leak_nothing_and_never_wedge_the_worker() {
+    let capacity = 64usize;
+    let cfg = ServerConfig { kv_capacity: capacity, ..Default::default() };
+    let server = functional_server(cfg);
+    let mut rng = Rng::new(9400);
+    let session = server.open(3, rng.normal_vec(4 * 64), rng.normal_vec(4 * 64)).unwrap();
+
+    // fire-and-forget: drop 5 decode tickets without waiting. The
+    // completion slot IS the per-ticket channel, so the worker's sends
+    // land in closed slots and nothing accumulates anywhere.
+    for _ in 0..5 {
+        let t = session
+            .decode(rng.normal_vec(64), rng.normal_vec(64), rng.normal_vec(64))
+            .unwrap();
+        drop(t);
+    }
+    // the worker is alive and the dropped requests still executed
+    let r = session.attend(rng.normal_vec(64)).unwrap().wait();
+    assert!(r.is_ok(), "{:?}", r.result);
+    assert_eq!(r.seq_len(), 4 + 5, "dropped tickets' decodes still appended");
+    session.close().unwrap();
+    let (m, _) = server.shutdown();
+    assert_eq!(m.decodes, 5, "unobserved responses still count as served");
+    assert_eq!(m.errors, 0);
+}
+
+/// Backend that kills its worker thread on the first dispatch.
+struct PanickingBackend;
+
+impl AttentionBackend for PanickingBackend {
+    fn attend(&mut self, _q: &[f32], _k: &[f32], _v: &[f32]) -> anyhow::Result<Vec<f32>> {
+        panic!("injected worker death (session_api test)")
+    }
+
+    fn name(&self) -> &'static str {
+        "panicking"
+    }
+}
+
+#[test]
+fn worker_death_propagates_worker_gone_into_the_pending_ticket() {
+    let cfg = ServerConfig { kv_capacity: 16, ..Default::default() };
+    let server = CamformerServer::start(cfg, |_| PanickingBackend);
+    let mut rng = Rng::new(9500);
+    // prefill is a barrier (no dispatch), so open succeeds even here
+    let session = server.open(0, rng.normal_vec(4 * 64), rng.normal_vec(4 * 64)).unwrap();
+    let ticket = session.attend(rng.normal_vec(64)).unwrap();
+    // the dispatch panics the worker; the pending ticket's completion
+    // slot drops with it and wait() synthesizes the typed error instead
+    // of hanging forever
+    let r = ticket.wait();
+    assert_eq!(r.result, Err(ServeError::WorkerGone { worker: 0 }));
+    // handle drop fires closes at a dead worker: must not panic or hang
+    drop(session);
+    server.shutdown();
+}
+
+#[test]
+fn open_past_the_session_limit_follows_the_reclaim_policy() {
+    let mut rng = Rng::new(9600);
+    let prefill = |rng: &mut Rng| (rng.normal_vec(8 * 64), rng.normal_vec(8 * 64));
+
+    // Deny (default): the third open is a terminal SessionLimit
+    let cfg = ServerConfig { max_sessions: 2, kv_capacity: 16, ..Default::default() };
+    let server = functional_server(cfg);
+    let (k, v) = prefill(&mut rng);
+    let h1 = server.open(1, k, v).unwrap();
+    let (k, v) = prefill(&mut rng);
+    let h2 = server.open(2, k, v).unwrap();
+    let (k, v) = prefill(&mut rng);
+    let refused = server.open(3, k, v);
+    assert!(
+        matches!(refused, Err(ServeError::SessionLimit { max_sessions: 2 })),
+        "{refused:?}"
+    );
+    assert!(!refused.err().unwrap().is_retryable(&ReclaimPolicy::Deny));
+    drop((h1, h2));
+    server.shutdown();
+
+    // LruEvictIdle: the same third open succeeds by evicting the LRU
+    // idle session; the victim's requests answer Evicted until re-open
+    let cfg = ServerConfig {
+        max_sessions: 2,
+        kv_capacity: 16,
+        reclaim: ReclaimPolicy::LruEvictIdle { min_idle: Duration::ZERO },
+        ..Default::default()
+    };
+    let server = functional_server(cfg);
+    let (k, v) = prefill(&mut rng);
+    let h1 = server.open(1, k, v).unwrap();
+    let (k, v) = prefill(&mut rng);
+    let h2 = server.open(2, k, v).unwrap();
+    // touch session 1 so session 2 is the LRU victim
+    assert!(h1.attend(rng.normal_vec(64)).unwrap().wait().is_ok());
+    let (k, v) = prefill(&mut rng);
+    let h3 = server.open(3, k, v).expect("LRU policy must admit by evicting");
+    let evicted = h2.attend(rng.normal_vec(64)).unwrap().wait();
+    assert_eq!(evicted.result, Err(ServeError::Evicted { session: 2 }));
+    // the typed error is retryable-after-reopen semantics: re-opening
+    // the evicted id revives it (evicting the next LRU in turn)
+    let (k, v) = prefill(&mut rng);
+    let h2b = server.open(2, k, v).expect("re-open of an evicted session");
+    assert!(h2b.attend(rng.normal_vec(64)).unwrap().wait().is_ok());
+    drop((h1, h2, h3, h2b));
+    let (m, _) = server.shutdown();
+    assert_eq!(m.evictions, 2);
+    assert!(m.closes >= 1, "handle drops close whatever sessions remain");
+}
+
+#[test]
+fn open_is_all_or_nothing_across_heads() {
+    // two head workers, max_sessions = 1, Deny. Head 1 is pre-occupied
+    // by a legacy per-head prefill, so a shard-wide open admits on head
+    // 0 but refuses on head 1 — and must roll the head-0 admission back.
+    let cfg = ServerConfig { heads: 2, max_sessions: 1, kv_capacity: 16, ..Default::default() };
+    let server = functional_server(cfg);
+    let mut rng = Rng::new(9700);
+    let occupy = server
+        .submit_ticket(Request::Prefill {
+            id: 1,
+            session: 9,
+            head: 1,
+            keys: rng.normal_vec(8 * 64),
+            values: rng.normal_vec(8 * 64),
+        })
+        .unwrap();
+    assert!(occupy.wait().is_ok());
+
+    let refused = server.open(11, rng.normal_vec(8 * 64), rng.normal_vec(8 * 64));
+    assert!(
+        matches!(refused, Err(ServeError::SessionLimit { max_sessions: 1 })),
+        "{refused:?}"
+    );
+    // (the Result's type borrows the server even in the Err case; drop
+    // it so shutdown below can take the server by value)
+    drop(refused);
+    // rollback: the partially-admitted session is gone from head 0 too
+    let t = server
+        .submit_ticket(Request::Attend { id: 2, session: 11, head: 0, query: rng.normal_vec(64) })
+        .unwrap();
+    assert_eq!(t.wait().result, Err(ServeError::UnknownSession { session: 11 }));
+    // the bystander session on head 1 was never disturbed
+    let t = server
+        .submit_ticket(Request::Attend { id: 3, session: 9, head: 1, query: rng.normal_vec(64) })
+        .unwrap();
+    assert!(t.wait().is_ok());
+    let (m, _) = server.shutdown();
+    assert_eq!(m.closes, 1, "exactly the rollback close ran");
+}
