@@ -2,8 +2,10 @@
 //! trips through the session-oriented coordinator, the cross-session
 //! batched decode loop (batched vs single dispatch), the long-context
 //! dense-vs-sparse / repack-vs-incremental comparison (ISSUE 4, emitted
-//! machine-readably to `BENCH_hotpath.json`), plus the micro-costs
-//! (bf16 dot, softmax engine) that dominate it.
+//! machine-readably to `BENCH_hotpath.json`), the bursty open-loop
+//! arrival scenario against the standing scheduler's bounded queue and
+//! shared KV budget (ISSUE 6), plus the micro-costs (bf16 dot, softmax
+//! engine) that dominate it.
 
 use std::time::{Duration, Instant};
 
@@ -13,7 +15,7 @@ use camformer::coordinator::backend::{AttendItem, AttentionBackend, FunctionalBa
 use camformer::coordinator::batcher::{BatchPolicy, PlanMode};
 use camformer::coordinator::kv_store::KvStore;
 use camformer::coordinator::server::{CamformerServer, ReclaimPolicy, Request, ServerConfig};
-use camformer::coordinator::SessionHandle;
+use camformer::coordinator::{ServeError, SessionHandle};
 use camformer::util::bench::Bencher;
 use camformer::util::{bf16, rng::Rng};
 
@@ -46,30 +48,37 @@ fn main() {
                 |_| FunctionalBackend::new(n, 64),
             );
             let mut kv_rng = Rng::new(9);
+            let mut tickets = Vec::with_capacity(requests + heads);
             for h in 0..heads {
-                server
-                    .submit(Request::Prefill {
-                        id: 100_000 + h as u64,
-                        session: 1,
-                        head: h,
-                        keys: kv_rng.normal_vec(n * 64),
-                        values: kv_rng.normal_vec(n * 64),
-                    })
-                    .unwrap();
+                tickets.push(
+                    server
+                        .submit_ticket(Request::Prefill {
+                            id: 100_000 + h as u64,
+                            session: 1,
+                            head: h,
+                            keys: kv_rng.normal_vec(n * 64),
+                            values: kv_rng.normal_vec(n * 64),
+                        })
+                        .unwrap(),
+                );
             }
             let mut qrng = Rng::new(10);
             for i in 0..requests {
-                server
-                    .submit(Request::Attend {
-                        id: i as u64,
-                        session: 1,
-                        head: i % heads,
-                        query: qrng.normal_vec(64),
-                    })
-                    .unwrap();
+                tickets.push(
+                    server
+                        .submit_ticket(Request::Attend {
+                            id: i as u64,
+                            session: 1,
+                            head: i % heads,
+                            query: qrng.normal_vec(64),
+                        })
+                        .unwrap(),
+                );
             }
-            let resps = server.collect(requests + heads);
-            assert_eq!(resps.len(), requests + heads);
+            assert_eq!(tickets.len(), requests + heads);
+            for t in tickets {
+                assert!(t.wait().is_ok());
+            }
             let (m, w) = server.shutdown();
             (m.completed, w)
         });
@@ -93,36 +102,41 @@ fn main() {
             );
             let mut rng2 = Rng::new(11);
             let mut id = 0u64;
+            let mut tickets = Vec::with_capacity(sessions * (steps + 1));
             for sid in 0..sessions as u64 {
-                server
-                    .submit(Request::Prefill {
-                        id: 100_000 + sid,
-                        session: sid,
-                        head: 0,
-                        keys: rng2.normal_vec(prefill_rows * 64),
-                        values: rng2.normal_vec(prefill_rows * 64),
-                    })
-                    .unwrap();
+                tickets.push(
+                    server
+                        .submit_ticket(Request::Prefill {
+                            id: 100_000 + sid,
+                            session: sid,
+                            head: 0,
+                            keys: rng2.normal_vec(prefill_rows * 64),
+                            values: rng2.normal_vec(prefill_rows * 64),
+                        })
+                        .unwrap(),
+                );
             }
             for _step in 0..steps {
                 for sid in 0..sessions as u64 {
-                    server
-                        .submit(Request::Decode {
-                            id,
-                            session: sid,
-                            head: 0,
-                            query: rng2.normal_vec(64),
-                            new_key: rng2.normal_vec(64),
-                            new_value: rng2.normal_vec(64),
-                        })
-                        .unwrap();
+                    tickets.push(
+                        server
+                            .submit_ticket(Request::Decode {
+                                id,
+                                session: sid,
+                                head: 0,
+                                query: rng2.normal_vec(64),
+                                new_key: rng2.normal_vec(64),
+                                new_value: rng2.normal_vec(64),
+                            })
+                            .unwrap(),
+                    );
                     id += 1;
                 }
             }
-            let total = sessions * (steps + 1);
-            let resps = server.collect(total);
-            assert_eq!(resps.len(), total);
-            assert!(resps.iter().all(|r| r.is_ok()));
+            assert_eq!(tickets.len(), sessions * (steps + 1));
+            for t in tickets {
+                assert!(t.wait().is_ok());
+            }
             let (m, w) = server.shutdown();
             (m.decodes, w)
         });
@@ -175,33 +189,38 @@ fn main() {
                     },
                     |_| FunctionalBackend::new(capacity, 64),
                 );
+                let mut tickets = Vec::with_capacity(sessions + decodes.len());
                 for (sid, (keys, values)) in prefills.iter().enumerate() {
-                    server
-                        .submit(Request::Prefill {
-                            id: 100_000 + sid as u64,
-                            session: sid as u64,
-                            head: 0,
-                            keys: keys.clone(),
-                            values: values.clone(),
-                        })
-                        .unwrap();
+                    tickets.push(
+                        server
+                            .submit_ticket(Request::Prefill {
+                                id: 100_000 + sid as u64,
+                                session: sid as u64,
+                                head: 0,
+                                keys: keys.clone(),
+                                values: values.clone(),
+                            })
+                            .unwrap(),
+                    );
                 }
                 for (id, (sid, q, nk, nv)) in decodes.iter().enumerate() {
-                    server
-                        .submit(Request::Decode {
-                            id: id as u64,
-                            session: *sid,
-                            head: 0,
-                            query: q.clone(),
-                            new_key: nk.clone(),
-                            new_value: nv.clone(),
-                        })
-                        .unwrap();
+                    tickets.push(
+                        server
+                            .submit_ticket(Request::Decode {
+                                id: id as u64,
+                                session: *sid,
+                                head: 0,
+                                query: q.clone(),
+                                new_key: nk.clone(),
+                                new_value: nv.clone(),
+                            })
+                            .unwrap(),
+                    );
                 }
-                let total = sessions + decodes.len();
-                let resps = server.collect(total);
-                assert_eq!(resps.len(), total);
-                assert!(resps.iter().all(|r| r.is_ok()));
+                assert_eq!(tickets.len(), sessions + decodes.len());
+                for t in tickets {
+                    assert!(t.wait().is_ok());
+                }
                 let (m, w) = server.shutdown();
                 best_occupancy = best_occupancy.max(m.mean_occupancy());
                 (m.decodes, w)
@@ -248,7 +267,12 @@ fn main() {
             .collect();
         let modes = [("conservative", PlanMode::Conservative), ("fused", PlanMode::Speculative)];
         for (label, mode) in modes {
-            let batch = BatchPolicy { max_batch: 16, max_wait: Duration::from_millis(2), mode };
+            let batch = BatchPolicy {
+                max_batch: 16,
+                max_wait: Duration::from_millis(2),
+                mode,
+                ..Default::default()
+            };
             let mut bc = Bencher::coarse();
             let mut best_occupancy = 0.0f64;
             bc.bench(&format!("deep_burst_{label}_1sess_{steps}steps"), || {
@@ -261,30 +285,36 @@ fn main() {
                     },
                     |_| FunctionalBackend::new(capacity, 64),
                 );
-                server
-                    .submit(Request::Prefill {
-                        id: 100_000,
-                        session: 0,
-                        head: 0,
-                        keys: prefill.0.clone(),
-                        values: prefill.1.clone(),
-                    })
-                    .unwrap();
-                for (id, (q, nk, nv)) in decodes.iter().enumerate() {
+                let mut tickets = Vec::with_capacity(steps + 1);
+                tickets.push(
                     server
-                        .submit(Request::Decode {
-                            id: id as u64,
+                        .submit_ticket(Request::Prefill {
+                            id: 100_000,
                             session: 0,
                             head: 0,
-                            query: q.clone(),
-                            new_key: nk.clone(),
-                            new_value: nv.clone(),
+                            keys: prefill.0.clone(),
+                            values: prefill.1.clone(),
                         })
-                        .unwrap();
+                        .unwrap(),
+                );
+                for (id, (q, nk, nv)) in decodes.iter().enumerate() {
+                    tickets.push(
+                        server
+                            .submit_ticket(Request::Decode {
+                                id: id as u64,
+                                session: 0,
+                                head: 0,
+                                query: q.clone(),
+                                new_key: nk.clone(),
+                                new_value: nv.clone(),
+                            })
+                            .unwrap(),
+                    );
                 }
-                let resps = server.collect(steps + 1);
-                assert_eq!(resps.len(), steps + 1);
-                assert!(resps.iter().all(|r| r.is_ok()));
+                assert_eq!(tickets.len(), steps + 1);
+                for t in tickets {
+                    assert!(t.wait().is_ok());
+                }
                 let (m, w) = server.shutdown();
                 best_occupancy = best_occupancy.max(m.mean_occupancy());
                 (m.decodes, w)
@@ -487,6 +517,122 @@ fn main() {
                 hotpath_json.push((format!("long_context_{label}_n{steps}"), ns));
             }
         }
+    }
+
+    // macro: bursty open-loop arrivals against the standing scheduler
+    // (ISSUE 6) — 16 sessions submit jittered decode bursts faster than
+    // a deliberately slow backend can drain them, through a queue
+    // bounded at max_queue = 8 and an exactly-fitting shared KV budget.
+    // Overload sheds are replayed until admission (the retryable
+    // contract), and while the backend is busy the standing queue
+    // backs up, so the next plan extends across many waiting sessions:
+    // occupancy must exceed 1, sheds must actually fire, and the pool
+    // high-water mark must never exceed the budget.
+    {
+        struct SlowBackend {
+            inner: FunctionalBackend,
+            delay: Duration,
+        }
+        impl AttentionBackend for SlowBackend {
+            fn attend(&mut self, q: &[f32], k: &[f32], v: &[f32]) -> anyhow::Result<Vec<f32>> {
+                self.inner.attend(q, k, v)
+            }
+            fn attend_batch(&mut self, items: &[AttendItem<'_>]) -> anyhow::Result<Vec<Vec<f32>>> {
+                // one fixed-latency accelerator round trip per dispatch:
+                // batching amortises it, sequential dispatch pays it per query
+                std::thread::sleep(self.delay);
+                self.inner.attend_batch(items)
+            }
+            fn name(&self) -> &'static str {
+                "slow-functional"
+            }
+        }
+
+        let sessions = 16usize;
+        let steps = 8usize;
+        let prefill_rows = 8usize;
+        let capacity = 64usize;
+        // exact fit: the budget binds (hwm reaches it) without refusing
+        let budget = sessions * (prefill_rows + steps);
+        let mut bc = Bencher::coarse();
+        let mut best_occupancy = 0.0f64;
+        let mut sheds_seen = 0u64;
+        let mut best_ns = f64::INFINITY;
+        bc.bench("bursty_open_loop_16sess_q8", || {
+            let server = CamformerServer::start(
+                ServerConfig {
+                    kv_capacity: capacity,
+                    max_sessions: sessions,
+                    batch: BatchPolicy::bounds(16, Duration::from_micros(200)),
+                    worker_kv_budget: budget,
+                    max_queue: 8,
+                    ..Default::default()
+                },
+                |_| SlowBackend {
+                    inner: FunctionalBackend::new(capacity, 64),
+                    delay: Duration::from_micros(200),
+                },
+            );
+            let mut rng2 = Rng::new(15);
+            let handles: Vec<SessionHandle<'_>> = (0..sessions as u64)
+                .map(|sid| {
+                    let keys = rng2.normal_vec(prefill_rows * 64);
+                    let values = rng2.normal_vec(prefill_rows * 64);
+                    loop {
+                        match server.open(sid, keys.clone(), values.clone()) {
+                            Ok(h) => break h,
+                            Err(ServeError::Overloaded { .. }) => std::thread::yield_now(),
+                            Err(e) => panic!("open refused terminally: {e}"),
+                        }
+                    }
+                })
+                .collect();
+            let t0 = Instant::now();
+            let mut tickets = Vec::with_capacity(sessions * steps);
+            for step in 0..steps {
+                for (si, h) in handles.iter().enumerate() {
+                    // open-loop jitter: a short stall every few arrivals
+                    if (si + step) % 5 == 0 {
+                        std::thread::sleep(Duration::from_micros(20));
+                    }
+                    let q = rng2.normal_vec(64);
+                    let nk = rng2.normal_vec(64);
+                    let nv = rng2.normal_vec(64);
+                    let t = loop {
+                        match h.decode(q.clone(), nk.clone(), nv.clone()) {
+                            Ok(t) => break t,
+                            Err(ServeError::Overloaded { .. }) => {
+                                sheds_seen += 1;
+                                std::thread::yield_now();
+                            }
+                            Err(e) => panic!("burst decode refused terminally: {e}"),
+                        }
+                    };
+                    tickets.push(t);
+                }
+            }
+            let total = tickets.len();
+            for t in tickets {
+                assert!(t.wait().is_ok(), "bursty decode failed");
+            }
+            best_ns = best_ns.min(t0.elapsed().as_nanos() as f64 / total as f64);
+            drop(handles);
+            let (m, w) = server.shutdown();
+            assert!(m.kv_rows_hwm <= budget as u64, "pool residency broke the budget");
+            best_occupancy = best_occupancy.max(m.mean_occupancy());
+            (m.decodes, w)
+        });
+        println!(
+            "      bursty_open_loop: occupancy {best_occupancy:.2}x, {sheds_seen} sheds \
+             replayed to admission (queue bounded at 8)"
+        );
+        assert!(
+            best_occupancy > 1.0,
+            "a backlogged standing queue must extend plans past one query/dispatch \
+             (occupancy {best_occupancy:.2}x)"
+        );
+        assert!(sheds_seen > 0, "the open-loop burst must overrun max_queue = 8 and shed");
+        hotpath_json.push(("bursty_open_loop_16sess_q8".to_string(), best_ns));
     }
 
     // machine-readable perf trajectory (scenario -> ns/step), tracked

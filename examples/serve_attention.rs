@@ -6,7 +6,10 @@
 //! its own typed `Ticket`, then `close` every session. A lifecycle
 //! epilogue over-subscribes a small worker under
 //! `ReclaimPolicy::LruEvictIdle` to show admission evicting idle
-//! sessions instead of failing.
+//! sessions instead of failing, and a budget epilogue squeezes several
+//! sessions into a shared per-worker KV row pool
+//! (`ServerConfig::worker_kv_budget`) to show the standing scheduler's
+//! pool admission reclaiming idle rows the same way.
 //!
 //! ```bash
 //! cargo run --release --example serve_attention \
@@ -174,6 +177,40 @@ fn main() -> Result<()> {
         m.evictions,
         m.closes,
         m.kv_rows_released,
+        m.summary(w)
+    );
+
+    // budget epilogue: the standing scheduler also admits against a
+    // SHARED per-worker KV row pool. Four sessions of 49 rows each can
+    // never be resident together in a 96-row pool, so every over-pool
+    // prefill evicts the LRU idle session's rows instead of failing —
+    // and the pool high-water mark proves admission never overshot
+    let pool_cfg = ServerConfig {
+        kv_capacity: 64,
+        max_sessions: 8,
+        worker_kv_budget: 96,
+        reclaim: ReclaimPolicy::LruEvictIdle { min_idle: Duration::ZERO },
+        ..Default::default()
+    };
+    let pool = CamformerServer::start(pool_cfg, |_| FunctionalBackend::new(64, d));
+    let mut pooled: Vec<SessionHandle<'_>> = Vec::new();
+    for sid in 0..4u64 {
+        let h = pool.open(sid, rng.normal_vec(48 * d), rng.normal_vec(48 * d))?;
+        let r = h
+            .decode(rng.normal_vec(d), rng.normal_vec(d), rng.normal_vec(d))?
+            .wait();
+        anyhow::ensure!(r.is_ok(), "pooled decode failed: {:?}", r.result);
+        pooled.push(h);
+    }
+    drop(pooled);
+    let (m, w) = pool.shutdown();
+    anyhow::ensure!(m.evictions > 0, "over-pool prefills must have evicted");
+    anyhow::ensure!(m.kv_rows_hwm <= 96, "pool residency broke the budget");
+    println!(
+        "kv budget: 4 x 49-row sessions against a 96-row pool -> residency hwm {} <= 96, \
+         {} evictions ({})",
+        m.kv_rows_hwm,
+        m.evictions,
         m.summary(w)
     );
 

@@ -9,7 +9,7 @@ use camformer::accuracy::functional::{self, AttnConfig};
 use camformer::coordinator::backend::{ArchSimBackend, FunctionalBackend, PjrtBackend};
 use camformer::coordinator::kv_store::KvStore;
 use camformer::coordinator::server::{CamformerServer, ReclaimPolicy, ServerConfig};
-use camformer::coordinator::Ticket;
+use camformer::coordinator::{ServeError, Ticket};
 use camformer::runtime::executable::{default_artifacts_dir, Engine};
 use camformer::util::cli::Args;
 use camformer::util::rng::Rng;
@@ -26,6 +26,11 @@ fn artifacts_dir(args: &Args) -> PathBuf {
 /// `--steps` live KV-append steps across `--heads` heads via per-request
 /// tickets, golden-checked, then explicitly closed. `--reclaim lru`
 /// swaps the admission policy from Deny to LRU idle eviction.
+/// `--kv-budget` caps the rows each worker's session pool may hold
+/// resident (tight budgets surface typed `CapacityExhausted` refusals,
+/// or evictions under `--reclaim lru`), and `--max-queue` bounds the
+/// standing per-worker queue — submissions shed past it answer with the
+/// retryable `Overloaded`, which this driver replays until admission.
 pub fn serve(args: &Args) -> Result<()> {
     let heads = args.get_usize("heads", 4);
     let sessions = args.get_usize("sessions", 4);
@@ -34,12 +39,15 @@ pub fn serve(args: &Args) -> Result<()> {
     let backend_kind = args.get_or("backend", "functional");
     let reclaim_kind = args.get_or("reclaim", "deny");
     let seed = args.get_u64("seed", 42);
+    let kv_budget = args.get_usize("kv-budget", 1024 * 64);
+    let max_queue = args.get_usize("max-queue", 4096);
     let capacity = 1024usize;
     let d = 64usize;
 
     println!(
         "camformer serve: {sessions} sessions x {steps} decode steps over {heads} heads, \
-         backend={backend_kind}, reclaim={reclaim_kind}"
+         backend={backend_kind}, reclaim={reclaim_kind}, kv-budget={kv_budget}, \
+         max-queue={max_queue}"
     );
     anyhow::ensure!(
         prefill_rows + steps <= capacity,
@@ -57,6 +65,8 @@ pub fn serve(args: &Args) -> Result<()> {
         kv_capacity: capacity,
         max_sessions: sessions.max(1),
         reclaim,
+        worker_kv_budget: kv_budget,
+        max_queue,
         ..Default::default()
     };
     let quantum = cfg.pad_quantum;
@@ -85,8 +95,12 @@ pub fn serve(args: &Args) -> Result<()> {
     }
 
     // every decode step returns a ticket; submitting the whole workload
-    // before waiting keeps the workers' wire batches full
+    // before waiting keeps the workers' wire batches full. Overload
+    // sheds (bounded standing queues past --max-queue) are retryable by
+    // contract: replay until the worker admits the request — nothing
+    // was enqueued for a shed submission, so program order is intact.
     let mut tickets: Vec<Ticket> = Vec::with_capacity(sessions * heads * steps);
+    let mut shed_replays = 0u64;
     for _step in 0..steps {
         for (sid, handle) in handles.iter().enumerate() {
             for h in 0..heads {
@@ -96,9 +110,22 @@ pub fn serve(args: &Args) -> Result<()> {
                 if h == 0 {
                     mirrors[sid].append(&nk, &nv)?;
                 }
-                tickets.push(handle.decode_on(h, q, nk, nv)?);
+                let ticket = loop {
+                    match handle.decode_on(h, q.clone(), nk.clone(), nv.clone()) {
+                        Ok(t) => break t,
+                        Err(ServeError::Overloaded { .. }) => {
+                            shed_replays += 1;
+                            std::thread::yield_now();
+                        }
+                        Err(e) => return Err(e.into()),
+                    }
+                };
+                tickets.push(ticket);
             }
         }
+    }
+    if shed_replays > 0 {
+        println!("  replayed {shed_replays} overload sheds to admission (max-queue={max_queue})");
     }
     let total = tickets.len();
     let mut failed = 0usize;

@@ -1,17 +1,25 @@
-//! Dynamic batching for the serving hot path.
+//! Continuous batching for the serving hot path.
 //!
-//! Two layers:
+//! Three layers:
 //!
-//! * [`next_batch`] — the wire batcher: accumulate queued requests up to
-//!   the batch size or a deadline, whichever first. The standard serving
-//!   trade between utilisation and tail latency.
-//! * [`DecodeBatcher`] — the request-aware planner on top: partition one
-//!   wire batch of [`Envelope`]s into [`DispatchGroup`]s so that decode
-//!   steps and read-only attends of *different sessions* execute as a
-//!   single backend dispatch against their own (stationary) key
-//!   memories. This is the paper's key-stationary amortisation (Fig. 5):
-//!   the BA-CAM search cost is paid once per dispatch, not once per
-//!   query.
+//! * [`WorkQueue`] — the standing per-worker queue: every submitted
+//!   [`Envelope`] lands here (in arrival order) and waits until the
+//!   scheduling loop admits it into a dispatch plan. Unlike the old
+//!   one-shot wire batcher, the queue persists across scheduling cycles,
+//!   so a straggler never forces the pipeline to drain.
+//! * [`GroupPlan`] — an *incremental* dispatch plan: the scheduler feeds
+//!   it envelopes one at a time and asks, before each, whether the item
+//!   may join the open plan ([`GroupPlan::admits`]) under the
+//!   batch-safety invariant of its [`PlanMode`]. The worker's scheduling
+//!   loop keeps a plan open and **extends** it as new tickets arrive,
+//!   dispatching when the plan fills, a barrier blocks the queue front,
+//!   the waiting backlog trips [`BatchPolicy::waiting_served_ratio`], or
+//!   [`BatchPolicy::max_wait`] expires.
+//! * [`DecodeBatcher`] — the one-shot planner over a whole slice of
+//!   envelopes, used by tests and by anyone replaying a recorded wire
+//!   batch. It is implemented by folding the slice through a
+//!   [`GroupPlan`], so the standing scheduler and the batch planner
+//!   cannot disagree about grouping rules: they are the same code.
 //!
 //! # Batch-safety invariant
 //!
@@ -60,15 +68,28 @@
 //! start a new group — sequentially it runs after the close and must
 //! observe the session gone. Items of *other* sessions keep fusing
 //! around a close, so lifecycle traffic does not forfeit occupancy.
+//!
+//! # Why the scheduler never reorders
+//!
+//! A TGI-style router reorders freely (waiting prefills can overtake a
+//! running decode batch). Here dispatch plans are always a **contiguous
+//! prefix of per-worker arrival order**: reordering would permute the
+//! worker's logical clock, which drives LRU eviction, and evictions
+//! would then diverge between batched and sequential dispatch — the
+//! bit-equality invariant the whole fuzz harness pivots on. The
+//! `waiting_served_ratio` knob therefore controls only *when the open
+//! plan stops extending* (letting a blocked barrier — typically a
+//! waiting prefill — run sooner), never *what order work runs in*.
 
+use std::collections::VecDeque;
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use super::server::{Envelope, Request};
 use super::session::SessionId;
 
-/// How [`DecodeBatcher`] fuses one wire batch into dispatch groups (see
-/// the module docs for the batch-safety invariant each mode upholds).
+/// How dispatch plans fuse envelopes into groups (see the module docs
+/// for the batch-safety invariant each mode upholds).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PlanMode {
     /// Split at every same-session hazard: at most one `Decode` per
@@ -80,12 +101,26 @@ pub enum PlanMode {
     Speculative,
 }
 
-/// Batching policy.
+/// Batching policy for the standing scheduler.
 #[derive(Clone, Copy, Debug)]
 pub struct BatchPolicy {
+    /// Largest dispatch plan (one backend dispatch serves at most this
+    /// many queries).
     pub max_batch: usize,
+    /// How long an open plan may wait for more arrivals before it
+    /// dispatches anyway.
     pub max_wait: Duration,
     pub mode: PlanMode,
+    /// When the queue holds `waiting` items that *cannot* join the open
+    /// plan (a prefill barrier or a same-session hazard at the front),
+    /// the plan stops extending and dispatches as soon as
+    /// `waiting >= waiting_served_ratio * plan_len`. Small values let a
+    /// lone waiting prefill preempt decode extension immediately; large
+    /// values let the plan keep filling toward `max_batch` first. The
+    /// knob trades barrier latency against dispatch occupancy and never
+    /// affects outputs (plans are contiguous prefixes of arrival order
+    /// either way).
+    pub waiting_served_ratio: f64,
 }
 
 impl Default for BatchPolicy {
@@ -94,50 +129,181 @@ impl Default for BatchPolicy {
             max_batch: 16, // the attn_batch artifact's geometry
             max_wait: Duration::from_millis(2),
             mode: PlanMode::Speculative,
+            // TGI's default: a blocked barrier preempts extension once the
+            // backlog is ~1.2x the open plan, i.e. almost immediately for
+            // small plans, later for well-filled ones.
+            waiting_served_ratio: 1.2,
         }
     }
 }
 
 impl BatchPolicy {
-    /// Policy with the given wire-batch bounds and the default
-    /// (speculative) planning mode.
+    /// Policy with the given plan bounds and the default (speculative)
+    /// planning mode.
     pub fn bounds(max_batch: usize, max_wait: Duration) -> Self {
         BatchPolicy { max_batch, max_wait, ..Default::default() }
     }
 
     /// Same bounds, conservative planning.
     pub fn conservative(max_batch: usize, max_wait: Duration) -> Self {
-        BatchPolicy { max_batch, max_wait, mode: PlanMode::Conservative }
+        BatchPolicy { max_batch, max_wait, mode: PlanMode::Conservative, ..Default::default() }
     }
 }
 
-/// Pull one batch from `rx` under the policy. Returns collected items
-/// (possibly fewer than max_batch on timeout) or None when the channel is
-/// closed and drained.
-pub fn next_batch<T>(rx: &Receiver<T>, policy: &BatchPolicy) -> Option<Vec<T>> {
-    // block for the first item
-    let first = match rx.recv() {
-        Ok(item) => item,
-        Err(_) => return None,
-    };
-    let mut batch = vec![first];
-    let deadline = Instant::now() + policy.max_wait;
-    while batch.len() < policy.max_batch {
-        let now = Instant::now();
-        if now >= deadline {
-            break;
-        }
-        match rx.recv_timeout(deadline - now) {
-            Ok(item) => batch.push(item),
-            // A timeout only says the OS wait elapsed *approximately*;
-            // loop back and let the deadline check decide, so an early
-            // timer wakeup can never return an under-waited partial batch
-            // (the source of flakes on loaded CI machines).
-            Err(RecvTimeoutError::Timeout) => continue,
-            Err(RecvTimeoutError::Disconnected) => break,
+/// Outcome of waiting for one more arrival during plan extension.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArrivalWait {
+    /// At least one new envelope was queued.
+    Arrived,
+    /// The wait elapsed (approximately — callers re-check their own
+    /// deadline) with nothing new.
+    TimedOut,
+    /// All senders are gone; nothing further will ever arrive.
+    Disconnected,
+}
+
+/// The standing per-worker queue: accumulates submitted [`Envelope`]s in
+/// arrival order across scheduling cycles. The scheduler pops from the
+/// front only — dispatch plans are contiguous prefixes of arrival order
+/// (module docs) — so this is strictly FIFO.
+#[derive(Default)]
+pub struct WorkQueue {
+    queue: VecDeque<Envelope>,
+}
+
+impl WorkQueue {
+    pub fn new() -> Self {
+        WorkQueue { queue: VecDeque::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// The next envelope the scheduler must place (FIFO head).
+    pub fn front(&self) -> Option<&Envelope> {
+        self.queue.front()
+    }
+
+    pub fn pop(&mut self) -> Option<Envelope> {
+        self.queue.pop_front()
+    }
+
+    /// Move everything already sitting on the wire into the queue
+    /// without blocking.
+    pub fn drain_ready(&mut self, rx: &Receiver<Envelope>) {
+        while let Ok(env) = rx.try_recv() {
+            self.queue.push_back(env);
         }
     }
-    Some(batch)
+
+    /// Block until the queue is non-empty (also sweeping in anything
+    /// else already on the wire). Returns `false` when the channel is
+    /// closed *and* the queue is drained — worker shutdown.
+    pub fn wait_nonempty(&mut self, rx: &Receiver<Envelope>) -> bool {
+        if self.queue.is_empty() {
+            match rx.recv() {
+                Ok(env) => self.queue.push_back(env),
+                Err(_) => return false,
+            }
+        }
+        self.drain_ready(rx);
+        true
+    }
+
+    /// Wait up to `timeout` for at least one more arrival (sweeping in
+    /// everything that shows up with it). A [`ArrivalWait::TimedOut`]
+    /// only says the OS wait elapsed *approximately*; callers loop back
+    /// and let their own deadline check decide, so an early timer wakeup
+    /// can never cut an extension window short (the source of flakes on
+    /// loaded CI machines).
+    pub fn wait_arrival(&mut self, rx: &Receiver<Envelope>, timeout: Duration) -> ArrivalWait {
+        match rx.recv_timeout(timeout) {
+            Ok(env) => {
+                self.queue.push_back(env);
+                self.drain_ready(rx);
+                ArrivalWait::Arrived
+            }
+            Err(RecvTimeoutError::Timeout) => ArrivalWait::TimedOut,
+            Err(RecvTimeoutError::Disconnected) => ArrivalWait::Disconnected,
+        }
+    }
+}
+
+/// An in-flight dispatch plan the scheduler extends incrementally.
+///
+/// `admits` answers, for the envelope at the queue front, whether it may
+/// join the open plan without violating the mode's batch-safety
+/// invariant; `push` adds it and updates the hazard trackers. A
+/// `Prefill` is never admitted (it executes alone as a barrier), so a
+/// plan only ever holds `Decode` / `Attend` / `Close` items.
+pub struct GroupPlan {
+    mode: PlanMode,
+    items: Vec<Envelope>,
+    /// Sessions with any item in the plan (conservative hazard: a
+    /// `Decode` must be its session's first item). Plans are small (max
+    /// 16 by default), so linear scans beat hash sets here.
+    touched: Vec<SessionId>,
+    /// Sessions with a `Close` in the plan: their later items must not
+    /// share it (they run after the close, sequentially).
+    closed: Vec<SessionId>,
+}
+
+impl GroupPlan {
+    pub fn new(mode: PlanMode) -> Self {
+        GroupPlan { mode, items: Vec::new(), touched: Vec::new(), closed: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// May `req` join the open plan? `Prefill` never joins (barrier); a
+    /// session closed within the plan bars all its later items in both
+    /// modes; conservative planning additionally bars a `Decode` whose
+    /// session already has an item in the plan.
+    pub fn admits(&self, req: &Request) -> bool {
+        match req {
+            Request::Prefill { .. } => false,
+            Request::Decode { session, .. } => {
+                !self.closed.contains(session)
+                    && (self.mode == PlanMode::Speculative || !self.touched.contains(session))
+            }
+            Request::Attend { session, .. } | Request::Close { session, .. } => {
+                !self.closed.contains(session)
+            }
+        }
+    }
+
+    /// Add an envelope the caller has already cleared with [`admits`].
+    ///
+    /// [`admits`]: GroupPlan::admits
+    pub fn push(&mut self, env: Envelope) {
+        debug_assert!(self.admits(&env.req), "pushed an item the plan does not admit");
+        let session = env.req.session();
+        if !self.touched.contains(&session) {
+            self.touched.push(session);
+        }
+        if matches!(env.req, Request::Close { .. }) {
+            self.closed.push(session);
+        }
+        self.items.push(env);
+    }
+
+    /// Hand the planned items to the dispatcher and reset the plan.
+    pub fn take(&mut self) -> Vec<Envelope> {
+        self.touched.clear();
+        self.closed.clear();
+        std::mem::take(&mut self.items)
+    }
 }
 
 /// One unit of backend work planned by [`DecodeBatcher::plan`].
@@ -152,15 +318,14 @@ pub enum DispatchGroup {
     Batch(Vec<Envelope>),
 }
 
-/// Request-aware planner for cross-session batched decode.
+/// One-shot planner over a slice of envelopes.
 ///
-/// Wraps the wire-level [`next_batch`] and partitions what it pulls into
-/// [`DispatchGroup`]s under the batch-safety invariant (module docs) of
-/// the policy's [`PlanMode`]. A worker drives it in a loop: every
-/// `Batch` group becomes exactly one
-/// [`AttentionBackend::attend_batch`] call.
-///
-/// [`AttentionBackend::attend_batch`]: super::backend::AttentionBackend::attend_batch
+/// Partitions the slice into [`DispatchGroup`]s under the batch-safety
+/// invariant (module docs) of the requested [`PlanMode`] by folding it
+/// through a [`GroupPlan`] — the same admission code the standing
+/// scheduler runs incrementally, so the two can never disagree. Used by
+/// tests, the fuzz harness's planner-invariant checks, and anyone
+/// replaying a recorded arrival stream.
 ///
 /// # Example
 ///
@@ -169,7 +334,7 @@ pub enum DispatchGroup {
 /// use camformer::coordinator::{Envelope, Request};
 ///
 /// let step = |id, session| {
-///     Envelope::pool(Request::Decode {
+///     Envelope::detached(Request::Decode {
 ///         id,
 ///         session,
 ///         head: 0,
@@ -178,7 +343,7 @@ pub enum DispatchGroup {
 ///         new_value: vec![0.0; 64],
 ///     })
 /// };
-/// let close = |id, session| Envelope::pool(Request::Close { id, session, head: 0 });
+/// let close = |id, session| Envelope::detached(Request::Close { id, session, head: 0 });
 ///
 /// // one decode step from each of four sessions: a single dispatch
 /// let groups = DecodeBatcher::plan(vec![step(0, 1), step(1, 2), step(2, 3), step(3, 4)]);
@@ -207,134 +372,40 @@ pub enum DispatchGroup {
 ///     .collect();
 /// assert_eq!(sizes, vec![3, 1]);
 /// ```
-pub struct DecodeBatcher {
-    pub policy: BatchPolicy,
-}
+pub struct DecodeBatcher;
 
 impl DecodeBatcher {
-    pub fn new(policy: BatchPolicy) -> Self {
-        DecodeBatcher { policy }
-    }
-
-    /// Pull one wire batch and plan it under the policy's mode. `None`
-    /// when the request channel is closed and drained (worker shutdown).
-    pub fn next_groups(&self, rx: &Receiver<Envelope>) -> Option<Vec<DispatchGroup>> {
-        next_batch(rx, &self.policy).map(|items| Self::plan_mode(self.policy.mode, items))
-    }
-
     /// Plan under an explicit [`PlanMode`].
     pub fn plan_mode(mode: PlanMode, items: Vec<Envelope>) -> Vec<DispatchGroup> {
-        match mode {
-            PlanMode::Conservative => Self::plan(items),
-            PlanMode::Speculative => Self::plan_speculative(items),
-        }
-    }
-
-    /// Speculative multi-step fusion: partition a wire batch into
-    /// dispatch groups, preserving arrival order, splitting ONLY at
-    /// `Prefill` barriers and at items following a same-session `Close`
-    /// — same-session decode runs fuse, and the worker's prefix views
-    /// carry the causal ordering (module docs).
-    pub fn plan_speculative(items: Vec<Envelope>) -> Vec<DispatchGroup> {
         let mut groups: Vec<DispatchGroup> = Vec::new();
-        let mut open: Vec<Envelope> = Vec::new();
-        // sessions with a Close in `open`: their later items must not
-        // share the group (they run after the close, sequentially)
-        let mut closed: Vec<SessionId> = Vec::new();
+        let mut open = GroupPlan::new(mode);
         for env in items {
-            match &env.req {
-                Request::Prefill { .. } => {
-                    if !open.is_empty() {
-                        groups.push(DispatchGroup::Batch(std::mem::take(&mut open)));
-                        closed.clear();
-                    }
-                    groups.push(DispatchGroup::Barrier(env));
+            if matches!(env.req, Request::Prefill { .. }) {
+                if !open.is_empty() {
+                    groups.push(DispatchGroup::Batch(open.take()));
                 }
-                req => {
-                    let session = req.session();
-                    if closed.contains(&session) {
-                        groups.push(DispatchGroup::Batch(std::mem::take(&mut open)));
-                        closed.clear();
-                    }
-                    if matches!(req, Request::Close { .. }) {
-                        closed.push(session);
-                    }
-                    open.push(env);
+                groups.push(DispatchGroup::Barrier(env));
+            } else {
+                if !open.admits(&env.req) {
+                    groups.push(DispatchGroup::Batch(open.take()));
                 }
+                open.push(env);
             }
         }
         if !open.is_empty() {
-            groups.push(DispatchGroup::Batch(open));
+            groups.push(DispatchGroup::Batch(open.take()));
         }
         groups
     }
 
-    /// Conservative planning: partition a wire batch into dispatch
-    /// groups, preserving arrival order, splitting at every same-session
-    /// hazard:
-    ///
-    /// * `Prefill` flushes the open group and becomes a [`DispatchGroup::Barrier`];
-    /// * `Decode` on a session already present in the open group flushes
-    ///   first (its append must stay invisible to the group's queries);
-    /// * `Attend` joins the open group unless its session was closed in
-    ///   it;
-    /// * `Close` joins the open group (it executes after the dispatch)
-    ///   and bars later same-session items from it.
+    /// Conservative planning (see [`PlanMode::Conservative`]).
     pub fn plan(items: Vec<Envelope>) -> Vec<DispatchGroup> {
-        let mut groups: Vec<DispatchGroup> = Vec::new();
-        let mut open: Vec<Envelope> = Vec::new();
-        // sessions with an item in `open`; wire batches are small (max 16
-        // by default), so linear scans beat hash sets here
-        let mut touched: Vec<SessionId> = Vec::new();
-        let mut closed: Vec<SessionId> = Vec::new();
-        for env in items {
-            match &env.req {
-                Request::Prefill { .. } => {
-                    if !open.is_empty() {
-                        groups.push(DispatchGroup::Batch(std::mem::take(&mut open)));
-                        touched.clear();
-                        closed.clear();
-                    }
-                    groups.push(DispatchGroup::Barrier(env));
-                }
-                Request::Decode { session, .. } => {
-                    if touched.contains(session) || closed.contains(session) {
-                        groups.push(DispatchGroup::Batch(std::mem::take(&mut open)));
-                        touched.clear();
-                        closed.clear();
-                    }
-                    touched.push(*session);
-                    open.push(env);
-                }
-                Request::Attend { session, .. } => {
-                    if closed.contains(session) {
-                        groups.push(DispatchGroup::Batch(std::mem::take(&mut open)));
-                        touched.clear();
-                        closed.clear();
-                    }
-                    if !touched.contains(session) {
-                        touched.push(*session);
-                    }
-                    open.push(env);
-                }
-                Request::Close { session, .. } => {
-                    if closed.contains(session) {
-                        groups.push(DispatchGroup::Batch(std::mem::take(&mut open)));
-                        touched.clear();
-                        closed.clear();
-                    }
-                    if !touched.contains(session) {
-                        touched.push(*session);
-                    }
-                    closed.push(*session);
-                    open.push(env);
-                }
-            }
-        }
-        if !open.is_empty() {
-            groups.push(DispatchGroup::Batch(open));
-        }
-        groups
+        Self::plan_mode(PlanMode::Conservative, items)
+    }
+
+    /// Speculative multi-step fusion (see [`PlanMode::Speculative`]).
+    pub fn plan_speculative(items: Vec<Envelope>) -> Vec<DispatchGroup> {
+        Self::plan_mode(PlanMode::Speculative, items)
     }
 }
 
@@ -343,77 +414,10 @@ mod tests {
     use super::*;
     use std::sync::mpsc;
     use std::thread;
-
-    #[test]
-    fn collects_full_batch_when_available() {
-        let (tx, rx) = mpsc::channel();
-        for i in 0..20 {
-            tx.send(i).unwrap();
-        }
-        let policy = BatchPolicy::bounds(16, Duration::from_millis(50));
-        let b = next_batch(&rx, &policy).unwrap();
-        assert_eq!(b.len(), 16);
-        let b2 = next_batch(&rx, &policy).unwrap();
-        assert_eq!(b2.len(), 4);
-    }
-
-    // De-flaked (ISSUE 1): asserts only the guaranteed lower bound — the
-    // deadline loop cannot return before `max_wait` has fully elapsed —
-    // and puts no upper bound on elapsed time, which a loaded CI machine
-    // cannot honour.
-    #[test]
-    fn times_out_with_partial_batch() {
-        let (tx, rx) = mpsc::channel();
-        tx.send(1).unwrap();
-        let policy = BatchPolicy::bounds(16, Duration::from_millis(10));
-        let t0 = Instant::now();
-        let b = next_batch(&rx, &policy).unwrap();
-        assert_eq!(b.len(), 1);
-        assert!(
-            t0.elapsed() >= policy.max_wait,
-            "returned after {:?}, before the {:?} deadline",
-            t0.elapsed(),
-            policy.max_wait
-        );
-        drop(tx);
-    }
-
-    #[test]
-    fn none_when_closed() {
-        let (tx, rx) = mpsc::channel::<u32>();
-        drop(tx);
-        assert!(next_batch(&rx, &BatchPolicy::default()).is_none());
-    }
-
-    // De-flaked (ISSUE 1): the seed version staggered sends with
-    // micro-sleeps, so a preempted sender could race the batcher's
-    // deadline. Arrival timing is irrelevant to the property under test —
-    // every sent item is drained, in order, in batches of at most
-    // max_batch — so the sends are unstaggered and the only timing left
-    // (a generous max_wait) has no bearing on the assertions.
-    #[test]
-    fn drains_after_sender_thread_finishes() {
-        let (tx, rx) = mpsc::channel();
-        let h = thread::spawn(move || {
-            for i in 0..5 {
-                tx.send(i).unwrap();
-            }
-            // tx drops here: the channel disconnects once drained
-        });
-        h.join().unwrap();
-        let policy = BatchPolicy::bounds(3, Duration::from_secs(5));
-        let mut got = Vec::new();
-        while let Some(b) = next_batch(&rx, &policy) {
-            assert!(b.len() <= 3);
-            got.extend(b);
-        }
-        assert_eq!(got, vec![0, 1, 2, 3, 4]);
-    }
-
-    // ---- DecodeBatcher planning ----
+    use std::time::Instant;
 
     fn decode(id: u64, session: u64) -> Envelope {
-        Envelope::pool(Request::Decode {
+        Envelope::detached(Request::Decode {
             id,
             session,
             head: 0,
@@ -424,11 +428,11 @@ mod tests {
     }
 
     fn attend(id: u64, session: u64) -> Envelope {
-        Envelope::pool(Request::Attend { id, session, head: 0, query: vec![0.0; 4] })
+        Envelope::detached(Request::Attend { id, session, head: 0, query: vec![0.0; 4] })
     }
 
     fn prefill(id: u64, session: u64) -> Envelope {
-        Envelope::pool(Request::Prefill {
+        Envelope::detached(Request::Prefill {
             id,
             session,
             head: 0,
@@ -438,8 +442,149 @@ mod tests {
     }
 
     fn close(id: u64, session: u64) -> Envelope {
-        Envelope::pool(Request::Close { id, session, head: 0 })
+        Envelope::detached(Request::Close { id, session, head: 0 })
     }
+
+    // ---- WorkQueue: the standing accumulator ----
+
+    #[test]
+    fn work_queue_preserves_arrival_order_across_sweeps() {
+        let (tx, rx) = mpsc::channel();
+        let mut q = WorkQueue::new();
+        for i in 0..3 {
+            tx.send(decode(i, 1)).unwrap();
+        }
+        q.drain_ready(&rx);
+        assert_eq!(q.len(), 3);
+        // later arrivals queue BEHIND what's already standing
+        tx.send(decode(3, 2)).unwrap();
+        q.drain_ready(&rx);
+        let ids: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|e| e.req.id()).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn wait_nonempty_blocks_until_arrival_and_false_on_disconnect() {
+        let (tx, rx) = mpsc::channel();
+        let h = thread::spawn(move || {
+            tx.send(decode(7, 1)).unwrap();
+            // tx drops: channel disconnects once drained
+        });
+        let mut q = WorkQueue::new();
+        assert!(q.wait_nonempty(&rx));
+        assert_eq!(q.front().unwrap().req.id(), 7);
+        h.join().unwrap();
+        q.pop();
+        assert!(!q.wait_nonempty(&rx), "closed + drained means shutdown");
+    }
+
+    #[test]
+    fn wait_arrival_reports_timeout_without_consuming_the_wait_budget_twice() {
+        let (tx, rx) = mpsc::channel::<Envelope>();
+        let mut q = WorkQueue::new();
+        let t0 = Instant::now();
+        let wait = Duration::from_millis(5);
+        assert_eq!(q.wait_arrival(&rx, wait), ArrivalWait::TimedOut);
+        // lower bound only: a loaded CI machine cannot honour an upper bound
+        assert!(t0.elapsed() >= wait, "returned after {:?}", t0.elapsed());
+        drop(tx);
+        assert_eq!(q.wait_arrival(&rx, wait), ArrivalWait::Disconnected);
+    }
+
+    #[test]
+    fn wait_arrival_sweeps_everything_that_arrived_together() {
+        let (tx, rx) = mpsc::channel();
+        let mut q = WorkQueue::new();
+        for i in 0..5 {
+            tx.send(decode(i, 1)).unwrap();
+        }
+        assert_eq!(q.wait_arrival(&rx, Duration::from_secs(5)), ArrivalWait::Arrived);
+        assert_eq!(q.len(), 5, "one wait sweeps the whole burst");
+    }
+
+    // ---- GroupPlan: incremental admission ----
+
+    #[test]
+    fn plan_never_admits_a_prefill() {
+        for mode in [PlanMode::Conservative, PlanMode::Speculative] {
+            let plan = GroupPlan::new(mode);
+            assert!(!plan.admits(&prefill(0, 1).req), "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn conservative_plan_admits_one_decode_per_session() {
+        let mut plan = GroupPlan::new(PlanMode::Conservative);
+        let d = decode(0, 1);
+        assert!(plan.admits(&d.req));
+        plan.push(d);
+        assert!(!plan.admits(&decode(1, 1).req), "second same-session decode");
+        assert!(plan.admits(&decode(1, 2).req), "other sessions still join");
+        assert!(plan.admits(&attend(1, 1).req), "attend after decode fuses");
+    }
+
+    #[test]
+    fn speculative_plan_admits_same_session_bursts_until_close() {
+        let mut plan = GroupPlan::new(PlanMode::Speculative);
+        for i in 0..4 {
+            let d = decode(i, 1);
+            assert!(plan.admits(&d.req), "step {i}");
+            plan.push(d);
+        }
+        let c = close(4, 1);
+        assert!(plan.admits(&c.req), "close joins its own group");
+        plan.push(c);
+        assert!(!plan.admits(&decode(5, 1).req), "closed session is barred");
+        assert!(plan.admits(&decode(5, 2).req), "other sessions fuse around a close");
+        assert_eq!(plan.len(), 5);
+    }
+
+    #[test]
+    fn take_resets_hazard_trackers() {
+        let mut plan = GroupPlan::new(PlanMode::Conservative);
+        plan.push(decode(0, 1));
+        plan.push(close(1, 2));
+        assert_eq!(plan.take().len(), 2);
+        assert!(plan.is_empty());
+        // a fresh plan admits what the old one barred
+        assert!(plan.admits(&decode(2, 1).req));
+        assert!(plan.admits(&attend(3, 2).req));
+    }
+
+    /// The one-shot planner IS the incremental plan folded over a slice;
+    /// spot-check the equivalence on a hazard-dense stream.
+    #[test]
+    fn incremental_admission_matches_one_shot_planning() {
+        let stream = || {
+            vec![
+                decode(0, 1),
+                attend(1, 2),
+                decode(2, 1), // conservative hazard
+                close(3, 2),
+                attend(4, 2), // post-close: splits in both modes
+                decode(5, 3),
+            ]
+        };
+        for mode in [PlanMode::Conservative, PlanMode::Speculative] {
+            let groups = DecodeBatcher::plan_mode(mode, stream());
+            // replay incrementally and compare the split points
+            let mut plan = GroupPlan::new(mode);
+            let mut sizes = Vec::new();
+            for env in stream() {
+                if !plan.admits(&env.req) {
+                    sizes.push(plan.take().len());
+                }
+                plan.push(env);
+            }
+            if !plan.is_empty() {
+                sizes.push(plan.take().len());
+            }
+            assert_eq!(batch_sizes(&groups), sizes, "{mode:?}");
+        }
+    }
+
+    // ---- DecodeBatcher planning ----
 
     fn batch_sizes(groups: &[DispatchGroup]) -> Vec<usize> {
         groups
@@ -622,5 +767,6 @@ mod tests {
         assert_eq!((b.max_batch, b.mode), (4, PlanMode::Speculative));
         let c = BatchPolicy::conservative(4, Duration::from_millis(1));
         assert_eq!((c.max_batch, c.mode), (4, PlanMode::Conservative));
+        assert!(b.waiting_served_ratio > 0.0 && c.waiting_served_ratio > 0.0);
     }
 }

@@ -38,6 +38,11 @@ pub enum ServeError {
     },
     /// The worker thread is gone (server shutting down).
     WorkerGone { worker: usize },
+    /// Overload shed: the target worker's standing queue is at
+    /// `ServerConfig::max_queue`, so the request was refused at
+    /// submission instead of queueing unboundedly. Retryable under every
+    /// reclaim policy — the backlog drains as the scheduler dispatches.
+    Overloaded { queue_depth: usize },
     /// The execution backend failed.
     Backend(String),
 }
@@ -57,6 +62,9 @@ impl ServeError {
     ///   retry;
     /// * `Backend` is retryable everywhere: a failed dispatch rolls its
     ///   speculative appends back, so a retry never double-appends;
+    /// * `Overloaded` is retryable under *both* policies: the standing
+    ///   queue drains as the scheduler dispatches, so a backoff-and-retry
+    ///   converges regardless of how session slots are reclaimed;
     /// * shape/routing errors (`DimMismatch`, `UnknownHead`) and
     ///   state-gone errors (`UnknownSession`, `Evicted`, `WorkerGone`)
     ///   need a different request (or a re-`open`), not a retry.
@@ -65,7 +73,7 @@ impl ServeError {
             ServeError::SessionLimit { .. } | ServeError::CapacityExhausted { .. } => {
                 !matches!(policy, ReclaimPolicy::Deny)
             }
-            ServeError::Backend(_) => true,
+            ServeError::Backend(_) | ServeError::Overloaded { .. } => true,
             ServeError::UnknownHead { .. }
             | ServeError::UnknownSession { .. }
             | ServeError::Evicted { .. }
@@ -97,6 +105,9 @@ impl fmt::Display for ServeError {
                 write!(f, "{what}: dimension {got}, want {want}")
             }
             ServeError::WorkerGone { worker } => write!(f, "worker {worker} is gone"),
+            ServeError::Overloaded { queue_depth } => {
+                write!(f, "worker overloaded: {queue_depth} requests queued (back off and retry)")
+            }
             ServeError::Backend(msg) => write!(f, "backend failure: {msg}"),
         }
     }
@@ -121,11 +132,34 @@ mod tests {
                 "decode query",
             ),
             (ServeError::WorkerGone { worker: 1 }, "worker 1"),
+            (ServeError::Overloaded { queue_depth: 128 }, "128 requests queued"),
             (ServeError::Backend("boom".into()), "boom"),
         ];
         for (e, needle) in cases {
             let s = e.to_string();
             assert!(s.contains(needle), "{s:?} missing {needle:?}");
+        }
+    }
+
+    /// The two errors a well-behaved client loop must branch on —
+    /// `Evicted` (re-open, don't retry) and `Overloaded` (back off, do
+    /// retry) — round-trip structurally: the payload survives a clone,
+    /// compares equal, and the Display string carries the payload so a
+    /// logged error is enough to reconstruct what happened.
+    #[test]
+    fn evicted_and_overloaded_round_trip() {
+        let ev = ServeError::Evicted { session: 42 };
+        let ov = ServeError::Overloaded { queue_depth: 7 };
+        assert_eq!(ev.clone(), ev);
+        assert_eq!(ov.clone(), ov);
+        assert_ne!(ev, ov);
+        assert_ne!(ov, ServeError::Overloaded { queue_depth: 8 });
+        assert!(ev.to_string().contains("42"));
+        assert!(ov.to_string().contains('7'));
+        // the payload is recoverable by matching, not just by Display
+        match ov {
+            ServeError::Overloaded { queue_depth } => assert_eq!(queue_depth, 7),
+            other => panic!("wrong variant: {other}"),
         }
     }
 
@@ -150,6 +184,11 @@ mod tests {
         }
         // a failed dispatch rolled its state back: always safe to retry
         assert!(ServeError::Backend("boom".into()).is_retryable(&deny));
+        // overload shed: the standing queue drains regardless of how
+        // session slots are reclaimed, so retry is sound under BOTH policies
+        let shed = ServeError::Overloaded { queue_depth: 64 };
+        assert!(shed.is_retryable(&deny), "{shed}");
+        assert!(shed.is_retryable(&lru), "{shed}");
         // shape, routing and state-gone errors are never retryable
         for e in [
             ServeError::DimMismatch { what: "query", got: 3, want: 64 },

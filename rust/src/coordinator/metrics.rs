@@ -29,6 +29,16 @@ pub struct Metrics {
     pub dispatched_queries: u64,
     /// Largest single dispatch.
     pub max_occupancy: u64,
+    /// Standing-scheduler gauges (ISSUE 6): requests refused with
+    /// [`ServeError::Overloaded`](super::ServeError::Overloaded) because
+    /// the worker's queue was at `max_queue`, the deepest that queue ever
+    /// got, KV rows admitted against the shared `worker_kv_budget`
+    /// (monotone: prefill = rows, decode = 1), and the budget high-water
+    /// mark — the largest number of rows ever resident at once.
+    pub shed_requests: u64,
+    pub queue_depth_max: u64,
+    pub kv_rows_admitted: u64,
+    pub kv_rows_hwm: u64,
 }
 
 impl Metrics {
@@ -80,6 +90,19 @@ impl Metrics {
         self.dispatches += other.dispatches;
         self.dispatched_queries += other.dispatched_queries;
         self.max_occupancy = self.max_occupancy.max(other.max_occupancy);
+        self.shed_requests += other.shed_requests;
+        self.kv_rows_admitted += other.kv_rows_admitted;
+        // high-water marks are per-worker peaks, not additive flows
+        self.queue_depth_max = self.queue_depth_max.max(other.queue_depth_max);
+        self.kv_rows_hwm = self.kv_rows_hwm.max(other.kv_rows_hwm);
+    }
+
+    /// Record the budget occupancy after a successful admission; keeps
+    /// the high-water mark that the fuzz harness asserts never exceeds
+    /// `worker_kv_budget`.
+    pub fn note_kv_admission(&mut self, rows_admitted: usize, resident_rows: usize) {
+        self.kv_rows_admitted += rows_admitted as u64;
+        self.kv_rows_hwm = self.kv_rows_hwm.max(resident_rows as u64);
     }
 
     pub fn mean_latency_us(&self) -> f64 {
@@ -121,7 +144,7 @@ impl Metrics {
     pub fn summary(&self, window: Duration) -> String {
         format!(
             "completed={} (prefill={} decode={} attend={} close={}) evictions={} batches={} \
-             occupancy={:.2}x (max {}) errors={} \
+             occupancy={:.2}x (max {}) queue_max={} shed={} kv_admitted={} kv_hwm={} errors={} \
              thruput={:.1}/s mean={:.1}us p50={:.1}us p95={:.1}us p99={:.1}us",
             self.completed,
             self.prefills,
@@ -132,6 +155,10 @@ impl Metrics {
             self.batches,
             self.mean_occupancy(),
             self.max_occupancy,
+            self.queue_depth_max,
+            self.shed_requests,
+            self.kv_rows_admitted,
+            self.kv_rows_hwm,
             self.errors,
             self.throughput_per_s(window),
             self.mean_latency_us(),
@@ -190,6 +217,49 @@ mod tests {
         let s = m.summary(Duration::from_secs(1));
         assert!(s.contains("close=3"), "{s}");
         assert!(s.contains("evictions=2"), "{s}");
+    }
+
+    #[test]
+    fn summary_reports_scheduler_gauges() {
+        let mut m = Metrics::new();
+        m.shed_requests = 5;
+        m.queue_depth_max = 12;
+        m.note_kv_admission(16, 16);
+        m.note_kv_admission(1, 17);
+        let s = m.summary(Duration::from_secs(1));
+        assert!(s.contains("shed=5"), "{s}");
+        assert!(s.contains("queue_max=12"), "{s}");
+        assert!(s.contains("kv_admitted=17"), "{s}");
+        assert!(s.contains("kv_hwm=17"), "{s}");
+    }
+
+    #[test]
+    fn kv_admission_tracks_monotone_flow_and_peak_residency() {
+        let mut m = Metrics::new();
+        m.note_kv_admission(32, 32); // prefill: 32 rows
+        m.note_kv_admission(1, 33); // decode append
+        m.note_kv_admission(8, 25); // re-prefill after a close shrank residency
+        assert_eq!(m.kv_rows_admitted, 41, "admitted flow is monotone");
+        assert_eq!(m.kv_rows_hwm, 33, "hwm keeps the peak, not the latest");
+    }
+
+    #[test]
+    fn merge_maxes_high_water_marks_and_sums_sheds() {
+        let mut a = Metrics::new();
+        a.shed_requests = 2;
+        a.queue_depth_max = 4;
+        a.kv_rows_admitted = 10;
+        a.kv_rows_hwm = 30;
+        let mut b = Metrics::new();
+        b.shed_requests = 3;
+        b.queue_depth_max = 9;
+        b.kv_rows_admitted = 7;
+        b.kv_rows_hwm = 20;
+        a.merge(&b);
+        assert_eq!(a.shed_requests, 5, "sheds are a flow: summed");
+        assert_eq!(a.kv_rows_admitted, 17, "admissions are a flow: summed");
+        assert_eq!(a.queue_depth_max, 9, "queue peak is per-worker: maxed");
+        assert_eq!(a.kv_rows_hwm, 30, "budget peak is per-worker: maxed");
     }
 
     #[test]

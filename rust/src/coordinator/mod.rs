@@ -27,20 +27,27 @@
 //! * [`server`]    — [`CamformerServer`]: `Prefill` / `Decode` / `Attend`
 //!   / `Close` request enum, capacity-aware typed admission,
 //!   worker-per-(shard, head) routing, [`ReclaimPolicy`] (deny, or LRU
-//!   eviction of idle sessions when admission hits the session limit),
-//!   shutdown — plus the deprecated legacy `submit`/`collect` shim,
-//!   rebuilt on the same [`Envelope`]/[`ResponseSink`] internals;
-//! * [`batcher`]   — batched decode with speculative multi-step fusion:
-//!   the request-aware [`DecodeBatcher`] plans each wire batch into
-//!   dispatch groups so decode steps and read-only attends — of
-//!   different sessions AND, under [`PlanMode::Speculative`] (default),
-//!   several steps of the *same* session — execute as one backend
-//!   dispatch (the paper's key-stationary amortisation, Fig. 5). All
-//!   appends apply first in program order; each query then attends over
-//!   its own *causal prefix view* of its session cache, so even a deep
-//!   single-session burst amortises dispatches while staying bit-equal
-//!   to sequential execution. `Prefill` remains a barrier; `Close` is a
-//!   same-session barrier (other sessions fuse around it);
+//!   eviction of idle sessions when admission hits the session limit OR
+//!   the shared per-worker KV row budget,
+//!   `ServerConfig::worker_kv_budget`), bounded standing queues that
+//!   shed past `max_queue` with the retryable [`ServeError::Overloaded`],
+//!   shutdown. Every request flows as an [`Envelope`] to its worker's
+//!   standing scheduler (queue → admit → extend → dispatch — see the
+//!   [`server`] module docs);
+//! * [`batcher`]   — continuous batching with speculative multi-step
+//!   fusion: each worker keeps a standing [`WorkQueue`] and *extends* an
+//!   in-flight [`GroupPlan`] as requests arrive, so decode steps and
+//!   read-only attends — of different sessions AND, under
+//!   [`PlanMode::Speculative`] (default), several steps of the *same*
+//!   session — execute as one backend dispatch (the paper's
+//!   key-stationary amortisation, Fig. 5). All appends apply first in
+//!   program order; each query then attends over its own *causal prefix
+//!   view* of its session cache, so even a deep single-session burst
+//!   amortises dispatches while staying bit-equal to sequential
+//!   execution. `Prefill` remains a barrier; `Close` is a same-session
+//!   barrier (other sessions fuse around it). The one-shot
+//!   [`DecodeBatcher`] planner survives as the reference formulation of
+//!   the same admission rules;
 //! * [`backend`]   — pluggable execution: PJRT artifacts (the real hot
 //!   path, `pjrt` feature), the pure-Rust functional model (serving
 //!   through the survivor-list sparse pipeline by default — softmax and
@@ -54,7 +61,9 @@
 //!   [`ServeError::is_retryable`] keyed to the reclaim policy;
 //! * [`metrics`]   — per-op counters (including session lifecycle:
 //!   closes, evictions, KV rows released), batch-occupancy (queries
-//!   amortised per backend dispatch), latency percentiles
+//!   amortised per backend dispatch), scheduler gauges (shed requests,
+//!   queue-depth high-water mark, KV rows admitted against the shared
+//!   budget and the pool's peak residency), latency percentiles
 //!   (p50/p95/p99) and throughput for the examples and benches.
 //!
 //! # Serving API
@@ -103,9 +112,10 @@
 //!
 //! | layer | kind | where |
 //! |-------|------|-------|
-//! | batcher (incl. both planning modes + Close barriers), kv (incl. prefix views, release), metrics, session (lifecycle state) | unit | in-module `#[cfg(test)]` |
+//! | batcher (work queue, incremental plans, both planning modes + Close barriers), kv (incl. prefix views, release), metrics (incl. scheduler gauges), session (lifecycle state), server (overload shedding, shared KV budget) | unit | in-module `#[cfg(test)]` |
 //! | scorers, masks, prefix masking, BIMV tiles | property (seeded, `util::check`) | `accuracy::functional`, `bimv::engine` |
-//! | randomized batched-vs-sequential equivalence (dispatch configs × dense/sparse pipelines, incl. Close + LRU-eviction streams) + planner invariants + fused-burst prefix boundaries | fuzz/property | `rust/tests/batcher_fuzz.rs` |
+//! | randomized batched-vs-sequential equivalence (arrival-jittered streams × reclaim policies × dispatch configs, incl. Close + LRU-eviction streams + counter parity) + planner invariants + fused-burst prefix boundaries | fuzz/property | `rust/tests/batcher_fuzz.rs` |
+//! | scheduler properties: budget high-water mark never exceeds `worker_kv_budget`; bounded queues — every submit enqueues, sheds `Overloaded`, or fails typed | property | `rust/tests/scheduler_props.rs` |
 //! | ticket semantics (out-of-order completion, timeout expiry, dropped tickets, WorkerGone), session handles, open fan-out, eviction | integration | `rust/tests/session_api.rs` |
 //! | decode serving (interleaved sessions, live append, batched vs sequential bit-equality, per-item admission failures) | integration | `rust/tests/decode_serving.rs` |
 //! | serving flows over functional/arch backends | integration | `rust/tests/coordinator_integration.rs` |
@@ -123,13 +133,14 @@ pub mod server;
 pub mod session;
 
 pub use backend::{AttendItem, AttentionBackend, FunctionalBackend};
-pub use batcher::{BatchPolicy, DecodeBatcher, DispatchGroup, PlanMode};
+pub use batcher::{
+    ArrivalWait, BatchPolicy, DecodeBatcher, DispatchGroup, GroupPlan, PlanMode, WorkQueue,
+};
 pub use client::{SessionHandle, Ticket};
 pub use error::ServeError;
 pub use kv_store::KvStore;
 pub use metrics::Metrics;
 pub use server::{
-    CamformerServer, Envelope, Output, ReclaimPolicy, Request, Response, ResponseSink,
-    ServerConfig,
+    CamformerServer, Envelope, Output, ReclaimPolicy, Request, Response, ServerConfig,
 };
 pub use session::{Session, SessionId};

@@ -6,10 +6,55 @@
 //! one worker thread per head, so a request routes session id -> shard ->
 //! head worker. Each worker owns its backend (PJRT clients are not shared
 //! across threads), the live KV state of every session assigned to it
-//! (one [`KvStore`] per session), and a [`DecodeBatcher`]. Responses flow
-//! back through each request's [`ResponseSink`]: a per-request completion
-//! slot for the [`Ticket`]-based session-handle API, or the shared
-//! response pool for the legacy `submit`/`collect` shim.
+//! (one [`KvStore`] per session), and a standing [`WorkQueue`] driven by
+//! the scheduling loop below. Every response flows back through its
+//! request's per-request completion slot — the channel backing the
+//! caller's [`Ticket`] (the legacy `submit`/`collect` response pool is
+//! gone).
+//!
+//! # The standing scheduler
+//!
+//! Each worker runs a continuous-batching loop over its standing queue
+//! (the TGI-router shape — standing `Queue` + background batching task —
+//! adapted to the bit-equality constraint below):
+//!
+//! ```text
+//!  submit_ticket ──► bounded queue ──► admit ──► extend ──► dispatch
+//!   (sheds with      (WorkQueue,       (GroupPlan  (wait up   (one
+//!    Overloaded       FIFO across       takes the   to        backend
+//!    at max_queue)    scheduling        longest     max_wait  attend_batch
+//!                     cycles)           eligible    for new   per plan;
+//!                                       prefix)     arrivals) barriers
+//!                                                             run alone)
+//! ```
+//!
+//! * **queue** — submissions land on the worker's [`WorkQueue`] and
+//!   persist across scheduling cycles; the queue is bounded by
+//!   [`ServerConfig::max_queue`], and a submission past the bound is
+//!   refused synchronously with the *retryable*
+//!   [`ServeError::Overloaded`] (a `Close` is exempt: lifecycle teardown
+//!   frees capacity, so shedding it could wedge an overloaded worker).
+//! * **admit** — the scheduler opens a [`GroupPlan`] and moves the
+//!   longest eligible queue prefix into it, under exactly the
+//!   Prefill-barrier / same-session-`Close` / [`PlanMode`] hazard rules
+//!   of the one-shot planner (they share the admission code). KV-row
+//!   admission against the shared [`ServerConfig::worker_kv_budget`]
+//!   happens at execution, in program order (prefill cost = its rows,
+//!   decode cost = 1 row), so it is identical across groupings.
+//! * **extend** — while the plan is below `max_batch` and within
+//!   `max_wait` of its opening, new arrivals keep joining the in-flight
+//!   plan. A blocked queue front (typically a waiting `Prefill`) stops
+//!   the extension early once the backlog reaches
+//!   `waiting_served_ratio * plan_len` — the TGI-style knob deciding
+//!   when waiting prefills preempt decode extension.
+//! * **dispatch** — the plan executes as one batched backend dispatch
+//!   (appends first, then a single attend); a `Prefill` at the queue
+//!   front executes alone, immediately, as a barrier.
+//!
+//! The scheduler never reorders: dispatch plans are contiguous prefixes
+//! of per-worker arrival order, which is what keeps batched outputs —
+//! and LRU eviction decisions — bit-equal to sequential dispatch (see
+//! the [`batcher`](super::batcher) module docs).
 //!
 //! Request lifecycle:
 //! * [`Request::Prefill`] creates (or resets) the session on the target
@@ -22,8 +67,8 @@
 //!   KV capacity (issued by `SessionHandle::close` / `Drop`).
 //!
 //! Execution is cross-session batched with speculative multi-step
-//! fusion: the worker pulls a wire batch, plans it into dispatch groups
-//! (see [`DecodeBatcher`]), applies every group's KV appends first —
+//! fusion: the worker schedules a dispatch plan from its standing queue
+//! (see above), applies every plan's KV appends first —
 //! recording each query's *causal prefix*, the session KV length at its
 //! own program position — then runs *one* batched attend in which each
 //! query sees a prefix view of its own session cache. Outputs are
@@ -61,15 +106,19 @@
 //! the ROADMAP's shard-coordinated reclamation item).
 //!
 //! [`Ticket`]: super::client::Ticket
+//! [`WorkQueue`]: super::batcher::WorkQueue
+//! [`GroupPlan`]: super::batcher::GroupPlan
+//! [`PlanMode`]: super::batcher::PlanMode
 
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::backend::{AttendItem, AttentionBackend};
-use super::batcher::{BatchPolicy, DecodeBatcher, DispatchGroup};
+use super::batcher::{ArrivalWait, BatchPolicy, GroupPlan, WorkQueue};
 use super::client::Ticket;
 use super::error::ServeError;
 use super::kv_store::{KvStore, KEY_PAD};
@@ -186,39 +235,29 @@ impl Response {
     }
 }
 
-/// Where a request's [`Response`] is delivered: the per-request
-/// completion slot backing a [`Ticket`], or the server-wide pool the
-/// legacy `collect` shim drains.
+/// One queued unit of serving work: the request, its enqueue time (for
+/// latency accounting) and the per-request completion slot its
+/// [`Response`] goes to — the channel backing the caller's [`Ticket`].
+/// Dropping the receiving ticket simply discards the response (nothing
+/// leaks — the slot IS the channel). This is what worker queues carry
+/// and what [`GroupPlan`]s are built from.
 ///
 /// [`Ticket`]: super::client::Ticket
-#[derive(Debug)]
-pub enum ResponseSink {
-    /// The shared response pool ([`CamformerServer::collect`]).
-    Pool,
-    /// A per-request completion slot; dropping the receiving [`Ticket`]
-    /// simply discards the response (nothing leaks — the slot IS the
-    /// channel).
-    ///
-    /// [`Ticket`]: super::client::Ticket
-    Slot(Sender<Response>),
-}
-
-/// One queued unit of serving work: the request, its enqueue time (for
-/// latency accounting) and the sink its response goes to. This is what
-/// worker channels carry and what the [`DecodeBatcher`] plans over.
 #[derive(Debug)]
 pub struct Envelope {
     pub req: Request,
     pub enq: Instant,
-    pub sink: ResponseSink,
+    pub sink: Sender<Response>,
 }
 
 impl Envelope {
-    /// Wrap a request for the shared response pool (the legacy
-    /// `submit`/`collect` surface; also the convenient constructor for
-    /// planner tests).
-    pub fn pool(req: Request) -> Self {
-        Envelope { req, enq: Instant::now(), sink: ResponseSink::Pool }
+    /// Wrap a request with a detached completion slot (the receiver is
+    /// dropped immediately, so a delivered response is discarded): the
+    /// constructor for planner tests and doctests that plan envelopes
+    /// without ever executing them.
+    pub fn detached(req: Request) -> Self {
+        let (tx, _rx) = mpsc::channel();
+        Envelope { req, enq: Instant::now(), sink: tx }
     }
 }
 
@@ -254,8 +293,26 @@ pub struct ServerConfig {
     pub heads: usize,
     /// Provisioned per-session context rows (BA-CAM + V-SRAM sizing).
     /// Must be at least the backend's fixed geometry (1024 for PJRT) and
-    /// a multiple of `pad_quantum` for flexible backends.
+    /// a multiple of `pad_quantum` for flexible backends. This is
+    /// *physical provisioning* per session; the binding admission
+    /// constraint across sessions is `worker_kv_budget`.
     pub kv_capacity: usize,
+    /// Shared per-worker KV row budget — the pool every resident session
+    /// draws from, modelling globally-budgeted on-chip memory (X-Former
+    /// style) rather than per-sequence SRAM. Admission is charged in
+    /// program order: a `Prefill` costs its row count (a re-prefill is
+    /// charged net of the rows it replaces), a `Decode` costs 1 row, and
+    /// `Close`/eviction refund their session's rows. A `Prefill` that
+    /// would overdraw the pool evicts LRU-idle sessions under
+    /// [`ReclaimPolicy::LruEvictIdle`] or is refused with
+    /// [`ServeError::CapacityExhausted`]; an overdrawing `Decode` is
+    /// always refused (eviction never runs mid-dispatch).
+    pub worker_kv_budget: usize,
+    /// Bound on each worker's standing queue: a submission finding the
+    /// queue at this depth is refused synchronously with the retryable
+    /// [`ServeError::Overloaded`] instead of queueing unboundedly
+    /// (`Close` is exempt — see the module docs).
+    pub max_queue: usize,
     pub d_k: usize,
     pub d_v: usize,
     /// Admission bound: live sessions per worker.
@@ -281,6 +338,10 @@ impl Default for ServerConfig {
             reclaim: ReclaimPolicy::Deny,
             pad_quantum: 16,
             batch: BatchPolicy::default(),
+            // every session fully grown still fits (1024 rows x 64
+            // sessions): the pool only binds when configured tighter
+            worker_kv_budget: 1024 * 64,
+            max_queue: 4096,
         }
     }
 }
@@ -297,8 +358,22 @@ impl ServerConfig {
     }
 }
 
+/// Cross-thread gauges shared between a worker and the submit path: the
+/// live standing-queue depth (incremented at submission, decremented
+/// when the scheduler pops the envelope into an execution plan), its
+/// high-water mark, and the requests shed with
+/// [`ServeError::Overloaded`]. The worker folds them into its
+/// [`Metrics`] at exit.
+#[derive(Default)]
+struct WorkerGauges {
+    depth: AtomicU64,
+    depth_hwm: AtomicU64,
+    sheds: AtomicU64,
+}
+
 struct Worker {
     tx: Sender<Envelope>,
+    gauges: Arc<WorkerGauges>,
     handle: JoinHandle<Metrics>,
 }
 
@@ -306,11 +381,10 @@ struct Worker {
 pub struct CamformerServer {
     cfg: ServerConfig,
     workers: Vec<Worker>,
-    resp_rx: Receiver<Response>,
     started: Instant,
     /// Ids for internally-issued requests (session-handle tickets, open
     /// fan-out, drop-closes). They live in the top half of the id space
-    /// so they never collide with caller-chosen legacy `submit` ids.
+    /// so they never collide with caller-chosen request ids.
     next_id: AtomicU64,
 }
 
@@ -325,20 +399,19 @@ impl CamformerServer {
         FB: FnMut(usize) -> B,
     {
         assert!(cfg.shards >= 1 && cfg.heads >= 1, "need at least one worker");
-        let (resp_tx, resp_rx) = mpsc::channel::<Response>();
         let mut workers = Vec::with_capacity(cfg.workers());
         for w in 0..cfg.workers() {
             let (tx, rx) = mpsc::channel::<Envelope>();
             let backend = make_backend(w);
-            let resp_tx = resp_tx.clone();
+            let gauges = Arc::new(WorkerGauges::default());
+            let wgauges = gauges.clone();
             let wcfg = cfg.clone();
-            let handle = std::thread::spawn(move || worker_loop(w, wcfg, backend, rx, resp_tx));
-            workers.push(Worker { tx, handle });
+            let handle = std::thread::spawn(move || worker_loop(w, wcfg, backend, rx, wgauges));
+            workers.push(Worker { tx, gauges, handle });
         }
         CamformerServer {
             cfg,
             workers,
-            resp_rx,
             started: Instant::now(),
             next_id: AtomicU64::new(1 << 62),
         }
@@ -358,9 +431,13 @@ impl CamformerServer {
     /// completion slot resolving to exactly this request's [`Response`]
     /// (`wait` / `try_wait` / `wait_timeout`), with no cross-request
     /// correlation needed. Shape/provisioning violations are rejected
-    /// here, synchronously; state-dependent failures arrive inside the
-    /// ticket's response. This is the primitive under
-    /// [`SessionHandle`]'s `decode`/`attend`/`close`.
+    /// here, synchronously, and so is overload: a worker whose standing
+    /// queue is at [`ServerConfig::max_queue`] answers the *retryable*
+    /// [`ServeError::Overloaded`] instead of queueing unboundedly
+    /// (`Close` is exempt — teardown always enqueues). Every other
+    /// state-dependent failure arrives inside the ticket's response.
+    /// This is the primitive under [`SessionHandle`]'s
+    /// `decode`/`attend`/`close`.
     ///
     /// [`Ticket`]: super::client::Ticket
     /// [`SessionHandle`]: super::client::SessionHandle
@@ -368,33 +445,36 @@ impl CamformerServer {
         self.validate(&req)?;
         let (id, session, head) = (req.id(), req.session(), req.head());
         let w = self.cfg.worker_index(session, head);
+        let gauges = &self.workers[w].gauges;
+        // count before sending, so the worker's dequeue decrement can
+        // never precede this increment; revert on refusal. Concurrent
+        // submitters racing the bound each see the other's increment and
+        // shed conservatively — the depth never exceeds max_queue (plus
+        // exempt closes).
+        let depth = gauges.depth.fetch_add(1, Ordering::Relaxed) + 1;
+        if depth > self.cfg.max_queue as u64 && !matches!(req, Request::Close { .. }) {
+            gauges.depth.fetch_sub(1, Ordering::Relaxed);
+            gauges.sheds.fetch_add(1, Ordering::Relaxed);
+            return Err(ServeError::Overloaded { queue_depth: (depth - 1) as usize });
+        }
+        gauges.depth_hwm.fetch_max(depth, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel::<Response>();
         self.workers[w]
             .tx
-            .send(Envelope { req, enq: Instant::now(), sink: ResponseSink::Slot(tx) })
-            .map_err(|_| ServeError::WorkerGone { worker: w })?;
+            .send(Envelope { req, enq: Instant::now(), sink: tx })
+            .map_err(|_| {
+                gauges.depth.fetch_sub(1, Ordering::Relaxed);
+                ServeError::WorkerGone { worker: w }
+            })?;
         Ok(Ticket::new(id, session, head, w, rx))
     }
 
-    /// Submit a request whose response lands in the shared pool, routed
-    /// session id -> shard -> head worker.
-    ///
-    /// Deprecated (PR 5): this is the legacy fire-and-forget surface,
-    /// kept for one PR as a thin shim over the same internals as
-    /// [`CamformerServer::submit_ticket`] — responses must be correlated
-    /// by id out of [`CamformerServer::collect`]'s unordered pool.
-    /// Prefer [`CamformerServer::open`] + the [`SessionHandle`] /
-    /// [`Ticket`] API.
-    ///
-    /// [`Ticket`]: super::client::Ticket
-    /// [`SessionHandle`]: super::client::SessionHandle
-    pub fn submit(&self, req: Request) -> Result<(), ServeError> {
-        self.validate(&req)?;
-        let w = self.cfg.worker_index(req.session(), req.head());
-        self.workers[w]
-            .tx
-            .send(Envelope::pool(req))
-            .map_err(|_| ServeError::WorkerGone { worker: w })
+    /// Live standing-queue depth of the worker serving (`session`,
+    /// `head`) — the load signal behind [`ServeError::Overloaded`]
+    /// (useful for client-side backoff and load tests).
+    pub fn queue_depth(&self, session: SessionId, head: usize) -> usize {
+        let w = self.cfg.worker_index(session, head);
+        self.workers[w].gauges.depth.load(Ordering::Relaxed) as usize
     }
 
     pub(crate) fn validate(&self, req: &Request) -> Result<(), ServeError> {
@@ -469,40 +549,12 @@ impl CamformerServer {
         Ok(())
     }
 
-    /// Collect exactly `n` pool responses (blocking). Deprecated (PR 5):
-    /// only legacy [`CamformerServer::submit`] requests land here;
-    /// ticket responses never do.
-    pub fn collect(&self, n: usize) -> Vec<Response> {
-        (0..n)
-            .map(|_| self.resp_rx.recv().expect("server workers alive"))
-            .collect()
-    }
-
-    /// Collect pool responses with a timeout; returns what arrived.
-    /// Deprecated (PR 5) alongside [`CamformerServer::collect`].
-    pub fn collect_timeout(&self, n: usize, timeout: Duration) -> Vec<Response> {
-        let deadline = Instant::now() + timeout;
-        let mut out = Vec::with_capacity(n);
-        while out.len() < n {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match self.resp_rx.recv_timeout(deadline - now) {
-                Ok(r) => out.push(r),
-                Err(_) => break,
-            }
-        }
-        out
-    }
-
-    /// Shut down: close queues, join workers, return merged metrics and
-    /// the serving window.
+    /// Shut down: close queues, join workers (each drains its standing
+    /// queue first), return merged metrics and the serving window.
     pub fn shutdown(self) -> (Metrics, Duration) {
         let window = self.started.elapsed();
         let mut merged = Metrics::new();
-        let CamformerServer { workers, resp_rx, .. } = self;
-        drop(resp_rx);
+        let CamformerServer { workers, .. } = self;
         for w in workers {
             drop(w.tx);
             if let Ok(m) = w.handle.join() {
@@ -522,13 +574,7 @@ enum Op {
     Close,
 }
 
-fn deliver(
-    pool_tx: &Sender<Response>,
-    metrics: &mut Metrics,
-    op: Op,
-    sink: &ResponseSink,
-    resp: Response,
-) {
+fn deliver(metrics: &mut Metrics, op: Op, sink: &Sender<Response>, resp: Response) {
     match &resp.result {
         Ok(_) => {
             metrics.record(resp.latency);
@@ -543,10 +589,7 @@ fn deliver(
     }
     // a send error means the consumer is gone (dropped Ticket, server
     // shutting down): the response is simply discarded
-    let _ = match sink {
-        ResponseSink::Pool => pool_tx.send(resp),
-        ResponseSink::Slot(tx) => tx.send(resp),
-    };
+    let _ = sink.send(resp);
 }
 
 /// The typed miss for a session absent from the worker's table: evicted
@@ -580,6 +623,48 @@ fn padded_rows<B: AttentionBackend>(
     Ok(rows)
 }
 
+/// KV rows currently resident across the worker's sessions — the draw
+/// on the shared `worker_kv_budget` pool. Session counts are small
+/// (bounded by `max_sessions`), so summing on demand stays O(sessions)
+/// and is automatically consistent through closes, evictions, rollbacks
+/// and re-prefills.
+fn used_rows(sessions: &HashMap<SessionId, Session>) -> usize {
+    sessions.values().map(|s| s.kv_rows()).sum()
+}
+
+/// Free budget rows for an incoming `Prefill` of `keep`: evict the
+/// least-recently-used unpinned idle session *other than the target
+/// itself* (its rows are being replaced, not added). Runs only inside a
+/// `Prefill` barrier, in program order, so victim choice — and therefore
+/// the budget trajectory — is identical across dispatch groupings.
+/// `Err(CapacityExhausted)` carries the pool size when the policy denies
+/// reclamation or nothing is evictable.
+fn reclaim_for_budget(
+    cfg: &ServerConfig,
+    sessions: &mut HashMap<SessionId, Session>,
+    evicted: &mut HashSet<SessionId>,
+    metrics: &mut Metrics,
+    keep: SessionId,
+) -> Result<(), ServeError> {
+    let refusal = ServeError::CapacityExhausted { capacity: cfg.worker_kv_budget };
+    let ReclaimPolicy::LruEvictIdle { min_idle } = cfg.reclaim else {
+        return Err(refusal);
+    };
+    let victim = sessions
+        .values()
+        .filter(|s| s.id != keep && !s.is_pinned() && s.idle_for() >= min_idle)
+        .min_by_key(|s| s.last_touch_seq)
+        .map(|s| s.id);
+    let Some(victim) = victim else {
+        return Err(refusal);
+    };
+    let s = sessions.remove(&victim).expect("victim is resident");
+    metrics.kv_rows_released += s.store.release() as u64;
+    metrics.evictions += 1;
+    evicted.insert(victim);
+    Ok(())
+}
+
 /// Free one session slot under the worker's [`ReclaimPolicy`]: pick the
 /// least-recently-used (by logical touch position) session that is idle
 /// for at least `min_idle` and not pinned, release its store, and mark
@@ -609,9 +694,10 @@ fn reclaim_one(
     Ok(())
 }
 
-/// Execute a `Prefill` barrier against the worker's session table,
-/// reclaiming a slot under the configured policy when the worker is at
-/// its session limit.
+/// Execute a `Prefill` barrier against the worker's session table:
+/// charge the shared KV budget (evicting LRU-idle sessions under the
+/// reclaim policy until the load fits), then reclaim a session *slot*
+/// the same way if the worker is at its session limit.
 #[allow(clippy::too_many_arguments)]
 fn handle_prefill<B: AttentionBackend>(
     backend: &mut B,
@@ -624,6 +710,14 @@ fn handle_prefill<B: AttentionBackend>(
     keys: Vec<f32>,
     values: Vec<f32>,
 ) -> Result<Output, ServeError> {
+    // Shared-pool admission first, before any slot is created: prefill
+    // cost = its rows, net of the rows a re-prefill replaces. A refused
+    // prefill must leave the table untouched.
+    let rows = keys.len() / cfg.d_k;
+    let replaced = sessions.get(&session).map(|s| s.kv_rows()).unwrap_or(0);
+    while used_rows(sessions) - replaced + rows > cfg.worker_kv_budget {
+        reclaim_for_budget(cfg, sessions, evicted, metrics, session)?;
+    }
     if !sessions.contains_key(&session) {
         if sessions.len() >= cfg.max_sessions {
             reclaim_one(cfg, sessions, evicted, metrics)?;
@@ -639,7 +733,9 @@ fn handle_prefill<B: AttentionBackend>(
     s.touch(clock);
     s.store.load(&keys, &values)?;
     backend.on_kv_update();
-    Ok(Output { output: Vec::new(), seq_len: s.store.len() })
+    let seq_len = s.store.len();
+    metrics.note_kv_admission(rows, used_rows(sessions));
+    Ok(Output { output: Vec::new(), seq_len })
 }
 
 /// A query surviving the append phase, waiting for the batched attend.
@@ -653,7 +749,7 @@ struct PendingQuery {
     /// position. Speculative fusion may grow the store past it before
     /// the dispatch runs, so the attend is bounded to these rows.
     prefix: usize,
-    sink: ResponseSink,
+    sink: Sender<Response>,
 }
 
 /// A `Close` admitted in phase 1, executed after the group's dispatch
@@ -664,7 +760,7 @@ struct PendingClose {
     id: u64,
     session: SessionId,
     enq: Instant,
-    sink: ResponseSink,
+    sink: Sender<Response>,
 }
 
 /// Where a planned item's K/V execution view comes from.
@@ -696,7 +792,6 @@ fn dispatch_pending<B: AttentionBackend>(
     baseline: &[(SessionId, usize)],
     head: usize,
     metrics: &mut Metrics,
-    pool_tx: &Sender<Response>,
 ) {
     // Phase 2 — bind each surviving query to a view of its own causal
     // prefix. Same-session items are made adjacent (stable sort by
@@ -745,7 +840,6 @@ fn dispatch_pending<B: AttentionBackend>(
                 planned.push((i, p.prefix, source));
             }
             Err(e) => deliver(
-                pool_tx,
                 metrics,
                 p.op,
                 &p.sink,
@@ -790,7 +884,6 @@ fn dispatch_pending<B: AttentionBackend>(
             for ((i, seq_len, _), out) in planned.into_iter().zip(outs) {
                 let p = &pending[i];
                 deliver(
-                    pool_tx,
                     metrics,
                     p.op,
                     &p.sink,
@@ -819,7 +912,6 @@ fn dispatch_pending<B: AttentionBackend>(
             for (i, _, _) in planned {
                 let p = &pending[i];
                 deliver(
-                    pool_tx,
                     metrics,
                     p.op,
                     &p.sink,
@@ -855,7 +947,6 @@ fn execute_batch<B: AttentionBackend>(
     items: Vec<Envelope>,
     head: usize,
     metrics: &mut Metrics,
-    pool_tx: &Sender<Response>,
 ) {
     // Phase 1 — the mutating half of each Decode, in program order.
     // Every query's causal prefix is captured here, so later appends of
@@ -870,6 +961,11 @@ fn execute_batch<B: AttentionBackend>(
         *clock += 1;
         match req {
             Request::Decode { id, session, query, new_key, new_value, .. } => {
+                // shared-budget admission: one row per decode append. The
+                // residency sum runs in program order, before the append,
+                // so the charge (and the high-water mark it implies) is
+                // identical under every legal grouping of the same stream.
+                let resident = used_rows(sessions);
                 let appended = match sessions.get_mut(&session) {
                     None => Err(missing_session(evicted, session)),
                     Some(s) => {
@@ -879,6 +975,14 @@ fn execute_batch<B: AttentionBackend>(
                         // untouched (a client retry must not double-append)
                         match padded_rows(backend, cfg, s.store.len() + 1) {
                             Err(e) => Err(e),
+                            Ok(_) if resident + 1 > cfg.worker_kv_budget => {
+                                // a Decode never evicts (eviction runs only
+                                // inside Prefill barriers): overdrawing the
+                                // pool is refused outright
+                                Err(ServeError::CapacityExhausted {
+                                    capacity: cfg.worker_kv_budget,
+                                })
+                            }
                             Ok(_) => {
                                 let before = s.store.len();
                                 match s.store.append(&new_key, &new_value) {
@@ -895,6 +999,9 @@ fn execute_batch<B: AttentionBackend>(
                         }
                     }
                 };
+                if appended.is_ok() {
+                    metrics.note_kv_admission(1, resident + 1);
+                }
                 match appended {
                     Ok(prefix) => {
                         mutated = true;
@@ -909,7 +1016,6 @@ fn execute_batch<B: AttentionBackend>(
                         });
                     }
                     Err(e) => deliver(
-                        pool_tx,
                         metrics,
                         Op::Decode,
                         &sink,
@@ -933,7 +1039,6 @@ fn execute_batch<B: AttentionBackend>(
                     });
                 }
                 None => deliver(
-                    pool_tx,
                     metrics,
                     Op::Attend,
                     &sink,
@@ -959,7 +1064,6 @@ fn execute_batch<B: AttentionBackend>(
                     // instead of growing with every id ever evicted
                     evicted.remove(&session);
                     deliver(
-                        pool_tx,
                         metrics,
                         Op::Close,
                         &sink,
@@ -983,7 +1087,7 @@ fn execute_batch<B: AttentionBackend>(
         backend.on_kv_update();
     }
     if !pending.is_empty() {
-        dispatch_pending(backend, cfg, sessions, &pending, &baseline, head, metrics, pool_tx);
+        dispatch_pending(backend, cfg, sessions, &pending, &baseline, head, metrics);
     }
     // every pending query pinned its session exactly once in phase 1
     for p in &pending {
@@ -1002,7 +1106,6 @@ fn execute_batch<B: AttentionBackend>(
             metrics.kv_rows_released += s.store.release() as u64;
         }
         deliver(
-            pool_tx,
             metrics,
             Op::Close,
             &c.sink,
@@ -1021,12 +1124,50 @@ fn execute_batch<B: AttentionBackend>(
     }
 }
 
+/// Run one `Prefill` as its own barrier group: it rebuilds the session's
+/// KV store (and may evict under the shared budget), so nothing may be
+/// batched around it.
+#[allow(clippy::too_many_arguments)]
+fn run_prefill_barrier<B: AttentionBackend>(
+    backend: &mut B,
+    cfg: &ServerConfig,
+    sessions: &mut HashMap<SessionId, Session>,
+    evicted: &mut HashSet<SessionId>,
+    metrics: &mut Metrics,
+    clock: &mut u64,
+    env: Envelope,
+    head: usize,
+) {
+    let Envelope { req, enq, sink } = env;
+    let (id, session) = (req.id(), req.session());
+    *clock += 1;
+    let result = match req {
+        Request::Prefill { keys, values, .. } => {
+            handle_prefill(backend, cfg, sessions, evicted, metrics, *clock, session, keys, values)
+        }
+        _ => unreachable!("only prefills run as barriers"),
+    };
+    deliver(
+        metrics,
+        Op::Prefill,
+        &sink,
+        Response { id, session, head, result, latency: enq.elapsed() },
+    );
+}
+
+/// The standing per-worker scheduler (see the module docs for the
+/// queue → admit → extend → dispatch cycle). The queue outlives every
+/// dispatch: whatever a cycle could not admit stays at the front and
+/// seeds the next plan, and newly-arriving envelopes *extend* the open
+/// plan until a bound fires. Envelopes leave the bounded-queue gauge the
+/// moment the scheduler pops them into a plan — from then on they are
+/// in-flight work, not backlog.
 fn worker_loop<B: AttentionBackend>(
     worker: usize,
     cfg: ServerConfig,
     mut backend: B,
     rx: Receiver<Envelope>,
-    pool_tx: Sender<Response>,
+    gauges: Arc<WorkerGauges>,
 ) -> Metrics {
     let head = worker % cfg.heads;
     let mut metrics = Metrics::new();
@@ -1038,51 +1179,89 @@ fn worker_loop<B: AttentionBackend>(
     // order — the deterministic LRU key (wall-clock ties would make
     // eviction, and therefore outputs, timing-dependent)
     let mut clock: u64 = 0;
-    let batcher = DecodeBatcher::new(cfg.batch);
-    while let Some(groups) = batcher.next_groups(&rx) {
-        metrics.note_batch();
-        for group in groups {
-            match group {
-                DispatchGroup::Barrier(env) => {
-                    let Envelope { req, enq, sink } = env;
-                    let (id, session) = (req.id(), req.session());
-                    clock += 1;
-                    let result = match req {
-                        Request::Prefill { keys, values, .. } => handle_prefill(
-                            &mut backend,
-                            &cfg,
-                            &mut sessions,
-                            &mut evicted,
-                            &mut metrics,
-                            clock,
-                            session,
-                            keys,
-                            values,
-                        ),
-                        _ => unreachable!("only prefills become Barrier groups"),
-                    };
-                    deliver(
-                        &pool_tx,
-                        &mut metrics,
-                        Op::Prefill,
-                        &sink,
-                        Response { id, session, head, result, latency: enq.elapsed() },
-                    );
+    let policy = cfg.batch;
+    let mut queue = WorkQueue::new();
+    loop {
+        // Block until there is work (or every submitter hung up and the
+        // standing queue drained — the shutdown condition).
+        if !queue.wait_nonempty(&rx) {
+            break;
+        }
+        // A Prefill at the front is a barrier: run it alone, then loop.
+        if matches!(queue.front().map(|e| &e.req), Some(Request::Prefill { .. })) {
+            let env = queue.pop().expect("front checked");
+            gauges.depth.fetch_sub(1, Ordering::Relaxed);
+            metrics.note_batch();
+            run_prefill_barrier(
+                &mut backend,
+                &cfg,
+                &mut sessions,
+                &mut evicted,
+                &mut metrics,
+                &mut clock,
+                env,
+                head,
+            );
+            continue;
+        }
+        // Open a dispatch plan and extend it: admit the longest
+        // admissible *prefix* of the queue (never reorder — see module
+        // docs), waiting out the batching window for stragglers.
+        let mut plan = GroupPlan::new(policy.mode);
+        let deadline = Instant::now() + policy.max_wait;
+        loop {
+            while plan.len() < policy.max_batch {
+                match queue.front() {
+                    Some(env)
+                        if !matches!(env.req, Request::Prefill { .. })
+                            && plan.admits(&env.req) =>
+                    {
+                        let env = queue.pop().expect("front checked");
+                        gauges.depth.fetch_sub(1, Ordering::Relaxed);
+                        plan.push(env);
+                    }
+                    _ => break,
                 }
-                DispatchGroup::Batch(items) => execute_batch(
-                    &mut backend,
-                    &cfg,
-                    &mut sessions,
-                    &mut evicted,
-                    &mut clock,
-                    items,
-                    head,
-                    &mut metrics,
-                    &pool_tx,
-                ),
+            }
+            if plan.len() >= policy.max_batch {
+                break;
+            }
+            // the waiting/served pressure valve: once enough backlog has
+            // piled up behind the plan (a barrier at the front, or sheer
+            // volume), dispatch now instead of idling out the window
+            let waiting = queue.len();
+            if waiting > 0 && waiting as f64 >= policy.waiting_served_ratio * plan.len() as f64 {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match queue.wait_arrival(&rx, deadline - now) {
+                ArrivalWait::Arrived => continue,
+                // a timeout may fire early on coarse-timer platforms:
+                // loop and let the deadline re-check decide
+                ArrivalWait::TimedOut => continue,
+                ArrivalWait::Disconnected => break,
             }
         }
+        // a non-Prefill front always admits to an empty plan, so the plan
+        // is non-empty here
+        metrics.note_batch();
+        execute_batch(
+            &mut backend,
+            &cfg,
+            &mut sessions,
+            &mut evicted,
+            &mut clock,
+            plan.take(),
+            head,
+            &mut metrics,
+        );
     }
+    // fold the submission-side gauges into this worker's report
+    metrics.shed_requests += gauges.sheds.load(Ordering::Relaxed);
+    metrics.queue_depth_max = metrics.queue_depth_max.max(gauges.depth_hwm.load(Ordering::Relaxed));
     metrics
 }
 
@@ -1103,34 +1282,47 @@ mod tests {
         CamformerServer::start(cfg, move |_| FunctionalBackend::new(n, 64))
     }
 
+    /// Resolve every ticket and return the responses in id order (the
+    /// successor of the old pool-collect + sort pattern).
+    fn wait_all(tickets: Vec<Ticket>) -> Vec<Response> {
+        let mut resps: Vec<Response> = tickets.into_iter().map(Ticket::wait).collect();
+        resps.sort_by_key(|r| r.id);
+        resps
+    }
+
     #[test]
     fn serves_and_shuts_down() {
         let cfg = ServerConfig { heads: 2, kv_capacity: 128, ..Default::default() };
         let server = functional_server(cfg);
         let mut rng = Rng::new(120);
+        let mut tickets = Vec::new();
         // one session, prefilled independently on both head workers
         for h in 0..2usize {
-            server
-                .submit(Request::Prefill {
-                    id: 1000 + h as u64,
-                    session: 1,
-                    head: h,
-                    keys: rng.normal_vec(128 * 64),
-                    values: rng.normal_vec(128 * 64),
-                })
-                .unwrap();
+            tickets.push(
+                server
+                    .submit_ticket(Request::Prefill {
+                        id: 1000 + h as u64,
+                        session: 1,
+                        head: h,
+                        keys: rng.normal_vec(128 * 64),
+                        values: rng.normal_vec(128 * 64),
+                    })
+                    .unwrap(),
+            );
         }
         for i in 0..10u64 {
-            server
-                .submit(Request::Attend {
-                    id: i,
-                    session: 1,
-                    head: (i % 2) as usize,
-                    query: rng.normal_vec(64),
-                })
-                .unwrap();
+            tickets.push(
+                server
+                    .submit_ticket(Request::Attend {
+                        id: i,
+                        session: 1,
+                        head: (i % 2) as usize,
+                        query: rng.normal_vec(64),
+                    })
+                    .unwrap(),
+            );
         }
-        let resps = server.collect(12);
+        let resps = wait_all(tickets);
         assert_eq!(resps.len(), 12);
         for r in &resps {
             assert!(r.is_ok(), "{:?}", r.result);
@@ -1155,8 +1347,8 @@ mod tests {
         let values = rng.normal_vec(128 * 64);
         let cfg = ServerConfig { kv_capacity: 128, ..Default::default() };
         let server = functional_server(cfg);
-        server
-            .submit(Request::Prefill {
+        let t0 = server
+            .submit_ticket(Request::Prefill {
                 id: 0,
                 session: 7,
                 head: 0,
@@ -1165,11 +1357,10 @@ mod tests {
             })
             .unwrap();
         let q = rng.normal_vec(64);
-        server
-            .submit(Request::Attend { id: 99, session: 7, head: 0, query: q.clone() })
+        let t1 = server
+            .submit_ticket(Request::Attend { id: 99, session: 7, head: 0, query: q.clone() })
             .unwrap();
-        let mut resps = server.collect(2);
-        resps.sort_by_key(|r| r.id);
+        let resps = wait_all(vec![t0, t1]);
         assert_eq!(resps[1].id, 99);
         let mut direct = FunctionalBackend::new(128, 64);
         use crate::coordinator::backend::AttentionBackend as _;
@@ -1180,47 +1371,40 @@ mod tests {
     #[test]
     fn bad_head_rejected_synchronously() {
         let server = functional_server(ServerConfig::default());
-        let err = server.submit(Request::Attend {
-            id: 0,
-            session: 0,
-            head: 5,
-            query: vec![0.0; 64],
-        });
-        assert_eq!(err, Err(ServeError::UnknownHead { head: 5, heads: 1 }));
+        let err = server
+            .submit_ticket(Request::Attend { id: 0, session: 0, head: 5, query: vec![0.0; 64] })
+            .unwrap_err();
+        assert_eq!(err, ServeError::UnknownHead { head: 5, heads: 1 });
         server.shutdown();
     }
 
     #[test]
     fn bad_dims_rejected_synchronously() {
         let server = functional_server(ServerConfig::default());
-        let err = server.submit(Request::Attend {
-            id: 0,
-            session: 0,
-            head: 0,
-            query: vec![0.0; 63],
-        });
-        assert_eq!(
-            err,
-            Err(ServeError::DimMismatch { what: "query", got: 63, want: 64 })
-        );
-        let err = server.submit(Request::Prefill {
-            id: 1,
-            session: 0,
-            head: 0,
-            keys: vec![0.0; 2 * 64],
-            values: vec![0.0; 3 * 64],
-        });
-        assert!(matches!(err, Err(ServeError::DimMismatch { .. })));
+        let err = server
+            .submit_ticket(Request::Attend { id: 0, session: 0, head: 0, query: vec![0.0; 63] })
+            .unwrap_err();
+        assert_eq!(err, ServeError::DimMismatch { what: "query", got: 63, want: 64 });
+        let err = server
+            .submit_ticket(Request::Prefill {
+                id: 1,
+                session: 0,
+                head: 0,
+                keys: vec![0.0; 2 * 64],
+                values: vec![0.0; 3 * 64],
+            })
+            .unwrap_err();
+        assert!(matches!(err, ServeError::DimMismatch { .. }));
         server.shutdown();
     }
 
     #[test]
     fn unknown_session_reported_in_response() {
         let server = functional_server(ServerConfig::default());
-        server
-            .submit(Request::Attend { id: 3, session: 42, head: 0, query: vec![0.0; 64] })
-            .unwrap();
-        let r = server.collect(1).remove(0);
+        let r = server
+            .submit_ticket(Request::Attend { id: 3, session: 42, head: 0, query: vec![0.0; 64] })
+            .unwrap()
+            .wait();
         assert_eq!(r.result, Err(ServeError::UnknownSession { session: 42 }));
         let (m, _) = server.shutdown();
         assert_eq!(m.errors, 1);
@@ -1228,23 +1412,171 @@ mod tests {
     }
 
     #[test]
-    fn session_limit_enforced_under_deny() {
-        let cfg = ServerConfig { max_sessions: 2, kv_capacity: 16, ..Default::default() };
+    fn overload_sheds_synchronously_but_never_a_close() {
+        // max_queue = 0: every queueable submission is refused up front
+        // with the retryable Overloaded — except lifecycle teardown,
+        // which must always drain
+        let cfg = ServerConfig { max_queue: 0, ..Default::default() };
         let server = functional_server(cfg);
-        let mut rng = Rng::new(122);
-        for sid in 0..3u64 {
-            server
-                .submit(Request::Prefill {
+        let err = server
+            .submit_ticket(Request::Attend { id: 0, session: 0, head: 0, query: vec![0.0; 64] })
+            .unwrap_err();
+        assert_eq!(err, ServeError::Overloaded { queue_depth: 0 });
+        assert!(err.is_retryable(&ReclaimPolicy::Deny));
+        let r = server
+            .submit_ticket(Request::Close { id: 1, session: 9, head: 0 })
+            .expect("Close is exempt from shedding")
+            .wait();
+        assert_eq!(r.result, Err(ServeError::UnknownSession { session: 9 }));
+        let (m, _) = server.shutdown();
+        assert_eq!(m.shed_requests, 1);
+        assert!(m.queue_depth_max >= 1, "the exempt close reached the queue");
+    }
+
+    #[test]
+    fn shared_kv_budget_binds_across_sessions_under_deny() {
+        // two 16-row sessions fill a 32-row pool: a third prefill and an
+        // overdrawing decode are refused with the POOL size; closing one
+        // session refunds its rows and decode proceeds
+        let cfg = ServerConfig {
+            worker_kv_budget: 32,
+            kv_capacity: 32,
+            ..Default::default()
+        };
+        let server = functional_server(cfg);
+        let mut rng = Rng::new(129);
+        for sid in 0..2u64 {
+            let r = server
+                .submit_ticket(Request::Prefill {
                     id: sid,
                     session: sid,
                     head: 0,
                     keys: rng.normal_vec(16 * 64),
                     values: rng.normal_vec(16 * 64),
                 })
-                .unwrap();
+                .unwrap()
+                .wait();
+            assert!(r.is_ok(), "{:?}", r.result);
         }
-        let mut resps = server.collect(3);
-        resps.sort_by_key(|r| r.id);
+        let r = server
+            .submit_ticket(Request::Prefill {
+                id: 2,
+                session: 2,
+                head: 0,
+                keys: rng.normal_vec(8 * 64),
+                values: rng.normal_vec(8 * 64),
+            })
+            .unwrap()
+            .wait();
+        assert_eq!(r.result, Err(ServeError::CapacityExhausted { capacity: 32 }));
+        let r = server
+            .submit_ticket(Request::Decode {
+                id: 3,
+                session: 0,
+                head: 0,
+                query: rng.normal_vec(64),
+                new_key: rng.normal_vec(64),
+                new_value: rng.normal_vec(64),
+            })
+            .unwrap()
+            .wait();
+        assert_eq!(
+            r.result,
+            Err(ServeError::CapacityExhausted { capacity: 32 }),
+            "a decode must never overdraw the pool"
+        );
+        let r = server
+            .submit_ticket(Request::Close { id: 4, session: 1, head: 0 })
+            .unwrap()
+            .wait();
+        assert!(r.is_ok());
+        let r = server
+            .submit_ticket(Request::Decode {
+                id: 5,
+                session: 0,
+                head: 0,
+                query: rng.normal_vec(64),
+                new_key: rng.normal_vec(64),
+                new_value: rng.normal_vec(64),
+            })
+            .unwrap()
+            .wait();
+        assert!(r.is_ok(), "refunded rows re-admit: {:?}", r.result);
+        assert_eq!(r.seq_len(), 17);
+        let (m, _) = server.shutdown();
+        assert_eq!(m.kv_rows_admitted, 16 + 16 + 1, "refused requests admit nothing");
+        assert_eq!(m.kv_rows_hwm, 32, "the pool filled exactly once");
+        assert_eq!(m.evictions, 0, "Deny must never evict for budget");
+    }
+
+    #[test]
+    fn shared_kv_budget_evicts_lru_idle_under_pressure() {
+        // same pool, LruEvictIdle: the over-budget prefill evicts the
+        // least-recently-used session instead of failing
+        let cfg = ServerConfig {
+            worker_kv_budget: 32,
+            kv_capacity: 32,
+            reclaim: ReclaimPolicy::LruEvictIdle { min_idle: Duration::ZERO },
+            ..Default::default()
+        };
+        let server = functional_server(cfg);
+        let mut rng = Rng::new(130);
+        for sid in 0..2u64 {
+            let r = server
+                .submit_ticket(Request::Prefill {
+                    id: sid,
+                    session: sid,
+                    head: 0,
+                    keys: rng.normal_vec(16 * 64),
+                    values: rng.normal_vec(16 * 64),
+                })
+                .unwrap()
+                .wait();
+            assert!(r.is_ok(), "{:?}", r.result);
+        }
+        let r = server
+            .submit_ticket(Request::Prefill {
+                id: 2,
+                session: 2,
+                head: 0,
+                keys: rng.normal_vec(16 * 64),
+                values: rng.normal_vec(16 * 64),
+            })
+            .unwrap()
+            .wait();
+        assert!(r.is_ok(), "budget pressure must evict, not refuse: {:?}", r.result);
+        // session 0 (logical-clock LRU) was the victim
+        let r = server
+            .submit_ticket(Request::Attend { id: 3, session: 0, head: 0, query: vec![0.0; 64] })
+            .unwrap()
+            .wait();
+        assert_eq!(r.result, Err(ServeError::Evicted { session: 0 }));
+        let (m, _) = server.shutdown();
+        assert_eq!(m.evictions, 1);
+        assert_eq!(m.kv_rows_released, 16);
+        assert_eq!(m.kv_rows_hwm, 32);
+    }
+
+    #[test]
+    fn session_limit_enforced_under_deny() {
+        let cfg = ServerConfig { max_sessions: 2, kv_capacity: 16, ..Default::default() };
+        let server = functional_server(cfg);
+        let mut rng = Rng::new(122);
+        let mut tickets = Vec::new();
+        for sid in 0..3u64 {
+            tickets.push(
+                server
+                    .submit_ticket(Request::Prefill {
+                        id: sid,
+                        session: sid,
+                        head: 0,
+                        keys: rng.normal_vec(16 * 64),
+                        values: rng.normal_vec(16 * 64),
+                    })
+                    .unwrap(),
+            );
+        }
+        let resps = wait_all(tickets);
         assert!(resps[0].is_ok());
         assert!(resps[1].is_ok());
         assert_eq!(resps[2].result, Err(ServeError::SessionLimit { max_sessions: 2 }));
@@ -1266,35 +1598,36 @@ mod tests {
         };
         let server = functional_server(cfg);
         let mut rng = Rng::new(123);
-        let mut prefill = |id: u64, session: u64| {
-            server
-                .submit(Request::Prefill {
-                    id,
-                    session,
-                    head: 0,
-                    keys: rng.normal_vec(16 * 64),
-                    values: rng.normal_vec(16 * 64),
-                })
-                .unwrap();
+        let mut tickets = Vec::new();
+        let mut prefill = |tickets: &mut Vec<Ticket>, id: u64, session: u64| {
+            tickets.push(
+                server
+                    .submit_ticket(Request::Prefill {
+                        id,
+                        session,
+                        head: 0,
+                        keys: rng.normal_vec(16 * 64),
+                        values: rng.normal_vec(16 * 64),
+                    })
+                    .unwrap(),
+            );
         };
-        prefill(0, 0); // clock 1
-        prefill(1, 1); // clock 2
-        server
-            .submit(Request::Attend { id: 2, session: 0, head: 0, query: vec![0.0; 64] })
-            .unwrap(); // clock 3: session 0 is now the most recent
-        prefill(3, 2); // clock 4: at limit -> evicts session 1 (seq 2)
-        server
-            .submit(Request::Attend { id: 4, session: 1, head: 0, query: vec![0.0; 64] })
-            .unwrap(); // the victim answers Evicted
-        prefill(5, 1); // clock 6: revives 1, evicts session 0 (seq 3)
-        server
-            .submit(Request::Attend { id: 6, session: 0, head: 0, query: vec![0.0; 64] })
-            .unwrap();
-        server
-            .submit(Request::Attend { id: 7, session: 1, head: 0, query: vec![0.0; 64] })
-            .unwrap();
-        let mut resps = server.collect(8);
-        resps.sort_by_key(|r| r.id);
+        let attend = |tickets: &mut Vec<Ticket>, id: u64, session: u64| {
+            tickets.push(
+                server
+                    .submit_ticket(Request::Attend { id, session, head: 0, query: vec![0.0; 64] })
+                    .unwrap(),
+            );
+        };
+        prefill(&mut tickets, 0, 0); // clock 1
+        prefill(&mut tickets, 1, 1); // clock 2
+        attend(&mut tickets, 2, 0); // clock 3: session 0 is now the most recent
+        prefill(&mut tickets, 3, 2); // clock 4: at limit -> evicts session 1 (seq 2)
+        attend(&mut tickets, 4, 1); // the victim answers Evicted
+        prefill(&mut tickets, 5, 1); // clock 6: revives 1, evicts session 0 (seq 3)
+        attend(&mut tickets, 6, 0);
+        attend(&mut tickets, 7, 1);
+        let resps = wait_all(tickets);
         assert!(resps[0].is_ok() && resps[1].is_ok() && resps[2].is_ok());
         assert!(
             resps[3].is_ok(),
@@ -1318,31 +1651,37 @@ mod tests {
         let cfg = ServerConfig { max_sessions: 1, kv_capacity: 16, ..Default::default() };
         let server = functional_server(cfg);
         let mut rng = Rng::new(124);
-        server
-            .submit(Request::Prefill {
-                id: 0,
-                session: 0,
-                head: 0,
-                keys: rng.normal_vec(16 * 64),
-                values: rng.normal_vec(16 * 64),
-            })
-            .unwrap();
-        server.submit(Request::Close { id: 1, session: 0, head: 0 }).unwrap();
-        server
-            .submit(Request::Prefill {
-                id: 2,
-                session: 1,
-                head: 0,
-                keys: rng.normal_vec(8 * 64),
-                values: rng.normal_vec(8 * 64),
-            })
-            .unwrap();
+        let mut tickets = Vec::new();
+        tickets.push(
+            server
+                .submit_ticket(Request::Prefill {
+                    id: 0,
+                    session: 0,
+                    head: 0,
+                    keys: rng.normal_vec(16 * 64),
+                    values: rng.normal_vec(16 * 64),
+                })
+                .unwrap(),
+        );
+        tickets.push(server.submit_ticket(Request::Close { id: 1, session: 0, head: 0 }).unwrap());
+        tickets.push(
+            server
+                .submit_ticket(Request::Prefill {
+                    id: 2,
+                    session: 1,
+                    head: 0,
+                    keys: rng.normal_vec(8 * 64),
+                    values: rng.normal_vec(8 * 64),
+                })
+                .unwrap(),
+        );
         // a closed (not evicted) session is simply unknown afterwards
-        server
-            .submit(Request::Attend { id: 3, session: 0, head: 0, query: vec![0.0; 64] })
-            .unwrap();
-        let mut resps = server.collect(4);
-        resps.sort_by_key(|r| r.id);
+        tickets.push(
+            server
+                .submit_ticket(Request::Attend { id: 3, session: 0, head: 0, query: vec![0.0; 64] })
+                .unwrap(),
+        );
+        let resps = wait_all(tickets);
         assert!(resps[0].is_ok());
         assert!(resps[1].is_ok(), "close must ack: {:?}", resps[1].result);
         assert_eq!(resps[1].seq_len(), 16, "close reports the final context length");
@@ -1362,38 +1701,44 @@ mod tests {
         let cfg = ServerConfig { kv_capacity: 32, ..Default::default() };
         let server = functional_server(cfg);
         let mut rng = Rng::new(125);
-        server
-            .submit(Request::Prefill {
-                id: 0,
-                session: 5,
-                head: 0,
-                keys: rng.normal_vec(8 * 64),
-                values: rng.normal_vec(8 * 64),
-            })
-            .unwrap();
-        server
-            .submit(Request::Decode {
-                id: 1,
-                session: 5,
-                head: 0,
-                query: rng.normal_vec(64),
-                new_key: rng.normal_vec(64),
-                new_value: rng.normal_vec(64),
-            })
-            .unwrap();
-        server.submit(Request::Close { id: 2, session: 5, head: 0 }).unwrap();
-        server
-            .submit(Request::Decode {
-                id: 3,
-                session: 5,
-                head: 0,
-                query: rng.normal_vec(64),
-                new_key: rng.normal_vec(64),
-                new_value: rng.normal_vec(64),
-            })
-            .unwrap();
-        let mut resps = server.collect(4);
-        resps.sort_by_key(|r| r.id);
+        let mut tickets = Vec::new();
+        tickets.push(
+            server
+                .submit_ticket(Request::Prefill {
+                    id: 0,
+                    session: 5,
+                    head: 0,
+                    keys: rng.normal_vec(8 * 64),
+                    values: rng.normal_vec(8 * 64),
+                })
+                .unwrap(),
+        );
+        tickets.push(
+            server
+                .submit_ticket(Request::Decode {
+                    id: 1,
+                    session: 5,
+                    head: 0,
+                    query: rng.normal_vec(64),
+                    new_key: rng.normal_vec(64),
+                    new_value: rng.normal_vec(64),
+                })
+                .unwrap(),
+        );
+        tickets.push(server.submit_ticket(Request::Close { id: 2, session: 5, head: 0 }).unwrap());
+        tickets.push(
+            server
+                .submit_ticket(Request::Decode {
+                    id: 3,
+                    session: 5,
+                    head: 0,
+                    query: rng.normal_vec(64),
+                    new_key: rng.normal_vec(64),
+                    new_value: rng.normal_vec(64),
+                })
+                .unwrap(),
+        );
+        let resps = wait_all(tickets);
         assert!(resps[0].is_ok());
         assert!(resps[1].is_ok(), "pre-close decode: {:?}", resps[1].result);
         assert_eq!(resps[1].seq_len(), 9);
@@ -1432,30 +1777,41 @@ mod tests {
         let server =
             CamformerServer::start(cfg, |_| Fixed16Backend(FunctionalBackend::new(16, 64)));
         let mut rng = Rng::new(124);
-        server
-            .submit(Request::Prefill {
-                id: 0,
-                session: 0,
-                head: 0,
-                keys: rng.normal_vec(16 * 64),
-                values: rng.normal_vec(16 * 64),
-            })
-            .unwrap();
-        server
-            .submit(Request::Decode {
-                id: 1,
-                session: 0,
-                head: 0,
-                query: rng.normal_vec(64),
-                new_key: rng.normal_vec(64),
-                new_value: rng.normal_vec(64),
-            })
-            .unwrap();
-        server
-            .submit(Request::Attend { id: 2, session: 0, head: 0, query: rng.normal_vec(64) })
-            .unwrap();
-        let mut resps = server.collect(3);
-        resps.sort_by_key(|r| r.id);
+        let mut tickets = Vec::new();
+        tickets.push(
+            server
+                .submit_ticket(Request::Prefill {
+                    id: 0,
+                    session: 0,
+                    head: 0,
+                    keys: rng.normal_vec(16 * 64),
+                    values: rng.normal_vec(16 * 64),
+                })
+                .unwrap(),
+        );
+        tickets.push(
+            server
+                .submit_ticket(Request::Decode {
+                    id: 1,
+                    session: 0,
+                    head: 0,
+                    query: rng.normal_vec(64),
+                    new_key: rng.normal_vec(64),
+                    new_value: rng.normal_vec(64),
+                })
+                .unwrap(),
+        );
+        tickets.push(
+            server
+                .submit_ticket(Request::Attend {
+                    id: 2,
+                    session: 0,
+                    head: 0,
+                    query: rng.normal_vec(64),
+                })
+                .unwrap(),
+        );
+        let resps = wait_all(tickets);
         assert!(resps[0].is_ok());
         assert_eq!(resps[1].result, Err(ServeError::CapacityExhausted { capacity: 16 }));
         assert!(resps[2].is_ok(), "worker must survive a refused decode");
@@ -1478,16 +1834,19 @@ mod tests {
             let keys = rng.normal_vec(16 * 64);
             let values = rng.normal_vec(16 * 64);
             mirrors[si].load(&keys, &values).unwrap();
-            server
-                .submit(Request::Prefill {
+            let r = server
+                .submit_ticket(Request::Prefill {
                     id: 100 + si as u64,
                     session: *sid,
                     head: 0,
                     keys,
                     values,
                 })
-                .unwrap();
+                .unwrap()
+                .wait();
+            assert!(r.is_ok(), "{:?}", r.result);
         }
+        let mut tickets = Vec::new();
         let mut expected: Vec<Vec<f32>> = Vec::new();
         let mut id = 0u64;
         for _step in 0..8 {
@@ -1501,22 +1860,22 @@ mod tests {
                 let mut reference = FunctionalBackend::new(n, 64);
                 use crate::coordinator::backend::AttentionBackend as _;
                 expected.push(reference.attend(&q, kp, vp).unwrap());
-                server
-                    .submit(Request::Decode {
-                        id,
-                        session: *sid,
-                        head: 0,
-                        query: q,
-                        new_key: nk,
-                        new_value: nv,
-                    })
-                    .unwrap();
+                tickets.push(
+                    server
+                        .submit_ticket(Request::Decode {
+                            id,
+                            session: *sid,
+                            head: 0,
+                            query: q,
+                            new_key: nk,
+                            new_value: nv,
+                        })
+                        .unwrap(),
+                );
                 id += 1;
             }
         }
-        let mut resps = server.collect(2 + 16);
-        resps.retain(|r| r.id < 100);
-        resps.sort_by_key(|r| r.id);
+        let resps = wait_all(tickets);
         for (r, want) in resps.iter().zip(&expected) {
             assert_eq!(r.output(), &want[..], "request {}", r.id);
         }
@@ -1579,33 +1938,37 @@ mod tests {
         let mut rng = Rng::new(126);
         let keys = rng.normal_vec(prefill_rows * 64);
         let values = rng.normal_vec(prefill_rows * 64);
-        server
-            .submit(Request::Prefill {
+        let r = server
+            .submit_ticket(Request::Prefill {
                 id: 0,
                 session: 0,
                 head: 0,
                 keys: keys.clone(),
                 values: values.clone(),
             })
-            .unwrap();
-        assert!(server.collect(1).remove(0).is_ok());
+            .unwrap()
+            .wait();
+        assert!(r.is_ok());
 
-        // every dispatch fails while the flag is set: however the wire
-        // batcher groups these decodes, each group's appends roll back
+        // every dispatch fails while the flag is set: however the
+        // scheduler groups these decodes, each group's appends roll back
         fail.store(true, Ordering::SeqCst);
+        let mut tickets = Vec::new();
         for id in 1..=3u64 {
-            server
-                .submit(Request::Decode {
-                    id,
-                    session: 0,
-                    head: 0,
-                    query: rng.normal_vec(64),
-                    new_key: rng.normal_vec(64),
-                    new_value: rng.normal_vec(64),
-                })
-                .unwrap();
+            tickets.push(
+                server
+                    .submit_ticket(Request::Decode {
+                        id,
+                        session: 0,
+                        head: 0,
+                        query: rng.normal_vec(64),
+                        new_key: rng.normal_vec(64),
+                        new_value: rng.normal_vec(64),
+                    })
+                    .unwrap(),
+            );
         }
-        for r in server.collect(3) {
+        for r in wait_all(tickets) {
             assert!(matches!(r.result, Err(ServeError::Backend(_))), "{:?}", r.result);
         }
 
@@ -1614,10 +1977,10 @@ mod tests {
         // nothing)
         fail.store(false, Ordering::SeqCst);
         let q = rng.normal_vec(64);
-        server
-            .submit(Request::Attend { id: 9, session: 0, head: 0, query: q.clone() })
-            .unwrap();
-        let r = server.collect(1).remove(0);
+        let r = server
+            .submit_ticket(Request::Attend { id: 9, session: 0, head: 0, query: q.clone() })
+            .unwrap()
+            .wait();
         assert!(r.is_ok(), "{:?}", r.result);
         assert_eq!(r.seq_len(), prefill_rows, "rolled-back appends must not linger");
         let mut mirror = KvStore::new(n, 64, 64);
@@ -1662,9 +2025,12 @@ mod tests {
         let values = rng.normal_vec(8 * 64);
         let mut mirror = KvStore::new(n, 64, 64);
         mirror.load(&keys, &values).unwrap();
-        server
-            .submit(Request::Prefill { id: 1000, session: 0, head: 0, keys, values })
-            .unwrap();
+        let r = server
+            .submit_ticket(Request::Prefill { id: 1000, session: 0, head: 0, keys, values })
+            .unwrap()
+            .wait();
+        assert!(r.is_ok(), "{:?}", r.result);
+        let mut tickets = Vec::new();
         let mut expected: Vec<(Vec<f32>, usize)> = Vec::new();
         for id in 0..steps as u64 {
             let q = rng.normal_vec(64);
@@ -1676,20 +2042,20 @@ mod tests {
             let mut reference = FunctionalBackend::new(n, 64);
             use crate::coordinator::backend::AttentionBackend as _;
             expected.push((reference.attend(&q, kp, vp).unwrap(), mirror.len()));
-            server
-                .submit(Request::Decode {
-                    id,
-                    session: 0,
-                    head: 0,
-                    query: q,
-                    new_key: nk,
-                    new_value: nv,
-                })
-                .unwrap();
+            tickets.push(
+                server
+                    .submit_ticket(Request::Decode {
+                        id,
+                        session: 0,
+                        head: 0,
+                        query: q,
+                        new_key: nk,
+                        new_value: nv,
+                    })
+                    .unwrap(),
+            );
         }
-        let mut resps = server.collect(steps + 1);
-        resps.retain(|r| r.id < 1000);
-        resps.sort_by_key(|r| r.id);
+        let resps = wait_all(tickets);
         for (r, (want, seq_len)) in resps.iter().zip(&expected) {
             assert_eq!(r.output(), &want[..], "step {}", r.id);
             assert_eq!(r.seq_len(), *seq_len, "step {}", r.id);
@@ -1711,29 +2077,34 @@ mod tests {
         let cfg = ServerConfig { heads: 4, kv_capacity: 256, ..Default::default() };
         let server = functional_server(cfg);
         let mut rng = Rng::new(123);
+        let mut tickets = Vec::new();
         for h in 0..4usize {
-            server
-                .submit(Request::Prefill {
-                    id: 1000 + h as u64,
-                    session: 1,
-                    head: h,
-                    keys: rng.normal_vec(256 * 64),
-                    values: rng.normal_vec(256 * 64),
-                })
-                .unwrap();
+            tickets.push(
+                server
+                    .submit_ticket(Request::Prefill {
+                        id: 1000 + h as u64,
+                        session: 1,
+                        head: h,
+                        keys: rng.normal_vec(256 * 64),
+                        values: rng.normal_vec(256 * 64),
+                    })
+                    .unwrap(),
+            );
         }
         let n = 200u64;
         for i in 0..n {
-            server
-                .submit(Request::Attend {
-                    id: i,
-                    session: 1,
-                    head: (i % 4) as usize,
-                    query: rng.normal_vec(64),
-                })
-                .unwrap();
+            tickets.push(
+                server
+                    .submit_ticket(Request::Attend {
+                        id: i,
+                        session: 1,
+                        head: (i % 4) as usize,
+                        query: rng.normal_vec(64),
+                    })
+                    .unwrap(),
+            );
         }
-        let resps = server.collect(n as usize + 4);
+        let resps = wait_all(tickets);
         assert_eq!(resps.len(), n as usize + 4);
         let (metrics, window) = server.shutdown();
         assert_eq!(metrics.completed, n + 4);

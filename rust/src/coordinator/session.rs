@@ -61,6 +61,15 @@ impl Session {
         self.store.len()
     }
 
+    /// This session's draw on the worker's shared KV row budget
+    /// (`ServerConfig::worker_kv_budget`): the rows it holds resident.
+    /// Admission charges a `Prefill` its row count (net of rows it
+    /// replaces) and a `Decode` one row, which is exactly the delta of
+    /// this accessor — summed across sessions it IS the pool occupancy.
+    pub fn kv_rows(&self) -> usize {
+        self.store.len()
+    }
+
     /// Record a request touching this session at logical position `seq`.
     pub fn touch(&mut self, seq: u64) {
         self.last_touch_seq = seq;
@@ -99,8 +108,10 @@ mod tests {
     fn tracks_store_growth() {
         let mut s = Session::new(3, KvStore::new(4, 2, 2));
         assert_eq!(s.seq_len(), 0);
+        assert_eq!(s.kv_rows(), 0);
         s.store.append(&[1.0, 2.0], &[3.0, 4.0]).unwrap();
         assert_eq!(s.seq_len(), 1);
+        assert_eq!(s.kv_rows(), 1, "budget cost tracks resident rows");
         assert_eq!(s.id, 3);
     }
 

@@ -25,7 +25,19 @@
 //! diverge from sequential dispatch here). A deterministic boundary
 //! property test pins the prefix-view semantics at fused-burst lengths
 //! {1, 2, cam-1, cam, cam+1}.
+//!
+//! The standing-scheduler hardening (ISSUE 6) adds an **arrival-jitter
+//! family**: the same streams submitted with randomized inter-arrival
+//! delays against a tight shared `worker_kv_budget` and a tiny
+//! `max_queue`, so plans are extended incrementally across scheduling
+//! cycles, admission rides the shared budget, and `Overloaded` sheds
+//! fire for real (each one replayed to completion — nothing was
+//! enqueued, so program order is preserved). Bit-equality to unjittered
+//! sequential dispatch must survive all of it, with counter parity on
+//! admitted KV rows, pool residency high-water mark, evictions, and
+//! closes.
 
+use std::thread;
 use std::time::Duration;
 
 use camformer::accuracy::functional::{self, AttnConfig};
@@ -33,7 +45,7 @@ use camformer::coordinator::backend::{AttendItem, AttentionBackend, FunctionalBa
 use camformer::coordinator::batcher::{BatchPolicy, DecodeBatcher, DispatchGroup, PlanMode};
 use camformer::coordinator::kv_store::KvStore;
 use camformer::coordinator::server::{CamformerServer, Request, ServerConfig};
-use camformer::coordinator::{Envelope, Metrics, ReclaimPolicy, Response, ServeError};
+use camformer::coordinator::{Envelope, Metrics, ReclaimPolicy, Response, ServeError, Ticket};
 use camformer::util::rng::Rng;
 
 /// Small dimensions keep 200 x 4 server runs fast while still crossing
@@ -84,11 +96,40 @@ fn gen_stream(rng: &mut Rng, ops: usize) -> Vec<Request> {
     out
 }
 
+/// Generous defaults: neither the shared KV budget nor the queue bound
+/// binds, so the legacy stream families pin batching semantics alone.
+const WIDE_BUDGET: usize = 1024 * 64;
+const DEEP_QUEUE: usize = 4096;
+
 fn run_stream<B, F>(
     stream: &[Request],
     policy: BatchPolicy,
     max_sessions: usize,
     reclaim: ReclaimPolicy,
+    make: F,
+) -> (Vec<Response>, Metrics)
+where
+    B: AttentionBackend + 'static,
+    F: FnMut(usize) -> B,
+{
+    run_scheduled(stream, &[], policy, max_sessions, reclaim, WIDE_BUDGET, DEEP_QUEUE, make)
+}
+
+/// Submit the stream one ticket at a time (optionally sleeping the
+/// per-request arrival delay first), replaying `Overloaded` sheds until
+/// admission — a shed request was never enqueued, so the replay keeps
+/// program order intact. Responses return in request-id order; the
+/// server's shed counter must agree exactly with the refusals the
+/// client observed.
+#[allow(clippy::too_many_arguments)]
+fn run_scheduled<B, F>(
+    stream: &[Request],
+    delays: &[Duration],
+    policy: BatchPolicy,
+    max_sessions: usize,
+    reclaim: ReclaimPolicy,
+    worker_kv_budget: usize,
+    max_queue: usize,
     make: F,
 ) -> (Vec<Response>, Metrics)
 where
@@ -102,16 +143,41 @@ where
         max_sessions,
         reclaim,
         batch: policy,
+        worker_kv_budget,
+        max_queue,
         ..Default::default()
     };
     let server = CamformerServer::start(cfg, make);
-    for req in stream {
-        server.submit(req.clone()).unwrap();
+    let mut tickets = Vec::with_capacity(stream.len());
+    let mut shed_replays = 0u64;
+    for (i, req) in stream.iter().enumerate() {
+        if let Some(d) = delays.get(i) {
+            if !d.is_zero() {
+                thread::sleep(*d);
+            }
+        }
+        loop {
+            match server.submit_ticket(req.clone()) {
+                Ok(t) => {
+                    tickets.push(t);
+                    break;
+                }
+                Err(ServeError::Overloaded { .. }) => {
+                    shed_replays += 1;
+                    thread::yield_now();
+                }
+                Err(e) => panic!("submit failed terminally: {e}"),
+            }
+        }
     }
-    let mut resps = server.collect(stream.len());
+    let mut resps: Vec<Response> = tickets.into_iter().map(Ticket::wait).collect();
     resps.sort_by_key(|r| r.id);
     let (m, _) = server.shutdown();
     assert_eq!(m.completed + m.errors, stream.len() as u64);
+    assert_eq!(
+        m.shed_requests, shed_replays,
+        "every shed must surface as exactly one Overloaded refusal"
+    );
     (resps, m)
 }
 
@@ -291,6 +357,106 @@ fn eviction_streams_stay_bit_equal_and_lru_unblocks_admission() {
     );
 }
 
+/// ISSUE 6 acceptance: arrival-jittered streams against a tight shared
+/// KV budget and a tiny queue bound. Randomized inter-arrival delays
+/// mean the standing scheduler sees every plan shape — requests landing
+/// mid-extension, plans flushed empty-queue on the deadline, prefills
+/// arriving while a plan is open — and the tiny `max_queue` makes
+/// `Overloaded` sheds real (each replayed to completion by
+/// `run_scheduled`). For every reclaim policy and dispatch config the
+/// responses must stay bit-equal to UNJITTERED sequential dense
+/// dispatch, with counter parity on the budget gauges: admitted KV
+/// rows, pool-residency high-water mark (which must also never exceed
+/// the budget), evictions, closes, and released rows. That parity is
+/// the proof that budget admission rides program order alone — wire
+/// timing, plan shape, and shed/replay cycles never leak into it.
+#[test]
+fn arrival_jittered_streams_with_kv_budget_stay_bit_equal() {
+    // 1.5x a single session's capacity: three sessions growing toward
+    // CAPACITY=32 overflow the pool long before their own stores fill
+    let budget = 48usize;
+    let lru = ReclaimPolicy::LruEvictIdle { min_idle: Duration::ZERO };
+    let seq_policy = BatchPolicy::conservative(1, Duration::from_micros(50));
+    let mut rng = Rng::new(0x717E12);
+    let mut budget_refusals = 0u64;
+    for case in 0..60u64 {
+        let mut crng = rng.split();
+        let ops = 10 + crng.index(25);
+        let stream = gen_stream(&mut crng, ops);
+        // ~30% of arrivals are delayed up to 400us; the rest land
+        // back-to-back so deep plans still form
+        let delays: Vec<Duration> = (0..stream.len())
+            .map(|_| {
+                if crng.index(10) < 7 {
+                    Duration::ZERO
+                } else {
+                    Duration::from_micros(1 + crng.index(400) as u64)
+                }
+            })
+            .collect();
+        for reclaim in [ReclaimPolicy::Deny, lru] {
+            // ground truth: unjittered sequential dense dispatch under
+            // the SAME budget (so refusals/evictions are part of it)
+            let (sequential, m_seq) = run_scheduled(
+                &stream,
+                &[],
+                seq_policy,
+                8,
+                reclaim,
+                budget,
+                DEEP_QUEUE,
+                |_| pipeline_backend(false),
+            );
+            budget_refusals += sequential
+                .iter()
+                .filter(|r| {
+                    matches!(r.result, Err(ServeError::CapacityExhausted { capacity }) if capacity == budget)
+                })
+                .count() as u64;
+            assert!(m_seq.kv_rows_hwm <= budget as u64, "case {case}: hwm over budget");
+
+            let configs: [(&str, BatchPolicy); 4] = [
+                ("sequential", seq_policy),
+                ("conservative", BatchPolicy::conservative(16, Duration::from_millis(1))),
+                ("fused", BatchPolicy::bounds(16, Duration::from_millis(1))),
+                ("fused/scratch", BatchPolicy::bounds(16, Duration::from_millis(1))),
+            ];
+            for (label, policy) in configs {
+                let (resps, m) = if label == "fused/scratch" {
+                    run_scheduled(&stream, &delays, policy, 8, reclaim, budget, 2, |_| {
+                        NoPrefixViews(pipeline_backend(true))
+                    })
+                } else {
+                    run_scheduled(&stream, &delays, policy, 8, reclaim, budget, 2, |_| {
+                        pipeline_backend(true)
+                    })
+                };
+                let tag = format!("jitter/{label}");
+                assert_equivalent(case, &tag, &sequential, &resps);
+                assert_eq!(
+                    m.kv_rows_admitted, m_seq.kv_rows_admitted,
+                    "case {case} {tag}: admitted-rows parity"
+                );
+                assert_eq!(
+                    m.kv_rows_hwm, m_seq.kv_rows_hwm,
+                    "case {case} {tag}: residency high-water-mark parity"
+                );
+                assert!(m.kv_rows_hwm <= budget as u64, "case {case} {tag}: hwm over budget");
+                assert_eq!(m.evictions, m_seq.evictions, "case {case} {tag}: eviction parity");
+                assert_eq!(m.closes, m_seq.closes, "case {case} {tag}: close parity");
+                assert_eq!(
+                    m.kv_rows_released, m_seq.kv_rows_released,
+                    "case {case} {tag}: release accounting parity"
+                );
+            }
+        }
+    }
+    assert!(
+        budget_refusals > 0,
+        "streams must actually hit the shared KV budget, or this family pins nothing"
+    );
+}
+
 #[test]
 fn planner_invariants_hold_on_random_wire_batches() {
     let mut rng = Rng::new(0xBA7C4);
@@ -299,7 +465,7 @@ fn planner_invariants_hold_on_random_wire_batches() {
         let n = 1 + crng.index(16);
         let stream = gen_stream(&mut crng, n);
         for mode in [PlanMode::Conservative, PlanMode::Speculative] {
-            let items: Vec<Envelope> = stream.iter().cloned().map(Envelope::pool).collect();
+            let items: Vec<Envelope> = stream.iter().cloned().map(Envelope::detached).collect();
             let groups = DecodeBatcher::plan_mode(mode, items);
             // order preservation: flattening the plan restores the batch
             let flat: Vec<u64> = groups

@@ -10,12 +10,20 @@ use camformer::accuracy::functional::{self, AttnConfig};
 use camformer::coordinator::backend::{ArchSimBackend, AttentionBackend, FunctionalBackend};
 use camformer::coordinator::batcher::BatchPolicy;
 use camformer::coordinator::kv_store::KvStore;
-use camformer::coordinator::server::{CamformerServer, Request, ServerConfig};
+use camformer::coordinator::server::{CamformerServer, Request, Response, ServerConfig};
+use camformer::coordinator::Ticket;
 use camformer::util::rng::Rng;
 
 fn kv(n: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
     let mut rng = Rng::new(seed);
     (rng.normal_vec(n * 64), rng.normal_vec(n * 64))
+}
+
+/// Resolve every ticket and return the responses in request-id order.
+fn wait_all(tickets: Vec<Ticket>) -> Vec<Response> {
+    let mut resps: Vec<Response> = tickets.into_iter().map(Ticket::wait).collect();
+    resps.sort_by_key(|r| r.id);
+    resps
 }
 
 #[test]
@@ -32,32 +40,39 @@ fn serving_is_deterministic_and_correct_under_load() {
         },
         |_| FunctionalBackend::new(n, 64),
     );
+    let mut acks = Vec::new();
     for (h, (keys, values)) in kvs.iter().enumerate() {
-        server
-            .submit(Request::Prefill {
-                id: 10_000 + h as u64,
-                session: 1,
-                head: h,
-                keys: keys.clone(),
-                values: values.clone(),
-            })
-            .unwrap();
+        acks.push(
+            server
+                .submit_ticket(Request::Prefill {
+                    id: 10_000 + h as u64,
+                    session: 1,
+                    head: h,
+                    keys: keys.clone(),
+                    values: values.clone(),
+                })
+                .unwrap(),
+        );
+    }
+    for ack in wait_all(acks) {
+        assert!(ack.is_ok(), "prefill failed: {:?}", ack.result);
     }
     let mut rng = Rng::new(200);
     let queries: Vec<Vec<f32>> = (0..120).map(|_| rng.normal_vec(64)).collect();
+    let mut tickets = Vec::new();
     for (i, q) in queries.iter().enumerate() {
-        server
-            .submit(Request::Attend {
-                id: i as u64,
-                session: 1,
-                head: i % heads,
-                query: q.clone(),
-            })
-            .unwrap();
+        tickets.push(
+            server
+                .submit_ticket(Request::Attend {
+                    id: i as u64,
+                    session: 1,
+                    head: i % heads,
+                    query: q.clone(),
+                })
+                .unwrap(),
+        );
     }
-    let mut resps = server.collect(120 + heads);
-    resps.retain(|r| r.id < 10_000);
-    resps.sort_by_key(|r| r.id);
+    let resps = wait_all(tickets);
     assert_eq!(resps.len(), 120);
 
     let cfg = AttnConfig::paper(n, 64);
@@ -81,25 +96,28 @@ fn arch_backend_serves_with_latency_annotation() {
         ServerConfig { kv_capacity: n, ..Default::default() },
         |_| ArchSimBackend::new(n),
     );
-    server
-        .submit(Request::Prefill {
+    let ack = server
+        .submit_ticket(Request::Prefill {
             id: 100,
             session: 0,
             head: 0,
             keys: keys.clone(),
             values: values.clone(),
         })
-        .unwrap();
+        .unwrap()
+        .wait();
+    assert!(ack.is_ok(), "prefill failed: {:?}", ack.result);
     let mut rng = Rng::new(301);
     let queries: Vec<Vec<f32>> = (0..10).map(|_| rng.normal_vec(64)).collect();
+    let mut tickets = Vec::new();
     for (i, q) in queries.iter().enumerate() {
-        server
-            .submit(Request::Attend { id: i as u64, session: 0, head: 0, query: q.clone() })
-            .unwrap();
+        tickets.push(
+            server
+                .submit_ticket(Request::Attend { id: i as u64, session: 0, head: 0, query: q.clone() })
+                .unwrap(),
+        );
     }
-    let mut resps = server.collect(11);
-    resps.retain(|r| r.id < 100);
-    resps.sort_by_key(|r| r.id);
+    let resps = wait_all(tickets);
     assert_eq!(resps.len(), 10);
     // outputs agree with the functional model
     let cfg = AttnConfig::paper(n, 64);
@@ -162,30 +180,35 @@ fn sessions_are_isolated_across_shards() {
         |_| FunctionalBackend::new(n, 64),
     );
     // session 2 -> shard 0, session 3 -> shard 1
-    server
-        .submit(Request::Prefill {
-            id: 0,
-            session: 2,
-            head: 0,
-            keys: k0.clone(),
-            values: v0.clone(),
-        })
-        .unwrap();
-    server
-        .submit(Request::Prefill {
-            id: 1,
-            session: 3,
-            head: 0,
-            keys: k1.clone(),
-            values: v1.clone(),
-        })
-        .unwrap();
     let mut rng = Rng::new(502);
     let q = rng.normal_vec(64);
-    server.submit(Request::Attend { id: 2, session: 2, head: 0, query: q.clone() }).unwrap();
-    server.submit(Request::Attend { id: 3, session: 3, head: 0, query: q.clone() }).unwrap();
-    let mut resps = server.collect(4);
-    resps.sort_by_key(|r| r.id);
+    let tickets = vec![
+        server
+            .submit_ticket(Request::Prefill {
+                id: 0,
+                session: 2,
+                head: 0,
+                keys: k0.clone(),
+                values: v0.clone(),
+            })
+            .unwrap(),
+        server
+            .submit_ticket(Request::Prefill {
+                id: 1,
+                session: 3,
+                head: 0,
+                keys: k1.clone(),
+                values: v1.clone(),
+            })
+            .unwrap(),
+        server
+            .submit_ticket(Request::Attend { id: 2, session: 2, head: 0, query: q.clone() })
+            .unwrap(),
+        server
+            .submit_ticket(Request::Attend { id: 3, session: 3, head: 0, query: q.clone() })
+            .unwrap(),
+    ];
+    let resps = wait_all(tickets);
     let cfg = AttnConfig::paper(n, 64);
     let want0 = functional::camformer_attention(&q, &k0, &v0, &cfg);
     let want1 = functional::camformer_attention(&q, &k1, &v1, &cfg);
@@ -214,28 +237,33 @@ fn attend_after_decode_sees_fresh_cache() {
     let keys = rng.normal_vec(20 * 64);
     let values = rng.normal_vec(20 * 64);
     mirror.load(&keys, &values).unwrap();
-    server
-        .submit(Request::Prefill { id: 0, session: 0, head: 0, keys, values })
-        .unwrap();
     let q = rng.normal_vec(64);
-    // attend (primes the cache), decode (mutates in place), attend again
-    server.submit(Request::Attend { id: 1, session: 0, head: 0, query: q.clone() }).unwrap();
     let nk = rng.normal_vec(64);
     let nv = rng.normal_vec(64);
+    // attend (primes the cache), decode (mutates in place), attend again
+    let tickets = vec![
+        server
+            .submit_ticket(Request::Prefill { id: 0, session: 0, head: 0, keys, values })
+            .unwrap(),
+        server
+            .submit_ticket(Request::Attend { id: 1, session: 0, head: 0, query: q.clone() })
+            .unwrap(),
+        server
+            .submit_ticket(Request::Decode {
+                id: 2,
+                session: 0,
+                head: 0,
+                query: q.clone(),
+                new_key: nk.clone(),
+                new_value: nv.clone(),
+            })
+            .unwrap(),
+        server
+            .submit_ticket(Request::Attend { id: 3, session: 0, head: 0, query: q.clone() })
+            .unwrap(),
+    ];
     mirror.append(&nk, &nv).unwrap();
-    server
-        .submit(Request::Decode {
-            id: 2,
-            session: 0,
-            head: 0,
-            query: q.clone(),
-            new_key: nk,
-            new_value: nv,
-        })
-        .unwrap();
-    server.submit(Request::Attend { id: 3, session: 0, head: 0, query: q.clone() }).unwrap();
-    let mut resps = server.collect(4);
-    resps.sort_by_key(|r| r.id);
+    let resps = wait_all(tickets);
     let rows = mirror.len().div_ceil(quantum) * quantum;
     let (kp, vp, _) = mirror.padded(rows);
     let want = functional::camformer_attention(&q, kp, vp, &AttnConfig::paper(rows, 64));
@@ -261,32 +289,39 @@ fn cross_session_attends_share_dispatches_and_stay_isolated() {
         },
         |_| FunctionalBackend::new(n, 64),
     );
+    let mut acks = Vec::new();
     for (s, (keys, values)) in kvs.iter().enumerate() {
-        server
-            .submit(Request::Prefill {
-                id: 1000 + s as u64,
-                session: s as u64,
-                head: 0,
-                keys: keys.clone(),
-                values: values.clone(),
-            })
-            .unwrap();
+        acks.push(
+            server
+                .submit_ticket(Request::Prefill {
+                    id: 1000 + s as u64,
+                    session: s as u64,
+                    head: 0,
+                    keys: keys.clone(),
+                    values: values.clone(),
+                })
+                .unwrap(),
+        );
+    }
+    for ack in wait_all(acks) {
+        assert!(ack.is_ok(), "prefill failed: {:?}", ack.result);
     }
     let mut rng = Rng::new(701);
     let queries: Vec<Vec<f32>> = (0..40).map(|_| rng.normal_vec(64)).collect();
+    let mut tickets = Vec::new();
     for (i, q) in queries.iter().enumerate() {
-        server
-            .submit(Request::Attend {
-                id: i as u64,
-                session: i as u64 % sessions,
-                head: 0,
-                query: q.clone(),
-            })
-            .unwrap();
+        tickets.push(
+            server
+                .submit_ticket(Request::Attend {
+                    id: i as u64,
+                    session: i as u64 % sessions,
+                    head: 0,
+                    query: q.clone(),
+                })
+                .unwrap(),
+        );
     }
-    let mut resps = server.collect(40 + sessions as usize);
-    resps.retain(|r| r.id < 1000);
-    resps.sort_by_key(|r| r.id);
+    let resps = wait_all(tickets);
     let cfg = AttnConfig::paper(n, 64);
     for r in &resps {
         let (k, v) = &kvs[(r.id % sessions) as usize];
@@ -316,17 +351,31 @@ fn partial_batches_flush_on_timeout() {
         },
         |_| FunctionalBackend::new(n, 64),
     );
-    server
-        .submit(Request::Prefill { id: 100, session: 0, head: 0, keys, values })
-        .unwrap();
     let mut rng = Rng::new(501);
-    // submit 3 << max_batch and expect them all back quickly
+    // submit 1 prefill + 3 attends << max_batch: the standing scheduler
+    // must flush the partial plan on its max_wait deadline, so every
+    // ticket resolves well within the generous bound
+    let mut tickets = vec![server
+        .submit_ticket(Request::Prefill {
+            id: 100,
+            session: 0,
+            head: 0,
+            keys,
+            values,
+        })
+        .unwrap()];
     for i in 0..3u64 {
-        server
-            .submit(Request::Attend { id: i, session: 0, head: 0, query: rng.normal_vec(64) })
-            .unwrap();
+        tickets.push(
+            server
+                .submit_ticket(Request::Attend { id: i, session: 0, head: 0, query: rng.normal_vec(64) })
+                .unwrap(),
+        );
     }
-    let resps = server.collect_timeout(4, Duration::from_secs(5));
-    assert_eq!(resps.len(), 4);
+    for t in tickets {
+        let r = t
+            .wait_timeout(Duration::from_secs(5))
+            .expect("partial batch did not flush before the timeout");
+        assert!(r.is_ok(), "request failed: {:?}", r.result);
+    }
     server.shutdown();
 }

@@ -13,9 +13,16 @@ use camformer::accuracy::functional::{self, AttnConfig};
 use camformer::coordinator::backend::FunctionalBackend;
 use camformer::coordinator::batcher::BatchPolicy;
 use camformer::coordinator::kv_store::KvStore;
-use camformer::coordinator::server::{CamformerServer, Request, ServerConfig};
-use camformer::coordinator::ServeError;
+use camformer::coordinator::server::{CamformerServer, Request, Response, ServerConfig};
+use camformer::coordinator::{ServeError, Ticket};
 use camformer::util::rng::Rng;
+
+/// Resolve every ticket and return the responses in request-id order.
+fn wait_all(tickets: Vec<Ticket>) -> Vec<Response> {
+    let mut resps: Vec<Response> = tickets.into_iter().map(Ticket::wait).collect();
+    resps.sort_by_key(|r| r.id);
+    resps
+}
 
 #[test]
 fn decode_loop_matches_functional_reference_across_sessions() {
@@ -41,22 +48,26 @@ fn decode_loop_matches_functional_reference_across_sessions() {
     let mut rng = Rng::new(7000);
     let mut next_id = 0u64;
 
+    let mut acks = Vec::new();
     for (si, &sid) in session_ids.iter().enumerate() {
         let keys = rng.normal_vec(prefill_rows * d);
         let values = rng.normal_vec(prefill_rows * d);
         mirror[si].load(&keys, &values).unwrap();
-        server
-            .submit(Request::Prefill { id: next_id, session: sid, head: 0, keys, values })
-            .unwrap();
+        acks.push(
+            server
+                .submit_ticket(Request::Prefill { id: next_id, session: sid, head: 0, keys, values })
+                .unwrap(),
+        );
         next_id += 1;
     }
-    for ack in server.collect(session_ids.len()) {
+    for ack in wait_all(acks) {
         assert!(ack.is_ok(), "prefill failed: {:?}", ack.result);
         assert_eq!(ack.seq_len(), prefill_rows);
     }
 
     // interleaved decode streams: session A step t executes between
     // session B's steps, so cross-session contamination would be caught
+    let mut tickets = Vec::new();
     let mut expected: Vec<(u64, Vec<f32>, usize)> = Vec::new();
     for _step in 0..steps {
         for (si, &sid) in session_ids.iter().enumerate() {
@@ -69,23 +80,24 @@ fn decode_loop_matches_functional_reference_across_sessions() {
             let (kp, vp, _) = mirror[si].padded(rows);
             let want = functional::camformer_attention(&q, kp, vp, &AttnConfig::paper(rows, d));
             expected.push((next_id, want, mirror[si].len()));
-            server
-                .submit(Request::Decode {
-                    id: next_id,
-                    session: sid,
-                    head: 0,
-                    query: q,
-                    new_key: nk,
-                    new_value: nv,
-                })
-                .unwrap();
+            tickets.push(
+                server
+                    .submit_ticket(Request::Decode {
+                        id: next_id,
+                        session: sid,
+                        head: 0,
+                        query: q,
+                        new_key: nk,
+                        new_value: nv,
+                    })
+                    .unwrap(),
+            );
             next_id += 1;
         }
     }
 
     let total = steps * session_ids.len();
-    let mut resps = server.collect(total);
-    resps.sort_by_key(|r| r.id);
+    let resps = wait_all(tickets);
     assert_eq!(resps.len(), total);
     for (r, (id, want, seq_len)) in resps.iter().zip(&expected) {
         assert_eq!(r.id, *id);
@@ -122,32 +134,39 @@ fn run_workload(
         ..Default::default()
     };
     let server = CamformerServer::start(cfg, |_| FunctionalBackend::new(capacity, 64));
+    let mut acks = Vec::new();
     for (i, (&sid, (keys, values))) in session_ids.iter().zip(prefills).enumerate() {
-        server
-            .submit(Request::Prefill {
-                id: 100_000 + i as u64,
-                session: sid,
-                head: 0,
-                keys: keys.clone(),
-                values: values.clone(),
-            })
-            .unwrap();
+        acks.push(
+            server
+                .submit_ticket(Request::Prefill {
+                    id: 100_000 + i as u64,
+                    session: sid,
+                    head: 0,
+                    keys: keys.clone(),
+                    values: values.clone(),
+                })
+                .unwrap(),
+        );
     }
+    let mut tickets = Vec::new();
     for (id, (sid, q, nk, nv)) in decodes.iter().enumerate() {
-        server
-            .submit(Request::Decode {
-                id: id as u64,
-                session: *sid,
-                head: 0,
-                query: q.clone(),
-                new_key: nk.clone(),
-                new_value: nv.clone(),
-            })
-            .unwrap();
+        tickets.push(
+            server
+                .submit_ticket(Request::Decode {
+                    id: id as u64,
+                    session: *sid,
+                    head: 0,
+                    query: q.clone(),
+                    new_key: nk.clone(),
+                    new_value: nv.clone(),
+                })
+                .unwrap(),
+        );
     }
-    let mut resps = server.collect(session_ids.len() + decodes.len());
-    resps.retain(|r| r.id < 100_000);
-    resps.sort_by_key(|r| r.id);
+    for ack in wait_all(acks) {
+        assert!(ack.is_ok(), "prefill failed: {:?}", ack.result);
+    }
+    let resps = wait_all(tickets);
     let (m, _) = server.shutdown();
     (resps, m)
 }
@@ -248,24 +267,31 @@ fn refused_request_does_not_poison_batch_mates() {
     // sessions 1 and 2 have headroom; session 3 is prefilled to capacity,
     // so its decode step must be refused at admission
     let mut mirror: Vec<KvStore> = (0..3).map(|_| KvStore::new(capacity, d, d)).collect();
+    let mut acks = Vec::new();
     for (si, &rows) in [16usize, 16, capacity].iter().enumerate() {
         let keys = rng.normal_vec(rows * d);
         let values = rng.normal_vec(rows * d);
         mirror[si].load(&keys, &values).unwrap();
-        server
-            .submit(Request::Prefill {
-                id: 100 + si as u64,
-                session: si as u64 + 1,
-                head: 0,
-                keys,
-                values,
-            })
-            .unwrap();
+        acks.push(
+            server
+                .submit_ticket(Request::Prefill {
+                    id: 100 + si as u64,
+                    session: si as u64 + 1,
+                    head: 0,
+                    keys,
+                    values,
+                })
+                .unwrap(),
+        );
+    }
+    for ack in wait_all(acks) {
+        assert!(ack.is_ok(), "prefill failed: {:?}", ack.result);
     }
 
     // one interleaved decode step per session, plus an attend against a
     // session that was never prefilled: ids 0..=3 land in one wire batch
-    // (and must behave identically even if the batcher splits them)
+    // (and must behave identically even if the scheduler splits them)
+    let mut tickets = Vec::new();
     let mut expected: Vec<(u64, Vec<f32>)> = Vec::new();
     for (si, sid) in [1u64, 2].iter().enumerate() {
         let q = rng.normal_vec(d);
@@ -278,34 +304,38 @@ fn refused_request_does_not_poison_batch_mates() {
             si as u64,
             functional::camformer_attention(&q, kp, vp, &AttnConfig::paper(rows, d)),
         ));
-        server
-            .submit(Request::Decode {
-                id: si as u64,
-                session: *sid,
-                head: 0,
-                query: q,
-                new_key: nk,
-                new_value: nv,
-            })
-            .unwrap();
+        tickets.push(
+            server
+                .submit_ticket(Request::Decode {
+                    id: si as u64,
+                    session: *sid,
+                    head: 0,
+                    query: q,
+                    new_key: nk,
+                    new_value: nv,
+                })
+                .unwrap(),
+        );
     }
-    server
-        .submit(Request::Decode {
-            id: 2,
-            session: 3,
-            head: 0,
-            query: rng.normal_vec(d),
-            new_key: rng.normal_vec(d),
-            new_value: rng.normal_vec(d),
-        })
-        .unwrap();
-    server
-        .submit(Request::Attend { id: 3, session: 999, head: 0, query: rng.normal_vec(d) })
-        .unwrap();
+    tickets.push(
+        server
+            .submit_ticket(Request::Decode {
+                id: 2,
+                session: 3,
+                head: 0,
+                query: rng.normal_vec(d),
+                new_key: rng.normal_vec(d),
+                new_value: rng.normal_vec(d),
+            })
+            .unwrap(),
+    );
+    tickets.push(
+        server
+            .submit_ticket(Request::Attend { id: 3, session: 999, head: 0, query: rng.normal_vec(d) })
+            .unwrap(),
+    );
 
-    let mut resps = server.collect(3 + 4);
-    resps.retain(|r| r.id < 100);
-    resps.sort_by_key(|r| r.id);
+    let resps = wait_all(tickets);
     assert_eq!(resps.len(), 4);
 
     for (id, want) in &expected {
@@ -322,10 +352,10 @@ fn refused_request_does_not_poison_batch_mates() {
 
     // the refused decode committed nothing: session 3 still serves reads
     // at its original context length
-    server
-        .submit(Request::Attend { id: 50, session: 3, head: 0, query: rng.normal_vec(d) })
-        .unwrap();
-    let r = server.collect(1).remove(0);
+    let r = server
+        .submit_ticket(Request::Attend { id: 50, session: 3, head: 0, query: rng.normal_vec(d) })
+        .unwrap()
+        .wait();
     assert!(r.is_ok());
     assert_eq!(r.seq_len(), capacity);
 
@@ -339,32 +369,33 @@ fn decode_past_capacity_yields_typed_error() {
     let cfg = ServerConfig { kv_capacity: 16, ..Default::default() };
     let server = CamformerServer::start(cfg, |_| FunctionalBackend::new(16, 64));
     let mut rng = Rng::new(7100);
-    server
-        .submit(Request::Prefill {
-            id: 0,
-            session: 5,
-            head: 0,
-            keys: rng.normal_vec(16 * 64),
-            values: rng.normal_vec(16 * 64),
-        })
-        .unwrap();
-    server
-        .submit(Request::Decode {
-            id: 1,
-            session: 5,
-            head: 0,
-            query: rng.normal_vec(64),
-            new_key: rng.normal_vec(64),
-            new_value: rng.normal_vec(64),
-        })
-        .unwrap();
-    // the refused decode must not have committed its append: the session
-    // still serves, at the original context length
-    server
-        .submit(Request::Attend { id: 2, session: 5, head: 0, query: rng.normal_vec(64) })
-        .unwrap();
-    let mut resps = server.collect(3);
-    resps.sort_by_key(|r| r.id);
+    // the refused decode (id 1) must not commit its append: the follow-up
+    // attend (id 2) still serves at the original context length
+    let tickets = vec![
+        server
+            .submit_ticket(Request::Prefill {
+                id: 0,
+                session: 5,
+                head: 0,
+                keys: rng.normal_vec(16 * 64),
+                values: rng.normal_vec(16 * 64),
+            })
+            .unwrap(),
+        server
+            .submit_ticket(Request::Decode {
+                id: 1,
+                session: 5,
+                head: 0,
+                query: rng.normal_vec(64),
+                new_key: rng.normal_vec(64),
+                new_value: rng.normal_vec(64),
+            })
+            .unwrap(),
+        server
+            .submit_ticket(Request::Attend { id: 2, session: 5, head: 0, query: rng.normal_vec(64) })
+            .unwrap(),
+    ];
+    let resps = wait_all(tickets);
     assert!(resps[0].is_ok());
     assert_eq!(resps[1].result, Err(ServeError::CapacityExhausted { capacity: 16 }));
     assert!(resps[2].is_ok());
@@ -380,8 +411,8 @@ fn decode_against_unknown_session_is_typed() {
         |_| FunctionalBackend::new(64, 64),
     );
     let mut rng = Rng::new(7200);
-    server
-        .submit(Request::Decode {
+    let r = server
+        .submit_ticket(Request::Decode {
             id: 9,
             session: 1234,
             head: 0,
@@ -389,8 +420,8 @@ fn decode_against_unknown_session_is_typed() {
             new_key: rng.normal_vec(64),
             new_value: rng.normal_vec(64),
         })
-        .unwrap();
-    let r = server.collect(1).remove(0);
+        .unwrap()
+        .wait();
     assert_eq!(r.result, Err(ServeError::UnknownSession { session: 1234 }));
     server.shutdown();
 }

@@ -1,0 +1,242 @@
+//! Standing-scheduler safety properties (ISSUE 6).
+//!
+//! Two invariants that must hold on EVERY execution, not just the
+//! bit-equality streams in `batcher_fuzz.rs`:
+//!
+//! 1. **Budget soundness** — the shared per-worker KV pool never holds
+//!    more resident rows than `ServerConfig::worker_kv_budget`, no
+//!    matter how streams interleave prefills (charged net of replaced
+//!    rows), decode appends (charged one row), closes, and evictions.
+//!    The pool-residency high-water mark gauge is the witness.
+//!
+//! 2. **No silent drops under overload** — with a bounded queue and a
+//!    deliberately stalled backend (so the scheduler cannot drain),
+//!    every `submit_ticket` either enqueues (and its ticket later
+//!    resolves to a typed response) or is refused synchronously with
+//!    retryable [`ServeError::Overloaded`]. Accounting closes exactly:
+//!    resolved + shed == submitted, and the server's shed counter
+//!    agrees with the refusals the client saw.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use camformer::coordinator::backend::{AttentionBackend, FunctionalBackend};
+use camformer::coordinator::batcher::BatchPolicy;
+use camformer::coordinator::server::{CamformerServer, Request, ServerConfig};
+use camformer::coordinator::{ReclaimPolicy, ServeError};
+use camformer::util::rng::Rng;
+
+const D: usize = 32;
+const CAPACITY: usize = 32;
+
+fn gen_stream(rng: &mut Rng, ops: usize) -> Vec<Request> {
+    let sessions: [u64; 3] = [1, 2, 3];
+    let mut out = Vec::with_capacity(ops);
+    for id in 0..ops as u64 {
+        let session = sessions[rng.index(sessions.len())];
+        let req = match rng.index(16) {
+            0..=2 => {
+                let rows = 1 + rng.index(CAPACITY);
+                Request::Prefill {
+                    id,
+                    session,
+                    head: 0,
+                    keys: rng.normal_vec(rows * D),
+                    values: rng.normal_vec(rows * D),
+                }
+            }
+            3..=11 => Request::Decode {
+                id,
+                session,
+                head: 0,
+                query: rng.normal_vec(D),
+                new_key: rng.normal_vec(D),
+                new_value: rng.normal_vec(D),
+            },
+            12 => Request::Close { id, session, head: 0 },
+            _ => Request::Attend { id, session, head: 0, query: rng.normal_vec(D) },
+        };
+        out.push(req);
+    }
+    out
+}
+
+/// Property 1: across randomized streams, reclaim policies, and plan
+/// modes, the pool-residency high-water mark never exceeds the budget —
+/// i.e. admission is checked BEFORE rows become resident, including the
+/// net-of-replaced accounting for re-prefills and the one-row decode
+/// charge inside fused groups.
+#[test]
+fn admission_never_exceeds_worker_kv_budget() {
+    // three sessions of capacity 32 against a 40-row pool: any unchecked
+    // admission path overshoots almost immediately
+    let budget = 40usize;
+    let mut rng = Rng::new(0x5CED0);
+    for case in 0..100u64 {
+        let mut crng = rng.split();
+        let stream = gen_stream(&mut crng, 12 + crng.index(28));
+        for reclaim in [
+            ReclaimPolicy::Deny,
+            ReclaimPolicy::LruEvictIdle { min_idle: Duration::ZERO },
+        ] {
+            for policy in [
+                BatchPolicy::conservative(8, Duration::from_micros(200)),
+                BatchPolicy::bounds(8, Duration::from_micros(200)),
+            ] {
+                let cfg = ServerConfig {
+                    kv_capacity: CAPACITY,
+                    d_k: D,
+                    d_v: D,
+                    max_sessions: 8,
+                    reclaim,
+                    batch: policy,
+                    worker_kv_budget: budget,
+                    ..Default::default()
+                };
+                let server = CamformerServer::start(cfg, |_| FunctionalBackend::new(CAPACITY, D));
+                let tickets: Vec<_> = stream
+                    .iter()
+                    .map(|req| server.submit_ticket(req.clone()).unwrap())
+                    .collect();
+                for t in tickets {
+                    // every response is typed; refusals are fine, drops are not
+                    let _ = t.wait();
+                }
+                let (m, _) = server.shutdown();
+                assert_eq!(m.completed + m.errors, stream.len() as u64, "case {case}");
+                assert!(
+                    m.kv_rows_hwm <= budget as u64,
+                    "case {case} ({reclaim:?}, {policy:?}): pool residency {} broke budget {budget}",
+                    m.kv_rows_hwm
+                );
+            }
+        }
+    }
+}
+
+/// A functional backend whose dispatches spin until the gate opens —
+/// the worker blocks mid-`execute_batch`, so the standing queue can only
+/// fill while the gate is closed.
+struct GatedBackend {
+    inner: FunctionalBackend,
+    gate: Arc<AtomicBool>,
+}
+
+impl AttentionBackend for GatedBackend {
+    fn attend(&mut self, q: &[f32], k: &[f32], v: &[f32]) -> anyhow::Result<Vec<f32>> {
+        while !self.gate.load(Ordering::Acquire) {
+            thread::yield_now();
+        }
+        self.inner.attend(q, k, v)
+    }
+
+    fn name(&self) -> &'static str {
+        "gated"
+    }
+}
+
+/// Property 2: flood a stalled worker far past `max_queue`. Every
+/// submit must either hand back a ticket that later resolves, or shed
+/// synchronously with retryable `Overloaded { queue_depth }` — and a
+/// `Close` is exempt from shedding (retiring a session must stay
+/// possible under overload). When the gate opens, every accepted
+/// ticket resolves to a typed response: accepted + shed == submitted
+/// with nothing unaccounted for.
+#[test]
+fn bounded_queue_never_drops_silently_under_overload() {
+    let max_queue = 4usize;
+    let flood = 64usize;
+    let gate = Arc::new(AtomicBool::new(false));
+    let cfg = ServerConfig {
+        kv_capacity: CAPACITY,
+        d_k: D,
+        d_v: D,
+        // one-at-a-time dispatch: the worker blocks inside the very first
+        // attend, leaving the rest of the flood stuck in the queue
+        batch: BatchPolicy::bounds(1, Duration::from_micros(50)),
+        max_queue,
+        ..Default::default()
+    };
+    let backend_gate = gate.clone();
+    let server = CamformerServer::start(cfg, move |_| GatedBackend {
+        inner: FunctionalBackend::new(CAPACITY, D),
+        gate: backend_gate.clone(),
+    });
+    let mut rng = Rng::new(0x0F10D);
+
+    // the prefill barrier admits while the queue is empty (no backend
+    // attend runs, so it cannot block on the gate)
+    let prefill = server
+        .submit_ticket(Request::Prefill {
+            id: 0,
+            session: 1,
+            head: 0,
+            keys: rng.normal_vec(8 * D),
+            values: rng.normal_vec(8 * D),
+        })
+        .unwrap();
+    assert!(prefill.wait().is_ok());
+
+    let mut accepted = Vec::new();
+    let mut shed = 0u64;
+    for id in 1..=flood as u64 {
+        match server.submit_ticket(Request::Attend {
+            id,
+            session: 1,
+            head: 0,
+            query: rng.normal_vec(D),
+        }) {
+            Ok(t) => accepted.push(t),
+            Err(ServeError::Overloaded { queue_depth }) => {
+                assert!(
+                    queue_depth >= max_queue,
+                    "shed reported depth {queue_depth} below the bound {max_queue}"
+                );
+                assert!(
+                    ServeError::Overloaded { queue_depth }.is_retryable(&ReclaimPolicy::Deny),
+                    "overload must be retryable"
+                );
+                shed += 1;
+            }
+            Err(e) => panic!("submit failed with a non-overload error: {e}"),
+        }
+    }
+    assert!(shed > 0, "a 64-deep flood against max_queue=4 on a stalled worker must shed");
+    assert!(
+        !accepted.is_empty(),
+        "the queue bound admits up to its depth before shedding"
+    );
+
+    // Close is exempt: it must be accepted even while the queue is full
+    let close = server
+        .submit_ticket(Request::Close { id: 9_999, session: 1, head: 0 })
+        .expect("Close must never be shed");
+
+    gate.store(true, Ordering::Release);
+    let mut resolved = 0u64;
+    for t in accepted {
+        // attends queued before the Close succeed; any admitted after it
+        // would answer typed — either way the ticket must resolve
+        let _typed = t
+            .wait_timeout(Duration::from_secs(30))
+            .expect("accepted ticket never resolved: a request was dropped silently");
+        resolved += 1;
+    }
+    assert!(close.wait_timeout(Duration::from_secs(30)).expect("close ticket hung").is_ok());
+
+    let (m, _) = server.shutdown();
+    assert_eq!(
+        resolved + shed,
+        flood as u64,
+        "accounting must close: every submit either resolved or shed"
+    );
+    assert_eq!(m.shed_requests, shed, "server shed counter agrees with observed refusals");
+    assert_eq!(
+        m.completed + m.errors,
+        resolved + 2, // + prefill + close
+        "every accepted request was executed exactly once"
+    );
+    assert!(m.queue_depth_max >= 1);
+}
