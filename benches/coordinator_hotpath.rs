@@ -1,8 +1,9 @@
 //! Bench: the Layer-3 serving hot path — prefill/decode/attend round
 //! trips through the session-oriented coordinator, the cross-session
 //! batched decode loop (batched vs single dispatch), the long-context
-//! dense-vs-sparse / repack-vs-incremental comparison (ISSUE 4, emitted
-//! machine-readably to `BENCH_hotpath.json`), the bursty open-loop
+//! dense-vs-sparse-vs-fused / repack-vs-incremental comparison
+//! (ISSUEs 4, 7, emitted machine-readably to `BENCH_hotpath.json`), the
+//! bursty open-loop
 //! arrival scenario against the standing scheduler's bounded queue and
 //! shared KV budget (ISSUE 6), plus the micro-costs (bf16 dot, softmax
 //! engine) that dominate it.
@@ -402,10 +403,10 @@ fn main() {
         );
     }
 
-    // macro: long-context single-session decode (ISSUE 4) — the
-    // asymptotic comparison behind the survivor-list sparse pipeline and
-    // incremental key packing. Three per-step recipes over the same
-    // growing KV cache:
+    // macro: long-context single-session decode (ISSUEs 4, 7) — the
+    // asymptotic comparison behind the survivor-list sparse pipeline,
+    // incremental key packing, and the fused FlashCAM kernel. Four
+    // per-step recipes over the same growing KV cache:
     //   dense_full_repack  — the pre-ISSUE-4 hot path: re-pack the whole
     //                        padded buffer after every append (what
     //                        on_kv_update + the identity cache forced),
@@ -413,11 +414,20 @@ fn main() {
     //                        pipeline: O(n·d) per step, twice over;
     //   dense_incremental  — store-owned bits (append packs ONE row) but
     //                        dense softmax/contextualization: O(n·d);
-    //   sparse_incremental — the new serving hot path: store-owned bits +
-    //                        survivor-list pipeline: O(n + k·d) per step.
-    // All three are asserted bit-identical step by step, and the work
-    // counters pin the asymptotics: sparse contextualization touches
-    // ≤ final_k V rows per step and every append packs exactly one row.
+    //   sparse_incremental — the ISSUE-4 hot path: store-owned bits +
+    //                        survivor-list pipeline: O(n + k·d) per step;
+    //   fused_incremental  — the serving default since ISSUE 7: one
+    //                        streaming pass over 16-row key tiles, u64
+    //                        XOR+popcount word scoring, a running top-k
+    //                        threshold carried tile to tile — no
+    //                        materialized n-length score vector at all:
+    //                        O(n·d/64 + k·d) per step with a word-level
+    //                        constant.
+    // All four are asserted bit-identical step by step, and the work
+    // counters pin the asymptotics exactly: sparse/fused
+    // contextualization touches ≤ final_k V rows per step, every append
+    // packs exactly one row, and the fused kernel scores precisely one
+    // u64 word per live row (d = 64) while streaming ceil(len/16) tiles.
     let mut hotpath_json: Vec<(String, f64)> = Vec::new();
     {
         let d = 64usize;
@@ -470,10 +480,10 @@ fn main() {
             }
             let ns_dense_inc = t0.elapsed().as_nanos() as f64 / steps as f64;
 
-            // (c) the serving hot path: sparse pipeline + incremental bits
+            // (c) the ISSUE-4 hot path: sparse pipeline + incremental bits
             let mut sparse_outs: Vec<Vec<f32>> = Vec::with_capacity(steps);
             let mut store = KvStore::new(steps, d, d);
-            let mut backend = FunctionalBackend::new(steps, d);
+            let mut backend = FunctionalBackend::new_sparse(steps, d);
             let t0 = Instant::now();
             for (q, nk, nv) in &decodes {
                 store.append(nk, nv).unwrap();
@@ -490,8 +500,30 @@ fn main() {
             }
             let ns_sparse = t0.elapsed().as_nanos() as f64 / steps as f64;
 
+            // (d) the serving default since ISSUE 7: the fused FlashCAM
+            // streaming kernel + incremental bits
+            let mut fused_outs: Vec<Vec<f32>> = Vec::with_capacity(steps);
+            let mut fused_store = KvStore::new(steps, d, d);
+            let mut fused_backend = FunctionalBackend::new(steps, d);
+            let t0 = Instant::now();
+            for (q, nk, nv) in &decodes {
+                fused_store.append(nk, nv).unwrap();
+                let rows = fused_store.len().div_ceil(quantum) * quantum;
+                let (kp, vp, valid) = fused_store.padded(rows);
+                let item = AttendItem {
+                    query: q,
+                    keys: kp,
+                    values: vp,
+                    prefix_rows: valid,
+                    packed: Some(fused_store.packed_view(rows)),
+                };
+                fused_outs.push(fused_backend.attend_batch(&[item]).unwrap().remove(0));
+            }
+            let ns_fused = t0.elapsed().as_nanos() as f64 / steps as f64;
+
             assert_eq!(dense_outs, dense_inc_outs, "incremental bits diverged at n={steps}");
             assert_eq!(dense_outs, sparse_outs, "sparse pipeline diverged at n={steps}");
+            assert_eq!(dense_outs, fused_outs, "fused kernel diverged at n={steps}");
             // the asymptotic contract, in exact work counters:
             let w = backend.work;
             assert_eq!(w.attends, steps as u64);
@@ -508,10 +540,36 @@ fn main() {
                 steps as u64,
                 "each append must pack exactly one row (no full repack)"
             );
+            // the fused kernel's work is analytic: at d = 64 each live
+            // row costs exactly one u64 word, step i has i live rows, and
+            // the stream covers ceil(i/16) tiles — pad rows and the
+            // n-length score vector cost nothing
+            let wf = fused_backend.work;
+            assert_eq!(wf.attends, steps as u64);
+            assert_eq!(
+                wf.words_scored,
+                (steps as u64 * (steps as u64 + 1)) / 2,
+                "fused scoring must cost one word per live row at d=64"
+            );
+            assert_eq!(
+                wf.tiles_streamed,
+                (1..=steps as u64).map(|i| i.div_ceil(16)).sum::<u64>(),
+                "fused streaming must cover ceil(len/16) tiles per step"
+            );
+            assert!(
+                wf.v_rows_touched <= wf.attends * 32,
+                "fused contextualization must touch ≤ final_k rows/step"
+            );
+            assert_eq!(wf.fallback_rows_packed, 0, "store bits must reach the fused kernel");
+            assert!(
+                wf.survivor_corrections > 0,
+                "long streams must actually exercise online survivor eviction"
+            );
             for (label, ns) in [
                 ("dense_full_repack", ns_dense),
                 ("dense_incremental", ns_dense_inc),
                 ("sparse_incremental", ns_sparse),
+                ("fused_incremental", ns_fused),
             ] {
                 println!("bench long_context_{label}_n{steps:<5} {:>12.2} us/step", ns / 1e3);
                 hotpath_json.push((format!("long_context_{label}_n{steps}"), ns));

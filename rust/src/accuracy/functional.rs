@@ -30,10 +30,27 @@
 //!    step, instead of the backend re-packing all n rows after every
 //!    append) and execution borrows them through [`PackedKeysView`] — see
 //!    `coordinator::kv_store`.
+//! 6. **FlashCAM fusion** ([`camformer_attention_view_fused`] +
+//!    [`FusedScratch`]): one streaming pass over 16-row key tiles instead
+//!    of score → top-k → softmax → contextualize as separate passes over
+//!    intermediate n-length vectors. Each tile is scored into a hot
+//!    tile-sized buffer (u64 XOR+popcount words through a per-(d_k,
+//!    adc_bits) match-count → ADC-score LUT — the SAR quantizer is a
+//!    pure function of the match count, so LUT scores are the exact f64s
+//!    the per-row path computes), its stage-1 winners fold into a running
+//!    top-k threshold carried tile-to-tile ([`StreamingTopk`], the same
+//!    insertion scan as stage 2, with online eviction of earlier
+//!    survivors a later tile beats), and softmax + BF16
+//!    contextualization walk only the ≤ `final_k` retained (index,
+//!    score) pairs at stream end. The n-length score vector never
+//!    materialises — scores round-trip through a 16-entry buffer the way
+//!    Flash Attention keeps tiles in SRAM instead of HBM — yet every
+//!    float op runs in the same order on the same values as the dense
+//!    baseline, so the output is bit-identical.
 //!
 //! The dense mask path is kept, unoptimised, as the cross-check baseline
-//! for the sparse pipeline (`FunctionalBackend::new_dense`, the
-//! `batcher_fuzz` harness, and the property tests below).
+//! for the sparse and fused pipelines (`FunctionalBackend::new_dense`,
+//! the `batcher_fuzz` harness, and the property tests below).
 
 use crate::util::bf16;
 
@@ -355,6 +372,235 @@ pub fn camformer_attention_view_sparse(
     );
     let w = lut_softmax_sparse(&scratch.scores, &scratch.survivors, cfg.d_k);
     weighted_sum_bf16_sparse(&w, &scratch.survivors, v, cfg.d_k, valid_rows)
+}
+
+/// Streaming two-stage top-k: the running (index, score) selection the
+/// FlashCAM pass carries tile-to-tile (§Perf iteration 6). Each tile's
+/// stage-1 winners are [`StreamingTopk::offer`]ed in ascending index
+/// order; the buffer keeps the best ≤ k seen so far by (score desc,
+/// index asc), evicting the current worst when a later candidate beats
+/// the admission [`StreamingTopk::threshold`] — the *online correction*
+/// that makes one pass equivalent to selecting over all candidates at
+/// once. The insertion scan is exactly stage 2's (strict `<`, so a tie
+/// at the threshold keeps the earlier index), which is what pins the
+/// final entries, sorted ascending, to `two_stage_topk_indices`.
+#[derive(Clone, Debug, Default)]
+pub struct StreamingTopk {
+    k: usize,
+    /// (row, score) by (score desc, index asc); at most k entries.
+    entries: Vec<(usize, f64)>,
+    corrections: u64,
+}
+
+impl StreamingTopk {
+    /// Empty the selection and set its capacity for a new stream.
+    pub fn reset(&mut self, k: usize) {
+        self.k = k;
+        self.entries.clear();
+        self.corrections = 0;
+    }
+
+    /// The current admission bar: the score of the worst retained entry
+    /// once the selection is full. A later candidate must strictly beat
+    /// it to enter (a tie at the threshold loses to the earlier index).
+    /// `None` while the selection is still filling.
+    pub fn threshold(&self) -> Option<f64> {
+        (self.k > 0 && self.entries.len() == self.k).then(|| self.entries[self.k - 1].1)
+    }
+
+    /// Offer one stage-1 winner. Candidates MUST arrive in ascending row
+    /// order (tiles walked in order, winners sorted within each tile):
+    /// equal scores then sit in arrival order, which is what makes the
+    /// tie-break identical to the batch selection's.
+    pub fn offer(&mut self, row: usize, score: f64) {
+        let mut pos = self.entries.len();
+        while pos > 0 && self.entries[pos - 1].1 < score {
+            pos -= 1;
+        }
+        if pos < self.k {
+            if self.entries.len() == self.k {
+                // online correction: a later tile evicts an earlier
+                // tentative survivor
+                self.entries.pop();
+                self.corrections += 1;
+            }
+            self.entries.insert(pos, (row, score));
+        }
+    }
+
+    /// Retained (row, score) pairs by (score desc, index asc).
+    pub fn entries(&self) -> &[(usize, f64)] {
+        &self.entries
+    }
+
+    /// How many tentative survivors later tiles evicted this stream.
+    pub fn corrections(&self) -> u64 {
+        self.corrections
+    }
+}
+
+/// Reusable buffers for [`camformer_attention_view_fused`] (§Perf
+/// iteration 6): the packed query, the match-count → ADC-score LUT, one
+/// tile's scores, the tile's stage-1 winners, the running
+/// [`StreamingTopk`] and the final survivor pairs — everything the
+/// streaming pass touches, none of it O(n). One per backend/query
+/// stream; per-call work counters are read back through the accessors.
+#[derive(Clone, Debug, Default)]
+pub struct FusedScratch {
+    /// Sign-packed query words.
+    qp: Vec<u64>,
+    /// match count -> quantized ADC score, `d_k + 1` entries.
+    score_lut: Vec<f64>,
+    /// (d_k, adc_bits) the LUT was built for.
+    lut_key: (usize, u32),
+    /// The one live tile's scores (group entries) — the whole "score
+    /// buffer" of the fused pass.
+    tile: Vec<f64>,
+    /// Stage-1 winners of the current tile, tile-local indices.
+    stage1: Vec<usize>,
+    topk: StreamingTopk,
+    /// Final survivors as (row, score), ascending by row.
+    pairs: Vec<(usize, f64)>,
+    /// Final survivor rows, ascending (aligned with `pairs`).
+    survivors: Vec<usize>,
+    words_scored: u64,
+    tiles_streamed: u64,
+}
+
+impl FusedScratch {
+    /// Survivor rows of the most recent fused call, ascending.
+    pub fn survivors(&self) -> &[usize] {
+        &self.survivors
+    }
+
+    /// u64 score words XOR+popcounted in the most recent call (pad rows
+    /// are scored analytically and cost no words).
+    pub fn words_scored(&self) -> u64 {
+        self.words_scored
+    }
+
+    /// 16-row key tiles streamed in the most recent call.
+    pub fn tiles_streamed(&self) -> u64 {
+        self.tiles_streamed
+    }
+
+    /// Online corrections (tentative survivors evicted by later tiles)
+    /// in the most recent call.
+    pub fn corrections(&self) -> u64 {
+        self.topk.corrections()
+    }
+}
+
+/// Eq. 1 over a borrowed packed view as ONE streaming pass over 16-row
+/// key tiles — FlashCAM, §Perf iteration 6. Per tile: score its rows
+/// into a hot `group`-entry buffer (u64 XOR+popcount per 64 key-bit
+/// lanes, match counts looked up in a per-(d_k, adc_bits) score LUT, pad
+/// rows at/beyond `valid_rows` scored analytically at zero word cost),
+/// select the tile's stage-1 winners in place, and fold them into the
+/// running [`StreamingTopk`] threshold carried tile-to-tile. Survivors
+/// are contextualized at stream end from the retained (row, score) pairs
+/// — softmax and the BF16 MACs never see a score that didn't survive, an
+/// n-length score vector never materialises, and eviction of an earlier
+/// tentative survivor by a later tile is the online correction.
+///
+/// Bit-identical to [`camformer_attention_view_dense`]: the LUT holds
+/// the exact f64 the SAR quantizer computes per match count, the
+/// streaming selection is provably `two_stage_topk_indices` (same
+/// insertion scans, same arrival order, same tie-breaks — pinned by the
+/// `property_streaming_*` tests below), and the final softmax +
+/// contextualization execute the same f32 ops in the same ascending
+/// survivor order as the sparse pipeline, which is itself pinned
+/// bit-equal to dense.
+pub fn camformer_attention_view_fused(
+    q: &[f32],
+    keys: &PackedKeysView<'_>,
+    v: &[f32],
+    cfg: &AttnConfig,
+    valid_rows: usize,
+    scratch: &mut FusedScratch,
+) -> Vec<f32> {
+    let (n, group, words) = (keys.n, cfg.group, keys.words);
+    assert_eq!(n % group, 0, "N={n} not a multiple of group={group}");
+    assert_eq!(q.len(), keys.d_k);
+    assert!(valid_rows <= n, "prefix {valid_rows} beyond packed n {n}");
+    scratch.qp.resize(words, 0);
+    pack_signs_into(q, &mut scratch.qp);
+    if scratch.lut_key != (keys.d_k, cfg.adc_bits) || scratch.score_lut.len() != keys.d_k + 1 {
+        scratch.score_lut.clear();
+        scratch
+            .score_lut
+            .extend((0..=keys.d_k).map(|m| quantize_matches(m as u32, keys.d_k, cfg.adc_bits)));
+        scratch.lut_key = (keys.d_k, cfg.adc_bits);
+    }
+    // an all-ones pad row turns !(qp ^ row) into qp itself, so every pad
+    // row scores the query's non-negative-lane popcount — computed once
+    let pad_matches: u32 = scratch.qp.iter().map(|w| w.count_ones()).sum();
+    let pad_score = scratch.score_lut[pad_matches as usize];
+    scratch.topk.reset(cfg.final_k);
+    scratch.tile.resize(group, 0.0);
+    scratch.words_scored = 0;
+    scratch.tiles_streamed = 0;
+    for base in (0..n).step_by(group) {
+        // ① score the tile into the hot buffer
+        for i in 0..group {
+            scratch.tile[i] = if base + i < valid_rows {
+                let row = &keys.bits[(base + i) * words..(base + i + 1) * words];
+                let mut matches = 0u32;
+                for w in 0..words {
+                    let mut eq = !(scratch.qp[w] ^ row[w]);
+                    if w == words - 1 {
+                        eq &= keys.tail_mask;
+                    }
+                    matches += eq.count_ones();
+                }
+                scratch.words_scored += words as u64;
+                scratch.score_lut[matches as usize]
+            } else {
+                pad_score
+            };
+        }
+        // ② the tile's stage-1 winners, ascending (the arrival order the
+        // streaming tie-break relies on)
+        select_topk_into(&scratch.tile, 0..group, cfg.stage1_k, &mut scratch.stage1);
+        scratch.stage1.sort_unstable();
+        // ③ fold into the running threshold
+        for &i in &scratch.stage1 {
+            scratch.topk.offer(base + i, scratch.tile[i]);
+        }
+        scratch.tiles_streamed += 1;
+    }
+    // ④ contextualize the ≤ final_k retained survivors, ascending
+    scratch.pairs.clear();
+    scratch.pairs.extend_from_slice(scratch.topk.entries());
+    scratch.pairs.sort_unstable_by_key(|p| p.0);
+    scratch.survivors.clear();
+    scratch.survivors.extend(scratch.pairs.iter().map(|p| p.0));
+    let w = lut_softmax_pairs(&scratch.pairs, cfg.d_k);
+    weighted_sum_bf16_sparse(&w, &scratch.survivors, v, cfg.d_k, valid_rows)
+}
+
+/// [`lut_softmax_sparse`] over retained (row, score) pairs (ascending by
+/// row) instead of survivor indices into an n-length score vector — the
+/// same f32 ops in the same order on the same values, for the fused pass
+/// that never materialises that vector.
+fn lut_softmax_pairs(pairs: &[(usize, f64)], d_k: usize) -> Vec<f32> {
+    let scale = 1.0 / (d_k as f32).sqrt();
+    let mut mx = f32::NEG_INFINITY;
+    for &(_, s) in pairs {
+        mx = mx.max(s as f32 * scale);
+    }
+    let mut es: Vec<f32> = pairs
+        .iter()
+        .map(|&(_, s)| {
+            let x = s as f32 * scale;
+            if x.is_finite() { (x - mx).exp() } else { 0.0 }
+        })
+        .collect();
+    let sum: f32 = es.iter().sum();
+    for e in &mut es {
+        *e /= sum;
+    }
+    es
 }
 
 /// The pre-optimisation scorer (float inner product): kept as the §Perf
@@ -910,6 +1156,205 @@ mod tests {
             );
             assert_eq!(reused, fresh, "n={n}");
         }
+    }
+
+    #[test]
+    fn property_word_parallel_scores_match_scalar_bool_oracle() {
+        // ISSUE 7 satellite: the u64 XOR+popcount path (incl. its
+        // analytic pad handling) vs a per-bit scalar bool-loop oracle at
+        // word boundaries (d_k 63/64/65) and tile boundaries (n 15/16/17),
+        // including all-pad (valid=0) and single-valid-row prefixes
+        check("u64 word scores = scalar bool oracle", 6, |rng| {
+            for &d_k in &[48usize, 63, 64, 65, 96, 128] {
+                for &n in &[1usize, 15, 16, 17, 3 * 16 + 7] {
+                    let q = rng.normal_vec(d_k);
+                    let k = rng.normal_vec(n * d_k);
+                    let bits = [4u32, 6, 8][rng.index(3)];
+                    let packed = PackedKeys::new(&k, d_k);
+                    for valid in [0usize, 1, n, rng.index(n + 1)] {
+                        let got = packed.scores_prefix(&q, bits, valid);
+                        let want: Vec<f64> = (0..n)
+                            .map(|r| {
+                                let mut matches = 0u32;
+                                for c in 0..d_k {
+                                    let qb = q[c] >= 0.0;
+                                    // rows at/beyond the prefix hold the
+                                    // all-(+1) pad key
+                                    let kb = r >= valid || k[r * d_k + c] >= 0.0;
+                                    matches += (qb == kb) as u32;
+                                }
+                                quantize_matches(matches, d_k, bits)
+                            })
+                            .collect();
+                        assert_eq!(got, want, "d_k={d_k} n={n} valid={valid} bits={bits}");
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn property_fused_attention_bitwise_equals_dense() {
+        // ISSUE 7 acceptance: the FlashCAM streaming pass is
+        // bit-identical to the dense mask path (and the PR-4 sparse
+        // pipeline) over random shapes, word-boundary widths, prefix
+        // views and degenerate all-pad prefixes
+        check("fused attention = dense attention", 40, |rng| {
+            let d_k = [48usize, 63, 64, 65, 96, 128][rng.index(6)];
+            let group = 16usize;
+            let n = group * [1usize, 3, 4, 7][rng.index(4)];
+            let valid_rows = match rng.index(4) {
+                0 => 0,
+                1 => 1,
+                2 => n,
+                _ => rng.index(n + 1),
+            };
+            let q = rng.normal_vec(d_k);
+            let k = rng.normal_vec(n * d_k);
+            let v = rng.normal_vec(n * d_k);
+            let cfg = AttnConfig::paper(n, d_k);
+            let packed = PackedKeys::new(&k, d_k);
+            let dense = camformer_attention_packed_prefix(&q, &packed, &v, &cfg, valid_rows);
+            let mut fused_scratch = FusedScratch::default();
+            let fused = camformer_attention_view_fused(
+                &q,
+                &packed.view(n),
+                &v,
+                &cfg,
+                valid_rows,
+                &mut fused_scratch,
+            );
+            let sparse = camformer_attention_view_sparse(
+                &q,
+                &packed.view(n),
+                &v,
+                &cfg,
+                valid_rows,
+                &mut AttnScratch::default(),
+            );
+            assert_eq!(dense, fused, "d_k={d_k} n={n} valid_rows={valid_rows}");
+            assert_eq!(sparse, fused, "d_k={d_k} n={n} valid_rows={valid_rows}");
+            // work accounting: only live rows cost score words, every
+            // 16-row tile streams exactly once
+            let words = d_k.div_ceil(64) as u64;
+            assert_eq!(fused_scratch.words_scored(), valid_rows as u64 * words);
+            assert_eq!(fused_scratch.tiles_streamed(), (n / group) as u64);
+            assert!(fused_scratch.survivors().len() <= cfg.final_k);
+        });
+    }
+
+    #[test]
+    fn fused_scratch_is_stateless_across_calls() {
+        // one scratch reused across geometries/widths (LUT rebuilds, tile
+        // buffer resizes, carried top-k resets) must match a fresh one
+        let mut rng = Rng::new(48);
+        let mut scratch = FusedScratch::default();
+        for (n, d_k) in [(32usize, 64usize), (128, 96), (64, 63), (64, 64)] {
+            let q = rng.normal_vec(d_k);
+            let k = rng.normal_vec(n * d_k);
+            let v = rng.normal_vec(n * d_k);
+            let cfg = AttnConfig::paper(n, d_k);
+            let packed = PackedKeys::new(&k, d_k);
+            let reused =
+                camformer_attention_view_fused(&q, &packed.view(n), &v, &cfg, n, &mut scratch);
+            let fresh = camformer_attention_view_fused(
+                &q,
+                &packed.view(n),
+                &v,
+                &cfg,
+                n,
+                &mut FusedScratch::default(),
+            );
+            assert_eq!(reused, fresh, "n={n} d_k={d_k}");
+        }
+    }
+
+    #[test]
+    fn property_streaming_topk_matches_two_stage_selection() {
+        // ISSUE 7 satellite: folding each tile's stage-1 winners into the
+        // running threshold selects EXACTLY two_stage_topk_indices'
+        // survivor set (ascending). Coarse integer scores make exact
+        // ties — including ties at the admission threshold — frequent.
+        check("streaming top-k = two-stage top-k", 60, |rng| {
+            let group = 16usize;
+            let n = group * (1 + rng.index(20));
+            let stage1_k = 1 + rng.index(3);
+            let final_k = [4usize, 8, 32][rng.index(3)];
+            let scores: Vec<f64> = (0..n).map(|_| rng.range(0, 9) as f64 - 4.0).collect();
+            let want = two_stage_topk_indices(&scores, group, stage1_k, final_k);
+            let mut topk = StreamingTopk::default();
+            topk.reset(final_k);
+            let mut sel = Vec::new();
+            for t in 0..n / group {
+                let tile = &scores[t * group..(t + 1) * group];
+                select_topk_into(tile, 0..group, stage1_k, &mut sel);
+                sel.sort_unstable();
+                for &i in &sel {
+                    topk.offer(t * group + i, tile[i]);
+                }
+            }
+            let mut got = topk.entries().to_vec();
+            got.sort_unstable_by_key(|p| p.0);
+            let got_rows: Vec<usize> = got.iter().map(|p| p.0).collect();
+            assert_eq!(got_rows, want, "n={n} stage1_k={stage1_k} final_k={final_k}");
+            // the carried scores are the source scores, bit for bit
+            for &(i, s) in &got {
+                assert_eq!(s, scores[i]);
+            }
+            // retained entries stay (score desc, index asc) — the shape
+            // threshold() and the eviction correction rely on
+            let e = topk.entries();
+            for w in e.windows(2) {
+                assert!(w[0].1 > w[1].1 || (w[0].1 == w[1].1 && w[0].0 < w[1].0));
+            }
+            if let Some(th) = topk.threshold() {
+                assert_eq!(th, e[e.len() - 1].1);
+            }
+        });
+    }
+
+    #[test]
+    fn streaming_topk_eviction_and_threshold_ties() {
+        // later-tile eviction: strictly ascending scores mean every tile
+        // after the selection fills evicts earlier tentative survivors
+        let n = 64;
+        let scores: Vec<f64> = (0..n).map(|i| i as f64).collect();
+        let mut topk = StreamingTopk::default();
+        topk.reset(4);
+        let mut sel = Vec::new();
+        for t in 0..n / 16 {
+            select_topk_into(&scores[t * 16..(t + 1) * 16], 0..16, 2, &mut sel);
+            sel.sort_unstable();
+            for &i in &sel {
+                topk.offer(t * 16 + i, scores[t * 16 + i]);
+            }
+        }
+        let mut rows: Vec<usize> = topk.entries().iter().map(|p| p.0).collect();
+        rows.sort_unstable();
+        assert_eq!(rows, two_stage_topk_indices(&scores, 16, 2, 4));
+        assert_eq!(rows, vec![46, 47, 62, 63]);
+        // tiles 3 and 4 each evicted both survivors of the filled buffer
+        assert_eq!(topk.corrections(), 4);
+        assert_eq!(topk.threshold(), Some(46.0));
+
+        // tie at the threshold: with all-equal scores the first final_k
+        // candidates are retained and every later tie is rejected
+        // without a correction
+        let flat = vec![1.5f64; n];
+        topk.reset(4);
+        for t in 0..n / 16 {
+            select_topk_into(&flat[t * 16..(t + 1) * 16], 0..16, 2, &mut sel);
+            sel.sort_unstable();
+            for &i in &sel {
+                topk.offer(t * 16 + i, flat[t * 16 + i]);
+            }
+        }
+        let mut rows: Vec<usize> = topk.entries().iter().map(|p| p.0).collect();
+        rows.sort_unstable();
+        assert_eq!(rows, two_stage_topk_indices(&flat, 16, 2, 4));
+        assert_eq!(rows, vec![0, 1, 16, 17]);
+        assert_eq!(topk.corrections(), 0);
+        assert_eq!(topk.threshold(), Some(1.5));
     }
 
     #[test]

@@ -12,7 +12,7 @@
 //! plus a fixed offset the digital path subtracts — the same fixed-function
 //! trick as the score map.
 
-use super::engine::BimvEngine;
+use super::engine::{BimvEngine, PackedBitKeys};
 
 /// Decompose unsigned ints (< 2^bits) into ±1 bit slices, LSB first.
 /// Returns `bits` matrices of shape `[n][d]`: `slice[s][r][c]` in
@@ -52,6 +52,34 @@ pub fn bimv_int(
     let mut out = vec![0.0f64; n];
     for (s, slice) in decompose(values, bits).iter().enumerate() {
         let partial = engine.scores(query, slice); // q . s_i per row
+        let w = (1u64 << s) as f64;
+        for r in 0..n {
+            out[r] += w * (partial[r] + q_sum) / 2.0;
+        }
+    }
+    out
+}
+
+/// As [`bimv_int`] over the word-parallel digital search path: each ±1
+/// slice is scored through [`PackedBitKeys`] (one XOR+popcount per 64
+/// lanes, §Perf iteration 6's bimv leg) instead of the analog tile walk,
+/// then reconstructed with the identical shift/offset arithmetic. Exact
+/// — no analog slack — and bit-identical to [`bimv_int_ideal`].
+pub fn bimv_int_bitparallel(query: &[bool], values: &[Vec<u32>], bits: u32) -> Vec<f64> {
+    let d = query.len();
+    assert!(values.iter().all(|r| r.len() == d));
+    assert!(
+        values.iter().flatten().all(|&v| v < (1 << bits)),
+        "value exceeds {bits}-bit range"
+    );
+    let n = values.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let q_sum: f64 = query.iter().map(|&b| if b { 1.0 } else { -1.0 }).sum();
+    let mut out = vec![0.0f64; n];
+    for (s, slice) in decompose(values, bits).iter().enumerate() {
+        let partial = PackedBitKeys::pack(slice).scores(query);
         let w = (1u64 << s) as f64;
         for r in 0..n {
             out[r] += w * (partial[r] + q_sum) / 2.0;
@@ -127,6 +155,44 @@ mod tests {
             let want = bimv_int_ideal(&q, &vals);
             assert_eq!(got, want);
         });
+    }
+
+    #[test]
+    fn property_bitparallel_int_matches_ideal_exactly() {
+        // ISSUE 7 satellite: the word-parallel sliced path is EXACT (the
+        // analog path is merely within slack) across word-boundary widths
+        // and tile-boundary heights
+        let ds = [48usize, 63, 64, 65, 96, 128];
+        let ns = [1usize, 15, 16, 17, 3 * 16 + 7];
+        check("bitparallel sliced BIMV = ideal", 6, |rng| {
+            let bits = [2u32, 4, 8][rng.index(3)];
+            for &d in &ds {
+                for &n in &ns {
+                    let q: Vec<bool> = (0..d).map(|_| rng.bool()).collect();
+                    let vals: Vec<Vec<u32>> = (0..n)
+                        .map(|_| (0..d).map(|_| rng.range(0, 1 << bits) as u32).collect())
+                        .collect();
+                    assert_eq!(
+                        bimv_int_bitparallel(&q, &vals, bits),
+                        bimv_int_ideal(&q, &vals),
+                        "d={d} n={n} bits={bits}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn bitparallel_int_matches_analog_cam_path() {
+        // same reconstruction arithmetic on both paths: at d=64 the
+        // nominal array is exact, so the two agree bit for bit
+        let mut rng = Rng::new(32);
+        let q: Vec<bool> = (0..64).map(|_| rng.bool()).collect();
+        let vals: Vec<Vec<u32>> = (0..16)
+            .map(|_| (0..64).map(|_| rng.range(0, 256) as u32).collect())
+            .collect();
+        let mut eng = BimvEngine::new(16, 64);
+        assert_eq!(bimv_int(&mut eng, &q, &vals, 8), bimv_int_bitparallel(&q, &vals, 8));
     }
 
     #[test]

@@ -134,7 +134,9 @@ impl BimvEngine {
         results
     }
 
-    /// Ideal digital reference (XNOR-popcount) for the same inputs.
+    /// Ideal digital reference (XNOR-popcount) for the same inputs,
+    /// evaluated per bit — the slow bool-loop oracle the word-parallel
+    /// [`PackedBitKeys`] path is pinned against.
     pub fn scores_ideal(query: &[bool], keys: &[Vec<bool>]) -> Vec<f64> {
         keys.iter()
             .map(|k| {
@@ -148,6 +150,73 @@ impl BimvEngine {
     pub fn energy(&self, model: &EnergyModel) -> f64 {
         self.stats.programs as f64 * model.program_tile()
             + self.stats.searches as f64 * model.search_tile()
+    }
+}
+
+/// Word-packed binary key memory for the exact digital search path: the
+/// paper's bit-parallel BA-CAM match (all key bits compared in one
+/// constant-time search) as one XOR+popcount per 64 key-bit lanes,
+/// replacing the per-bit bool loop of [`BimvEngine::scores_ideal`] (§Perf
+/// iteration 6, the bimv-level leg of FlashCAM). Pack once, score many
+/// queries — the same key-stationary amortisation the analog walk gets
+/// from reusing a programmed tile.
+///
+/// Layout matches `accuracy::functional::PackedKeys`: LSB-first u64
+/// words, lanes at or past `d_k` left clear. Cleared tail lanes XNOR to
+/// a match in both operands, so instead of a tail mask per row the fixed
+/// overhang is subtracted once from every popcount sum.
+#[derive(Clone, Debug)]
+pub struct PackedBitKeys {
+    pub n: usize,
+    pub d_k: usize,
+    words: usize,
+    bits: Vec<u64>, // row-major n x words
+}
+
+impl PackedBitKeys {
+    /// Pack N rows of d_k bits (true = +1).
+    pub fn pack(keys: &[Vec<bool>]) -> Self {
+        let n = keys.len();
+        let d_k = keys.first().map_or(0, |k| k.len());
+        assert!(keys.iter().all(|k| k.len() == d_k), "ragged key matrix");
+        let words = d_k.div_ceil(64);
+        let mut bits = vec![0u64; n * words];
+        for (r, key) in keys.iter().enumerate() {
+            pack_bools_into(key, &mut bits[r * words..(r + 1) * words]);
+        }
+        PackedBitKeys { n, d_k, words, bits }
+    }
+
+    /// Signed scores q . K^T, bit-identical to
+    /// [`BimvEngine::scores_ideal`] on the same inputs.
+    pub fn scores(&self, query: &[bool]) -> Vec<f64> {
+        assert_eq!(query.len(), self.d_k, "query width != packed d_k");
+        let mut qp = vec![0u64; self.words];
+        pack_bools_into(query, &mut qp);
+        let overhang = (self.words * 64 - self.d_k) as u32;
+        (0..self.n)
+            .map(|r| {
+                let row = &self.bits[r * self.words..(r + 1) * self.words];
+                let mut matches = 0u32;
+                for w in 0..self.words {
+                    matches += (!(qp[w] ^ row[w])).count_ones();
+                }
+                2.0 * (matches - overhang) as f64 - self.d_k as f64
+            })
+            .collect()
+    }
+}
+
+/// Pack bits (true -> 1) into u64 words, LSB-first; lanes past the input
+/// length stay clear.
+fn pack_bools_into(x: &[bool], out: &mut [u64]) {
+    for w in out.iter_mut() {
+        *w = 0;
+    }
+    for (i, &b) in x.iter().enumerate() {
+        if b {
+            out[i / 64] |= 1u64 << (i % 64);
+        }
     }
 }
 
@@ -317,6 +386,61 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn property_word_parallel_search_matches_bool_loop_oracle() {
+        // ISSUE 7 satellite: the u64 XOR+popcount search vs the scalar
+        // bool-loop oracle over word-boundary widths × tile-boundary
+        // heights, incl. the all-pad memory (every row the all-true pad
+        // pattern) and the single-valid-row-in-pads edge cases
+        let ds = [48usize, 63, 64, 65, 96, 128];
+        let ns = [1usize, 15, 16, 17, 3 * 16 + 7];
+        check("word-parallel search = bool-loop oracle", 6, |rng| {
+            for &d_k in &ds {
+                for &n in &ns {
+                    let q: Vec<bool> = (0..d_k).map(|_| rng.bool()).collect();
+                    let keys: Vec<Vec<bool>> =
+                        (0..n).map(|_| (0..d_k).map(|_| rng.bool()).collect()).collect();
+                    assert_eq!(
+                        PackedBitKeys::pack(&keys).scores(&q),
+                        BimvEngine::scores_ideal(&q, &keys),
+                        "d_k={d_k} n={n}"
+                    );
+                    // all-pad: every row holds the all-(+1) pad pattern
+                    let pad = vec![vec![true; d_k]; n];
+                    assert_eq!(
+                        PackedBitKeys::pack(&pad).scores(&q),
+                        BimvEngine::scores_ideal(&q, &pad),
+                        "d_k={d_k} n={n} all-pad"
+                    );
+                    // a single live row among pads
+                    let mut one = pad.clone();
+                    one[rng.index(n)] = (0..d_k).map(|_| rng.bool()).collect();
+                    assert_eq!(
+                        PackedBitKeys::pack(&one).scores(&q),
+                        BimvEngine::scores_ideal(&q, &one),
+                        "d_k={d_k} n={n} single-valid"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn word_parallel_search_tracks_analog_engine_within_slack() {
+        // the packed digital path sits where scores_ideal did in the
+        // analog-slack contract: within one ADC code per vertical tile
+        let mut rng = Rng::new(25);
+        let d_k = 3 * 64 + 7;
+        let q = rand_bits(&mut rng, d_k);
+        let keys: Vec<Vec<bool>> = (0..55).map(|_| rand_bits(&mut rng, d_k)).collect();
+        let analog = BimvEngine::new(16, 64).scores(&q, &keys);
+        let packed = PackedBitKeys::pack(&keys).scores(&q);
+        let tol = 2.0 * d_k.div_ceil(64) as f64;
+        for (a, p) in analog.iter().zip(&packed) {
+            assert!((a - p).abs() <= tol, "{a} vs {p}");
+        }
     }
 
     #[test]

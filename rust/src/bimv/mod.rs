@@ -11,5 +11,5 @@ pub mod bitslice;
 pub mod engine;
 pub mod tiling;
 
-pub use engine::BimvEngine;
+pub use engine::{BimvEngine, PackedBitKeys};
 pub use tiling::{TilePlan, TileStep};

@@ -123,67 +123,126 @@ pub trait AttentionBackend: Send {
     /// per-memory state.
     fn on_kv_update(&mut self) {}
 
+    /// Hot-path work counters, for backends that keep them
+    /// ([`WorkStats`]). The serving layer folds them into `Metrics` when
+    /// a worker retires its backend, so dispatch-config equivalence can
+    /// be asserted down to the work performed, not just the outputs.
+    fn work_stats(&self) -> Option<WorkStats> {
+        None
+    }
+
     fn name(&self) -> &'static str;
 }
 
 /// Hot-path work accounting for [`FunctionalBackend`], read by the
-/// long-context bench to pin the sparse path's asymptotics (ISSUE 4).
-#[derive(Clone, Copy, Debug, Default)]
+/// long-context bench to pin the fast paths' asymptotics (ISSUEs 4, 7)
+/// and folded into `Metrics` at worker exit. `PartialEq` so the fuzz
+/// harness can assert counter parity across dispatch configs.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct WorkStats {
     /// Queries served (single attends + batch items).
     pub attends: u64,
     /// V rows contextualization actually walked: ≤ `final_k` per query
-    /// on the sparse path, the full padded context on the dense baseline.
+    /// on the sparse/fused paths, the full padded context on the dense
+    /// baseline.
     pub v_rows_touched: u64,
     /// Key rows the backend packed itself because no store-owned packed
     /// view was supplied — the O(n·d_k) fallback that incremental
     /// `KvStore` packing retires from the serving hot path (must stay 0
     /// when every item carries `AttendItem::packed`).
     pub fallback_rows_packed: u64,
+    /// u64 key-bit words XOR+popcounted by the fused pipeline — only
+    /// live (pre-prefix) rows cost words; pad rows are scored
+    /// analytically for free.
+    pub words_scored: u64,
+    /// 16-row key tiles the fused pipeline streamed.
+    pub tiles_streamed: u64,
+    /// Tentative streaming-top-k survivors evicted by later tiles (the
+    /// fused pipeline's online corrections).
+    pub survivor_corrections: u64,
+}
+
+impl WorkStats {
+    /// Field-wise accumulate (worker metrics folding).
+    pub fn add(&mut self, other: &WorkStats) {
+        self.attends += other.attends;
+        self.v_rows_touched += other.v_rows_touched;
+        self.fallback_rows_packed += other.fallback_rows_packed;
+        self.words_scored += other.words_scored;
+        self.tiles_streamed += other.tiles_streamed;
+        self.survivor_corrections += other.survivor_corrections;
+    }
+}
+
+/// Which functional pipeline serves a query — all three are bit-identical
+/// on the same inputs (pinned by `accuracy::functional` property tests
+/// and the `batcher_fuzz` dispatch-config matrix).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pipeline {
+    /// FlashCAM (§Perf iteration 6, default): one streaming pass over
+    /// 16-row tiles — u64-word scoring into a hot tile buffer, a running
+    /// top-k threshold carried tile-to-tile, survivors contextualized at
+    /// stream end. No n-length score vector.
+    Fused,
+    /// Survivor-list sparse pipeline (§Perf iteration 4): full score
+    /// vector, then softmax + BF16 walk only the ≤ `final_k` survivors.
+    /// Retained as the first cross-check baseline.
+    Sparse,
+    /// Dense mask baseline: every stage walks all n rows. Unoptimised on
+    /// purpose — the reference everything else is pinned against.
+    Dense,
 }
 
 /// Pure-Rust functional backend.
 ///
-/// §Perf: serves through the survivor-list sparse pipeline by default
-/// (`functional::camformer_attention_view_sparse`) — softmax and BF16
-/// contextualization walk only the ≤ `final_k` top-k survivors, and
+/// §Perf: serves through the FlashCAM fused pipeline by default
+/// (`functional::camformer_attention_view_fused`) — one streaming pass
+/// over 16-row key tiles with u64 XOR+popcount word scoring and a
+/// running top-k threshold, no materialized n-length score vector — and
 /// batch items dispatched from a live `KvStore` carry the store-owned
 /// packed key bits (`AttendItem::packed`), so a decode step costs
-/// O(n + k·d) instead of the former O(n·d) score-walk plus the
-/// per-mutation full re-pack behind the retired identity cache +
-/// `on_kv_update` dance. [`FunctionalBackend::new_dense`] keeps the
-/// dense boolean-mask path as the bit-identical cross-check baseline
-/// (enforced by the randomized `batcher_fuzz` harness and the
-/// `accuracy::functional` property tests).
+/// O(n/64·w + k·d) with no packing at all on the serving path.
+/// [`FunctionalBackend::new_sparse`] keeps the PR-4 survivor-list
+/// pipeline and [`FunctionalBackend::new_dense`] the dense boolean-mask
+/// path as bit-identical cross-check baselines (enforced by the
+/// randomized `batcher_fuzz` harness and the `accuracy::functional`
+/// property tests).
 pub struct FunctionalBackend {
     pub cfg: AttnConfig,
-    /// Survivor-list sparse pipeline (default) vs dense mask baseline;
-    /// both produce bit-identical outputs.
-    pub use_sparse: bool,
+    /// Serving pipeline; all variants produce bit-identical outputs.
+    pub pipeline: Pipeline,
     /// Work counters (see [`WorkStats`]).
     pub work: WorkStats,
     scratch: functional::AttnScratch,
+    fused: functional::FusedScratch,
 }
 
 impl FunctionalBackend {
-    /// Sparse survivor-list serving (the hot path).
+    /// FlashCAM fused serving (the hot path).
     pub fn new(n: usize, d_k: usize) -> Self {
         FunctionalBackend {
             cfg: AttnConfig::paper(n, d_k),
-            use_sparse: true,
+            pipeline: Pipeline::Fused,
             work: WorkStats::default(),
             scratch: functional::AttnScratch::default(),
+            fused: functional::FusedScratch::default(),
         }
     }
 
+    /// Survivor-list sparse pipeline (the PR-4 hot path). Kept as a
+    /// cross-check baseline for the fused default.
+    pub fn new_sparse(n: usize, d_k: usize) -> Self {
+        FunctionalBackend { pipeline: Pipeline::Sparse, ..Self::new(n, d_k) }
+    }
+
     /// Dense-mask baseline: every stage walks all n rows. Kept as the
-    /// cross-check the sparse path is asserted bit-identical against.
+    /// cross-check the fast pipelines are asserted bit-identical against.
     pub fn new_dense(n: usize, d_k: usize) -> Self {
-        FunctionalBackend { use_sparse: false, ..Self::new(n, d_k) }
+        FunctionalBackend { pipeline: Pipeline::Dense, ..Self::new(n, d_k) }
     }
 
     /// One query over a packed view bounded at `valid_rows`, through the
-    /// configured (sparse or dense) pipeline.
+    /// configured pipeline.
     fn run(
         &mut self,
         q: &[f32],
@@ -193,20 +252,38 @@ impl FunctionalBackend {
         valid_rows: usize,
     ) -> Vec<f32> {
         self.work.attends += 1;
-        if self.use_sparse {
-            let out = functional::camformer_attention_view_sparse(
-                q,
-                view,
-                v,
-                cfg,
-                valid_rows,
-                &mut self.scratch,
-            );
-            self.work.v_rows_touched += self.scratch.survivors().len() as u64;
-            out
-        } else {
-            self.work.v_rows_touched += cfg.n as u64;
-            functional::camformer_attention_view_dense(q, view, v, cfg, valid_rows)
+        match self.pipeline {
+            Pipeline::Fused => {
+                let out = functional::camformer_attention_view_fused(
+                    q,
+                    view,
+                    v,
+                    cfg,
+                    valid_rows,
+                    &mut self.fused,
+                );
+                self.work.v_rows_touched += self.fused.survivors().len() as u64;
+                self.work.words_scored += self.fused.words_scored();
+                self.work.tiles_streamed += self.fused.tiles_streamed();
+                self.work.survivor_corrections += self.fused.corrections();
+                out
+            }
+            Pipeline::Sparse => {
+                let out = functional::camformer_attention_view_sparse(
+                    q,
+                    view,
+                    v,
+                    cfg,
+                    valid_rows,
+                    &mut self.scratch,
+                );
+                self.work.v_rows_touched += self.scratch.survivors().len() as u64;
+                out
+            }
+            Pipeline::Dense => {
+                self.work.v_rows_touched += cfg.n as u64;
+                functional::camformer_attention_view_dense(q, view, v, cfg, valid_rows)
+            }
         }
     }
 }
@@ -257,6 +334,10 @@ impl AttentionBackend for FunctionalBackend {
 
     fn supports_prefix_views(&self) -> bool {
         true
+    }
+
+    fn work_stats(&self) -> Option<WorkStats> {
+        Some(self.work)
     }
 
     fn name(&self) -> &'static str {
@@ -565,7 +646,7 @@ mod tests {
     }
 
     #[test]
-    fn dense_and_sparse_pipelines_agree_bitwise() {
+    fn all_three_pipelines_agree_bitwise() {
         let mut rng = Rng::new(117);
         let k = rng.normal_vec(96 * 64);
         let v = rng.normal_vec(96 * 64);
@@ -581,14 +662,27 @@ mod tests {
                 packed: None,
             })
             .collect();
-        let mut sparse = FunctionalBackend::new(96, 64);
+        let mut fused = FunctionalBackend::new(96, 64);
+        let mut sparse = FunctionalBackend::new_sparse(96, 64);
         let mut dense = FunctionalBackend::new_dense(96, 64);
-        assert_eq!(sparse.attend_batch(&items).unwrap(), dense.attend_batch(&items).unwrap());
-        assert_eq!(sparse.attend(&qs[0], &k, &v).unwrap(), dense.attend(&qs[0], &k, &v).unwrap());
-        // the sparse path walks only survivors; the dense baseline walks
+        assert_eq!(fused.pipeline, Pipeline::Fused);
+        let outs = dense.attend_batch(&items).unwrap();
+        assert_eq!(fused.attend_batch(&items).unwrap(), outs);
+        assert_eq!(sparse.attend_batch(&items).unwrap(), outs);
+        // the fast paths walk only survivors; the dense baseline walks
         // the whole context every query
+        assert!(fused.work.v_rows_touched <= fused.work.attends * 32);
         assert!(sparse.work.v_rows_touched <= sparse.work.attends * 32);
         assert_eq!(dense.work.v_rows_touched, dense.work.attends * 96);
+        // fused work accounting: five batch items over prefixes 90..94 at
+        // d_k=64 (one word per live row), 6 tiles each; only the fused
+        // pipeline streams tiles or scores words
+        assert_eq!(fused.work.words_scored, (90 + 91 + 92 + 93 + 94) as u64);
+        assert_eq!(fused.work.tiles_streamed, 5 * 6);
+        assert_eq!(sparse.work.words_scored, 0);
+        assert_eq!(dense.work.tiles_streamed, 0);
+        assert_eq!(fused.work_stats(), Some(fused.work));
+        assert_eq!(fused.attend(&qs[0], &k, &v).unwrap(), dense.attend(&qs[0], &k, &v).unwrap());
     }
 
     #[test]

@@ -2,6 +2,7 @@
 
 use std::time::Duration;
 
+use super::backend::WorkStats;
 use crate::util::stats;
 
 /// Rolling metrics for one server (or one worker).
@@ -39,6 +40,12 @@ pub struct Metrics {
     pub queue_depth_max: u64,
     pub kv_rows_admitted: u64,
     pub kv_rows_hwm: u64,
+    /// Backend hot-path work counters (ISSUE 7), folded in from
+    /// [`AttentionBackend::work_stats`](super::AttentionBackend::work_stats)
+    /// when a worker retires its backend. All flows, so dispatch-config
+    /// equivalence extends to the work performed: the fuzz harness
+    /// asserts parity on these across scheduling modes.
+    pub work: WorkStats,
 }
 
 impl Metrics {
@@ -92,6 +99,7 @@ impl Metrics {
         self.max_occupancy = self.max_occupancy.max(other.max_occupancy);
         self.shed_requests += other.shed_requests;
         self.kv_rows_admitted += other.kv_rows_admitted;
+        self.work.add(&other.work);
         // high-water marks are per-worker peaks, not additive flows
         self.queue_depth_max = self.queue_depth_max.max(other.queue_depth_max);
         self.kv_rows_hwm = self.kv_rows_hwm.max(other.kv_rows_hwm);
@@ -260,6 +268,23 @@ mod tests {
         assert_eq!(a.kv_rows_admitted, 17, "admissions are a flow: summed");
         assert_eq!(a.queue_depth_max, 9, "queue peak is per-worker: maxed");
         assert_eq!(a.kv_rows_hwm, 30, "budget peak is per-worker: maxed");
+    }
+
+    #[test]
+    fn merge_sums_backend_work_counters() {
+        let mut a = Metrics::new();
+        a.work.attends = 3;
+        a.work.words_scored = 100;
+        let mut b = Metrics::new();
+        b.work.attends = 2;
+        b.work.words_scored = 50;
+        b.work.tiles_streamed = 7;
+        b.work.survivor_corrections = 4;
+        a.merge(&b);
+        assert_eq!(a.work.attends, 5, "work counters are flows: summed");
+        assert_eq!(a.work.words_scored, 150);
+        assert_eq!(a.work.tiles_streamed, 7);
+        assert_eq!(a.work.survivor_corrections, 4);
     }
 
     #[test]

@@ -50,11 +50,16 @@
 //!   the same admission rules;
 //! * [`backend`]   — pluggable execution: PJRT artifacts (the real hot
 //!   path, `pjrt` feature), the pure-Rust functional model (serving
-//!   through the survivor-list sparse pipeline by default — softmax and
-//!   BF16 contextualization walk only the ≤ final_k top-k survivors,
-//!   O(n + k·d) per decode step, bit-identical to the dense baseline),
-//!   or the cycle-annotated architecture simulator; all take whole
-//!   dispatch groups through [`AttentionBackend::attend_batch`];
+//!   through the fused FlashCAM streaming kernel by default — u64-word
+//!   packed scoring over 16-row tiles, a running top-k threshold
+//!   carried tile-to-tile, survivors contextualized at stream end, no
+//!   materialized n-length score vector, O(n·d/64 + k·d) per decode
+//!   step — with the survivor-list sparse pipeline and the dense
+//!   baseline retained as bit-identical cross-checks, selected by
+//!   [`Pipeline`]), or the cycle-annotated architecture simulator; all
+//!   take whole dispatch groups through
+//!   [`AttentionBackend::attend_batch`], and hot-path work counters
+//!   ([`WorkStats`]) fold into [`Metrics`] at worker exit;
 //! * [`error`]     — [`ServeError`]: every admission / serving failure as
 //!   a typed variant, reported per request (one refused batch member
 //!   never poisons its batch-mates), with
@@ -113,8 +118,8 @@
 //! | layer | kind | where |
 //! |-------|------|-------|
 //! | batcher (work queue, incremental plans, both planning modes + Close barriers), kv (incl. prefix views, release), metrics (incl. scheduler gauges), session (lifecycle state), server (overload shedding, shared KV budget) | unit | in-module `#[cfg(test)]` |
-//! | scorers, masks, prefix masking, BIMV tiles | property (seeded, `util::check`) | `accuracy::functional`, `bimv::engine` |
-//! | randomized batched-vs-sequential equivalence (arrival-jittered streams × reclaim policies × dispatch configs, incl. Close + LRU-eviction streams + counter parity) + planner invariants + fused-burst prefix boundaries | fuzz/property | `rust/tests/batcher_fuzz.rs` |
+//! | scorers, masks, prefix masking, BIMV tiles, word-parallel scoring vs the scalar bool-loop oracle, streaming top-k vs batch two-stage selection, fused-kernel bit-equality | property (seeded, `util::check`) | `accuracy::functional`, `bimv::engine`, `bimv::bitslice` |
+//! | randomized batched-vs-sequential equivalence (arrival-jittered streams × reclaim policies × dispatch configs × all three [`Pipeline`]s, incl. Close + LRU-eviction streams + counter parity + `WorkStats` work parity across prefix-native configs) + planner invariants + fused-burst prefix boundaries | fuzz/property | `rust/tests/batcher_fuzz.rs` |
 //! | scheduler properties: budget high-water mark never exceeds `worker_kv_budget`; bounded queues — every submit enqueues, sheds `Overloaded`, or fails typed | property | `rust/tests/scheduler_props.rs` |
 //! | ticket semantics (out-of-order completion, timeout expiry, dropped tickets, WorkerGone), session handles, open fan-out, eviction | integration | `rust/tests/session_api.rs` |
 //! | decode serving (interleaved sessions, live append, batched vs sequential bit-equality, per-item admission failures) | integration | `rust/tests/decode_serving.rs` |
@@ -132,7 +137,7 @@ pub mod metrics;
 pub mod server;
 pub mod session;
 
-pub use backend::{AttendItem, AttentionBackend, FunctionalBackend};
+pub use backend::{AttendItem, AttentionBackend, FunctionalBackend, Pipeline, WorkStats};
 pub use batcher::{
     ArrivalWait, BatchPolicy, DecodeBatcher, DispatchGroup, GroupPlan, PlanMode, WorkQueue,
 };

@@ -1262,6 +1262,11 @@ fn worker_loop<B: AttentionBackend>(
     // fold the submission-side gauges into this worker's report
     metrics.shed_requests += gauges.sheds.load(Ordering::Relaxed);
     metrics.queue_depth_max = metrics.queue_depth_max.max(gauges.depth_hwm.load(Ordering::Relaxed));
+    // ... and the backend's hot-path work counters (ISSUE 7): dispatch
+    // configs must agree not only on outputs but on the work performed
+    if let Some(work) = backend.work_stats() {
+        metrics.work.add(&work);
+    }
     metrics
 }
 

@@ -10,9 +10,17 @@
 //! Prefill/Decode/Attend/Close streams across sessions — including
 //! capacity-refusal and unknown-session cases — and asserts, for every
 //! stream, that every dispatch config (sequential / conservative /
-//! fused / fused-scratch) crossed with both functional pipelines
-//! (dense mask baseline × survivor-list sparse, the serving default) is
-//! bit-equal to sequential dense dispatch, plus the planner invariants
+//! fused / fused-scratch) crossed with all three functional pipelines
+//! (dense mask baseline × survivor-list sparse × the ISSUE 7 fused
+//! FlashCAM kernel, the serving default) is bit-equal to sequential
+//! dense dispatch — and that the prefix-native dispatch configs agree
+//! not only on outputs but on the backend's `WorkStats` work counters
+//! (words scored, tiles streamed, survivor corrections): per-item
+//! padded geometry depends only on each query's own causal prefix, so
+//! how dispatch grouped the queries must never leak into the work
+//! performed. (The scratch-materialisation config is excluded from
+//! counter parity by design: without native prefix views the backend
+//! re-packs and scores the literal pad tail.) Plus the planner invariants
 //! (prefill is a barrier; Close is a same-session barrier; order
 //! preservation; group occupancy bounds) on every generated wire batch.
 //! A second stream family runs workers at `max_sessions = 2` under
@@ -41,7 +49,7 @@ use std::thread;
 use std::time::Duration;
 
 use camformer::accuracy::functional::{self, AttnConfig};
-use camformer::coordinator::backend::{AttendItem, AttentionBackend, FunctionalBackend};
+use camformer::coordinator::backend::{AttendItem, AttentionBackend, FunctionalBackend, Pipeline};
 use camformer::coordinator::batcher::{BatchPolicy, DecodeBatcher, DispatchGroup, PlanMode};
 use camformer::coordinator::kv_store::KvStore;
 use camformer::coordinator::server::{CamformerServer, Request, ServerConfig};
@@ -210,14 +218,22 @@ impl AttentionBackend for NoPrefixViews {
     }
 }
 
-/// The functional backend in either pipeline mode (ISSUE 4): `sparse` is
-/// the serving default (survivor-list softmax + contextualization over
-/// store-owned packed bits), dense is the cross-check baseline.
-fn pipeline_backend(sparse: bool) -> FunctionalBackend {
-    if sparse {
-        FunctionalBackend::new(CAPACITY, D)
-    } else {
-        FunctionalBackend::new_dense(CAPACITY, D)
+/// The functional backend in any of its three pipeline modes: the fused
+/// FlashCAM kernel (ISSUE 7, the serving default), the survivor-list
+/// sparse pipeline (ISSUE 4), and the dense mask baseline.
+fn pipeline_backend(pipeline: Pipeline) -> FunctionalBackend {
+    match pipeline {
+        Pipeline::Fused => FunctionalBackend::new(CAPACITY, D),
+        Pipeline::Sparse => FunctionalBackend::new_sparse(CAPACITY, D),
+        Pipeline::Dense => FunctionalBackend::new_dense(CAPACITY, D),
+    }
+}
+
+fn pipeline_tag(pipeline: Pipeline) -> &'static str {
+    match pipeline {
+        Pipeline::Fused => "/fused-kernel",
+        Pipeline::Sparse => "/sparse",
+        Pipeline::Dense => "",
     }
 }
 
@@ -236,29 +252,33 @@ fn batched_dispatch_bit_equals_sequential_on_random_streams() {
             BatchPolicy::conservative(1, Duration::from_micros(50)),
             8,
             ReclaimPolicy::Deny,
-            |_| pipeline_backend(false),
+            |_| pipeline_backend(Pipeline::Dense),
         );
-        for sparse in [false, true] {
-            let tag = if sparse { "/sparse" } else { "" };
-            // sequential dispatch through the sparse pipeline (the dense
-            // one IS the ground truth above)
-            if sparse {
-                let (seq_sparse, _) = run_stream(
+        for pipeline in [Pipeline::Dense, Pipeline::Sparse, Pipeline::Fused] {
+            let tag = pipeline_tag(pipeline);
+            // sequential dispatch through this pipeline (the dense one IS
+            // the ground truth above); its work counters anchor the
+            // dispatch-config parity asserts below
+            let m_seq_pipe = if pipeline == Pipeline::Dense {
+                m_seq.work
+            } else {
+                let (seq_pipe, m) = run_stream(
                     &stream,
                     BatchPolicy::conservative(1, Duration::from_micros(50)),
                     8,
                     ReclaimPolicy::Deny,
-                    |_| pipeline_backend(true),
+                    |_| pipeline_backend(pipeline),
                 );
-                assert_equivalent(case, "sequential/sparse", &sequential, &seq_sparse);
-            }
+                assert_equivalent(case, &format!("sequential{tag}"), &sequential, &seq_pipe);
+                m.work
+            };
             // conservative cross-session batching (the PR 2 invariant)
-            let (conservative, _) = run_stream(
+            let (conservative, m_cons) = run_stream(
                 &stream,
                 BatchPolicy::conservative(16, Duration::from_millis(1)),
                 8,
                 ReclaimPolicy::Deny,
-                |_| pipeline_backend(sparse),
+                |_| pipeline_backend(pipeline),
             );
             assert_equivalent(case, &format!("conservative{tag}"), &sequential, &conservative);
             // speculative multi-step fusion, prefix-native backend
@@ -267,7 +287,7 @@ fn batched_dispatch_bit_equals_sequential_on_random_streams() {
                 BatchPolicy::bounds(16, Duration::from_millis(1)),
                 8,
                 ReclaimPolicy::Deny,
-                |_| pipeline_backend(sparse),
+                |_| pipeline_backend(pipeline),
             );
             assert_equivalent(case, &format!("fused{tag}"), &sequential, &fused);
             // speculative fusion again, over a backend that cannot mask
@@ -277,9 +297,18 @@ fn batched_dispatch_bit_equals_sequential_on_random_streams() {
                 BatchPolicy::bounds(16, Duration::from_millis(1)),
                 8,
                 ReclaimPolicy::Deny,
-                |_| NoPrefixViews(pipeline_backend(sparse)),
+                |_| NoPrefixViews(pipeline_backend(pipeline)),
             );
             assert_equivalent(case, &format!("fused/scratch{tag}"), &sequential, &scratch);
+
+            // work parity (ISSUE 7): each query's padded geometry derives
+            // from its own causal prefix, so prefix-native dispatch
+            // configs must perform IDENTICAL work — words scored, tiles
+            // streamed, survivor corrections, V rows touched — no matter
+            // how the scheduler grouped the stream. (The scratch config
+            // scores materialised pad tails, so it is excluded.)
+            assert_eq!(m_cons.work, m_seq_pipe, "case {case}{tag}: conservative work parity");
+            assert_eq!(m_fused.work, m_seq_pipe, "case {case}{tag}: fused work parity");
 
             // amortisation accounting: the same queries were served,
             // through no more dispatches than one-at-a-time execution
@@ -309,8 +338,9 @@ fn eviction_streams_stay_bit_equal_and_lru_unblocks_admission() {
 
         // Deny baseline: count the terminal session-limit admissions the
         // eviction policy is supposed to dissolve
-        let (deny_seq, m_deny) =
-            run_stream(&stream, seq_policy, 2, ReclaimPolicy::Deny, |_| pipeline_backend(false));
+        let (deny_seq, m_deny) = run_stream(&stream, seq_policy, 2, ReclaimPolicy::Deny, |_| {
+            pipeline_backend(Pipeline::Dense)
+        });
         deny_refusals += deny_seq
             .iter()
             .filter(|r| matches!(r.result, Err(ServeError::SessionLimit { .. })))
@@ -319,7 +349,7 @@ fn eviction_streams_stay_bit_equal_and_lru_unblocks_admission() {
 
         // ground truth under eviction: sequential dense dispatch
         let (sequential, m_seq) =
-            run_stream(&stream, seq_policy, 2, lru, |_| pipeline_backend(false));
+            run_stream(&stream, seq_policy, 2, lru, |_| pipeline_backend(Pipeline::Dense));
         assert!(
             sequential
                 .iter()
@@ -337,10 +367,14 @@ fn eviction_streams_stay_bit_equal_and_lru_unblocks_admission() {
             ("fused/scratch", BatchPolicy::bounds(16, Duration::from_millis(1))),
         ];
         for (label, policy) in configs {
+            // batched configs serve through the fused FlashCAM kernel —
+            // the pipeline the server actually runs in production
             let (resps, m) = if label == "fused/scratch" {
-                run_stream(&stream, policy, 2, lru, |_| NoPrefixViews(pipeline_backend(true)))
+                run_stream(&stream, policy, 2, lru, |_| {
+                    NoPrefixViews(pipeline_backend(Pipeline::Fused))
+                })
             } else {
-                run_stream(&stream, policy, 2, lru, |_| pipeline_backend(true))
+                run_stream(&stream, policy, 2, lru, |_| pipeline_backend(Pipeline::Fused))
             };
             assert_equivalent(case, label, &sequential, &resps);
             assert_eq!(m.evictions, m_seq.evictions, "case {case} {label}: eviction parity");
@@ -405,7 +439,7 @@ fn arrival_jittered_streams_with_kv_budget_stay_bit_equal() {
                 reclaim,
                 budget,
                 DEEP_QUEUE,
-                |_| pipeline_backend(false),
+                |_| pipeline_backend(Pipeline::Dense),
             );
             budget_refusals += sequential
                 .iter()
@@ -415,20 +449,36 @@ fn arrival_jittered_streams_with_kv_budget_stay_bit_equal() {
                 .count() as u64;
             assert!(m_seq.kv_rows_hwm <= budget as u64, "case {case}: hwm over budget");
 
-            let configs: [(&str, BatchPolicy); 4] = [
-                ("sequential", seq_policy),
-                ("conservative", BatchPolicy::conservative(16, Duration::from_millis(1))),
-                ("fused", BatchPolicy::bounds(16, Duration::from_millis(1))),
-                ("fused/scratch", BatchPolicy::bounds(16, Duration::from_millis(1))),
+            let configs: [(&str, Pipeline, BatchPolicy); 5] = [
+                ("sequential", Pipeline::Sparse, seq_policy),
+                (
+                    "conservative",
+                    Pipeline::Sparse,
+                    BatchPolicy::conservative(16, Duration::from_millis(1)),
+                ),
+                ("fused", Pipeline::Sparse, BatchPolicy::bounds(16, Duration::from_millis(1))),
+                // the fused FlashCAM kernel under jitter + budget pressure
+                // (ISSUE 7): the serving-default pipeline must survive the
+                // standing scheduler's worst timing too
+                (
+                    "fused/kernel",
+                    Pipeline::Fused,
+                    BatchPolicy::bounds(16, Duration::from_millis(1)),
+                ),
+                (
+                    "fused/scratch",
+                    Pipeline::Fused,
+                    BatchPolicy::bounds(16, Duration::from_millis(1)),
+                ),
             ];
-            for (label, policy) in configs {
+            for (label, pipeline, policy) in configs {
                 let (resps, m) = if label == "fused/scratch" {
                     run_scheduled(&stream, &delays, policy, 8, reclaim, budget, 2, |_| {
-                        NoPrefixViews(pipeline_backend(true))
+                        NoPrefixViews(pipeline_backend(pipeline))
                     })
                 } else {
                     run_scheduled(&stream, &delays, policy, 8, reclaim, budget, 2, |_| {
-                        pipeline_backend(true)
+                        pipeline_backend(pipeline)
                     })
                 };
                 let tag = format!("jitter/{label}");
@@ -580,16 +630,16 @@ fn fused_burst_sees_exact_causal_prefix_at_boundary_lengths() {
                 AttendItem { query: q, keys, values, prefix_rows: prefix, packed }
             })
             .collect();
-        let mut sparse_be = FunctionalBackend::new(capacity, d);
+        let mut fused_be = FunctionalBackend::new(capacity, d);
+        let mut sparse_be = FunctionalBackend::new_sparse(capacity, d);
         let mut dense_be = FunctionalBackend::new_dense(capacity, d);
-        for backend in [&mut sparse_be, &mut dense_be] {
+        for backend in [&mut fused_be, &mut sparse_be, &mut dense_be] {
             let outs = backend.attend_batch(&items).unwrap();
             for (i, (out, want)) in outs.iter().zip(&reference).enumerate() {
                 assert_eq!(
-                    out,
-                    want,
-                    "burst {burst} step {i} ({}): prefix view diverged",
-                    if backend.use_sparse { "sparse" } else { "dense" }
+                    out, want,
+                    "burst {burst} step {i} ({:?}): prefix view diverged",
+                    backend.pipeline
                 );
             }
             assert_eq!(
@@ -598,5 +648,15 @@ fn fused_burst_sees_exact_causal_prefix_at_boundary_lengths() {
                 "items carried store-owned bits; the backend must not re-pack"
             );
         }
+
+        // the fused kernel's work is analytic at these geometries: step i
+        // scores exactly its prefix_i live rows (one u64 word each at
+        // d=64) and streams ceil(prefix_i / cam) key tiles — pad rows and
+        // the full-length score vector cost nothing
+        let want_words: u64 = (0..burst).map(|i| (prefill_rows + i + 1) as u64).sum();
+        let want_tiles: u64 =
+            (0..burst).map(|i| (prefill_rows + i + 1).div_ceil(cam) as u64).sum();
+        assert_eq!(fused_be.work.words_scored, want_words, "burst {burst}: words scored");
+        assert_eq!(fused_be.work.tiles_streamed, want_tiles, "burst {burst}: tiles streamed");
     }
 }

@@ -1,0 +1,80 @@
+#!/usr/bin/env python3
+"""BENCH_hotpath.json regression smoke (ISSUE 7, satellite 5).
+
+Run after `cargo bench --bench coordinator_hotpath` emits
+BENCH_hotpath.json. Two gates:
+
+1. completeness — every scenario key the bench has historically emitted
+   must still be present (a bench refactor that silently drops a
+   scenario reads as "no regression" forever after);
+2. the headline FlashCAM claim — the fused streaming kernel must beat
+   the PR-4 sparse_incremental pipeline per decode step at the largest
+   context (n = 4096), where the O(n·d) scoring loop dominates and the
+   u64 word-parallel pass has the most room.
+
+Stdlib only; exits non-zero with a readable report on any violation.
+"""
+
+import json
+import sys
+
+EXPECTED_KEYS = [
+    # long-context recipe x context-length matrix (ISSUEs 4, 7)
+    *[
+        f"long_context_{recipe}_n{n}"
+        for recipe in (
+            "dense_full_repack",
+            "dense_incremental",
+            "sparse_incremental",
+            "fused_incremental",
+        )
+        for n in (256, 1024, 4096)
+    ],
+    # standing-scheduler open-loop burst (ISSUE 6)
+    "bursty_open_loop_16sess_q8",
+]
+
+FUSED = "long_context_fused_incremental_n4096"
+SPARSE = "long_context_sparse_incremental_n4096"
+
+
+def main() -> int:
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_hotpath.json"
+    try:
+        with open(path, encoding="utf-8") as f:
+            bench = json.load(f)
+    except OSError as e:
+        print(f"check_bench: cannot read {path}: {e}", file=sys.stderr)
+        return 1
+
+    failures = []
+    missing = [k for k in EXPECTED_KEYS if k not in bench]
+    if missing:
+        failures.append(f"missing scenario keys: {', '.join(missing)}")
+    for key, ns in bench.items():
+        if not isinstance(ns, (int, float)) or ns <= 0:
+            failures.append(f"scenario {key!r}: non-positive ns/step {ns!r}")
+
+    if not missing:
+        fused, sparse = bench[FUSED], bench[SPARSE]
+        if fused >= sparse:
+            failures.append(
+                f"fused kernel must beat the sparse pipeline at n=4096: "
+                f"{FUSED} = {fused:.1f} ns/step >= {SPARSE} = {sparse:.1f} ns/step"
+            )
+        else:
+            print(
+                f"check_bench: fused n=4096 {fused:.1f} ns/step vs sparse "
+                f"{sparse:.1f} ns/step ({sparse / fused:.2f}x)"
+            )
+
+    if failures:
+        for f_ in failures:
+            print(f"check_bench: FAIL: {f_}", file=sys.stderr)
+        return 1
+    print(f"check_bench: OK ({len(EXPECTED_KEYS)} scenarios present)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
