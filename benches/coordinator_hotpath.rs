@@ -5,7 +5,9 @@
 //! (ISSUEs 4, 7, emitted machine-readably to `BENCH_hotpath.json`), the
 //! bursty open-loop
 //! arrival scenario against the standing scheduler's bounded queue and
-//! shared KV budget (ISSUE 6), plus the micro-costs (bf16 dot, softmax
+//! shared KV budget (ISSUE 6), the spill-tier churn scenario where an
+//! over-subscribed resident tier demotes/promotes KV through the
+//! modeled host DRAM (ISSUE 8), plus the micro-costs (bf16 dot, softmax
 //! engine) that dominate it.
 
 use std::time::{Duration, Instant};
@@ -691,6 +693,80 @@ fn main() {
         );
         assert!(sheds_seen > 0, "the open-loop burst must overrun max_queue = 8 and shed");
         hotpath_json.push(("bursty_open_loop_16sess_q8".to_string(), best_ns));
+    }
+
+    // macro: spill-tier churn (ISSUE 8) — 8 sessions against a shared KV
+    // budget that holds only 4, under LruSpillToDram: every over-budget
+    // open demotes the shard-LRU victim's KV into the simulated host
+    // DRAM tier, and each round-robin attend of a demoted session
+    // promotes it back (demoting another) — steady-state thrash where
+    // EVERY attend pays a promotion, pricing the spill tier's hot path.
+    // The demote/promote decision counts and the modeled DRAM traffic
+    // are emitted alongside ns/op so tools/check_bench.py can watch the
+    // spill tier stay live across PRs.
+    {
+        let sessions = 8usize;
+        let prefill_rows = 16usize;
+        let rounds = 4usize;
+        let capacity = 32usize;
+        // the resident tier holds exactly half the population
+        let budget = 4 * prefill_rows;
+        let mut bc = Bencher::coarse();
+        let mut best_ns = f64::INFINITY;
+        let mut last = (0u64, 0u64, 0u64);
+        bc.bench("spill_churn_8sess_budget64", || {
+            let server = CamformerServer::start(
+                ServerConfig {
+                    kv_capacity: capacity,
+                    max_sessions: sessions,
+                    reclaim: ReclaimPolicy::LruSpillToDram { min_idle: Duration::ZERO },
+                    batch: BatchPolicy::bounds(16, Duration::from_micros(200)),
+                    worker_kv_budget: budget,
+                    ..Default::default()
+                },
+                |_| FunctionalBackend::new(capacity, 64),
+            );
+            let mut rng2 = Rng::new(16);
+            let handles: Vec<SessionHandle<'_>> = (0..sessions as u64)
+                .map(|sid| {
+                    let keys = rng2.normal_vec(prefill_rows * 64);
+                    let values = rng2.normal_vec(prefill_rows * 64);
+                    server
+                        .open(sid, keys, values)
+                        .expect("spill admission must demote, never refuse")
+                })
+                .collect();
+            let t0 = Instant::now();
+            let mut served = 0u64;
+            for _round in 0..rounds {
+                for h in &handles {
+                    let r = h.attend(rng2.normal_vec(64)).unwrap().wait();
+                    assert!(r.is_ok(), "spill-tier attend failed");
+                    assert_eq!(r.seq_len(), prefill_rows, "promotion must restore every row");
+                    served += 1;
+                }
+            }
+            best_ns = best_ns.min(t0.elapsed().as_nanos() as f64 / served as f64);
+            for h in handles {
+                h.close().unwrap();
+            }
+            let (m, w) = server.shutdown();
+            assert_eq!(m.evictions, 0, "the spill tier must never drop a session");
+            assert_eq!(m.errors, 0, "the spill tier must never refuse a request");
+            assert!(m.demotions > 0 && m.promotions > 0, "churn must spill AND promote");
+            assert!(m.dram_bytes_written > 0 && m.dram_bytes_read > 0, "no DRAM traffic modeled");
+            last = (m.demotions, m.promotions, m.dram_bytes_written + m.dram_bytes_read);
+            (served, w)
+        });
+        println!(
+            "      spill_churn: demotions={} promotions={} dram_bytes={} \
+             (8 sessions through a 4-session resident tier)",
+            last.0, last.1, last.2
+        );
+        hotpath_json.push(("spill_churn_8sess_budget64".to_string(), best_ns));
+        hotpath_json.push(("spill_churn_demotions".to_string(), last.0 as f64));
+        hotpath_json.push(("spill_churn_promotions".to_string(), last.1 as f64));
+        hotpath_json.push(("spill_churn_dram_bytes".to_string(), last.2 as f64));
     }
 
     // machine-readable perf trajectory (scenario -> ns/step), tracked

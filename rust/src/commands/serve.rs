@@ -25,7 +25,9 @@ fn artifacts_dir(args: &Args) -> PathBuf {
 /// shard-wide prefill fan-out each, `--prefill` rows), decoded for
 /// `--steps` live KV-append steps across `--heads` heads via per-request
 /// tickets, golden-checked, then explicitly closed. `--reclaim lru`
-/// swaps the admission policy from Deny to LRU idle eviction.
+/// swaps the admission policy from Deny to LRU idle eviction, and
+/// `--reclaim spill` to the ISSUE-8 DRAM spill tier (victims demote to
+/// the modeled host tier and promote back on their next request).
 /// `--kv-budget` caps the rows each worker's session pool may hold
 /// resident (tight budgets surface typed `CapacityExhausted` refusals,
 /// or evictions under `--reclaim lru`), and `--max-queue` bounds the
@@ -56,7 +58,12 @@ pub fn serve(args: &Args) -> Result<()> {
     let reclaim = match reclaim_kind {
         "deny" => ReclaimPolicy::Deny,
         "lru" => ReclaimPolicy::LruEvictIdle { min_idle: Duration::ZERO },
-        other => anyhow::bail!("unknown reclaim policy {other:?} (deny|lru)"),
+        // ISSUE 8: over-budget admissions demote the shard-LRU victim's
+        // KV into the modeled host DRAM tier instead of dropping it; a
+        // demoted session's next request promotes it back (slow first
+        // token, never `Evicted`)
+        "spill" => ReclaimPolicy::LruSpillToDram { min_idle: Duration::ZERO },
+        other => anyhow::bail!("unknown reclaim policy {other:?} (deny|lru|spill)"),
     };
 
     let dir = artifacts_dir(args);

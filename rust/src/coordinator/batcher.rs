@@ -61,6 +61,16 @@
 //! no prefix view can represent) and always executes alone, as a
 //! barrier, in both modes.
 //!
+//! Since the shard directory (ISSUE 8), a `Decode`/`Attend` whose
+//! session is parked in the DRAM spill tier acts as a **promotion
+//! barrier** at the scheduling layer: the worker stops extending the
+//! open plan at that envelope, restores the session's KV from the spill
+//! pool (demoting another victim if the budget or slot limit demands
+//! it), and only then lets the envelope execute — in its original
+//! program position, one cycle later. Promotion thus sits exactly where
+//! a `Prefill` barrier would, so the planner's no-reorder guarantee (and
+//! with it bit-equality to sequential dispatch) is untouched.
+//!
 //! `Close` (ISSUE 5) is a **same-session barrier** in both modes: it may
 //! join the open group (the worker executes closes *after* the group's
 //! dispatch, and every same-session batch-mate planned before it still

@@ -177,11 +177,11 @@ impl SessionHandle<'_> {
     /// Issue a `Close` to every head of the shard (without waiting).
     /// Best-effort per head: one dead worker must not stop the closes
     /// for the live ones (their slots would otherwise leak until
-    /// shutdown). Returns the issued tickets and the first per-head
-    /// submission error, if any.
-    fn close_tickets(&self) -> (Vec<Ticket>, Option<ServeError>) {
+    /// shutdown). Returns the issued tickets and every per-head
+    /// submission error.
+    fn close_tickets(&self) -> (Vec<Ticket>, Vec<ServeError>) {
         let mut tickets = Vec::with_capacity(self.heads);
-        let mut first_err = None;
+        let mut errors = Vec::new();
         for head in 0..self.heads {
             let close = self.server.submit_ticket(Request::Close {
                 id: self.server.alloc_id(),
@@ -190,14 +190,10 @@ impl SessionHandle<'_> {
             });
             match close {
                 Ok(t) => tickets.push(t),
-                Err(e) => {
-                    if first_err.is_none() {
-                        first_err = Some(e);
-                    }
-                }
+                Err(e) => errors.push(e),
             }
         }
-        (tickets, first_err)
+        (tickets, errors)
     }
 
     /// Close the session on every head of its shard, waiting for each
@@ -209,7 +205,8 @@ impl SessionHandle<'_> {
     /// free for new admissions on all heads.
     pub fn close(mut self) -> Result<(), ServeError> {
         self.closed = true;
-        let (tickets, mut first_err) = self.close_tickets();
+        let (tickets, errors) = self.close_tickets();
+        let mut first_err = errors.into_iter().next();
         for ticket in tickets {
             if let Err(e) = ticket.wait().result {
                 if first_err.is_none() {
@@ -226,13 +223,16 @@ impl SessionHandle<'_> {
 
 impl Drop for SessionHandle<'_> {
     /// Fire-and-forget close on every head: the session does not leak
-    /// its KV capacity when a handle goes out of scope. Errors (and the
-    /// acks) are discarded — call [`SessionHandle::close`] to confirm
-    /// the release.
+    /// its KV capacity when a handle goes out of scope. The acks are
+    /// discarded, but per-head closes that fail to *submit* are counted
+    /// in `Metrics::close_failures` (surfaced at shutdown) instead of
+    /// vanishing silently — call [`SessionHandle::close`] to get the
+    /// errors themselves.
     fn drop(&mut self) {
         if !self.closed {
             self.closed = true;
-            let (tickets, _) = self.close_tickets();
+            let (tickets, errors) = self.close_tickets();
+            self.server.note_close_failures(errors.len() as u64);
             drop(tickets);
         }
     }

@@ -1,0 +1,539 @@
+//! The per-shard session directory (ISSUE 8): one coordination point per
+//! shard that owns session **residency** and **LRU ordering**, so
+//! reclamation is a shard-level decision instead of a per-worker one.
+//!
+//! # Why a directory
+//!
+//! `CamformerServer::open` admits a session on *every* head of its shard
+//! (the PR-5 broadcast), but reclamation used to run per worker: each
+//! head evicted by its own logical clock, so a shard-wide session could
+//! be evicted on one head while its KV stayed live on the others — the
+//! split-brain documented in the `server` module docs. The directory
+//! closes that hole: every worker of a shard reports its touches into
+//! one **shard clock**, and an over-budget `Prefill` (or a promotion)
+//! selects ONE victim shard-wide through
+//! [`ShardDirectory::evict_shard_wide`], which atomically marks the
+//! victim on every head. A session is fully resident or fully
+//! demoted/dropped — never split.
+//!
+//! # The residency state machine (per head)
+//!
+//! ```text
+//!          admit (Prefill)                 evict_shard_wide
+//!  Absent ────────────────► Resident ───────────────────────────┐
+//!    ▲                         ▲                                │
+//!    │ close / drop            │ promote                        ▼
+//!    │                         │                     PendingDemote | PendingDrop
+//!    │                      Spilled ◄──── park ──────────(apply at the
+//!    └────── close_spilled ────┘          (reconcile)     next cycle)
+//! ```
+//!
+//! The *decision* (marking) is atomic under the directory lock and is
+//! counted exactly once; the *application* is lazy: the initiating
+//! worker applies its own head's transition inside the same barrier,
+//! and every other worker applies pending transitions at the top of its
+//! next scheduling cycle ([`ShardDirectory::pending_for`]), mirroring
+//! how the `open` broadcast fans admission out. Until a head applies,
+//! its local copy keeps serving already-planned work — dispatch groups
+//! never lose a store mid-flight.
+//!
+//! # The DRAM spill tier
+//!
+//! Under `ReclaimPolicy::LruSpillToDram` a victim's KV (keys, values,
+//! packed key bits — [`SpilledKv`]) is **demoted** into the directory's
+//! spill pool instead of dropped: the writeback is charged through the
+//! [`HbmChannel`] model, the rows stay addressable by (session, head),
+//! and the victim's next request **promotes** them back with a modeled
+//! latency from the same channel — the client sees a slow first token,
+//! never `ServeError::Evicted`. Demotions, promotions, modeled
+//! promotion latencies and the channel's byte/energy totals fold into
+//! [`Metrics`] at shutdown via [`ShardDirectory::fold_metrics`].
+//!
+//! # Determinism
+//!
+//! The shard clock advances once per touch under the lock, in each
+//! worker's program order; on a single-head shard the shard order *is*
+//! the worker's logical-clock order, so victim choice is bit-identical
+//! to the per-worker LRU it replaces. Victim selection breaks
+//! (impossible) ties by session id, and the modeled DRAM timeline is a
+//! deterministic function of the demote/promote sequence.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use super::kv_store::{KvStore, SpilledKv};
+use super::metrics::Metrics;
+use super::session::SessionId;
+use crate::dram::{DramConfig, HbmChannel};
+
+/// Transfer granule for spill writeback / promotion: one burst's worth
+/// of bytes per modeled channel access, so a multi-row transfer
+/// exercises the open-page behavior (first access misses, the rest of
+/// the page hits) instead of being charged as one giant access.
+const SPILL_CHUNK_BYTES: usize = 256;
+
+/// Where one head's copy of a session lives, per the shard's directory.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum HeadState {
+    /// No copy on this head (never prefilled here, or closed/dropped).
+    Absent,
+    /// Live in the head worker's session table.
+    Resident,
+    /// Sentenced by a shard-wide spill decision: the worker parks its
+    /// copy into the pool at its next reconcile ([`ShardDirectory::park`]).
+    PendingDemote,
+    /// Sentenced by a shard-wide drop decision (`LruEvictIdle`): the
+    /// worker releases its copy and tombstones the id at its next
+    /// reconcile.
+    PendingDrop,
+    /// Parked in the spill pool, promotable on the session's next request.
+    Spilled,
+}
+
+/// One session's shard-wide directory entry.
+#[derive(Debug)]
+struct DirEntry {
+    /// Shard-clock position of the session's last touch — the LRU key.
+    touch: u64,
+    /// Bumped on every shard-wide demote/drop decision; local `Session`
+    /// copies carry the generation they were admitted/promoted under.
+    generation: u64,
+    heads: Vec<HeadState>,
+}
+
+/// What a worker must do to its local copy of a session, decided
+/// shard-wide at some earlier barrier (see [`ShardDirectory::pending_for`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PendingAction {
+    /// Park the local copy into the spill pool (charge the writeback).
+    Demote,
+    /// Release the local copy and tombstone the id (`Evicted` answers).
+    Drop,
+}
+
+/// Outcome of a shard-wide victim selection.
+#[derive(Debug, PartialEq, Eq)]
+pub enum Reclaimed {
+    /// This session was marked on every head; the caller applies its own
+    /// head's transition now and counts the decision once.
+    Victim(SessionId),
+    /// No new victim was chosen because some candidate is already
+    /// sentenced by a concurrent decision: apply pending transitions
+    /// (freeing their rows) and re-check the pressure before asking again.
+    PendingElsewhere,
+    /// Nothing reclaimable among the candidates.
+    None,
+}
+
+/// A spilled copy plus its simulated host-tier address.
+#[derive(Debug)]
+struct SpilledSlot {
+    kv: SpilledKv,
+    addr: u64,
+}
+
+#[derive(Debug)]
+struct DirInner {
+    /// The merged shard clock: advances once per touch, under the lock,
+    /// in each worker's program order.
+    clock: u64,
+    entries: HashMap<SessionId, DirEntry>,
+    /// The simulated host tier: demoted KV by (session, head).
+    pool: HashMap<(SessionId, usize), SpilledSlot>,
+    /// The modeled DRAM channel the spill traffic is charged through.
+    channel: HbmChannel,
+    /// Simulated-time cursor for channel accesses \[ns\].
+    now_ns: f64,
+    /// Bump allocator over the simulated host address space.
+    next_addr: u64,
+    demotions: u64,
+    promotions: u64,
+    promotion_ns: Vec<f64>,
+}
+
+/// One per shard, shared by its head workers (`Arc`). All state sits
+/// behind one mutex; every operation is a short critical section (no
+/// backend work, no allocation proportional to KV size except the park
+/// hand-off, which moves — never copies — the spilled buffers).
+#[derive(Debug)]
+pub struct ShardDirectory {
+    heads: usize,
+    inner: Mutex<DirInner>,
+}
+
+impl ShardDirectory {
+    pub fn new(heads: usize) -> Self {
+        assert!(heads >= 1, "a shard has at least one head");
+        ShardDirectory {
+            heads,
+            inner: Mutex::new(DirInner {
+                clock: 0,
+                entries: HashMap::new(),
+                pool: HashMap::new(),
+                channel: HbmChannel::new(DramConfig::default()),
+                now_ns: 0.0,
+                next_addr: 0,
+                demotions: 0,
+                promotions: 0,
+                promotion_ns: Vec::new(),
+            }),
+        }
+    }
+
+    /// Record a request touching `session` (shard-wide LRU order). Heads
+    /// call this exactly where they advance their local logical clock,
+    /// so on a single-head shard the two orders coincide. A miss (no
+    /// entry) is a no-op — the request will be answered
+    /// `UnknownSession`/`Evicted` by the worker anyway.
+    pub fn touch(&self, session: SessionId) {
+        let inner = &mut *self.inner.lock().unwrap();
+        if let Some(entry) = inner.entries.get_mut(&session) {
+            inner.clock += 1;
+            entry.touch = inner.clock;
+        }
+    }
+
+    /// Admit (or re-admit) `session` on `head` at a `Prefill` barrier:
+    /// marks the head resident, discards any spilled copy this head held
+    /// (the prefill replaces its content), touches the shard clock, and
+    /// returns the session's current generation for the local `Session`.
+    pub fn admit(&self, session: SessionId, head: usize) -> u64 {
+        assert!(head < self.heads);
+        let mut inner = self.inner.lock().unwrap();
+        inner.clock += 1;
+        let clock = inner.clock;
+        inner.pool.remove(&(session, head));
+        let heads = self.heads;
+        let entry = inner.entries.entry(session).or_insert_with(|| DirEntry {
+            touch: clock,
+            generation: 0,
+            heads: vec![HeadState::Absent; heads],
+        });
+        entry.touch = clock;
+        entry.heads[head] = HeadState::Resident;
+        entry.generation
+    }
+
+    /// Shard-wide victim selection at a reclaim barrier on `head`:
+    /// `candidates` are the caller's locally-resident, unpinned,
+    /// idle-eligible sessions (minus the one being admitted). Picks the
+    /// least-recently-touched by shard clock (ties — impossible, since
+    /// the clock is unique per touch — would break by id) and marks the
+    /// decision on EVERY head atomically: resident heads become
+    /// `PendingDemote`/`PendingDrop`, spilled copies of a dropped victim
+    /// are discarded outright. Counts a demotion decision once, here.
+    pub fn evict_shard_wide(&self, head: usize, candidates: &[SessionId], drop: bool) -> Reclaimed {
+        assert!(head < self.heads);
+        let mut inner = self.inner.lock().unwrap();
+        let mut victim: Option<(u64, SessionId)> = None;
+        let mut pending_elsewhere = false;
+        for &sid in candidates {
+            match inner.entries.get(&sid) {
+                Some(e) if e.heads[head] == HeadState::Resident => {
+                    let key = (e.touch, sid);
+                    if victim.map_or(true, |best| key < best) {
+                        victim = Some(key);
+                    }
+                }
+                // locally resident but already sentenced by a concurrent
+                // shard decision: applying it frees rows, so the caller
+                // must reconcile before we pick an extra victim
+                Some(e)
+                    if matches!(
+                        e.heads[head],
+                        HeadState::PendingDemote | HeadState::PendingDrop
+                    ) =>
+                {
+                    pending_elsewhere = true;
+                }
+                _ => {}
+            }
+        }
+        // A sentenced candidate takes precedence over picking a fresh
+        // victim: applying its pending transition frees rows/slots, so a
+        // second head racing into the same pressure must reconcile and
+        // re-check instead of widening the eviction — this is what keeps
+        // the victim SET identical across dispatch interleavings.
+        if pending_elsewhere {
+            return Reclaimed::PendingElsewhere;
+        }
+        let Some((_, sid)) = victim else {
+            return Reclaimed::None;
+        };
+        let entry = inner.entries.get_mut(&sid).expect("victim was just seen");
+        entry.generation += 1;
+        let mut drop_spilled: Vec<usize> = Vec::new();
+        for (h, state) in entry.heads.iter_mut().enumerate() {
+            match *state {
+                HeadState::Resident => {
+                    *state = if drop { HeadState::PendingDrop } else { HeadState::PendingDemote };
+                }
+                HeadState::Spilled if drop => {
+                    // a drop decision kills parked copies too
+                    *state = HeadState::Absent;
+                    drop_spilled.push(h);
+                }
+                _ => {}
+            }
+        }
+        for h in drop_spilled {
+            inner.pool.remove(&(sid, h));
+        }
+        if !drop {
+            inner.demotions += 1;
+        }
+        Reclaimed::Victim(sid)
+    }
+
+    /// The transitions `head` must apply to its local copies — the lazy
+    /// fan-out half of a shard-wide decision, called at the top of every
+    /// scheduling cycle and inside reclaim loops.
+    pub fn pending_for(&self, head: usize) -> Vec<(SessionId, PendingAction)> {
+        let inner = self.inner.lock().unwrap();
+        let mut out: Vec<(SessionId, PendingAction)> = inner
+            .entries
+            .iter()
+            .filter_map(|(&sid, e)| match e.heads[head] {
+                HeadState::PendingDemote => Some((sid, PendingAction::Demote)),
+                HeadState::PendingDrop => Some((sid, PendingAction::Drop)),
+                _ => None,
+            })
+            .collect();
+        // deterministic application order (HashMap iteration is not)
+        out.sort_unstable_by_key(|&(sid, _)| sid);
+        out
+    }
+
+    /// Park `head`'s demoted copy in the spill pool, charging the
+    /// writeback through the channel model. The copy moves — keys,
+    /// values and packed key bits land in the pool verbatim.
+    pub fn park(&self, session: SessionId, head: usize, kv: SpilledKv) {
+        let mut inner = self.inner.lock().unwrap();
+        let bytes = kv.bytes();
+        let addr = inner.next_addr;
+        inner.next_addr += bytes.max(1) as u64;
+        let mut now = inner.now_ns;
+        let mut off = 0usize;
+        while off < bytes {
+            let chunk = SPILL_CHUNK_BYTES.min(bytes - off);
+            let (done, _) = inner.channel.write(now, addr + off as u64, chunk);
+            now = done;
+            off += chunk;
+        }
+        inner.now_ns = now;
+        if let Some(entry) = inner.entries.get_mut(&session) {
+            entry.heads[head] = HeadState::Spilled;
+        }
+        inner.pool.insert((session, head), SpilledSlot { kv, addr });
+    }
+
+    /// Record that `head` dropped its local copy (a `PendingDrop`
+    /// application, or a plain `Close` of a resident session). Forgets
+    /// the whole entry once no head holds or owes a copy.
+    pub fn note_gone(&self, session: SessionId, head: usize) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(entry) = inner.entries.get_mut(&session) {
+            entry.heads[head] = HeadState::Absent;
+            if entry.heads.iter().all(|&h| h == HeadState::Absent) {
+                inner.entries.remove(&session);
+            }
+        }
+    }
+
+    /// Whether `head` has a promotable spilled copy of `session` (the
+    /// promotion-barrier trigger for a Decode/Attend that misses the
+    /// local table).
+    pub fn is_spilled(&self, session: SessionId, head: usize) -> bool {
+        let inner = self.inner.lock().unwrap();
+        inner.pool.contains_key(&(session, head))
+    }
+
+    /// Peek the spilled copy's (live rows, provisioned capacity) so the
+    /// promotion barrier can reclaim budget/slot room *before* taking it.
+    pub fn spilled_shape(&self, session: SessionId, head: usize) -> Option<(usize, usize)> {
+        let inner = self.inner.lock().unwrap();
+        inner.pool.get(&(session, head)).map(|s| (s.kv.len(), s.kv.capacity()))
+    }
+
+    /// Promote `head`'s spilled copy back into the accelerator tier:
+    /// removes it from the pool, charges the read stream through the
+    /// channel model, records the modeled promotion latency (the
+    /// victim's slow first token), touches the shard clock, and returns
+    /// the byte-identical restored store plus the generation the
+    /// restored `Session` now belongs to.
+    pub fn promote(&self, session: SessionId, head: usize) -> Option<(KvStore, u64, f64)> {
+        let mut inner = self.inner.lock().unwrap();
+        let slot = inner.pool.remove(&(session, head))?;
+        let bytes = slot.kv.bytes();
+        let start = inner.now_ns;
+        let mut now = start;
+        let mut off = 0usize;
+        while off < bytes {
+            let chunk = SPILL_CHUNK_BYTES.min(bytes - off);
+            let (done, _) = inner.channel.read(now, slot.addr + off as u64, chunk);
+            now = done;
+            off += chunk;
+        }
+        inner.now_ns = now;
+        let latency_ns = now - start;
+        inner.promotions += 1;
+        inner.promotion_ns.push(latency_ns);
+        inner.clock += 1;
+        let clock = inner.clock;
+        let generation = match inner.entries.get_mut(&session) {
+            Some(entry) => {
+                entry.heads[head] = HeadState::Resident;
+                entry.touch = clock;
+                entry.generation
+            }
+            None => 0,
+        };
+        Some((slot.kv.restore(), generation, latency_ns))
+    }
+
+    /// Retire `head`'s spilled copy on an explicit `Close`: the session
+    /// was demoted, then closed without ever being promoted. Returns the
+    /// retired copy's live length (the close ack's `seq_len`). The
+    /// accelerator-side rows were already accounted released at
+    /// demotion, so the caller must NOT count them again.
+    pub fn close_spilled(&self, session: SessionId, head: usize) -> Option<usize> {
+        let len = {
+            let mut inner = self.inner.lock().unwrap();
+            inner.pool.remove(&(session, head)).map(|s| s.kv.len())?
+        };
+        self.note_gone(session, head);
+        Some(len)
+    }
+
+    /// Whether the directory still tracks `session` on any head (used by
+    /// tests; `false` means the directory forgot it entirely).
+    pub fn knows(&self, session: SessionId) -> bool {
+        self.inner.lock().unwrap().entries.contains_key(&session)
+    }
+
+    /// Fold the shard's spill-tier accounting into a merged [`Metrics`]
+    /// at shutdown: decision counters, rows still parked in the pool,
+    /// modeled promotion latencies, and the channel's byte/energy totals.
+    pub fn fold_metrics(&self, m: &mut Metrics) {
+        let inner = self.inner.lock().unwrap();
+        m.demotions += inner.demotions;
+        m.promotions += inner.promotions;
+        m.spilled_rows += inner.pool.values().map(|s| s.kv.len() as u64).sum::<u64>();
+        m.dram_bytes_written += inner.channel.bytes_written;
+        m.dram_bytes_read += inner.channel.bytes_read;
+        m.dram_energy_j += inner.channel.energy_j();
+        for &ns in &inner.promotion_ns {
+            m.note_promotion_latency_ns(ns);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spilled(rows: usize) -> SpilledKv {
+        let mut kv = KvStore::new(8, 4, 4);
+        for i in 0..rows {
+            kv.append(&[i as f32; 4], &[-(i as f32); 4]).unwrap();
+        }
+        kv.demote()
+    }
+
+    #[test]
+    fn admit_then_touch_orders_victim_choice_by_shard_clock() {
+        let dir = ShardDirectory::new(1);
+        assert_eq!(dir.admit(1, 0), 0);
+        assert_eq!(dir.admit(2, 0), 0);
+        dir.touch(1); // 2 is now least-recently-touched
+        assert_eq!(dir.evict_shard_wide(0, &[1, 2], false), Reclaimed::Victim(2));
+        // the decision marked head 0; the initiator applies it
+        assert_eq!(dir.pending_for(0), vec![(2, PendingAction::Demote)]);
+    }
+
+    #[test]
+    fn decision_marks_every_resident_head_and_counts_once() {
+        let dir = ShardDirectory::new(2);
+        dir.admit(7, 0);
+        dir.admit(7, 1);
+        dir.admit(9, 0);
+        dir.admit(9, 1);
+        dir.touch(9);
+        assert_eq!(dir.evict_shard_wide(0, &[7, 9], false), Reclaimed::Victim(7));
+        // BOTH heads owe a demotion — no split-brain
+        assert_eq!(dir.pending_for(0), vec![(7, PendingAction::Demote)]);
+        assert_eq!(dir.pending_for(1), vec![(7, PendingAction::Demote)]);
+        // a second selection on the other head must not pick a fresh
+        // victim while 7's demotion is still pending there
+        assert_eq!(dir.evict_shard_wide(1, &[7, 9], false), Reclaimed::PendingElsewhere);
+        let mut m = Metrics::new();
+        dir.fold_metrics(&mut m);
+        assert_eq!(m.demotions, 1, "one decision, counted once, not per head");
+    }
+
+    #[test]
+    fn park_and_promote_round_trip_with_modeled_latency() {
+        let dir = ShardDirectory::new(1);
+        dir.admit(3, 0);
+        assert_eq!(dir.evict_shard_wide(0, &[3], false), Reclaimed::Victim(3));
+        dir.park(3, 0, spilled(5));
+        assert!(dir.is_spilled(3, 0));
+        assert_eq!(dir.spilled_shape(3, 0), Some((5, 8)));
+        let (kv, generation, latency_ns) = dir.promote(3, 0).expect("promotable");
+        assert_eq!(kv.len(), 5);
+        assert_eq!(generation, 1, "the demote decision bumped the generation");
+        assert!(latency_ns > 0.0, "promotion pays a modeled DRAM latency");
+        assert!(!dir.is_spilled(3, 0));
+        let mut m = Metrics::new();
+        dir.fold_metrics(&mut m);
+        assert_eq!((m.demotions, m.promotions), (1, 1));
+        assert_eq!(m.spilled_rows, 0, "promoted copies left the pool");
+        assert!(m.dram_bytes_written > 0 && m.dram_bytes_read > 0);
+        assert!(m.dram_energy_j > 0.0);
+        assert!(m.promotion_p50_ns() > 0.0);
+    }
+
+    #[test]
+    fn drop_decision_discards_parked_copies() {
+        let dir = ShardDirectory::new(2);
+        dir.admit(4, 0);
+        dir.admit(4, 1);
+        assert_eq!(dir.evict_shard_wide(0, &[4], false), Reclaimed::Victim(4));
+        dir.park(4, 0, spilled(2));
+        // head 1 still owes its demotion when a drop decision lands
+        assert_eq!(dir.evict_shard_wide(1, &[4], true), Reclaimed::PendingElsewhere);
+        // after head 1 parks too, the whole session is spilled; a drop
+        // decision can then only come from a *resident* candidate, so
+        // spilled-only sessions are never re-victimized
+        dir.park(4, 1, spilled(2));
+        assert_eq!(dir.evict_shard_wide(0, &[4], true), Reclaimed::None);
+        // closes retire the parked copies and the directory forgets
+        assert_eq!(dir.close_spilled(4, 0), Some(2));
+        assert_eq!(dir.close_spilled(4, 1), Some(2));
+        assert_eq!(dir.close_spilled(4, 0), None);
+        assert!(!dir.knows(4));
+    }
+
+    #[test]
+    fn close_of_all_heads_forgets_the_session() {
+        let dir = ShardDirectory::new(2);
+        dir.admit(5, 0);
+        dir.admit(5, 1);
+        dir.note_gone(5, 0);
+        assert!(dir.knows(5), "head 1 still holds a copy");
+        dir.note_gone(5, 1);
+        assert!(!dir.knows(5));
+    }
+
+    #[test]
+    fn readmission_discards_the_spilled_copy() {
+        let dir = ShardDirectory::new(1);
+        dir.admit(6, 0);
+        assert_eq!(dir.evict_shard_wide(0, &[6], false), Reclaimed::Victim(6));
+        dir.park(6, 0, spilled(3));
+        // a re-open replaces content: the parked rows are stale
+        dir.admit(6, 0);
+        assert!(!dir.is_spilled(6, 0));
+        assert!(dir.promote(6, 0).is_none());
+    }
+}

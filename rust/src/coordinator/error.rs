@@ -22,9 +22,12 @@ pub enum ServeError {
     /// Admission refused: the worker already holds its maximum number of
     /// live sessions (and the reclaim policy found no evictable victim).
     SessionLimit { max_sessions: usize },
-    /// The session was reclaimed by `ReclaimPolicy::LruEvictIdle` to
-    /// admit a newer session; its state is gone. Re-`open` (re-prefill)
-    /// to continue on this worker.
+    /// The session was reclaimed by a `ReclaimPolicy` path that truly
+    /// drops state (`LruEvictIdle`); its KV is gone. Re-`open`
+    /// (re-prefill) to continue on this worker. Under
+    /// `ReclaimPolicy::LruSpillToDram` a victim is *demoted* to the host
+    /// tier and promoted back on its next request, so clients never see
+    /// this variant from spill-tier reclaims.
     Evicted { session: SessionId },
     /// The session's provisioned KV context is exhausted (the paper sizes
     /// the BA-CAM/V arrays to the target maximum context; eviction is the
@@ -174,13 +177,16 @@ mod tests {
         use std::time::Duration;
         let deny = ReclaimPolicy::Deny;
         let lru = ReclaimPolicy::LruEvictIdle { min_idle: Duration::ZERO };
-        // capacity errors: terminal under Deny, retryable under eviction
+        let spill = ReclaimPolicy::LruSpillToDram { min_idle: Duration::ZERO };
+        // capacity errors: terminal under Deny, retryable under any
+        // reclaiming policy (drop or demote both free capacity on demand)
         for e in [
             ServeError::SessionLimit { max_sessions: 4 },
             ServeError::CapacityExhausted { capacity: 64 },
         ] {
             assert!(!e.is_retryable(&deny), "{e}");
             assert!(e.is_retryable(&lru), "{e}");
+            assert!(e.is_retryable(&spill), "{e}");
         }
         // a failed dispatch rolled its state back: always safe to retry
         assert!(ServeError::Backend("boom".into()).is_retryable(&deny));

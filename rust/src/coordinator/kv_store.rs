@@ -235,6 +235,58 @@ impl KvStore {
     pub fn values(&self) -> &[f32] {
         &self.values[..self.len * self.d_v]
     }
+
+    /// Demote the store to the simulated host (DRAM spill) tier: consumes
+    /// the accelerator-resident provisioning — the shared budget accounting
+    /// treats this exactly like [`KvStore::release`] — and captures keys,
+    /// values, AND the sign-packed key bits verbatim, so a later
+    /// [`SpilledKv::restore`] is byte-identical and the promoted session
+    /// never re-packs.
+    pub fn demote(self) -> SpilledKv {
+        SpilledKv { store: self }
+    }
+}
+
+/// A session's KV memory demoted out of the accelerator tier into the
+/// simulated host DRAM (the shard directory's spill pool). It no longer
+/// counts against `ServerConfig::worker_kv_budget` — the writeback and the
+/// later promotion are charged through the `dram::channel` model instead —
+/// but stays addressable by session id so the victim's next request
+/// promotes it back rather than observing `ServeError::Evicted`.
+#[derive(Clone, Debug)]
+pub struct SpilledKv {
+    store: KvStore,
+}
+
+impl SpilledKv {
+    /// Live rows held in the spill tier.
+    pub fn len(&self) -> usize {
+        self.store.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.store.len == 0
+    }
+
+    /// Row capacity the store will re-provision on promotion (what the
+    /// admission path must find room for in the shared KV budget).
+    pub fn capacity(&self) -> usize {
+        self.store.capacity
+    }
+
+    /// Payload bytes a demotion writes / a promotion reads through the
+    /// DRAM channel model: the live f32 K/V rows plus their packed key
+    /// words (pad rows are reconstructed, not transferred).
+    pub fn bytes(&self) -> usize {
+        let words = self.store.d_k.div_ceil(64);
+        self.store.len * (self.store.d_k + self.store.d_v) * 4 + self.store.len * words * 8
+    }
+
+    /// Promote back into the accelerator tier: returns the store exactly
+    /// as demoted — same keys, values, packed bits, length, and capacity.
+    pub fn restore(self) -> KvStore {
+        self.store
+    }
 }
 
 #[cfg(test)]
@@ -383,6 +435,35 @@ mod tests {
         // the reclaimed provisioning is the full capacity, not the live
         // length — eviction frees what admission reserved
         assert_eq!(s.release(), 8);
+    }
+
+    #[test]
+    fn demote_restore_round_trip_is_byte_identical() {
+        let mut s = KvStore::new(16, 48, 32);
+        let mut rng = Rng::new(11);
+        for _ in 0..7 {
+            s.append(&rng.normal_vec(48), &rng.normal_vec(32)).unwrap();
+        }
+        let mirror = s.clone();
+        let spilled = s.demote();
+        assert_eq!(spilled.len(), 7);
+        assert_eq!(spilled.capacity(), 16);
+        // 7 rows x (48 + 32) f32 + 7 rows x 1 packed word
+        assert_eq!(spilled.bytes(), 7 * 80 * 4 + 7 * 8);
+        let restored = spilled.restore();
+        assert_eq!(restored.len(), mirror.len());
+        assert_eq!(restored.capacity, mirror.capacity);
+        assert_eq!(restored.packed_rows_total(), mirror.packed_rows_total());
+        // full provisioned buffers, pad rows included
+        assert_eq!(restored.keys, mirror.keys);
+        assert_eq!(restored.values, mirror.values);
+        // the packed key bits round-trip too: scoring through the restored
+        // view must be bit-equal to the never-demoted mirror
+        let q = rng.normal_vec(48);
+        assert_eq!(
+            restored.packed_view(16).scores_prefix(&q, 6, 7),
+            mirror.packed_view(16).scores_prefix(&q, 6, 7),
+        );
     }
 
     #[test]

@@ -46,6 +46,26 @@ pub struct Metrics {
     /// equivalence extends to the work performed: the fuzz harness
     /// asserts parity on these across scheduling modes.
     pub work: WorkStats,
+    /// Spill-tier accounting (ISSUE 8): shard-wide demotions into the
+    /// simulated host DRAM tier, promotions back on the victim's next
+    /// request, the KV rows currently parked in the spill pool at
+    /// shutdown, and the modeled DRAM traffic/energy those transfers
+    /// charged through the channel model. Demotions/promotions count once
+    /// per shard-level decision (not once per head), so they are
+    /// dispatch-config invariant alongside `evictions`.
+    pub demotions: u64,
+    pub promotions: u64,
+    pub spilled_rows: u64,
+    pub dram_bytes_written: u64,
+    pub dram_bytes_read: u64,
+    pub dram_energy_j: f64,
+    /// Modeled promotion latencies \[ns\] — what the victim's next request
+    /// pays to stream its KV back in (the "slow first token").
+    promotion_ns: Vec<f64>,
+    /// `SessionHandle::drop` closes that failed to submit (worker gone /
+    /// queue shed): a head that may leak its session copy, previously
+    /// discarded silently.
+    pub close_failures: u64,
 }
 
 impl Metrics {
@@ -100,9 +120,32 @@ impl Metrics {
         self.shed_requests += other.shed_requests;
         self.kv_rows_admitted += other.kv_rows_admitted;
         self.work.add(&other.work);
+        self.demotions += other.demotions;
+        self.promotions += other.promotions;
+        self.spilled_rows += other.spilled_rows;
+        self.dram_bytes_written += other.dram_bytes_written;
+        self.dram_bytes_read += other.dram_bytes_read;
+        self.dram_energy_j += other.dram_energy_j;
+        self.promotion_ns.extend_from_slice(&other.promotion_ns);
+        self.close_failures += other.close_failures;
         // high-water marks are per-worker peaks, not additive flows
         self.queue_depth_max = self.queue_depth_max.max(other.queue_depth_max);
         self.kv_rows_hwm = self.kv_rows_hwm.max(other.kv_rows_hwm);
+    }
+
+    /// Record one modeled promotion latency (spill tier → accelerator).
+    pub fn note_promotion_latency_ns(&mut self, ns: f64) {
+        self.promotion_ns.push(ns);
+    }
+
+    /// Median modeled promotion latency \[ns\]; 0.0 before any promotion.
+    pub fn promotion_p50_ns(&self) -> f64 {
+        stats::percentile(&self.promotion_ns, 50.0)
+    }
+
+    /// Tail modeled promotion latency \[ns\].
+    pub fn promotion_p99_ns(&self) -> f64 {
+        stats::percentile(&self.promotion_ns, 99.0)
     }
 
     /// Record the budget occupancy after a successful admission; keeps
@@ -151,15 +194,22 @@ impl Metrics {
 
     pub fn summary(&self, window: Duration) -> String {
         format!(
-            "completed={} (prefill={} decode={} attend={} close={}) evictions={} batches={} \
+            "completed={} (prefill={} decode={} attend={} close={}) evictions={} demotions={} \
+             promotions={} spilled_rows={} dram_rd={} dram_wr={} promo_p50={:.0}ns batches={} \
              occupancy={:.2}x (max {}) queue_max={} shed={} kv_admitted={} kv_hwm={} errors={} \
-             thruput={:.1}/s mean={:.1}us p50={:.1}us p95={:.1}us p99={:.1}us",
+             close_failures={} thruput={:.1}/s mean={:.1}us p50={:.1}us p95={:.1}us p99={:.1}us",
             self.completed,
             self.prefills,
             self.decodes,
             self.attends,
             self.closes,
             self.evictions,
+            self.demotions,
+            self.promotions,
+            self.spilled_rows,
+            self.dram_bytes_read,
+            self.dram_bytes_written,
+            self.promotion_p50_ns(),
             self.batches,
             self.mean_occupancy(),
             self.max_occupancy,
@@ -168,6 +218,7 @@ impl Metrics {
             self.kv_rows_admitted,
             self.kv_rows_hwm,
             self.errors,
+            self.close_failures,
             self.throughput_per_s(window),
             self.mean_latency_us(),
             self.p50_us(),
@@ -285,6 +336,55 @@ mod tests {
         assert_eq!(a.work.words_scored, 150);
         assert_eq!(a.work.tiles_streamed, 7);
         assert_eq!(a.work.survivor_corrections, 4);
+    }
+
+    #[test]
+    fn merge_sums_spill_tier_counters() {
+        let mut a = Metrics::new();
+        a.demotions = 2;
+        a.dram_bytes_written = 1000;
+        a.note_promotion_latency_ns(100.0);
+        let mut b = Metrics::new();
+        b.demotions = 1;
+        b.promotions = 3;
+        b.spilled_rows = 16;
+        b.dram_bytes_written = 500;
+        b.dram_bytes_read = 750;
+        b.dram_energy_j = 1e-6;
+        b.close_failures = 1;
+        b.note_promotion_latency_ns(300.0);
+        a.merge(&b);
+        assert_eq!(a.demotions, 3, "spill counters are flows: summed");
+        assert_eq!(a.promotions, 3);
+        assert_eq!(a.spilled_rows, 16);
+        assert_eq!(a.dram_bytes_written, 1500);
+        assert_eq!(a.dram_bytes_read, 750);
+        assert!((a.dram_energy_j - 1e-6).abs() < 1e-18);
+        assert_eq!(a.close_failures, 1);
+        // latencies concatenate: percentiles see both workers' promotions
+        assert!((a.promotion_p50_ns() - 200.0).abs() < 1e-9);
+        assert!(a.promotion_p99_ns() > 290.0);
+    }
+
+    #[test]
+    fn summary_reports_spill_tier() {
+        let mut m = Metrics::new();
+        m.demotions = 4;
+        m.promotions = 3;
+        m.spilled_rows = 32;
+        m.close_failures = 2;
+        let s = m.summary(Duration::from_secs(1));
+        assert!(s.contains("demotions=4"), "{s}");
+        assert!(s.contains("promotions=3"), "{s}");
+        assert!(s.contains("spilled_rows=32"), "{s}");
+        assert!(s.contains("close_failures=2"), "{s}");
+    }
+
+    #[test]
+    fn promotion_percentiles_zero_before_any_promotion() {
+        let m = Metrics::new();
+        assert_eq!(m.promotion_p50_ns(), 0.0);
+        assert_eq!(m.promotion_p99_ns(), 0.0);
     }
 
     #[test]

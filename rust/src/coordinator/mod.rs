@@ -19,6 +19,17 @@
 //!   by a worker thread, with lifecycle bookkeeping (logical last-touch
 //!   position for deterministic LRU, pin counts while a dispatch is in
 //!   flight); sessions route session id -> shard -> head;
+//! * [`directory`] — [`ShardDirectory`] (ISSUE 8): the per-shard session
+//!   directory shared by a shard's head workers. It merges every head's
+//!   logical clock into one shard clock, selects reclaim victims ONCE
+//!   shard-wide (Resident → Demoted → Resident state machine, applied
+//!   atomically across heads — no split-brain sessions), and owns the
+//!   simulated host-DRAM spill pool: under
+//!   [`ReclaimPolicy::LruSpillToDram`] a victim's KV is parked (keys,
+//!   values, packed key bits — writeback charged through the `dram`
+//!   channel model) and promoted back byte-identically on its next
+//!   request, so clients see a slow first token instead of
+//!   [`ServeError::Evicted`];
 //! * [`kv_store`]  — [`KvStore`]: capacity-provisioned K/V memory with
 //!   O(row) decode append, zero-copy padded execution views, the
 //!   store-owned sign-packed key bits maintained *incrementally* and
@@ -117,7 +128,7 @@
 //!
 //! | layer | kind | where |
 //! |-------|------|-------|
-//! | batcher (work queue, incremental plans, both planning modes + Close barriers), kv (incl. prefix views, release), metrics (incl. scheduler gauges), session (lifecycle state), server (overload shedding, shared KV budget) | unit | in-module `#[cfg(test)]` |
+//! | batcher (work queue, incremental plans, both planning modes + Close barriers), kv (incl. prefix views, release, demote/restore round-trip), directory (shard-clock LRU, atomic multi-head marking, spill park/promote, drop-vs-demote), metrics (incl. scheduler gauges + spill-tier counters), session (lifecycle state), server (overload shedding, shared KV budget, bounded tombstones) | unit | in-module `#[cfg(test)]` |
 //! | scorers, masks, prefix masking, BIMV tiles, word-parallel scoring vs the scalar bool-loop oracle, streaming top-k vs batch two-stage selection, fused-kernel bit-equality | property (seeded, `util::check`) | `accuracy::functional`, `bimv::engine`, `bimv::bitslice` |
 //! | randomized batched-vs-sequential equivalence (arrival-jittered streams × reclaim policies × dispatch configs × all three [`Pipeline`]s, incl. Close + LRU-eviction streams + counter parity + `WorkStats` work parity across prefix-native configs) + planner invariants + fused-burst prefix boundaries | fuzz/property | `rust/tests/batcher_fuzz.rs` |
 //! | scheduler properties: budget high-water mark never exceeds `worker_kv_budget`; bounded queues — every submit enqueues, sheds `Overloaded`, or fails typed | property | `rust/tests/scheduler_props.rs` |
@@ -131,6 +142,7 @@
 pub mod backend;
 pub mod batcher;
 pub mod client;
+pub mod directory;
 pub mod error;
 pub mod kv_store;
 pub mod metrics;
@@ -142,8 +154,9 @@ pub use batcher::{
     ArrivalWait, BatchPolicy, DecodeBatcher, DispatchGroup, GroupPlan, PlanMode, WorkQueue,
 };
 pub use client::{SessionHandle, Ticket};
+pub use directory::{PendingAction, Reclaimed, ShardDirectory};
 pub use error::ServeError;
-pub use kv_store::KvStore;
+pub use kv_store::{KvStore, SpilledKv};
 pub use metrics::Metrics;
 pub use server::{
     CamformerServer, Envelope, Output, ReclaimPolicy, Request, Response, ServerConfig,

@@ -91,26 +91,38 @@
 //! hits the session limit evicts the least-recently-used idle session
 //! instead of failing terminally; the victim's state is released and
 //! its subsequent requests answer [`ServeError::Evicted`] until it is
-//! re-opened. Eviction can only run inside a `Prefill` barrier — never
-//! while a dispatch group is mid-flight — which is the structural
-//! guarantee that a session with in-flight (fused speculative) queries
-//! is never victimized; the pin counts on [`Session`] restate that
-//! invariant as defense-in-depth. LRU order is a per-worker *logical*
-//! clock (program-order request positions), so with `min_idle = ZERO`
-//! victim choice is deterministic and batched execution stays bit-equal
-//! to sequential dispatch (a non-zero `min_idle` gate reads the wall
-//! clock and is inherently timing-dependent). Eviction is per *worker*:
-//! each head evicts by its own clock, so a shard-wide session can be
-//! reclaimed on one head while staying live on others — the victim's
-//! handle sees [`ServeError::Evicted`] only on the affected heads (see
-//! the ROADMAP's shard-coordinated reclamation item).
+//! re-opened. Under [`ReclaimPolicy::LruSpillToDram`] the victim is
+//! *demoted* into the shard's simulated host DRAM tier instead — its
+//! next request promotes the KV back (a slow first token, charged
+//! through the `dram` channel model) and the client never observes
+//! `Evicted`. Reclamation can only run inside a `Prefill` (or
+//! promotion) barrier — never while a dispatch group is mid-flight —
+//! which is the structural guarantee that a session with in-flight
+//! (fused speculative) queries is never victimized; the pin counts on
+//! [`Session`] restate that invariant as defense-in-depth.
+//!
+//! Reclamation is **shard-coordinated** (ISSUE 8): every worker of a
+//! shard reports its touches into the shared
+//! [`ShardDirectory`](super::directory::ShardDirectory), and an
+//! over-budget barrier selects ONE victim shard-wide by the merged
+//! shard clock, marking it on every head atomically — the initiating
+//! worker applies its own transition inside the barrier and the other
+//! heads apply theirs at the top of their next scheduling cycle, so a
+//! session is fully resident, fully demoted, or fully dropped — never
+//! split across heads (the pre-PR-8 per-worker eviction could answer
+//! `Evicted` on one head while serving stale state on another). On a
+//! single-head shard the shard clock *is* the worker's logical clock
+//! (program-order request positions), so with `min_idle = ZERO` victim
+//! choice is deterministic and batched execution stays bit-equal to
+//! sequential dispatch (a non-zero `min_idle` gate reads the wall
+//! clock and is inherently timing-dependent).
 //!
 //! [`Ticket`]: super::client::Ticket
 //! [`WorkQueue`]: super::batcher::WorkQueue
 //! [`GroupPlan`]: super::batcher::GroupPlan
 //! [`PlanMode`]: super::batcher::PlanMode
 
-use std::collections::{HashMap, HashSet};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::Arc;
@@ -120,6 +132,7 @@ use std::time::{Duration, Instant};
 use super::backend::{AttendItem, AttentionBackend};
 use super::batcher::{ArrivalWait, BatchPolicy, GroupPlan, WorkQueue};
 use super::client::Ticket;
+use super::directory::{PendingAction, Reclaimed, ShardDirectory};
 use super::error::ServeError;
 use super::kv_store::{KvStore, KEY_PAD};
 use super::metrics::Metrics;
@@ -274,13 +287,25 @@ pub enum ReclaimPolicy {
     /// sessions are never victims). The victim's subsequent requests
     /// answer [`ServeError::Evicted`] until it is re-opened.
     ///
-    /// Scope and determinism: eviction is per *worker* — each (shard,
-    /// head) worker picks victims by its own logical clock, so a
-    /// session opened shard-wide may be reclaimed on some heads and not
-    /// others. `min_idle = Duration::ZERO` makes victim choice fully
-    /// deterministic (the logical clock alone decides); a non-zero gate
-    /// compares wall-clock idle time and is timing-dependent by nature.
+    /// Scope and determinism: the victim is selected once per *shard*
+    /// (ISSUE 8) — the shard directory merges every head worker's
+    /// logical clock and marks the single least-recently-used session on
+    /// all heads atomically, so a shard-wide session is dropped
+    /// everywhere or nowhere, never split. `min_idle = Duration::ZERO`
+    /// makes victim choice fully deterministic (the shard clock alone
+    /// decides); a non-zero gate compares wall-clock idle time and is
+    /// timing-dependent by nature.
     LruEvictIdle { min_idle: Duration },
+    /// Like `LruEvictIdle`, but the shard-wide victim is *demoted* into
+    /// the simulated host DRAM tier instead of dropped: every head
+    /// parks its copy of the victim's KV (keys, values, packed key
+    /// bits) in the shard's spill pool, charging the writeback through
+    /// the `dram` channel model. The victim's next `Decode`/`Attend`
+    /// promotes the rows back (a slow first token with modeled read
+    /// latency), so clients never observe [`ServeError::Evicted`] under
+    /// this policy. Victim selection is shard-coordinated and
+    /// deterministic exactly as for `LruEvictIdle`.
+    LruSpillToDram { min_idle: Duration },
 }
 
 /// Server configuration.
@@ -381,11 +406,20 @@ struct Worker {
 pub struct CamformerServer {
     cfg: ServerConfig,
     workers: Vec<Worker>,
+    /// One coordinated session directory per shard, shared by that
+    /// shard's head workers: residency + merged-clock LRU order + the
+    /// DRAM spill pool (ISSUE 8). Folded into the merged metrics at
+    /// shutdown.
+    dirs: Vec<Arc<ShardDirectory>>,
     started: Instant,
     /// Ids for internally-issued requests (session-handle tickets, open
     /// fan-out, drop-closes). They live in the top half of the id space
     /// so they never collide with caller-chosen request ids.
     next_id: AtomicU64,
+    /// Per-head closes that failed inside `SessionHandle::drop`'s
+    /// fire-and-forget teardown — the drop path cannot return them, so
+    /// they are counted here instead of vanishing silently.
+    close_failures: AtomicU64,
 }
 
 impl CamformerServer {
@@ -399,6 +433,8 @@ impl CamformerServer {
         FB: FnMut(usize) -> B,
     {
         assert!(cfg.shards >= 1 && cfg.heads >= 1, "need at least one worker");
+        let dirs: Vec<Arc<ShardDirectory>> =
+            (0..cfg.shards).map(|_| Arc::new(ShardDirectory::new(cfg.heads))).collect();
         let mut workers = Vec::with_capacity(cfg.workers());
         for w in 0..cfg.workers() {
             let (tx, rx) = mpsc::channel::<Envelope>();
@@ -406,14 +442,18 @@ impl CamformerServer {
             let gauges = Arc::new(WorkerGauges::default());
             let wgauges = gauges.clone();
             let wcfg = cfg.clone();
-            let handle = std::thread::spawn(move || worker_loop(w, wcfg, backend, rx, wgauges));
+            let dir = dirs[w / cfg.heads].clone();
+            let handle =
+                std::thread::spawn(move || worker_loop(w, wcfg, backend, rx, wgauges, dir));
             workers.push(Worker { tx, gauges, handle });
         }
         CamformerServer {
             cfg,
             workers,
+            dirs,
             started: Instant::now(),
             next_id: AtomicU64::new(1 << 62),
+            close_failures: AtomicU64::new(0),
         }
     }
 
@@ -425,6 +465,15 @@ impl CamformerServer {
     /// Allocate an id for an internally-issued request.
     pub(crate) fn alloc_id(&self) -> u64 {
         self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Record `n` failed per-head closes from a `SessionHandle`'s
+    /// fire-and-forget drop teardown (surfaced as
+    /// `Metrics::close_failures` at shutdown).
+    pub(crate) fn note_close_failures(&self, n: u64) {
+        if n > 0 {
+            self.close_failures.fetch_add(n, Ordering::Relaxed);
+        }
     }
 
     /// Submit a request and receive a typed [`Ticket`] — a per-request
@@ -550,17 +599,23 @@ impl CamformerServer {
     }
 
     /// Shut down: close queues, join workers (each drains its standing
-    /// queue first), return merged metrics and the serving window.
+    /// queue first), fold the shard directories' spill-tier counters and
+    /// the drop-path close failures, return merged metrics and the
+    /// serving window.
     pub fn shutdown(self) -> (Metrics, Duration) {
         let window = self.started.elapsed();
         let mut merged = Metrics::new();
-        let CamformerServer { workers, .. } = self;
+        let CamformerServer { workers, dirs, close_failures, .. } = self;
         for w in workers {
             drop(w.tx);
             if let Ok(m) = w.handle.join() {
                 merged.merge(&m);
             }
         }
+        for dir in &dirs {
+            dir.fold_metrics(&mut merged);
+        }
+        merged.close_failures += close_failures.load(Ordering::Relaxed);
         (merged, window)
     }
 }
@@ -592,11 +647,58 @@ fn deliver(metrics: &mut Metrics, op: Op, sink: &Sender<Response>, resp: Respons
     let _ = sink.send(resp);
 }
 
+/// Bounded tombstone set for sessions reclaimed by a dropping policy:
+/// their requests answer [`ServeError::Evicted`] (not `UnknownSession`)
+/// until the id is re-opened or the tombstone is acknowledged by a
+/// `Close`. The pre-PR-8 `HashSet` grew without bound on workloads that
+/// churn through session ids and never close the victims (the
+/// acknowledgement path only pruned ids whose owner asked); this keeps
+/// FIFO insertion order and drops the oldest tombstone past `cap`, so a
+/// very stale victim degrades to the equally-terminal `UnknownSession`
+/// instead of pinning memory forever.
+struct EvictedSet {
+    set: HashSet<SessionId>,
+    order: VecDeque<SessionId>,
+    cap: usize,
+}
+
+impl EvictedSet {
+    fn new(cap: usize) -> Self {
+        EvictedSet { set: HashSet::new(), order: VecDeque::new(), cap: cap.max(1) }
+    }
+
+    fn insert(&mut self, session: SessionId) {
+        if self.set.insert(session) {
+            self.order.push_back(session);
+            while self.order.len() > self.cap {
+                if let Some(oldest) = self.order.pop_front() {
+                    self.set.remove(&oldest);
+                }
+            }
+        }
+    }
+
+    fn remove(&mut self, session: SessionId) {
+        if self.set.remove(&session) {
+            self.order.retain(|&s| s != session);
+        }
+    }
+
+    fn contains(&self, session: SessionId) -> bool {
+        self.set.contains(&session)
+    }
+
+    #[cfg(test)]
+    fn len(&self) -> usize {
+        self.set.len()
+    }
+}
+
 /// The typed miss for a session absent from the worker's table: evicted
 /// sessions answer [`ServeError::Evicted`] until re-opened, everything
 /// else is an [`ServeError::UnknownSession`].
-fn missing_session(evicted: &HashSet<SessionId>, session: SessionId) -> ServeError {
-    if evicted.contains(&session) {
+fn missing_session(evicted: &EvictedSet, session: SessionId) -> ServeError {
+    if evicted.contains(session) {
         ServeError::Evicted { session }
     } else {
         ServeError::UnknownSession { session }
@@ -632,78 +734,136 @@ fn used_rows(sessions: &HashMap<SessionId, Session>) -> usize {
     sessions.values().map(|s| s.kv_rows()).sum()
 }
 
-/// Free budget rows for an incoming `Prefill` of `keep`: evict the
-/// least-recently-used unpinned idle session *other than the target
-/// itself* (its rows are being replaced, not added). Runs only inside a
-/// `Prefill` barrier, in program order, so victim choice — and therefore
-/// the budget trajectory — is identical across dispatch groupings.
-/// `Err(CapacityExhausted)` carries the pool size when the policy denies
-/// reclamation or nothing is evictable.
-fn reclaim_for_budget(
-    cfg: &ServerConfig,
+/// Apply the shard directory's pending demote/drop decisions to this
+/// worker's local state — the fan-out half of atomic shard-wide
+/// eviction. Decisions are made once (under the directory mutex, by the
+/// barrier that hit pressure) and applied lazily by every head: the
+/// initiator inside its own barrier, the other heads here at the top of
+/// their next scheduling cycle. A demote parks the session's whole KV
+/// store (keys, values, packed key bits) in the shard's DRAM spill
+/// pool; a drop releases it and leaves an `Evicted` tombstone. Both
+/// refund the session's provisioned rows to the budget accounting
+/// (`kv_rows_released`), exactly as the pre-PR-8 per-worker eviction
+/// did. Returns whether anything changed.
+fn apply_shard_transitions<B: AttentionBackend>(
+    backend: &mut B,
+    dir: &ShardDirectory,
+    head: usize,
     sessions: &mut HashMap<SessionId, Session>,
-    evicted: &mut HashSet<SessionId>,
+    evicted: &mut EvictedSet,
     metrics: &mut Metrics,
-    keep: SessionId,
-) -> Result<(), ServeError> {
-    let refusal = ServeError::CapacityExhausted { capacity: cfg.worker_kv_budget };
-    let ReclaimPolicy::LruEvictIdle { min_idle } = cfg.reclaim else {
-        return Err(refusal);
-    };
-    let victim = sessions
-        .values()
-        .filter(|s| s.id != keep && !s.is_pinned() && s.idle_for() >= min_idle)
-        .min_by_key(|s| s.last_touch_seq)
-        .map(|s| s.id);
-    let Some(victim) = victim else {
-        return Err(refusal);
-    };
-    let s = sessions.remove(&victim).expect("victim is resident");
-    metrics.kv_rows_released += s.store.release() as u64;
-    metrics.evictions += 1;
-    evicted.insert(victim);
-    Ok(())
+) -> bool {
+    let mut changed = false;
+    for (sid, action) in dir.pending_for(head) {
+        match sessions.get(&sid) {
+            None => {
+                // no local copy to demote/drop (e.g. the id was only ever
+                // prefilled on another head): just clear the sentence
+                dir.note_gone(sid, head);
+                continue;
+            }
+            // structurally impossible (decisions and applications both run
+            // between dispatch groups, when pin counts are zero) — but a
+            // pinned session must never be torn down, so leave the
+            // decision pending rather than violate the invariant
+            Some(s) if s.is_pinned() => continue,
+            Some(_) => {}
+        }
+        let s = sessions.remove(&sid).expect("present above");
+        match action {
+            PendingAction::Demote => {
+                metrics.kv_rows_released += s.store.capacity as u64;
+                dir.park(sid, head, s.store.demote());
+            }
+            PendingAction::Drop => {
+                metrics.kv_rows_released += s.store.release() as u64;
+                evicted.insert(sid);
+                dir.note_gone(sid, head);
+            }
+        }
+        changed = true;
+    }
+    if changed {
+        // local stores went away: bust any backend identity caches
+        backend.on_kv_update();
+    }
+    changed
 }
 
-/// Free one session slot under the worker's [`ReclaimPolicy`]: pick the
-/// least-recently-used (by logical touch position) session that is idle
-/// for at least `min_idle` and not pinned, release its store, and mark
-/// it evicted. `Err(SessionLimit)` when the policy denies reclamation or
-/// no session is eligible.
-fn reclaim_one(
+/// One round of shard-coordinated reclamation under memory pressure
+/// (budget rows or a session slot), run only inside `Prefill`/promotion
+/// barriers. The shard directory selects ONE victim shard-wide — the
+/// least-recently-used unpinned idle session by the merged shard clock,
+/// never `keep` (its rows are being replaced / restored, not added) —
+/// and marks it on every head atomically; this worker applies its own
+/// transition immediately and the caller re-checks pressure (the
+/// caller's `while pressure { reclaim_round()? }` loop). When every
+/// eligible candidate is already sentenced by a concurrent decision
+/// (both heads of a shard hitting pressure during a broadcast `open`),
+/// no *new* victim is marked — the pending transitions are applied
+/// instead, so victim SETS, demotion counts and eviction counts stay
+/// deterministic across dispatch configs. `Err(refusal)` when the
+/// policy denies reclamation or nothing is reclaimable.
+#[allow(clippy::too_many_arguments)]
+fn reclaim_round<B: AttentionBackend>(
+    backend: &mut B,
     cfg: &ServerConfig,
+    dir: &ShardDirectory,
+    head: usize,
     sessions: &mut HashMap<SessionId, Session>,
-    evicted: &mut HashSet<SessionId>,
+    evicted: &mut EvictedSet,
     metrics: &mut Metrics,
+    keep: SessionId,
+    refusal: ServeError,
 ) -> Result<(), ServeError> {
-    let ReclaimPolicy::LruEvictIdle { min_idle } = cfg.reclaim else {
-        return Err(ServeError::SessionLimit { max_sessions: cfg.max_sessions });
+    let (drop_victim, min_idle) = match cfg.reclaim {
+        ReclaimPolicy::Deny => return Err(refusal),
+        ReclaimPolicy::LruEvictIdle { min_idle } => (true, min_idle),
+        ReclaimPolicy::LruSpillToDram { min_idle } => (false, min_idle),
     };
-    let victim = sessions
+    let candidates: Vec<SessionId> = sessions
         .values()
-        .filter(|s| !s.is_pinned() && s.idle_for() >= min_idle)
-        .min_by_key(|s| s.last_touch_seq)
-        .map(|s| s.id);
-    let Some(victim) = victim else {
-        return Err(ServeError::SessionLimit { max_sessions: cfg.max_sessions });
-    };
-    let s = sessions.remove(&victim).expect("victim is resident");
-    metrics.kv_rows_released += s.store.release() as u64;
-    metrics.evictions += 1;
-    evicted.insert(victim);
-    Ok(())
+        .filter(|s| s.id != keep && !s.is_pinned() && s.idle_for() >= min_idle)
+        .map(|s| s.id)
+        .collect();
+    match dir.evict_shard_wide(head, &candidates, drop_victim) {
+        Reclaimed::Victim(_) => {
+            if drop_victim {
+                // counted once, by the deciding worker (demotions are
+                // counted inside the directory the same way)
+                metrics.evictions += 1;
+            }
+            apply_shard_transitions(backend, dir, head, sessions, evicted, metrics);
+            Ok(())
+        }
+        Reclaimed::PendingElsewhere => {
+            // every candidate is already sentenced: applying the pending
+            // transitions frees their rows — if that changes nothing
+            // (unreachable: a sentenced local candidate is by definition
+            // applicable), refuse rather than spin
+            if apply_shard_transitions(backend, dir, head, sessions, evicted, metrics) {
+                Ok(())
+            } else {
+                Err(refusal)
+            }
+        }
+        Reclaimed::None => Err(refusal),
+    }
 }
 
 /// Execute a `Prefill` barrier against the worker's session table:
-/// charge the shared KV budget (evicting LRU-idle sessions under the
-/// reclaim policy until the load fits), then reclaim a session *slot*
-/// the same way if the worker is at its session limit.
+/// charge the shared KV budget (reclaiming LRU-idle sessions
+/// shard-wide — drop or demote per the policy — until the load fits),
+/// then reclaim a session *slot* the same way if the worker is at its
+/// session limit, then admit the session into the shard directory.
 #[allow(clippy::too_many_arguments)]
 fn handle_prefill<B: AttentionBackend>(
     backend: &mut B,
     cfg: &ServerConfig,
+    dir: &ShardDirectory,
+    head: usize,
     sessions: &mut HashMap<SessionId, Session>,
-    evicted: &mut HashSet<SessionId>,
+    evicted: &mut EvictedSet,
     metrics: &mut Metrics,
     clock: u64,
     session: SessionId,
@@ -712,24 +872,54 @@ fn handle_prefill<B: AttentionBackend>(
 ) -> Result<Output, ServeError> {
     // Shared-pool admission first, before any slot is created: prefill
     // cost = its rows, net of the rows a re-prefill replaces. A refused
-    // prefill must leave the table untouched.
+    // prefill must leave the table untouched. `replaced` is re-read each
+    // round because a concurrent shard decision (the other head of a
+    // broadcast `open` under pressure) may demote the target itself.
     let rows = keys.len() / cfg.d_k;
-    let replaced = sessions.get(&session).map(|s| s.kv_rows()).unwrap_or(0);
-    while used_rows(sessions) - replaced + rows > cfg.worker_kv_budget {
-        reclaim_for_budget(cfg, sessions, evicted, metrics, session)?;
+    loop {
+        let replaced = sessions.get(&session).map(|s| s.kv_rows()).unwrap_or(0);
+        if used_rows(sessions) - replaced + rows <= cfg.worker_kv_budget {
+            break;
+        }
+        reclaim_round(
+            backend,
+            cfg,
+            dir,
+            head,
+            sessions,
+            evicted,
+            metrics,
+            session,
+            ServeError::CapacityExhausted { capacity: cfg.worker_kv_budget },
+        )?;
+    }
+    while !sessions.contains_key(&session) && sessions.len() >= cfg.max_sessions {
+        reclaim_round(
+            backend,
+            cfg,
+            dir,
+            head,
+            sessions,
+            evicted,
+            metrics,
+            session,
+            ServeError::SessionLimit { max_sessions: cfg.max_sessions },
+        )?;
     }
     if !sessions.contains_key(&session) {
-        if sessions.len() >= cfg.max_sessions {
-            reclaim_one(cfg, sessions, evicted, metrics)?;
-        }
         // (re-)opening revives an evicted id
-        evicted.remove(&session);
+        evicted.remove(session);
         sessions.insert(
             session,
             Session::new(session, KvStore::new(cfg.kv_capacity, cfg.d_k, cfg.d_v)),
         );
     }
+    // directory admission: registers residency on this head, refreshes
+    // the shard-clock LRU position, and discards any stale spilled copy
+    // for this (session, head) — a re-prefill replaces it wholesale
+    let generation = dir.admit(session, head);
     let s = sessions.get_mut(&session).unwrap();
+    s.generation = generation;
     s.touch(clock);
     s.store.load(&keys, &values)?;
     backend.on_kv_update();
@@ -941,8 +1131,9 @@ fn dispatch_pending<B: AttentionBackend>(
 fn execute_batch<B: AttentionBackend>(
     backend: &mut B,
     cfg: &ServerConfig,
+    dir: &ShardDirectory,
     sessions: &mut HashMap<SessionId, Session>,
-    evicted: &mut HashSet<SessionId>,
+    evicted: &mut EvictedSet,
     clock: &mut u64,
     items: Vec<Envelope>,
     head: usize,
@@ -970,6 +1161,9 @@ fn execute_batch<B: AttentionBackend>(
                     None => Err(missing_session(evicted, session)),
                     Some(s) => {
                         s.touch(*clock);
+                        // mirror every local touch into the shard clock so
+                        // LRU victim choice merges all heads' recency
+                        dir.touch(session);
                         // admission for the *grown* cache runs before the
                         // append so a refused Decode leaves the session
                         // untouched (a client retry must not double-append)
@@ -1026,6 +1220,7 @@ fn execute_batch<B: AttentionBackend>(
             Request::Attend { id, session, query, .. } => match sessions.get_mut(&session) {
                 Some(s) => {
                     s.touch(*clock);
+                    dir.touch(session);
                     s.pin();
                     let prefix = s.store.len();
                     pending.push(PendingQuery {
@@ -1054,27 +1249,47 @@ fn execute_batch<B: AttentionBackend>(
             Request::Close { id, session, .. } => match sessions.get_mut(&session) {
                 Some(s) => {
                     s.touch(*clock);
+                    dir.touch(session);
                     closes.push(PendingClose { id, session, enq, sink });
                 }
                 None => {
-                    let err = missing_session(evicted, session);
-                    // a Close of an evicted id acknowledges the eviction
-                    // (handle drop/close does this): forget the tombstone
-                    // so the set stays bounded by un-acknowledged victims
-                    // instead of growing with every id ever evicted
-                    evicted.remove(&session);
-                    deliver(
-                        metrics,
-                        Op::Close,
-                        &sink,
-                        Response {
-                            id,
-                            session,
-                            head,
-                            result: Err(err),
-                            latency: enq.elapsed(),
-                        },
-                    );
+                    // a demoted session can be closed without promoting it
+                    // back: discard the parked copy and acknowledge with
+                    // its spilled context length (its provisioned rows
+                    // were already refunded at demotion)
+                    if let Some(len) = dir.close_spilled(session, head) {
+                        deliver(
+                            metrics,
+                            Op::Close,
+                            &sink,
+                            Response {
+                                id,
+                                session,
+                                head,
+                                result: Ok(Output { output: Vec::new(), seq_len: len }),
+                                latency: enq.elapsed(),
+                            },
+                        );
+                    } else {
+                        let err = missing_session(evicted, session);
+                        // a Close of an evicted id acknowledges the eviction
+                        // (handle drop/close does this): forget the tombstone
+                        // so the set stays bounded by un-acknowledged victims
+                        // instead of growing with every id ever evicted
+                        evicted.remove(session);
+                        deliver(
+                            metrics,
+                            Op::Close,
+                            &sink,
+                            Response {
+                                id,
+                                session,
+                                head,
+                                result: Err(err),
+                                latency: enq.elapsed(),
+                            },
+                        );
+                    }
                 }
             },
             Request::Prefill { .. } => unreachable!("prefills are Barrier groups"),
@@ -1104,6 +1319,7 @@ fn execute_batch<B: AttentionBackend>(
         let seq_len = sessions.get(&c.session).map(|s| s.store.len()).unwrap_or(0);
         if let Some(s) = sessions.remove(&c.session) {
             metrics.kv_rows_released += s.store.release() as u64;
+            dir.note_gone(c.session, head);
         }
         deliver(
             metrics,
@@ -1131,8 +1347,9 @@ fn execute_batch<B: AttentionBackend>(
 fn run_prefill_barrier<B: AttentionBackend>(
     backend: &mut B,
     cfg: &ServerConfig,
+    dir: &ShardDirectory,
     sessions: &mut HashMap<SessionId, Session>,
-    evicted: &mut HashSet<SessionId>,
+    evicted: &mut EvictedSet,
     metrics: &mut Metrics,
     clock: &mut u64,
     env: Envelope,
@@ -1142,9 +1359,9 @@ fn run_prefill_barrier<B: AttentionBackend>(
     let (id, session) = (req.id(), req.session());
     *clock += 1;
     let result = match req {
-        Request::Prefill { keys, values, .. } => {
-            handle_prefill(backend, cfg, sessions, evicted, metrics, *clock, session, keys, values)
-        }
+        Request::Prefill { keys, values, .. } => handle_prefill(
+            backend, cfg, dir, head, sessions, evicted, metrics, *clock, session, keys, values,
+        ),
         _ => unreachable!("only prefills run as barriers"),
     };
     deliver(
@@ -1153,6 +1370,90 @@ fn run_prefill_barrier<B: AttentionBackend>(
         &sink,
         Response { id, session, head, result, latency: enq.elapsed() },
     );
+}
+
+/// Whether serving `req` first requires promoting its session out of
+/// the shard's DRAM spill pool: a `Decode`/`Attend` whose session has
+/// no local copy but a parked one. Such a request cannot join a
+/// dispatch group — promotion rebuilds the session store, so it runs as
+/// its own barrier, exactly like `Prefill`.
+fn needs_promotion(
+    dir: &ShardDirectory,
+    sessions: &HashMap<SessionId, Session>,
+    head: usize,
+    req: &Request,
+) -> bool {
+    match req {
+        Request::Decode { session, .. } | Request::Attend { session, .. } => {
+            !sessions.contains_key(session) && dir.is_spilled(*session, head)
+        }
+        _ => false,
+    }
+}
+
+/// Promote `session`'s parked KV out of the shard's DRAM spill pool
+/// back into residency, as a front-of-queue barrier (the demotion
+/// mirror of the `Prefill` barrier): first make room — budget rows for
+/// the restored length, then a session slot — through the same
+/// shard-coordinated reclaim loop, then charge the modeled DRAM read
+/// and re-insert the session byte-identically (keys, values, packed key
+/// bits). The triggering envelope is NOT consumed: on `Ok` it stays at
+/// the front and executes in the next cycle against the restored store
+/// (its slow first token now carries the promotion cost); on `Err` the
+/// caller pops and refuses it.
+#[allow(clippy::too_many_arguments)]
+fn run_promotion_barrier<B: AttentionBackend>(
+    backend: &mut B,
+    cfg: &ServerConfig,
+    dir: &ShardDirectory,
+    head: usize,
+    sessions: &mut HashMap<SessionId, Session>,
+    evicted: &mut EvictedSet,
+    metrics: &mut Metrics,
+    session: SessionId,
+) -> Result<(), ServeError> {
+    let Some((len, _capacity)) = dir.spilled_shape(session, head) else {
+        // raced away (closed or re-admitted between the front check and
+        // here): nothing to promote — the normal path serves the request
+        return Ok(());
+    };
+    while used_rows(sessions) + len > cfg.worker_kv_budget {
+        reclaim_round(
+            backend,
+            cfg,
+            dir,
+            head,
+            sessions,
+            evicted,
+            metrics,
+            session,
+            ServeError::CapacityExhausted { capacity: cfg.worker_kv_budget },
+        )?;
+    }
+    while sessions.len() >= cfg.max_sessions {
+        reclaim_round(
+            backend,
+            cfg,
+            dir,
+            head,
+            sessions,
+            evicted,
+            metrics,
+            session,
+            ServeError::SessionLimit { max_sessions: cfg.max_sessions },
+        )?;
+    }
+    let Some((store, generation, _latency_ns)) = dir.promote(session, head) else {
+        return Ok(());
+    };
+    let restored = store.len();
+    let mut s = Session::new(session, store);
+    s.generation = generation;
+    sessions.insert(session, s);
+    backend.on_kv_update();
+    // restored rows re-draw on the shared pool, exactly like a prefill
+    metrics.note_kv_admission(restored, used_rows(sessions));
+    Ok(())
 }
 
 /// The standing per-worker scheduler (see the module docs for the
@@ -1168,13 +1469,16 @@ fn worker_loop<B: AttentionBackend>(
     mut backend: B,
     rx: Receiver<Envelope>,
     gauges: Arc<WorkerGauges>,
+    dir: Arc<ShardDirectory>,
 ) -> Metrics {
     let head = worker % cfg.heads;
     let mut metrics = Metrics::new();
     let mut sessions: HashMap<SessionId, Session> = HashMap::new();
-    // sessions reclaimed by the policy: their requests answer `Evicted`
-    // (not `UnknownSession`) until the id is re-opened
-    let mut evicted: HashSet<SessionId> = HashSet::new();
+    // sessions reclaimed by a dropping policy: their requests answer
+    // `Evicted` (not `UnknownSession`) until the id is re-opened. Bounded
+    // well past the live-session count so only pathologically stale
+    // tombstones age out.
+    let mut evicted = EvictedSet::new((4 * cfg.max_sessions).max(16));
     // the worker's logical clock: one tick per request, in program
     // order — the deterministic LRU key (wall-clock ties would make
     // eviction, and therefore outputs, timing-dependent)
@@ -1187,6 +1491,11 @@ fn worker_loop<B: AttentionBackend>(
         if !queue.wait_nonempty(&rx) {
             break;
         }
+        // Reconcile with the shard directory first: apply any demote /
+        // drop decided by another head's barrier since the last cycle,
+        // so a victim is torn down on every head before this cycle's
+        // work can observe it — the fan-out half of atomic eviction.
+        apply_shard_transitions(&mut backend, &dir, head, &mut sessions, &mut evicted, &mut metrics);
         // A Prefill at the front is a barrier: run it alone, then loop.
         if matches!(queue.front().map(|e| &e.req), Some(Request::Prefill { .. })) {
             let env = queue.pop().expect("front checked");
@@ -1195,6 +1504,7 @@ fn worker_loop<B: AttentionBackend>(
             run_prefill_barrier(
                 &mut backend,
                 &cfg,
+                &dir,
                 &mut sessions,
                 &mut evicted,
                 &mut metrics,
@@ -1202,6 +1512,47 @@ fn worker_loop<B: AttentionBackend>(
                 env,
                 head,
             );
+            continue;
+        }
+        // A Decode/Attend against a spilled session is a promotion
+        // barrier: restore the KV from the DRAM tier (or refuse the
+        // request), then loop — on success the envelope is still at the
+        // front and executes against the restored store.
+        let promote = queue
+            .front()
+            .filter(|env| needs_promotion(&dir, &sessions, head, &env.req))
+            .map(|env| env.req.session());
+        if let Some(session) = promote {
+            metrics.note_batch();
+            if let Err(e) = run_promotion_barrier(
+                &mut backend,
+                &cfg,
+                &dir,
+                head,
+                &mut sessions,
+                &mut evicted,
+                &mut metrics,
+                session,
+            ) {
+                let env = queue.pop().expect("front checked");
+                gauges.depth.fetch_sub(1, Ordering::Relaxed);
+                let op = match env.req {
+                    Request::Decode { .. } => Op::Decode,
+                    _ => Op::Attend,
+                };
+                deliver(
+                    &mut metrics,
+                    op,
+                    &env.sink,
+                    Response {
+                        id: env.req.id(),
+                        session,
+                        head,
+                        result: Err(e),
+                        latency: env.enq.elapsed(),
+                    },
+                );
+            }
             continue;
         }
         // Open a dispatch plan and extend it: admit the longest
@@ -1214,6 +1565,7 @@ fn worker_loop<B: AttentionBackend>(
                 match queue.front() {
                     Some(env)
                         if !matches!(env.req, Request::Prefill { .. })
+                            && !needs_promotion(&dir, &sessions, head, &env.req)
                             && plan.admits(&env.req) =>
                     {
                         let env = queue.pop().expect("front checked");
@@ -1251,6 +1603,7 @@ fn worker_loop<B: AttentionBackend>(
         execute_batch(
             &mut backend,
             &cfg,
+            &dir,
             &mut sessions,
             &mut evicted,
             &mut clock,
@@ -2075,6 +2428,77 @@ mod tests {
     fn round_robin_coverage() {
         let heads: Vec<usize> = round_robin_heads(10, 3).collect();
         assert_eq!(heads, vec![0, 1, 2, 0, 1, 2, 0, 1, 2, 0]);
+    }
+
+    #[test]
+    fn evicted_set_drops_oldest_tombstone_past_the_cap() {
+        let mut set = EvictedSet::new(3);
+        for sid in 1..=3u64 {
+            set.insert(sid);
+        }
+        assert_eq!(set.len(), 3);
+        // a duplicate insert neither grows the set nor refreshes order
+        set.insert(2);
+        assert_eq!(set.len(), 3);
+        // the 4th tombstone ages out the FIFO-oldest (1), not the cap'th
+        set.insert(4);
+        assert_eq!(set.len(), 3);
+        assert!(!set.contains(1), "oldest tombstone must age out");
+        assert!(set.contains(2) && set.contains(3) && set.contains(4));
+        // explicit removal (revive / close-ack) also drops order state,
+        // so the freed slot is reusable
+        set.remove(3);
+        assert_eq!(set.len(), 2);
+        set.insert(5);
+        set.insert(6);
+        assert_eq!(set.len(), 3, "cap re-binds after removals");
+        assert!(!set.contains(2), "2 was the oldest survivor");
+    }
+
+    /// Regression for the unbounded pre-PR-8 tombstone set: churn far
+    /// more evictions through a worker than the bound allows and check
+    /// that (a) stale victims degrade to `UnknownSession` instead of
+    /// pinning memory forever, while (b) recent victims still answer the
+    /// typed `Evicted`.
+    #[test]
+    fn tombstone_set_stays_bounded_under_eviction_churn() {
+        // max_sessions = 2 -> cap = (4 * 2).max(16) = 16 tombstones
+        let cfg = ServerConfig {
+            max_sessions: 2,
+            kv_capacity: 16,
+            reclaim: ReclaimPolicy::LruEvictIdle { min_idle: Duration::ZERO },
+            ..Default::default()
+        };
+        let server = functional_server(cfg);
+        let mut rng = Rng::new(8031);
+        // churn 40 sessions through 2 slots: 38 evictions, in id order
+        for sid in 1..=40u64 {
+            let r = server
+                .submit_ticket(Request::Prefill {
+                    id: sid,
+                    session: sid,
+                    head: 0,
+                    keys: rng.normal_vec(2 * 64),
+                    values: rng.normal_vec(2 * 64),
+                })
+                .unwrap()
+                .wait();
+            assert!(r.is_ok(), "session {sid}: {:?}", r.result);
+        }
+        // victims 1..=22 aged out of the 16-slot tombstone set; 23..=38
+        // are the survivors
+        let stale = server
+            .submit_ticket(Request::Attend { id: 100, session: 1, head: 0, query: vec![0.0; 64] })
+            .unwrap()
+            .wait();
+        assert_eq!(stale.result, Err(ServeError::UnknownSession { session: 1 }));
+        let recent = server
+            .submit_ticket(Request::Attend { id: 101, session: 30, head: 0, query: vec![0.0; 64] })
+            .unwrap()
+            .wait();
+        assert_eq!(recent.result, Err(ServeError::Evicted { session: 30 }));
+        let (m, _) = server.shutdown();
+        assert_eq!(m.evictions, 38);
     }
 
     #[test]

@@ -37,9 +37,16 @@ pub struct Session {
     /// Program-order position of the last request that touched this
     /// session (the worker's logical clock) — the deterministic LRU key.
     pub last_touch_seq: u64,
-    /// Wall-clock time of that touch, for `LruEvictIdle`'s `min_idle`
+    /// Wall-clock time of that touch, for the LRU policies' `min_idle`
     /// eligibility gate.
     pub last_touch_at: Instant,
+    /// Shard-directory generation this local copy belongs to (ISSUE 8).
+    /// The directory bumps a session's generation on every shard-level
+    /// demote/drop decision; a worker whose local copy carries an older
+    /// generation learns at its next reconcile that the copy is stale and
+    /// must be released (drop) or parked in the spill pool (demote) —
+    /// that lazy fan-out is what makes eviction atomic across heads.
+    pub generation: u64,
     /// In-flight queries of the currently-executing dispatch group that
     /// attend over this store. Eviction must skip pinned sessions.
     pins: u32,
@@ -52,6 +59,7 @@ impl Session {
             store,
             last_touch_seq: 0,
             last_touch_at: Instant::now(),
+            generation: 0,
             pins: 0,
         }
     }

@@ -52,6 +52,7 @@ pub struct HbmChannel {
     bank_ready_ns: Vec<f64>,
     /// Running totals.
     pub bytes_read: u64,
+    pub bytes_written: u64,
     pub row_hits: u64,
     pub row_misses: u64,
     pub busy_ns: f64,
@@ -63,6 +64,7 @@ impl HbmChannel {
             open_rows: vec![None; cfg.banks],
             bank_ready_ns: vec![0.0; cfg.banks],
             bytes_read: 0,
+            bytes_written: 0,
             row_hits: 0,
             row_misses: 0,
             busy_ns: 0.0,
@@ -79,9 +81,24 @@ impl HbmChannel {
     /// Read `bytes` at `addr` starting no earlier than `now_ns`.
     /// Returns (completion time \[ns\], access kind).
     pub fn read(&mut self, now_ns: f64, addr: u64, bytes: usize) -> (f64, AccessKind) {
+        self.bytes_read += bytes as u64;
+        self.access(now_ns, addr, bytes)
+    }
+
+    /// Write `bytes` at `addr` starting no earlier than `now_ns` (the KV
+    /// spill-tier writeback path). Same open-page timing as a read — the
+    /// simple model charges symmetric column access — tallied separately
+    /// so read bandwidth claims stay clean.
+    pub fn write(&mut self, now_ns: f64, addr: u64, bytes: usize) -> (f64, AccessKind) {
+        self.bytes_written += bytes as u64;
+        self.access(now_ns, addr, bytes)
+    }
+
+    /// The shared open-page access path: bank/row decode, hit/miss timing,
+    /// bank-ready bookkeeping. Byte tallies belong to `read`/`write`.
+    fn access(&mut self, now_ns: f64, addr: u64, bytes: usize) -> (f64, AccessKind) {
         let (bank, row) = self.locate(addr);
         let transfer_ns = bytes as f64 / (self.cfg.peak_gbps * 1e9) * 1e9;
-        self.bytes_read += bytes as u64;
 
         let kind = if self.open_rows[bank] == Some(row) {
             self.row_hits += 1;
@@ -106,9 +123,10 @@ impl HbmChannel {
         (done, kind)
     }
 
-    /// Total DRAM access energy so far \[J\].
+    /// Total DRAM access energy so far \[J\]: reads and writes at the same
+    /// per-bit figure [43].
     pub fn energy_j(&self) -> f64 {
-        self.bytes_read as f64 * 8.0 * self.cfg.energy_nj_per_bit * 1e-9
+        (self.bytes_read + self.bytes_written) as f64 * 8.0 * self.cfg.energy_nj_per_bit * 1e-9
     }
 
     /// Achieved bandwidth over a window [GB/s].
@@ -202,6 +220,20 @@ mod tests {
         let mut ch = HbmChannel::new(DramConfig::default());
         ch.read(0.0, 0, 1000);
         let expect = 1000.0 * 8.0 * 2.33e-9;
+        assert!((ch.energy_j() - expect).abs() < 1e-15);
+    }
+
+    #[test]
+    fn writes_share_page_timing_and_count_separately() {
+        let mut ch = HbmChannel::new(DramConfig::default());
+        let (_, k1) = ch.write(0.0, 0, 256);
+        let (_, k2) = ch.read(100.0, 256, 128); // same page the write opened
+        assert_eq!(k1, AccessKind::RowMiss);
+        assert_eq!(k2, AccessKind::RowHit);
+        assert_eq!(ch.bytes_written, 256);
+        assert_eq!(ch.bytes_read, 128);
+        // energy charges both directions at 2.33 nJ/bit
+        let expect = (256.0 + 128.0) * 8.0 * 2.33e-9;
         assert!((ch.energy_j() - expect).abs() < 1e-15);
     }
 

@@ -44,6 +44,14 @@
 //! sequential dispatch must survive all of it, with counter parity on
 //! admitted KV rows, pool residency high-water mark, evictions, and
 //! closes.
+//!
+//! The shard-coordinated spill tier (ISSUE 8) adds a **spill family**:
+//! the admission-overflowing streams re-run under
+//! `ReclaimPolicy::LruSpillToDram`, where the pressure must be
+//! *invisible* — every response bit-equal to an unlimited pressure-free
+//! run (demoted KV promotes back byte-identically, spilled closes ack
+//! like resident ones), zero `Evicted` anywhere, and demote/promote
+//! counter parity across dispatch configs.
 
 use std::thread;
 use std::time::Duration;
@@ -504,6 +512,88 @@ fn arrival_jittered_streams_with_kv_budget_stay_bit_equal() {
     assert!(
         budget_refusals > 0,
         "streams must actually hit the shared KV budget, or this family pins nothing"
+    );
+}
+
+/// ISSUE 8 acceptance: the DRAM spill tier dissolves eviction. The same
+/// admission-overflowing streams as the `LruEvictIdle` family run at
+/// `max_sessions = 2` under `ReclaimPolicy::LruSpillToDram`: the shard
+/// directory demotes the LRU victim's KV (keys, values, packed key
+/// bits) into the simulated host tier and promotes it back on the
+/// victim's next request. Unlike eviction, the pressure must be
+/// INVISIBLE in the responses: every run is compared against an
+/// UNLIMITED ground truth (`max_sessions = 8`, `Deny`, sequential dense
+/// dispatch — no pressure at all), so zero `Evicted` responses, zero
+/// evictions, and byte-identical outputs through the fused kernel after
+/// however many demote/promote round-trips the stream forced — which is
+/// exactly the packed-bit/value integrity proof, fuzzed. Demote and
+/// promote decisions ride the merged shard clock (program order), so
+/// their counters must agree across dispatch configs the same way
+/// eviction counters do in the family above.
+#[test]
+fn spill_tier_streams_never_evict_and_stay_bit_equal() {
+    let spill = ReclaimPolicy::LruSpillToDram { min_idle: Duration::ZERO };
+    let seq_policy = BatchPolicy::conservative(1, Duration::from_micros(50));
+    let mut rng = Rng::new(0x5B111);
+    let mut demotions_total = 0u64;
+    let mut promotions_total = 0u64;
+    for case in 0..80u64 {
+        let mut crng = rng.split();
+        let ops = 10 + crng.index(30);
+        let stream = gen_stream(&mut crng, ops);
+
+        // unlimited ground truth: no slot pressure, nothing ever leaves
+        // the accelerator tier
+        let (unlimited, _) = run_stream(&stream, seq_policy, 8, ReclaimPolicy::Deny, |_| {
+            pipeline_backend(Pipeline::Dense)
+        });
+
+        // spill ground truth: sequential dispatch under slot pressure,
+        // through the serving-default fused kernel — anchors the
+        // demote/promote counter parity across the batched configs
+        let (sequential, m_seq) =
+            run_stream(&stream, seq_policy, 2, spill, |_| pipeline_backend(Pipeline::Fused));
+        assert_equivalent(case, "spill/sequential", &unlimited, &sequential);
+        demotions_total += m_seq.demotions;
+        promotions_total += m_seq.promotions;
+
+        let configs: [(&str, BatchPolicy); 3] = [
+            ("spill/conservative", BatchPolicy::conservative(16, Duration::from_millis(1))),
+            ("spill/fused", BatchPolicy::bounds(16, Duration::from_millis(1))),
+            ("spill/fused-scratch", BatchPolicy::bounds(16, Duration::from_millis(1))),
+        ];
+        for (label, policy) in [("spill/sequential", seq_policy)].into_iter().chain(configs) {
+            let (resps, m) = if label == "spill/sequential" {
+                (sequential.clone(), m_seq.clone())
+            } else if label == "spill/fused-scratch" {
+                run_stream(&stream, policy, 2, spill, |_| {
+                    NoPrefixViews(pipeline_backend(Pipeline::Fused))
+                })
+            } else {
+                run_stream(&stream, policy, 2, spill, |_| pipeline_backend(Pipeline::Fused))
+            };
+            assert_equivalent(case, label, &unlimited, &resps);
+            assert!(
+                resps.iter().all(|r| !matches!(r.result, Err(ServeError::Evicted { .. }))),
+                "case {case} {label}: the spill tier must never answer Evicted"
+            );
+            assert_eq!(m.evictions, 0, "case {case} {label}: spill demotes, never drops");
+            assert_eq!(m.demotions, m_seq.demotions, "case {case} {label}: demotion parity");
+            assert_eq!(m.promotions, m_seq.promotions, "case {case} {label}: promotion parity");
+            assert_eq!(
+                m.spilled_rows, m_seq.spilled_rows,
+                "case {case} {label}: parked-rows parity at shutdown"
+            );
+            assert_eq!(m.closes, m_seq.closes, "case {case} {label}: close parity");
+            assert_eq!(
+                m.kv_rows_released, m_seq.kv_rows_released,
+                "case {case} {label}: release accounting parity"
+            );
+        }
+    }
+    assert!(
+        demotions_total > 0 && promotions_total > 0,
+        "streams must actually demote AND promote, or this family pins nothing"
     );
 }
 

@@ -4,6 +4,12 @@
 //! `WorkerGone` propagation), explicit `close` lifecycle, and
 //! `ReclaimPolicy::LruEvictIdle` turning terminal admission failures
 //! into evictions.
+//!
+//! Extended for shard-coordinated reclamation (ISSUE 8): eviction picks
+//! ONE victim per shard and tears it down on every head atomically (no
+//! split-brain sessions), and `ReclaimPolicy::LruSpillToDram` demotes
+//! victims into the simulated host DRAM tier and promotes them back
+//! byte-identically — packed key bits included — on their next request.
 
 use std::time::Duration;
 
@@ -287,6 +293,109 @@ fn open_past_the_session_limit_follows_the_reclaim_policy() {
     let (m, _) = server.shutdown();
     assert_eq!(m.evictions, 2);
     assert!(m.closes >= 1, "handle drops close whatever sessions remain");
+}
+
+/// ISSUE 8 acceptance: eviction is atomic across a shard's heads. The
+/// pre-PR-8 per-worker eviction could reclaim a session on one head
+/// while the other kept serving it (split-brain); the shard directory
+/// must pick ONE victim and drop it on BOTH heads, counting one
+/// eviction for the one shard-wide decision.
+#[test]
+fn shard_eviction_is_atomic_across_heads() {
+    let cfg = ServerConfig {
+        heads: 2,
+        max_sessions: 2,
+        kv_capacity: 16,
+        reclaim: ReclaimPolicy::LruEvictIdle { min_idle: Duration::ZERO },
+        ..Default::default()
+    };
+    let server = functional_server(cfg);
+    let mut rng = Rng::new(9800);
+    let h1 = server.open(1, rng.normal_vec(8 * 64), rng.normal_vec(8 * 64)).unwrap();
+    let h2 = server.open(2, rng.normal_vec(8 * 64), rng.normal_vec(8 * 64)).unwrap();
+    // touch session 2 on both heads so session 1 is the shard-wide LRU
+    assert!(h2.attend_on(0, rng.normal_vec(64)).unwrap().wait().is_ok());
+    assert!(h2.attend_on(1, rng.normal_vec(64)).unwrap().wait().is_ok());
+    // the over-limit open broadcasts to both heads; each worker hits
+    // slot pressure, but only ONE shard-wide victim may be chosen
+    let h3 = server.open(3, rng.normal_vec(8 * 64), rng.normal_vec(8 * 64)).unwrap();
+    // the victim is gone on BOTH heads — not evicted on one and stale
+    // on the other
+    for head in 0..2 {
+        let r = h1.attend_on(head, rng.normal_vec(64)).unwrap().wait();
+        assert_eq!(
+            r.result,
+            Err(ServeError::Evicted { session: 1 }),
+            "head {head} must agree the victim is evicted"
+        );
+    }
+    // the survivor still serves on both heads
+    assert!(h2.attend_on(0, rng.normal_vec(64)).unwrap().wait().is_ok());
+    assert!(h2.attend_on(1, rng.normal_vec(64)).unwrap().wait().is_ok());
+    drop((h1, h2, h3));
+    let (m, _) = server.shutdown();
+    assert_eq!(m.evictions, 1, "one shard-wide decision, counted once");
+    assert_eq!(m.demotions, 0, "the dropping policy never spills");
+}
+
+/// ISSUE 8 acceptance: under `LruSpillToDram` a victim is demoted to
+/// the DRAM tier and its next request promotes it back byte-identically
+/// (the attend output matches the functional reference over the
+/// original KV — which exercises the restored packed key bits, since
+/// the fused pipeline scores them directly). Clients never see
+/// `Evicted`; the spill-tier counters surface the round trip.
+#[test]
+fn demoted_session_resumes_byte_identical_after_promotion() {
+    let d = 64usize;
+    let capacity = 32usize;
+    let cfg = ServerConfig {
+        kv_capacity: capacity,
+        // two 16-row sessions overflow the pool: exactly one can be
+        // resident at a time, so every switch demotes one and promotes
+        // the other
+        worker_kv_budget: 24,
+        reclaim: ReclaimPolicy::LruSpillToDram { min_idle: Duration::ZERO },
+        ..Default::default()
+    };
+    let quantum = cfg.pad_quantum;
+    let server = functional_server(cfg);
+    let mut rng = Rng::new(9900);
+    let keys = rng.normal_vec(16 * d);
+    let values = rng.normal_vec(16 * d);
+    let mut mirror = KvStore::new(capacity, d, d);
+    mirror.load(&keys, &values).unwrap();
+
+    let ha = server.open(1, keys, values).unwrap();
+    // opening session 2 overflows the 24-row pool: session 1 is demoted
+    // (not dropped) to make room
+    let hb = server.open(2, rng.normal_vec(16 * d), rng.normal_vec(16 * d)).unwrap();
+    // touching the demoted session promotes it back — a slow first
+    // token, NOT ServeError::Evicted — and the restored KV must be
+    // byte-identical to what was demoted
+    let q = rng.normal_vec(d);
+    let r = ha.attend(q.clone()).unwrap().wait();
+    assert!(r.is_ok(), "promotion must revive the session: {:?}", r.result);
+    assert_eq!(r.seq_len(), 16, "restored context length");
+    let rows = mirror.len().div_ceil(quantum) * quantum;
+    let (kp, vp, _) = mirror.padded(rows);
+    let mut reference = FunctionalBackend::new(capacity, d);
+    let want = reference.attend(&q, kp, vp).unwrap();
+    assert_eq!(r.output(), &want[..], "restored KV (incl. packed bits) must be byte-identical");
+
+    // closing the (now spilled) session 2 discards its parked copy
+    // without promoting it: the ack carries the spilled context length
+    hb.close().expect("close of a demoted session");
+    ha.close().expect("close of the promoted session");
+    let (m, _) = server.shutdown();
+    assert_eq!(m.evictions, 0, "the spill tier never drops state");
+    assert_eq!(m.demotions, 2, "A demoted for B's open, B demoted for A's promotion");
+    assert_eq!(m.promotions, 1);
+    assert_eq!(m.spilled_rows, 0, "both parked copies were closed or promoted");
+    assert!(m.dram_bytes_written > 0, "demotion writeback rides the DRAM channel");
+    assert!(m.dram_bytes_read > 0, "promotion reads ride the DRAM channel");
+    assert!(m.promotion_p50_ns() > 0.0, "promotion latency is modeled");
+    assert_eq!(m.errors, 0, "no client-visible failure anywhere in the round trip");
+    assert_eq!(m.closes, 2);
 }
 
 #[test]

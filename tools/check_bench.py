@@ -1,21 +1,29 @@
 #!/usr/bin/env python3
-"""BENCH_hotpath.json regression smoke (ISSUE 7, satellite 5).
+"""BENCH_hotpath.json regression smoke (ISSUE 7, satellite 5; spill
+tier + noise margin in ISSUE 8).
 
 Run after `cargo bench --bench coordinator_hotpath` emits
 BENCH_hotpath.json. Two gates:
 
 1. completeness — every scenario key the bench has historically emitted
    must still be present (a bench refactor that silently drops a
-   scenario reads as "no regression" forever after);
+   scenario reads as "no regression" forever after). This gate is
+   STRICT: a missing key fails regardless of any margin;
 2. the headline FlashCAM claim — the fused streaming kernel must beat
    the PR-4 sparse_incremental pipeline per decode step at the largest
    context (n = 4096), where the O(n·d) scoring loop dominates and the
-   u64 word-parallel pass has the most room.
+   u64 word-parallel pass has the most room. This gate carries a small
+   configurable noise margin (default 3%): the two timings come from
+   separate wall-clock loops on a shared machine, so `fused == sparse
+   * 1.0001` is scheduler jitter, not a regression. Override with
+   `--margin 0.05` or `CHECK_BENCH_MARGIN=0.05` (0 restores the strict
+   comparison).
 
 Stdlib only; exits non-zero with a readable report on any violation.
 """
 
 import json
+import os
 import sys
 
 EXPECTED_KEYS = [
@@ -32,14 +40,41 @@ EXPECTED_KEYS = [
     ],
     # standing-scheduler open-loop burst (ISSUE 6)
     "bursty_open_loop_16sess_q8",
+    # DRAM spill-tier churn (ISSUE 8): the ns/op headline plus the
+    # decision/traffic counters that prove the tier actually cycled
+    "spill_churn_8sess_budget64",
+    "spill_churn_demotions",
+    "spill_churn_promotions",
+    "spill_churn_dram_bytes",
 ]
 
 FUSED = "long_context_fused_incremental_n4096"
 SPARSE = "long_context_sparse_incremental_n4096"
 
+DEFAULT_MARGIN = 0.03
+
+
+def parse_margin(argv: list) -> float:
+    """The noise margin: --margin takes precedence over
+    CHECK_BENCH_MARGIN, which takes precedence over the default."""
+    margin = float(os.environ.get("CHECK_BENCH_MARGIN", DEFAULT_MARGIN))
+    if "--margin" in argv:
+        i = argv.index("--margin")
+        margin = float(argv[i + 1])
+        del argv[i : i + 2]
+    if margin < 0:
+        raise ValueError(f"margin must be >= 0, got {margin}")
+    return margin
+
 
 def main() -> int:
-    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_hotpath.json"
+    argv = sys.argv[1:]
+    try:
+        margin = parse_margin(argv)
+    except (ValueError, IndexError) as e:
+        print(f"check_bench: bad --margin / CHECK_BENCH_MARGIN: {e}", file=sys.stderr)
+        return 2
+    path = argv[0] if argv else "BENCH_hotpath.json"
     try:
         with open(path, encoding="utf-8") as f:
             bench = json.load(f)
@@ -53,19 +88,20 @@ def main() -> int:
         failures.append(f"missing scenario keys: {', '.join(missing)}")
     for key, ns in bench.items():
         if not isinstance(ns, (int, float)) or ns <= 0:
-            failures.append(f"scenario {key!r}: non-positive ns/step {ns!r}")
+            failures.append(f"scenario {key!r}: non-positive value {ns!r}")
 
     if not missing:
         fused, sparse = bench[FUSED], bench[SPARSE]
-        if fused >= sparse:
+        if fused >= sparse * (1.0 + margin):
             failures.append(
-                f"fused kernel must beat the sparse pipeline at n=4096: "
-                f"{FUSED} = {fused:.1f} ns/step >= {SPARSE} = {sparse:.1f} ns/step"
+                f"fused kernel must beat the sparse pipeline at n=4096 "
+                f"(margin {margin:.1%}): {FUSED} = {fused:.1f} ns/step >= "
+                f"{SPARSE} = {sparse:.1f} ns/step * {1.0 + margin:.3f}"
             )
         else:
             print(
                 f"check_bench: fused n=4096 {fused:.1f} ns/step vs sparse "
-                f"{sparse:.1f} ns/step ({sparse / fused:.2f}x)"
+                f"{sparse:.1f} ns/step ({sparse / fused:.2f}x, margin {margin:.1%})"
             )
 
     if failures:
