@@ -7,14 +7,18 @@
 //! arrival scenario against the standing scheduler's bounded queue and
 //! shared KV budget (ISSUE 6), the spill-tier churn scenario where an
 //! over-subscribed resident tier demotes/promotes KV through the
-//! modeled host DRAM (ISSUE 8), plus the micro-costs (bf16 dot, softmax
-//! engine) that dominate it.
+//! modeled host DRAM (ISSUE 8), the chaos-restart scenario that prices
+//! serving straight through periodic worker crashes — supervised
+//! respawn, lost-session re-opens, spill-tier recovery (ISSUE 9) —
+//! plus the micro-costs (bf16 dot, softmax engine) that dominate it.
 
 use std::time::{Duration, Instant};
 
 use camformer::accuracy::functional::{self, AttnConfig};
 use camformer::arch::softmax::SoftmaxEngine;
-use camformer::coordinator::backend::{AttendItem, AttentionBackend, FunctionalBackend};
+use camformer::coordinator::backend::{
+    AttendItem, AttentionBackend, ChaosBackend, Fault, FaultPlan, FunctionalBackend,
+};
 use camformer::coordinator::batcher::{BatchPolicy, PlanMode};
 use camformer::coordinator::kv_store::KvStore;
 use camformer::coordinator::server::{CamformerServer, ReclaimPolicy, Request, ServerConfig};
@@ -767,6 +771,125 @@ fn main() {
         hotpath_json.push(("spill_churn_demotions".to_string(), last.0 as f64));
         hotpath_json.push(("spill_churn_promotions".to_string(), last.1 as f64));
         hotpath_json.push(("spill_churn_dram_bytes".to_string(), last.2 as f64));
+    }
+
+    // macro: chaos restart (ISSUE 9) — the spill-churn population served
+    // through a ChaosBackend that crashes the worker on the 16th dispatch
+    // of every incarnation. Each crash exercises the whole recovery path:
+    // the supervisor respawns the backend onto the same queue, in-flight
+    // tickets resolve WorkerGone, resident sessions come back SessionLost
+    // (the bench re-opens them, as a client would), and DRAM-spilled
+    // sessions recover byte-identically from the shard directory's pool.
+    // ns/op prices serving THROUGH the crash/restart cycles, and the
+    // restart/lost/recovered counters are emitted so tools/check_bench.py
+    // can watch the recovery path stay live across PRs.
+    {
+        let sessions = 8usize;
+        let prefill_rows = 16usize;
+        let rounds = 8usize;
+        let capacity = 32usize;
+        // the resident tier holds half the population, so every crash
+        // loses ~4 resident sessions while ~4 spilled ones survive
+        let budget = 4 * prefill_rows;
+        let mut bc = Bencher::coarse();
+        let mut best_ns = f64::INFINITY;
+        let mut last = (0u64, 0u64, 0u64);
+        bc.bench("chaos_restart_8sess_crash_every_16", || {
+            let server = CamformerServer::start(
+                ServerConfig {
+                    kv_capacity: capacity,
+                    max_sessions: sessions,
+                    reclaim: ReclaimPolicy::LruSpillToDram { min_idle: Duration::ZERO },
+                    batch: BatchPolicy::bounds(16, Duration::from_micros(200)),
+                    worker_kv_budget: budget,
+                    ..Default::default()
+                },
+                |_| {
+                    ChaosBackend::new(
+                        FunctionalBackend::new(capacity, 64),
+                        FaultPlan::at(vec![(16, Fault::Crash)]),
+                    )
+                },
+            );
+            let mut rng2 = Rng::new(17);
+            let kv: Vec<(Vec<f32>, Vec<f32>)> = (0..sessions)
+                .map(|_| {
+                    (rng2.normal_vec(prefill_rows * 64), rng2.normal_vec(prefill_rows * 64))
+                })
+                .collect();
+            let mut id = 0u64;
+            for (sid, (keys, values)) in kv.iter().enumerate() {
+                let t = server
+                    .submit_ticket(Request::Prefill {
+                        id: 100_000 + sid as u64,
+                        session: sid as u64,
+                        head: 0,
+                        keys: keys.clone(),
+                        values: values.clone(),
+                    })
+                    .unwrap();
+                assert!(t.wait().is_ok(), "chaos prefill refused");
+            }
+            let t0 = Instant::now();
+            let mut served = 0u64;
+            for _round in 0..rounds {
+                for sid in 0..sessions as u64 {
+                    // serve one attend, riding out crashes: a SessionLost
+                    // session is re-opened (the client-side recovery the
+                    // error contract prescribes), WorkerGone / injected
+                    // faults simply retry against the respawned worker
+                    loop {
+                        let q = rng2.normal_vec(64);
+                        let t = server
+                            .submit_ticket(Request::Attend { id, session: sid, head: 0, query: q })
+                            .unwrap();
+                        id += 1;
+                        let r = t.wait();
+                        match &r.result {
+                            Ok(out) => {
+                                assert_eq!(
+                                    out.seq_len, prefill_rows,
+                                    "recovery must restore every row"
+                                );
+                                served += 1;
+                                break;
+                            }
+                            Err(ServeError::SessionLost { .. }) => {
+                                let (keys, values) = &kv[sid as usize];
+                                let p = server
+                                    .submit_ticket(Request::Prefill {
+                                        id: 200_000 + id,
+                                        session: sid,
+                                        head: 0,
+                                        keys: keys.clone(),
+                                        values: values.clone(),
+                                    })
+                                    .unwrap();
+                                assert!(p.wait().is_ok(), "chaos re-open refused");
+                            }
+                            Err(ServeError::WorkerGone { .. } | ServeError::Backend(_)) => {}
+                            Err(e) => panic!("chaos attend failed terminally: {e}"),
+                        }
+                    }
+                }
+            }
+            best_ns = best_ns.min(t0.elapsed().as_nanos() as f64 / served as f64);
+            let (m, w) = server.shutdown();
+            assert!(m.worker_restarts > 0, "the crash plan must force at least one restart");
+            assert!(m.sessions_lost > 0, "a crash must lose its resident sessions");
+            assert!(m.sessions_recovered > 0, "spilled sessions must survive the crash");
+            last = (m.worker_restarts, m.sessions_lost, m.sessions_recovered);
+            (served, w)
+        });
+        println!(
+            "      chaos_restart: restarts={} lost={} recovered={} \
+             (8 sessions, crash every 16th dispatch, spill tier live)",
+            last.0, last.1, last.2
+        );
+        hotpath_json.push(("chaos_restart_8sess_crash_every_16".to_string(), best_ns));
+        hotpath_json.push(("chaos_restart_worker_restarts".to_string(), last.0 as f64));
+        hotpath_json.push(("chaos_restart_sessions_lost".to_string(), last.1 as f64));
+        hotpath_json.push(("chaos_restart_sessions_recovered".to_string(), last.2 as f64));
     }
 
     // machine-readable perf trajectory (scenario -> ns/step), tracked

@@ -9,7 +9,12 @@
 //! sessions instead of failing, and a budget epilogue squeezes several
 //! sessions into a shared per-worker KV row pool
 //! (`ServerConfig::worker_kv_budget`) to show the standing scheduler's
-//! pool admission reclaiming idle rows the same way.
+//! pool admission reclaiming idle rows the same way. A chaos epilogue
+//! crashes a worker mid-serving through a `ChaosBackend` fault plan and
+//! shows the supervised recovery contract end to end: the in-flight
+//! ticket resolves typed, the respawned worker recovers a DRAM-spilled
+//! session byte-for-byte, and a crash-lost session answers
+//! `SessionLost` until a re-`open` revives it.
 //!
 //! ```bash
 //! cargo run --release --example serve_attention \
@@ -26,7 +31,10 @@ use std::time::Duration;
 
 use anyhow::Result;
 use camformer::accuracy::functional::{self, AttnConfig};
-use camformer::coordinator::backend::{ArchSimBackend, FunctionalBackend, PjrtBackend};
+use camformer::coordinator::backend::{
+    ArchSimBackend, ChaosBackend, Fault, FaultPlan, FunctionalBackend, PjrtBackend,
+};
+use camformer::coordinator::error::ServeError;
 use camformer::coordinator::kv_store::KvStore;
 use camformer::coordinator::server::{CamformerServer, ReclaimPolicy, ServerConfig};
 use camformer::coordinator::{SessionHandle, Ticket};
@@ -211,6 +219,72 @@ fn main() -> Result<()> {
          {} evictions ({})",
         m.kv_rows_hwm,
         m.evictions,
+        m.summary(w)
+    );
+
+    // chaos epilogue (ISSUE 9): a fault plan crashes the worker on its
+    // 2nd dispatch. Four 16-row sessions over a 32-row budget leave two
+    // resident and two spilled to DRAM when the crash lands, so one run
+    // shows the whole recovery contract: the in-flight ticket resolves
+    // typed instead of hanging, the supervisor respawns the worker, a
+    // spilled session promotes back with every row intact, the lost
+    // resident answers `SessionLost` until re-opened
+    let chaos_cfg = ServerConfig {
+        kv_capacity: 64,
+        max_sessions: 4,
+        worker_kv_budget: 32,
+        reclaim: ReclaimPolicy::LruSpillToDram { min_idle: Duration::ZERO },
+        ..Default::default()
+    };
+    let chaos = CamformerServer::start(chaos_cfg, |_| {
+        ChaosBackend::new(
+            FunctionalBackend::new(64, d),
+            FaultPlan::at(vec![(2, Fault::Crash)]),
+        )
+    });
+    let mut chaos_handles: Vec<SessionHandle<'_>> = Vec::new();
+    for sid in 0..4u64 {
+        chaos_handles.push(chaos.open(sid, rng.normal_vec(16 * d), rng.normal_vec(16 * d))?);
+    }
+    // sessions 0 and 1 were demoted by the over-budget opens; 2 and 3 are
+    // resident. Waiting each attend before the next keeps one dispatch
+    // per request, so the crash lands exactly on session 2's attend.
+    let r = chaos_handles[3].attend(rng.normal_vec(d))?.wait();
+    anyhow::ensure!(r.is_ok(), "pre-crash attend failed: {:?}", r.result);
+    let r = chaos_handles[2].attend(rng.normal_vec(d))?.wait();
+    anyhow::ensure!(
+        matches!(
+            r.result,
+            Err(ServeError::WorkerGone { .. }) | Err(ServeError::SessionLost { .. })
+        ),
+        "the crashed dispatch must resolve typed, got {:?}",
+        r.result
+    );
+    // the respawned worker promotes the spilled session out of the shard
+    // directory's DRAM pool — the crash never touched those bytes
+    let r = chaos_handles[0].attend(rng.normal_vec(d))?.wait();
+    anyhow::ensure!(r.is_ok(), "post-crash recovery attend failed: {:?}", r.result);
+    anyhow::ensure!(r.seq_len() == 16, "recovered session lost rows: {}", r.seq_len());
+    // the crash-lost resident stays typed until a re-open revives it
+    let r = chaos_handles[2].attend(rng.normal_vec(d))?.wait();
+    anyhow::ensure!(
+        matches!(r.result, Err(ServeError::SessionLost { session: 2 })),
+        "a lost session must answer SessionLost, got {:?}",
+        r.result
+    );
+    let reopened = chaos.open(2, rng.normal_vec(16 * d), rng.normal_vec(16 * d))?;
+    drop(reopened);
+    drop(chaos_handles);
+    let (m, w) = chaos.shutdown();
+    anyhow::ensure!(m.worker_restarts >= 1, "the crash must have forced a restart");
+    anyhow::ensure!(m.sessions_lost >= 1, "the crash must have lost its residents");
+    anyhow::ensure!(m.sessions_recovered >= 1, "a spilled session must have recovered");
+    println!(
+        "chaos: injected worker crash -> {} restart(s), {} session(s) lost typed, \
+         {} recovered from the spill tier ({})",
+        m.worker_restarts,
+        m.sessions_lost,
+        m.sessions_recovered,
         m.summary(w)
     );
 

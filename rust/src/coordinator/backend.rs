@@ -24,10 +24,14 @@
 
 use anyhow::Result;
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
 
 use crate::accuracy::functional::{self, AttnConfig, PackedKeysView};
 use crate::arch::{config::ArchConfig, pipeline};
 use crate::runtime::executable::Engine;
+use crate::util::rng::Rng;
 
 /// One query of a (possibly cross-session) batched dispatch, bound to the
 /// padded K/V execution view of the session it attends over. The borrows
@@ -483,6 +487,189 @@ impl AttentionBackend for PjrtBackend {
 // owns it (the coordinator moves each backend into exactly one thread).
 unsafe impl Send for PjrtBackend {}
 
+/// One injected fault of a [`FaultPlan`] (ISSUE 9). Each kind exercises a
+/// different containment layer of the coordinator:
+///
+/// * `Error` — `attend_batch` returns `Err`: the dispatch rolls its
+///   speculative appends back and every planned ticket resolves
+///   [`ServeError::Backend`](super::ServeError::Backend);
+/// * `Panic` — `attend_batch` panics with an ordinary payload: dispatch
+///   containment (`catch_unwind`) absorbs it, rolls back, answers typed,
+///   and the worker keeps serving;
+/// * `Crash` — `attend_batch` panics with a [`WorkerAbort`] payload:
+///   containment deliberately re-raises it, killing the worker
+///   incarnation and exercising supervised restart + spill-tier session
+///   recovery;
+/// * `Stall` — `attend_batch` sleeps, then serves normally: exercises
+///   queue backpressure and deadline paths without corrupting state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fault {
+    Error,
+    Panic,
+    Crash,
+    Stall(Duration),
+}
+
+/// Panic payload that dispatch containment must NOT absorb: the worker's
+/// `catch_unwind` re-raises it so the whole incarnation dies and the
+/// supervisor takes over. [`ChaosBackend`] throws it for
+/// [`Fault::Crash`]; anything else (tests, a wedged backend) can throw it
+/// too to force a deterministic worker death.
+#[derive(Debug)]
+pub struct WorkerAbort(pub String);
+
+/// A deterministic schedule of [`Fault`]s keyed by dispatch ordinal:
+/// fault `(n, f)` fires on the n-th `attend_batch` call (1-based) of a
+/// backend incarnation. The ordinal counter lives in the [`ChaosBackend`]
+/// instance, so a respawned worker's fresh backend replays the plan from
+/// the start — which is what makes crash loops terminate: each crash
+/// consumes at least the envelope that triggered it.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    faults: Vec<(u64, Fault)>,
+}
+
+impl FaultPlan {
+    /// The empty plan: [`ChaosBackend`] becomes a transparent wrapper.
+    pub fn none() -> Self {
+        FaultPlan::default()
+    }
+
+    /// Fixed schedule: `(dispatch_ordinal, fault)` pairs, 1-based.
+    pub fn at(faults: Vec<(u64, Fault)>) -> Self {
+        FaultPlan { faults }
+    }
+
+    /// Seeded random plan over dispatches `1..=horizon`: each ordinal
+    /// carries a fault with probability `density`. Same seed, same plan —
+    /// the chaos fuzz family derives its plans from the case number.
+    pub fn random(seed: u64, horizon: u64, density: f64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut faults = Vec::new();
+        for n in 1..=horizon {
+            if rng.uniform() < density {
+                let fault = match rng.index(4) {
+                    0 => Fault::Error,
+                    1 => Fault::Panic,
+                    2 => Fault::Crash,
+                    _ => Fault::Stall(Duration::from_millis(1 + rng.index(4) as u64)),
+                };
+                faults.push((n, fault));
+            }
+        }
+        FaultPlan { faults }
+    }
+
+    /// The fault scheduled for `dispatch` (1-based ordinal), if any.
+    pub fn lookup(&self, dispatch: u64) -> Option<&Fault> {
+        self.faults.iter().find(|(n, _)| *n == dispatch).map(|(_, f)| f)
+    }
+
+    /// Number of scheduled faults.
+    pub fn len(&self) -> usize {
+        self.faults.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+}
+
+/// What a [`ChaosBackend`] actually injected, shared across worker
+/// incarnations via `Arc` so the fuzz harness can reconcile server
+/// metrics against ground truth: `backend_faults == errors`,
+/// `worker_panics == panics + crashes`, `worker_restarts == crashes`.
+#[derive(Debug, Default)]
+pub struct ChaosStats {
+    pub errors: AtomicU64,
+    pub panics: AtomicU64,
+    pub crashes: AtomicU64,
+    pub stalls: AtomicU64,
+}
+
+/// Fault-injecting wrapper over any [`AttentionBackend`] (ISSUE 9): runs
+/// the inner backend unchanged except on dispatch ordinals where its
+/// [`FaultPlan`] schedules a [`Fault`]. Only `attend_batch` counts as a
+/// dispatch — the serving layer's dispatch path is the batched entry
+/// point; single `attend` calls forward untouched.
+pub struct ChaosBackend<B> {
+    inner: B,
+    plan: FaultPlan,
+    stats: Arc<ChaosStats>,
+    dispatches: u64,
+}
+
+impl<B: AttentionBackend> ChaosBackend<B> {
+    pub fn new(inner: B, plan: FaultPlan) -> Self {
+        Self::with_stats(inner, plan, Arc::new(ChaosStats::default()))
+    }
+
+    /// Share an injection ledger across instances — respawned workers get
+    /// fresh backends, but the ground truth must accumulate across
+    /// incarnations for the fuzz harness to reconcile against.
+    pub fn with_stats(inner: B, plan: FaultPlan, stats: Arc<ChaosStats>) -> Self {
+        ChaosBackend { inner, plan, stats, dispatches: 0 }
+    }
+
+    /// The shared injection ledger.
+    pub fn stats(&self) -> Arc<ChaosStats> {
+        self.stats.clone()
+    }
+}
+
+impl<B: AttentionBackend> AttentionBackend for ChaosBackend<B> {
+    fn attend(&mut self, q: &[f32], k: &[f32], v: &[f32]) -> Result<Vec<f32>> {
+        self.inner.attend(q, k, v)
+    }
+
+    fn attend_batch(&mut self, items: &[AttendItem<'_>]) -> Result<Vec<Vec<f32>>> {
+        self.dispatches += 1;
+        let n = self.dispatches;
+        match self.plan.lookup(n) {
+            Some(Fault::Error) => {
+                self.stats.errors.fetch_add(1, Ordering::Relaxed);
+                return Err(anyhow::anyhow!("chaos: injected backend fault at dispatch {n}"));
+            }
+            Some(Fault::Panic) => {
+                self.stats.panics.fetch_add(1, Ordering::Relaxed);
+                panic!("chaos: injected dispatch panic at dispatch {n}");
+            }
+            Some(Fault::Crash) => {
+                self.stats.crashes.fetch_add(1, Ordering::Relaxed);
+                std::panic::panic_any(WorkerAbort(format!(
+                    "chaos: injected worker crash at dispatch {n}"
+                )));
+            }
+            Some(Fault::Stall(d)) => {
+                self.stats.stalls.fetch_add(1, Ordering::Relaxed);
+                std::thread::sleep(*d);
+            }
+            None => {}
+        }
+        self.inner.attend_batch(items)
+    }
+
+    fn supports_prefix_views(&self) -> bool {
+        self.inner.supports_prefix_views()
+    }
+
+    fn required_rows(&self, rows: usize, quantum: usize) -> usize {
+        self.inner.required_rows(rows, quantum)
+    }
+
+    fn on_kv_update(&mut self) {
+        self.inner.on_kv_update();
+    }
+
+    fn work_stats(&self) -> Option<WorkStats> {
+        self.inner.work_stats()
+    }
+
+    fn name(&self) -> &'static str {
+        "chaos"
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -727,5 +914,95 @@ mod tests {
         assert_eq!(f.required_rows(16, 16), 16);
         assert_eq!(f.required_rows(17, 16), 32);
         assert_eq!(f.required_rows(1024, 16), 1024);
+    }
+
+    #[test]
+    fn chaos_with_empty_plan_is_transparent() {
+        let mut rng = Rng::new(118);
+        let k = rng.normal_vec(64 * 64);
+        let v = rng.normal_vec(64 * 64);
+        let q = rng.normal_vec(64);
+        let items =
+            [AttendItem { query: &q, keys: &k, values: &v, prefix_rows: 64, packed: None }];
+        let mut chaos = ChaosBackend::new(FunctionalBackend::new(64, 64), FaultPlan::none());
+        let mut plain = FunctionalBackend::new(64, 64);
+        assert!(chaos.supports_prefix_views(), "chaos must forward capability queries");
+        assert_eq!(chaos.required_rows(17, 16), 32);
+        assert_eq!(chaos.name(), "chaos");
+        assert_eq!(chaos.attend_batch(&items).unwrap(), plain.attend_batch(&items).unwrap());
+        assert_eq!(chaos.attend(&q, &k, &v).unwrap(), plain.attend(&q, &k, &v).unwrap());
+        assert_eq!(chaos.work_stats(), plain.work_stats());
+        let stats = chaos.stats();
+        assert_eq!(stats.errors.load(Ordering::Relaxed), 0);
+        assert_eq!(stats.panics.load(Ordering::Relaxed), 0);
+        assert_eq!(stats.crashes.load(Ordering::Relaxed), 0);
+        assert_eq!(stats.stalls.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn chaos_fires_on_the_scheduled_dispatch_only() {
+        let mut rng = Rng::new(119);
+        let k = rng.normal_vec(32 * 64);
+        let v = rng.normal_vec(32 * 64);
+        let q = rng.normal_vec(64);
+        let items =
+            [AttendItem { query: &q, keys: &k, values: &v, prefix_rows: 32, packed: None }];
+        let mut chaos = ChaosBackend::new(
+            FunctionalBackend::new(32, 64),
+            FaultPlan::at(vec![
+                (2, Fault::Error),
+                (3, Fault::Stall(Duration::from_millis(1))),
+            ]),
+        );
+        assert!(chaos.attend_batch(&items).is_ok(), "dispatch 1 is clean");
+        let err = chaos.attend_batch(&items).unwrap_err();
+        assert!(err.to_string().contains("dispatch 2"), "{err}");
+        assert!(chaos.attend_batch(&items).is_ok(), "a stall still serves");
+        assert!(chaos.attend_batch(&items).is_ok(), "past the plan horizon");
+        let stats = chaos.stats();
+        assert_eq!(stats.errors.load(Ordering::Relaxed), 1);
+        assert_eq!(stats.stalls.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn chaos_panic_and_crash_payloads_are_distinguishable() {
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+        let mut rng = Rng::new(120);
+        let k = rng.normal_vec(32 * 64);
+        let v = rng.normal_vec(32 * 64);
+        let q = rng.normal_vec(64);
+        let items =
+            [AttendItem { query: &q, keys: &k, values: &v, prefix_rows: 32, packed: None }];
+        let stats = Arc::new(ChaosStats::default());
+        let mut chaos = ChaosBackend::with_stats(
+            FunctionalBackend::new(32, 64),
+            FaultPlan::at(vec![(1, Fault::Panic), (2, Fault::Crash)]),
+            stats.clone(),
+        );
+        // an ordinary panic payload: containment should absorb it
+        let p = catch_unwind(AssertUnwindSafe(|| chaos.attend_batch(&items))).unwrap_err();
+        assert!(p.downcast_ref::<WorkerAbort>().is_none());
+        assert!(p.downcast_ref::<String>().is_some_and(|s| s.contains("dispatch 1")));
+        // a WorkerAbort payload: containment must re-raise it
+        let c = catch_unwind(AssertUnwindSafe(|| chaos.attend_batch(&items))).unwrap_err();
+        let abort = c.downcast_ref::<WorkerAbort>().expect("crash carries WorkerAbort");
+        assert!(abort.0.contains("dispatch 2"), "{}", abort.0);
+        assert_eq!(stats.panics.load(Ordering::Relaxed), 1);
+        assert_eq!(stats.crashes.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn random_fault_plans_are_seed_deterministic() {
+        let a = FaultPlan::random(42, 64, 0.25);
+        let b = FaultPlan::random(42, 64, 0.25);
+        assert_eq!(a.len(), b.len());
+        for n in 1..=64 {
+            assert_eq!(a.lookup(n), b.lookup(n), "dispatch {n}");
+        }
+        assert!(!a.is_empty(), "density 0.25 over 64 dispatches should schedule something");
+        assert!(FaultPlan::random(42, 64, 0.0).is_empty());
+        // a different seed must (overwhelmingly likely) differ somewhere
+        let c = FaultPlan::random(43, 64, 0.25);
+        assert!((1..=64).any(|n| a.lookup(n) != c.lookup(n)));
     }
 }

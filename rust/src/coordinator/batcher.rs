@@ -242,6 +242,29 @@ impl WorkQueue {
             Err(RecvTimeoutError::Disconnected) => ArrivalWait::Disconnected,
         }
     }
+
+    /// Remove every queued envelope matching `pred`, preserving FIFO
+    /// order among both the drained and the kept. The supervisor uses
+    /// this after a worker crash (ISSUE 9) to answer the dead
+    /// incarnation's doomed envelopes with typed errors while leaving
+    /// everything still serviceable — spilled sessions, fresh prefills —
+    /// queued for the respawned incarnation.
+    pub fn drain_matching<F>(&mut self, mut pred: F) -> Vec<Envelope>
+    where
+        F: FnMut(&Envelope) -> bool,
+    {
+        let mut drained = Vec::new();
+        let mut kept = VecDeque::with_capacity(self.queue.len());
+        for env in self.queue.drain(..) {
+            if pred(&env) {
+                drained.push(env);
+            } else {
+                kept.push_back(env);
+            }
+        }
+        self.queue = kept;
+        drained
+    }
 }
 
 /// An in-flight dispatch plan the scheduler extends incrementally.
@@ -487,6 +510,27 @@ mod tests {
         h.join().unwrap();
         q.pop();
         assert!(!q.wait_nonempty(&rx), "closed + drained means shutdown");
+    }
+
+    #[test]
+    fn drain_matching_keeps_fifo_order_on_both_sides() {
+        let mut q = WorkQueue::new();
+        let (tx, rx) = mpsc::channel();
+        tx.send(decode(0, 1)).unwrap();
+        tx.send(decode(1, 2)).unwrap();
+        tx.send(prefill(2, 1)).unwrap();
+        tx.send(attend(3, 1)).unwrap();
+        tx.send(close(4, 2)).unwrap();
+        q.drain_ready(&rx);
+        // the supervisor's shape: pull session 1's non-prefill envelopes
+        let drained = q.drain_matching(|env| {
+            env.req.session() == 1 && !matches!(env.req, Request::Prefill { .. })
+        });
+        let drained_ids: Vec<u64> = drained.iter().map(|e| e.req.id()).collect();
+        assert_eq!(drained_ids, vec![0, 3]);
+        let kept_ids: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|e| e.req.id()).collect();
+        assert_eq!(kept_ids, vec![1, 2, 4], "kept envelopes stay in arrival order");
+        assert!(q.drain_matching(|_| true).is_empty(), "drained queue yields nothing");
     }
 
     #[test]

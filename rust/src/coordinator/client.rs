@@ -25,7 +25,7 @@
 //! the worker's queue).
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use super::error::ServeError;
 use super::server::{CamformerServer, Request, Response};
@@ -106,6 +106,16 @@ impl Ticket {
             Err(RecvTimeoutError::Timeout) => Err(self),
             Err(RecvTimeoutError::Disconnected) => Ok(self.worker_gone()),
         }
+    }
+
+    /// Wait until `deadline` — the absolute-time counterpart to
+    /// [`Ticket::wait_timeout`], with the same expiry contract: past the
+    /// deadline the ticket comes back and can be waited again (the
+    /// request stays in flight). The natural shape for "resolve this
+    /// whole batch of tickets within one budget" loops, where a relative
+    /// timeout would compound per ticket.
+    pub fn wait_deadline(self, deadline: Instant) -> Result<Response, Ticket> {
+        self.wait_timeout(deadline.saturating_duration_since(Instant::now()))
     }
 }
 

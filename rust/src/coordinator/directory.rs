@@ -57,8 +57,20 @@
 //! to the per-worker LRU it replaces. Victim selection breaks
 //! (impossible) ties by session id, and the modeled DRAM timeline is a
 //! deterministic function of the demote/promote sequence.
+//!
+//! # Crash durability (ISSUE 9)
+//!
+//! The spill pool lives in the directory — *outside* every worker
+//! thread — so a worker crash cannot take parked copies with it. When a
+//! head's incarnation dies, the supervisor calls
+//! [`ShardDirectory::fail_head`]: sessions resident on the dead head are
+//! lost shard-wide (their copies on surviving heads are sentenced
+//! `PendingLost`, answered [`ServeError::SessionLost`](super::ServeError::SessionLost)),
+//! but sessions *spilled* on the dead head survive verbatim and promote
+//! byte-identically onto the respawned incarnation — each such
+//! promotion counts once in `Metrics::sessions_recovered`.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::Mutex;
 
 use super::kv_store::{KvStore, SpilledKv};
@@ -88,6 +100,12 @@ enum HeadState {
     PendingDrop,
     /// Parked in the spill pool, promotable on the session's next request.
     Spilled,
+    /// Sentenced by a worker crash on a *sibling* head
+    /// ([`ShardDirectory::fail_head`]): this head's copy is stale — the
+    /// session lost a head's KV and cannot be served consistently — so
+    /// the worker releases it and tombstones the id for `SessionLost`
+    /// answers at its next reconcile.
+    PendingLost,
 }
 
 /// One session's shard-wide directory entry.
@@ -109,6 +127,9 @@ pub enum PendingAction {
     Demote,
     /// Release the local copy and tombstone the id (`Evicted` answers).
     Drop,
+    /// Release the local copy and tombstone the id for `SessionLost`
+    /// answers — a sibling head's crash took part of the session's KV.
+    Lost,
 }
 
 /// Outcome of a shard-wide victim selection.
@@ -149,6 +170,11 @@ struct DirInner {
     demotions: u64,
     promotions: u64,
     promotion_ns: Vec<f64>,
+    /// Spilled copies whose owning head crashed while they were parked
+    /// ([`ShardDirectory::fail_head`]): promoting one onto the respawned
+    /// incarnation is a crash *recovery*, counted in `recoveries`.
+    crash_survivors: HashSet<(SessionId, usize)>,
+    recoveries: u64,
 }
 
 /// One per shard, shared by its head workers (`Arc`). All state sits
@@ -176,6 +202,8 @@ impl ShardDirectory {
                 demotions: 0,
                 promotions: 0,
                 promotion_ns: Vec::new(),
+                crash_survivors: HashSet::new(),
+                recoveries: 0,
             }),
         }
     }
@@ -203,6 +231,7 @@ impl ShardDirectory {
         inner.clock += 1;
         let clock = inner.clock;
         inner.pool.remove(&(session, head));
+        inner.crash_survivors.remove(&(session, head));
         let heads = self.heads;
         let entry = inner.entries.entry(session).or_insert_with(|| DirEntry {
             touch: clock,
@@ -241,7 +270,7 @@ impl ShardDirectory {
                 Some(e)
                     if matches!(
                         e.heads[head],
-                        HeadState::PendingDemote | HeadState::PendingDrop
+                        HeadState::PendingDemote | HeadState::PendingDrop | HeadState::PendingLost
                     ) =>
                 {
                     pending_elsewhere = true;
@@ -278,6 +307,7 @@ impl ShardDirectory {
         }
         for h in drop_spilled {
             inner.pool.remove(&(sid, h));
+            inner.crash_survivors.remove(&(sid, h));
         }
         if !drop {
             inner.demotions += 1;
@@ -296,6 +326,7 @@ impl ShardDirectory {
             .filter_map(|(&sid, e)| match e.heads[head] {
                 HeadState::PendingDemote => Some((sid, PendingAction::Demote)),
                 HeadState::PendingDrop => Some((sid, PendingAction::Drop)),
+                HeadState::PendingLost => Some((sid, PendingAction::Lost)),
                 _ => None,
             })
             .collect();
@@ -325,6 +356,65 @@ impl ShardDirectory {
             entry.heads[head] = HeadState::Spilled;
         }
         inner.pool.insert((session, head), SpilledSlot { kv, addr });
+    }
+
+    /// A worker crash took `head`'s whole session table (ISSUE 9). Called
+    /// by the supervisor before respawning the incarnation; returns the
+    /// sessions *lost* with it, sorted, so the caller can tombstone them
+    /// and answer their queued work `SessionLost`.
+    ///
+    /// Per session, atomically under the lock:
+    ///
+    /// * a copy the dead head held in its table (`Resident`, or sentenced
+    ///   `PendingDemote`/`PendingDrop`/`PendingLost` but not yet applied)
+    ///   died with the thread → the head goes `Absent`, the generation is
+    ///   bumped, and the session is **lost shard-wide**: surviving heads'
+    ///   resident copies become `PendingLost` (released lazily, like any
+    ///   shard decision) and their parked copies are discarded — a
+    ///   session missing one head's KV cannot be served consistently;
+    /// * a copy the dead head had **spilled** lives in this directory,
+    ///   not the thread → it survives verbatim, is remembered as a crash
+    ///   survivor, and its next promotion counts as a recovery.
+    pub fn fail_head(&self, head: usize) -> Vec<SessionId> {
+        assert!(head < self.heads);
+        let inner = &mut *self.inner.lock().unwrap();
+        let mut lost: Vec<SessionId> = Vec::new();
+        let mut orphaned: Vec<(SessionId, usize)> = Vec::new();
+        for (&sid, entry) in inner.entries.iter_mut() {
+            match entry.heads[head] {
+                HeadState::Resident
+                | HeadState::PendingDemote
+                | HeadState::PendingDrop
+                | HeadState::PendingLost => {
+                    entry.heads[head] = HeadState::Absent;
+                    entry.generation += 1;
+                    lost.push(sid);
+                    for (h, state) in entry.heads.iter_mut().enumerate() {
+                        match *state {
+                            HeadState::Resident
+                            | HeadState::PendingDemote
+                            | HeadState::PendingDrop => *state = HeadState::PendingLost,
+                            HeadState::Spilled => {
+                                *state = HeadState::Absent;
+                                orphaned.push((sid, h));
+                            }
+                            _ => {}
+                        }
+                    }
+                }
+                HeadState::Spilled => {
+                    inner.crash_survivors.insert((sid, head));
+                }
+                HeadState::Absent => {}
+            }
+        }
+        for key in orphaned {
+            inner.pool.remove(&key);
+            inner.crash_survivors.remove(&key);
+        }
+        inner.entries.retain(|_, e| e.heads.iter().any(|&h| h != HeadState::Absent));
+        lost.sort_unstable();
+        lost
     }
 
     /// Record that `head` dropped its local copy (a `PendingDrop`
@@ -378,6 +468,11 @@ impl ShardDirectory {
         let latency_ns = now - start;
         inner.promotions += 1;
         inner.promotion_ns.push(latency_ns);
+        if inner.crash_survivors.remove(&(session, head)) {
+            // the owning head crashed while this copy was parked: landing
+            // it on the respawned incarnation is a crash recovery
+            inner.recoveries += 1;
+        }
         inner.clock += 1;
         let clock = inner.clock;
         let generation = match inner.entries.get_mut(&session) {
@@ -399,6 +494,7 @@ impl ShardDirectory {
     pub fn close_spilled(&self, session: SessionId, head: usize) -> Option<usize> {
         let len = {
             let mut inner = self.inner.lock().unwrap();
+            inner.crash_survivors.remove(&(session, head));
             inner.pool.remove(&(session, head)).map(|s| s.kv.len())?
         };
         self.note_gone(session, head);
@@ -422,6 +518,7 @@ impl ShardDirectory {
         m.dram_bytes_written += inner.channel.bytes_written;
         m.dram_bytes_read += inner.channel.bytes_read;
         m.dram_energy_j += inner.channel.energy_j();
+        m.sessions_recovered += inner.recoveries;
         for &ns in &inner.promotion_ns {
             m.note_promotion_latency_ns(ns);
         }
@@ -523,6 +620,76 @@ mod tests {
         assert!(dir.knows(5), "head 1 still holds a copy");
         dir.note_gone(5, 1);
         assert!(!dir.knows(5));
+    }
+
+    #[test]
+    fn fail_head_loses_resident_sessions_shard_wide() {
+        let dir = ShardDirectory::new(2);
+        dir.admit(1, 0);
+        dir.admit(1, 1);
+        dir.admit(2, 1); // not on the dead head: untouched
+        assert_eq!(dir.fail_head(0), vec![1]);
+        // the surviving head owes a lazy release + SessionLost tombstone
+        assert_eq!(dir.pending_for(1), vec![(1, PendingAction::Lost)]);
+        // and must reconcile before any fresh victim selection sees it
+        assert_eq!(dir.evict_shard_wide(1, &[1, 2], false), Reclaimed::PendingElsewhere);
+        // session 2 never touched head 0, so it is not lost
+        dir.note_gone(1, 1);
+        assert!(!dir.knows(1));
+        assert!(dir.knows(2));
+    }
+
+    #[test]
+    fn fail_head_keeps_spilled_copies_and_counts_their_promotion_as_recovery() {
+        let dir = ShardDirectory::new(1);
+        dir.admit(3, 0);
+        assert_eq!(dir.evict_shard_wide(0, &[3], false), Reclaimed::Victim(3));
+        dir.park(3, 0, spilled(5));
+        // the parked copy lives in the directory, not the dead thread
+        assert_eq!(dir.fail_head(0), Vec::<SessionId>::new());
+        assert!(dir.is_spilled(3, 0), "spilled copies survive the crash");
+        let (kv, _, _) = dir.promote(3, 0).expect("promotable onto the respawn");
+        assert_eq!(kv.len(), 5, "recovered byte-for-byte from the pool");
+        let mut m = Metrics::new();
+        dir.fold_metrics(&mut m);
+        assert_eq!(m.sessions_recovered, 1);
+        // promoting it again (impossible) or promoting after a clean
+        // demote/promote cycle must not inflate the recovery count
+        assert!(dir.promote(3, 0).is_none());
+    }
+
+    #[test]
+    fn fail_head_discards_a_lost_sessions_parked_sibling_copies() {
+        let dir = ShardDirectory::new(2);
+        dir.admit(4, 0);
+        dir.admit(4, 1);
+        // head 1's copy gets demoted; head 0 stays resident
+        assert_eq!(dir.evict_shard_wide(1, &[4], false), Reclaimed::Victim(4));
+        dir.park(4, 1, spilled(2));
+        dir.pending_for(0).iter().for_each(|&(sid, _)| dir.park(sid, 0, spilled(2)));
+        // un-spill head 0 so the session is resident there again
+        let _ = dir.promote(4, 0).expect("head 0 promotes");
+        // now: head 0 resident, head 1 spilled. Head 0 crashes: the
+        // session is lost, so head 1's parked copy is stale — discarded
+        assert_eq!(dir.fail_head(0), vec![4]);
+        assert!(!dir.is_spilled(4, 1), "orphaned parked copy discarded");
+        assert!(!dir.knows(4), "no head holds or owes anything");
+        let mut m = Metrics::new();
+        dir.fold_metrics(&mut m);
+        assert_eq!(m.sessions_recovered, 0, "discards are not recoveries");
+    }
+
+    #[test]
+    fn clean_promotions_are_not_recoveries() {
+        let dir = ShardDirectory::new(1);
+        dir.admit(6, 0);
+        assert_eq!(dir.evict_shard_wide(0, &[6], false), Reclaimed::Victim(6));
+        dir.park(6, 0, spilled(3));
+        let _ = dir.promote(6, 0).expect("clean promote");
+        let mut m = Metrics::new();
+        dir.fold_metrics(&mut m);
+        assert_eq!(m.promotions, 1);
+        assert_eq!(m.sessions_recovered, 0);
     }
 
     #[test]

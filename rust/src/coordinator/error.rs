@@ -29,6 +29,16 @@ pub enum ServeError {
     /// tier and promoted back on its next request, so clients never see
     /// this variant from spill-tier reclaims.
     Evicted { session: SessionId },
+    /// The session's resident KV died with a crashed worker incarnation.
+    /// Unlike [`ServeError::Evicted`] (a deliberate reclaim-policy
+    /// decision) the state is gone because the worker panicked outside a
+    /// containable dispatch and was respawned by the supervisor; unlike
+    /// [`ServeError::WorkerGone`] the head is *serving again* — only the
+    /// sessions whose KV lived on the dead incarnation are lost.
+    /// Retryable by re-`open` (re-prefill), never by bare retry. Sessions
+    /// that were spilled to the DRAM tier at crash time are recovered
+    /// byte-identically and never surface this variant.
+    SessionLost { session: SessionId },
     /// The session's provisioned KV context is exhausted (the paper sizes
     /// the BA-CAM/V arrays to the target maximum context; eviction is the
     /// caller's policy).
@@ -69,8 +79,14 @@ impl ServeError {
     ///   queue drains as the scheduler dispatches, so a backoff-and-retry
     ///   converges regardless of how session slots are reclaimed;
     /// * shape/routing errors (`DimMismatch`, `UnknownHead`) and
-    ///   state-gone errors (`UnknownSession`, `Evicted`, `WorkerGone`)
-    ///   need a different request (or a re-`open`), not a retry.
+    ///   state-gone errors (`UnknownSession`, `Evicted`, `SessionLost`,
+    ///   `WorkerGone`) need a different request (or a re-`open`), not a
+    ///   retry. The three state-gone variants differ in *why* and in what
+    ///   the re-open costs: `Evicted` is a reclaim-policy decision (the
+    ///   server chose to drop the KV), `SessionLost` is a crash (the KV
+    ///   died with a worker incarnation; the respawned worker accepts the
+    ///   re-open immediately), and `WorkerGone` means the worker is still
+    ///   dead (server shut down) so not even a re-open can succeed here.
     pub fn is_retryable(&self, policy: &ReclaimPolicy) -> bool {
         match self {
             ServeError::SessionLimit { .. } | ServeError::CapacityExhausted { .. } => {
@@ -80,6 +96,7 @@ impl ServeError {
             ServeError::UnknownHead { .. }
             | ServeError::UnknownSession { .. }
             | ServeError::Evicted { .. }
+            | ServeError::SessionLost { .. }
             | ServeError::DimMismatch { .. }
             | ServeError::WorkerGone { .. } => false,
         }
@@ -100,6 +117,9 @@ impl fmt::Display for ServeError {
             }
             ServeError::Evicted { session } => {
                 write!(f, "session {session} was evicted to reclaim capacity (re-open to continue)")
+            }
+            ServeError::SessionLost { session } => {
+                write!(f, "session {session} was lost to a worker crash (re-open to continue)")
             }
             ServeError::CapacityExhausted { capacity } => {
                 write!(f, "provisioned KV capacity {capacity} exhausted")
@@ -129,6 +149,7 @@ mod tests {
             (ServeError::UnknownSession { session: 9 }, "session 9"),
             (ServeError::SessionLimit { max_sessions: 4 }, "4-session"),
             (ServeError::Evicted { session: 8 }, "session 8 was evicted"),
+            (ServeError::SessionLost { session: 8 }, "session 8 was lost to a worker crash"),
             (ServeError::CapacityExhausted { capacity: 64 }, "capacity 64"),
             (
                 ServeError::DimMismatch { what: "decode query", got: 3, want: 64 },
@@ -201,6 +222,7 @@ mod tests {
             ServeError::UnknownHead { head: 5, heads: 2 },
             ServeError::UnknownSession { session: 9 },
             ServeError::Evicted { session: 9 },
+            ServeError::SessionLost { session: 9 },
             ServeError::WorkerGone { worker: 0 },
         ] {
             assert!(!e.is_retryable(&deny), "{e}");

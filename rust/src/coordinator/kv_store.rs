@@ -253,6 +253,11 @@ impl KvStore {
 /// later promotion are charged through the `dram::channel` model instead —
 /// but stays addressable by session id so the victim's next request
 /// promotes it back rather than observing `ServeError::Evicted`.
+///
+/// The pool that holds these lives in the shard directory, *outside*
+/// every worker thread — so parked copies survive a worker crash and
+/// promote byte-identically onto the respawned incarnation (ISSUE 9's
+/// crash-durability tier).
 #[derive(Clone, Debug)]
 pub struct SpilledKv {
     store: KvStore,

@@ -66,6 +66,17 @@ pub struct Metrics {
     /// queue shed): a head that may leak its session copy, previously
     /// discarded silently.
     pub close_failures: u64,
+    /// Fault-containment accounting (ISSUE 9): backend dispatches that
+    /// returned an error (rolled back and answered typed), dispatch
+    /// panics caught by containment *plus* incarnation-killing crashes,
+    /// supervised worker restarts, resident sessions lost to a crashed
+    /// incarnation, and sessions recovered byte-identically from the
+    /// DRAM spill pool after a crash.
+    pub backend_faults: u64,
+    pub worker_panics: u64,
+    pub worker_restarts: u64,
+    pub sessions_lost: u64,
+    pub sessions_recovered: u64,
 }
 
 impl Metrics {
@@ -128,6 +139,11 @@ impl Metrics {
         self.dram_energy_j += other.dram_energy_j;
         self.promotion_ns.extend_from_slice(&other.promotion_ns);
         self.close_failures += other.close_failures;
+        self.backend_faults += other.backend_faults;
+        self.worker_panics += other.worker_panics;
+        self.worker_restarts += other.worker_restarts;
+        self.sessions_lost += other.sessions_lost;
+        self.sessions_recovered += other.sessions_recovered;
         // high-water marks are per-worker peaks, not additive flows
         self.queue_depth_max = self.queue_depth_max.max(other.queue_depth_max);
         self.kv_rows_hwm = self.kv_rows_hwm.max(other.kv_rows_hwm);
@@ -197,7 +213,8 @@ impl Metrics {
             "completed={} (prefill={} decode={} attend={} close={}) evictions={} demotions={} \
              promotions={} spilled_rows={} dram_rd={} dram_wr={} promo_p50={:.0}ns batches={} \
              occupancy={:.2}x (max {}) queue_max={} shed={} kv_admitted={} kv_hwm={} errors={} \
-             close_failures={} thruput={:.1}/s mean={:.1}us p50={:.1}us p95={:.1}us p99={:.1}us",
+             close_failures={} faults={} panics={} restarts={} sess_lost={} sess_recovered={} \
+             thruput={:.1}/s mean={:.1}us p50={:.1}us p95={:.1}us p99={:.1}us",
             self.completed,
             self.prefills,
             self.decodes,
@@ -219,6 +236,11 @@ impl Metrics {
             self.kv_rows_hwm,
             self.errors,
             self.close_failures,
+            self.backend_faults,
+            self.worker_panics,
+            self.worker_restarts,
+            self.sessions_lost,
+            self.sessions_recovered,
             self.throughput_per_s(window),
             self.mean_latency_us(),
             self.p50_us(),
@@ -378,6 +400,41 @@ mod tests {
         assert!(s.contains("promotions=3"), "{s}");
         assert!(s.contains("spilled_rows=32"), "{s}");
         assert!(s.contains("close_failures=2"), "{s}");
+    }
+
+    #[test]
+    fn merge_sums_fault_containment_counters() {
+        let mut a = Metrics::new();
+        a.backend_faults = 2;
+        a.worker_panics = 1;
+        let mut b = Metrics::new();
+        b.backend_faults = 3;
+        b.worker_panics = 2;
+        b.worker_restarts = 2;
+        b.sessions_lost = 4;
+        b.sessions_recovered = 3;
+        a.merge(&b);
+        assert_eq!(a.backend_faults, 5, "fault counters are flows: summed");
+        assert_eq!(a.worker_panics, 3);
+        assert_eq!(a.worker_restarts, 2);
+        assert_eq!(a.sessions_lost, 4);
+        assert_eq!(a.sessions_recovered, 3);
+    }
+
+    #[test]
+    fn summary_reports_fault_containment() {
+        let mut m = Metrics::new();
+        m.backend_faults = 6;
+        m.worker_panics = 2;
+        m.worker_restarts = 1;
+        m.sessions_lost = 3;
+        m.sessions_recovered = 2;
+        let s = m.summary(Duration::from_secs(1));
+        assert!(s.contains("faults=6"), "{s}");
+        assert!(s.contains("panics=2"), "{s}");
+        assert!(s.contains("restarts=1"), "{s}");
+        assert!(s.contains("sess_lost=3"), "{s}");
+        assert!(s.contains("sess_recovered=2"), "{s}");
     }
 
     #[test]

@@ -44,7 +44,14 @@
 //!   shed past `max_queue` with the retryable [`ServeError::Overloaded`],
 //!   shutdown. Every request flows as an [`Envelope`] to its worker's
 //!   standing scheduler (queue → admit → extend → dispatch — see the
-//!   [`server`] module docs);
+//!   [`server`] module docs). Dispatches run under panic containment,
+//!   and each worker thread is a *supervisor* that respawns crashed
+//!   backend incarnations onto the same queue, failing resident
+//!   sessions typed ([`ServeError::SessionLost`]) while DRAM-spilled
+//!   sessions recover byte-identically from the shard directory's pool
+//!   (ISSUE 9 — see "Fault containment & supervised restart" in the
+//!   [`server`] docs); [`ChaosBackend`] + [`FaultPlan`] drive all of it
+//!   deterministically in tests;
 //! * [`batcher`]   — continuous batching with speculative multi-step
 //!   fusion: each worker keeps a standing [`WorkQueue`] and *extends* an
 //!   in-flight [`GroupPlan`] as requests arrive, so decode steps and
@@ -74,7 +81,11 @@
 //! * [`error`]     — [`ServeError`]: every admission / serving failure as
 //!   a typed variant, reported per request (one refused batch member
 //!   never poisons its batch-mates), with
-//!   [`ServeError::is_retryable`] keyed to the reclaim policy;
+//!   [`ServeError::is_retryable`] keyed to the reclaim policy.
+//!   [`ServeError::SessionLost`] is the crash variant (ISSUE 9): a
+//!   worker incarnation died holding the session's KV — retryable by
+//!   re-`open`, unlike policy-decided [`ServeError::Evicted`] or
+//!   still-dead [`ServeError::WorkerGone`];
 //! * [`metrics`]   — per-op counters (including session lifecycle:
 //!   closes, evictions, KV rows released), batch-occupancy (queries
 //!   amortised per backend dispatch), scheduler gauges (shed requests,
@@ -132,6 +143,8 @@
 //! | scorers, masks, prefix masking, BIMV tiles, word-parallel scoring vs the scalar bool-loop oracle, streaming top-k vs batch two-stage selection, fused-kernel bit-equality | property (seeded, `util::check`) | `accuracy::functional`, `bimv::engine`, `bimv::bitslice` |
 //! | randomized batched-vs-sequential equivalence (arrival-jittered streams × reclaim policies × dispatch configs × all three [`Pipeline`]s, incl. Close + LRU-eviction streams + counter parity + `WorkStats` work parity across prefix-native configs) + planner invariants + fused-burst prefix boundaries | fuzz/property | `rust/tests/batcher_fuzz.rs` |
 //! | scheduler properties: budget high-water mark never exceeds `worker_kv_budget`; bounded queues — every submit enqueues, sheds `Overloaded`, or fails typed | property | `rust/tests/scheduler_props.rs` |
+//! | chaos (ISSUE 9): random seeded [`FaultPlan`]s × dispatch configs — every submitted ticket resolves (no hang, no silent drop), fault-free sessions stay bit-equal to a fault-free run, and the fault counters (`backend_faults`/`worker_panics`/`worker_restarts`/`sessions_lost`/`sessions_recovered`) reconcile with the injected faults | fuzz/property | `rust/tests/batcher_fuzz.rs` |
+//! | fault containment + supervised restart: contained dispatch panics, spilled-session crash recovery (byte-identical resume on the respawned worker), handle drop after worker death, tickets pending across a restart, `wait_deadline` | integration | `rust/tests/session_api.rs` |
 //! | ticket semantics (out-of-order completion, timeout expiry, dropped tickets, WorkerGone), session handles, open fan-out, eviction | integration | `rust/tests/session_api.rs` |
 //! | decode serving (interleaved sessions, live append, batched vs sequential bit-equality, per-item admission failures) | integration | `rust/tests/decode_serving.rs` |
 //! | serving flows over functional/arch backends | integration | `rust/tests/coordinator_integration.rs` |
@@ -149,7 +162,10 @@ pub mod metrics;
 pub mod server;
 pub mod session;
 
-pub use backend::{AttendItem, AttentionBackend, FunctionalBackend, Pipeline, WorkStats};
+pub use backend::{
+    AttendItem, AttentionBackend, ChaosBackend, ChaosStats, Fault, FaultPlan, FunctionalBackend,
+    Pipeline, WorkStats, WorkerAbort,
+};
 pub use batcher::{
     ArrivalWait, BatchPolicy, DecodeBatcher, DispatchGroup, GroupPlan, PlanMode, WorkQueue,
 };

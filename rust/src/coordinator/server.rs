@@ -117,19 +117,41 @@
 //! sequential dispatch (a non-zero `min_idle` gate reads the wall
 //! clock and is inherently timing-dependent).
 //!
+//! # Fault containment & supervised restart (ISSUE 9)
+//!
+//! The dispatch is the containment boundary: `attend_batch` runs under
+//! `catch_unwind`, so a panicking dispatch is rolled back and answered
+//! with a typed [`ServeError::Backend`] exactly like an `Err`, and the
+//! worker keeps serving (`worker_panics` counts it). Each worker thread
+//! actually runs a *supervisor* owning the queue and tombstone state
+//! across backend *incarnations*: a panic that escapes containment (a
+//! [`WorkerAbort`](super::backend::WorkerAbort) payload, or a panic
+//! outside any dispatch) kills the incarnation, and the supervisor
+//! respawns a fresh backend onto the same queue. Sessions resident on
+//! the dead incarnation are failed shard-wide (typed
+//! [`ServeError::SessionLost`], retryable by re-`open`) — but sessions
+//! parked in the shard's DRAM spill pool, which lives outside every
+//! worker thread, survive the crash and promote byte-identically onto
+//! the respawned worker (`sessions_lost` / `sessions_recovered`). No
+//! ticket ever hangs: queued requests of lost sessions are drained with
+//! typed errors and in-flight ones resolve `WorkerGone` through their
+//! dropped response channels. Deterministic fault injection for all of
+//! this lives in [`ChaosBackend`](super::backend::ChaosBackend).
+//!
 //! [`Ticket`]: super::client::Ticket
 //! [`WorkQueue`]: super::batcher::WorkQueue
 //! [`GroupPlan`]: super::batcher::GroupPlan
 //! [`PlanMode`]: super::batcher::PlanMode
 
 use std::collections::{HashMap, HashSet, VecDeque};
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use super::backend::{AttendItem, AttentionBackend};
+use super::backend::{AttendItem, AttentionBackend, WorkerAbort};
 use super::batcher::{ArrivalWait, BatchPolicy, GroupPlan, WorkQueue};
 use super::client::Ticket;
 use super::directory::{PendingAction, Reclaimed, ShardDirectory};
@@ -427,24 +449,33 @@ impl CamformerServer {
     /// backend owned by worker `w` (`w = shard * heads + head`). Sessions
     /// are created by [`CamformerServer::open`] (or legacy `Prefill`
     /// requests).
-    pub fn start<B, FB>(cfg: ServerConfig, mut make_backend: FB) -> Self
+    ///
+    /// The factory is `Fn + Send + Sync` (not `FnMut`) because it outlives
+    /// this call: each worker's supervisor re-invokes it *on the worker
+    /// thread* to build a fresh backend after a crashed incarnation
+    /// (ISSUE 9's supervised restart). A factory that panics kills its
+    /// supervisor outright — a worker that cannot rebuild its backend is
+    /// genuinely gone, not restartable.
+    pub fn start<B, FB>(cfg: ServerConfig, make_backend: FB) -> Self
     where
         B: AttentionBackend + 'static,
-        FB: FnMut(usize) -> B,
+        FB: Fn(usize) -> B + Send + Sync + 'static,
     {
         assert!(cfg.shards >= 1 && cfg.heads >= 1, "need at least one worker");
         let dirs: Vec<Arc<ShardDirectory>> =
             (0..cfg.shards).map(|_| Arc::new(ShardDirectory::new(cfg.heads))).collect();
+        let make = Arc::new(make_backend);
         let mut workers = Vec::with_capacity(cfg.workers());
         for w in 0..cfg.workers() {
             let (tx, rx) = mpsc::channel::<Envelope>();
-            let backend = make_backend(w);
             let gauges = Arc::new(WorkerGauges::default());
             let wgauges = gauges.clone();
             let wcfg = cfg.clone();
             let dir = dirs[w / cfg.heads].clone();
-            let handle =
-                std::thread::spawn(move || worker_loop(w, wcfg, backend, rx, wgauges, dir));
+            let make = make.clone();
+            let handle = std::thread::spawn(move || {
+                supervise(w, wcfg, move |i| (*make)(i), rx, wgauges, dir)
+            });
             workers.push(Worker { tx, gauges, handle });
         }
         CamformerServer {
@@ -602,14 +633,28 @@ impl CamformerServer {
     /// queue first), fold the shard directories' spill-tier counters and
     /// the drop-path close failures, return merged metrics and the
     /// serving window.
+    ///
+    /// A worker whose *supervisor* died (a panic outside every
+    /// containment and restart scope — e.g. the backend factory itself
+    /// panicking on a respawn) took its `Metrics` with it; this used to
+    /// be swallowed silently (`if let Ok(m)`). Now the death is counted
+    /// (`worker_panics`) and the submission-side gauges — which live
+    /// outside the thread — are folded so sheds and the queue-depth peak
+    /// survive the crash.
     pub fn shutdown(self) -> (Metrics, Duration) {
         let window = self.started.elapsed();
         let mut merged = Metrics::new();
         let CamformerServer { workers, dirs, close_failures, .. } = self;
         for w in workers {
             drop(w.tx);
-            if let Ok(m) = w.handle.join() {
-                merged.merge(&m);
+            match w.handle.join() {
+                Ok(m) => merged.merge(&m),
+                Err(_) => {
+                    merged.worker_panics += 1;
+                    merged.shed_requests += w.gauges.sheds.load(Ordering::Relaxed);
+                    merged.queue_depth_max =
+                        merged.queue_depth_max.max(w.gauges.depth_hwm.load(Ordering::Relaxed));
+                }
             }
         }
         for dir in &dirs {
@@ -694,11 +739,15 @@ impl EvictedSet {
     }
 }
 
-/// The typed miss for a session absent from the worker's table: evicted
-/// sessions answer [`ServeError::Evicted`] until re-opened, everything
-/// else is an [`ServeError::UnknownSession`].
-fn missing_session(evicted: &EvictedSet, session: SessionId) -> ServeError {
-    if evicted.contains(session) {
+/// The typed miss for a session absent from the worker's table: sessions
+/// lost to a worker crash answer [`ServeError::SessionLost`], evicted
+/// sessions answer [`ServeError::Evicted`], both until re-opened;
+/// everything else is an [`ServeError::UnknownSession`]. Lost wins over
+/// evicted — a crash is the fresher (and more actionable) cause.
+fn missing_session(evicted: &EvictedSet, lost: &EvictedSet, session: SessionId) -> ServeError {
+    if lost.contains(session) {
+        ServeError::SessionLost { session }
+    } else if evicted.contains(session) {
         ServeError::Evicted { session }
     } else {
         ServeError::UnknownSession { session }
@@ -744,17 +793,37 @@ fn used_rows(sessions: &HashMap<SessionId, Session>) -> usize {
 /// pool; a drop releases it and leaves an `Evicted` tombstone. Both
 /// refund the session's provisioned rows to the budget accounting
 /// (`kv_rows_released`), exactly as the pre-PR-8 per-worker eviction
-/// did. Returns whether anything changed.
+/// did. A *lost* sentence (a sibling head's worker crashed holding part
+/// of the session's KV — ISSUE 9) releases the local copy the same way
+/// but leaves a `SessionLost` tombstone, and applies even when this head
+/// holds no copy: the tombstone is what turns the session's subsequent
+/// requests into typed `SessionLost` answers. Returns whether anything
+/// changed.
+#[allow(clippy::too_many_arguments)]
 fn apply_shard_transitions<B: AttentionBackend>(
     backend: &mut B,
     dir: &ShardDirectory,
     head: usize,
     sessions: &mut HashMap<SessionId, Session>,
     evicted: &mut EvictedSet,
+    lost: &mut EvictedSet,
     metrics: &mut Metrics,
 ) -> bool {
     let mut changed = false;
     for (sid, action) in dir.pending_for(head) {
+        if matches!(action, PendingAction::Lost) {
+            if sessions.get(&sid).is_some_and(Session::is_pinned) {
+                // see the pinned guard below: never tear down mid-dispatch
+                continue;
+            }
+            if let Some(s) = sessions.remove(&sid) {
+                metrics.kv_rows_released += s.store.release() as u64;
+                changed = true;
+            }
+            lost.insert(sid);
+            dir.note_gone(sid, head);
+            continue;
+        }
         match sessions.get(&sid) {
             None => {
                 // no local copy to demote/drop (e.g. the id was only ever
@@ -780,6 +849,7 @@ fn apply_shard_transitions<B: AttentionBackend>(
                 evicted.insert(sid);
                 dir.note_gone(sid, head);
             }
+            PendingAction::Lost => unreachable!("handled above"),
         }
         changed = true;
     }
@@ -812,6 +882,7 @@ fn reclaim_round<B: AttentionBackend>(
     head: usize,
     sessions: &mut HashMap<SessionId, Session>,
     evicted: &mut EvictedSet,
+    lost: &mut EvictedSet,
     metrics: &mut Metrics,
     keep: SessionId,
     refusal: ServeError,
@@ -833,7 +904,7 @@ fn reclaim_round<B: AttentionBackend>(
                 // counted inside the directory the same way)
                 metrics.evictions += 1;
             }
-            apply_shard_transitions(backend, dir, head, sessions, evicted, metrics);
+            apply_shard_transitions(backend, dir, head, sessions, evicted, lost, metrics);
             Ok(())
         }
         Reclaimed::PendingElsewhere => {
@@ -841,7 +912,7 @@ fn reclaim_round<B: AttentionBackend>(
             // transitions frees their rows — if that changes nothing
             // (unreachable: a sentenced local candidate is by definition
             // applicable), refuse rather than spin
-            if apply_shard_transitions(backend, dir, head, sessions, evicted, metrics) {
+            if apply_shard_transitions(backend, dir, head, sessions, evicted, lost, metrics) {
                 Ok(())
             } else {
                 Err(refusal)
@@ -864,6 +935,7 @@ fn handle_prefill<B: AttentionBackend>(
     head: usize,
     sessions: &mut HashMap<SessionId, Session>,
     evicted: &mut EvictedSet,
+    lost: &mut EvictedSet,
     metrics: &mut Metrics,
     clock: u64,
     session: SessionId,
@@ -888,6 +960,7 @@ fn handle_prefill<B: AttentionBackend>(
             head,
             sessions,
             evicted,
+            lost,
             metrics,
             session,
             ServeError::CapacityExhausted { capacity: cfg.worker_kv_budget },
@@ -901,14 +974,16 @@ fn handle_prefill<B: AttentionBackend>(
             head,
             sessions,
             evicted,
+            lost,
             metrics,
             session,
             ServeError::SessionLimit { max_sessions: cfg.max_sessions },
         )?;
     }
     if !sessions.contains_key(&session) {
-        // (re-)opening revives an evicted id
+        // (re-)opening revives an evicted or crash-lost id
         evicted.remove(session);
+        lost.remove(session);
         sessions.insert(
             session,
             Session::new(session, KvStore::new(cfg.kv_capacity, cfg.d_k, cfg.d_v)),
@@ -972,7 +1047,10 @@ enum ViewSource {
 /// failure — which has no per-item attribution — fails the whole
 /// dispatch; it rolls every speculative append of the group back (via
 /// `baseline`), so an errored request never leaves state behind (a
-/// client retry must not double-append).
+/// client retry must not double-append). A *panicking* dispatch is
+/// contained and takes the exact same rollback + typed-answer path
+/// (`worker_panics` counts it); only a [`WorkerAbort`] payload escapes,
+/// on purpose, to kill the incarnation.
 #[allow(clippy::too_many_arguments)]
 fn dispatch_pending<B: AttentionBackend>(
     backend: &mut B,
@@ -1063,11 +1141,31 @@ fn dispatch_pending<B: AttentionBackend>(
         batch.push(AttendItem { query: &p.query, keys, values, prefix_rows: p.prefix, packed });
     }
 
-    // Phase 3 — one backend dispatch for the whole group. Occupancy is
-    // only recorded for dispatches that actually served their queries.
-    let result = backend.attend_batch(&batch);
+    // Phase 3 — one backend dispatch for the whole group, under panic
+    // containment (ISSUE 9): a panicking dispatch is caught, rolled back
+    // and answered typed exactly like an `Err`, so a poison request
+    // cannot take the head down. The one deliberate exception is a
+    // [`WorkerAbort`] payload — the "this incarnation must die" signal —
+    // which containment re-raises for the supervisor to handle.
+    // Occupancy is only recorded for dispatches that actually served
+    // their queries.
+    let caught = catch_unwind(AssertUnwindSafe(|| backend.attend_batch(&batch)));
     let occupancy = batch.len();
     drop(batch); // release the session borrows before any rollback
+    let result: Result<Vec<Vec<f32>>, String> = match caught {
+        Ok(Ok(outs)) => Ok(outs),
+        Ok(Err(e)) => {
+            metrics.backend_faults += 1;
+            Err(format!("{e:#}"))
+        }
+        Err(payload) => {
+            if payload.downcast_ref::<WorkerAbort>().is_some() {
+                resume_unwind(payload);
+            }
+            metrics.worker_panics += 1;
+            Err(format!("dispatch panicked: {}", panic_message(&*payload)))
+        }
+    };
     match result {
         Ok(outs) => {
             metrics.note_dispatch(occupancy);
@@ -1098,7 +1196,7 @@ fn dispatch_pending<B: AttentionBackend>(
             if !baseline.is_empty() {
                 backend.on_kv_update();
             }
-            let err = ServeError::Backend(format!("{e:#}"));
+            let err = ServeError::Backend(e);
             for (i, _, _) in planned {
                 let p = &pending[i];
                 deliver(
@@ -1134,6 +1232,7 @@ fn execute_batch<B: AttentionBackend>(
     dir: &ShardDirectory,
     sessions: &mut HashMap<SessionId, Session>,
     evicted: &mut EvictedSet,
+    lost: &mut EvictedSet,
     clock: &mut u64,
     items: Vec<Envelope>,
     head: usize,
@@ -1158,7 +1257,7 @@ fn execute_batch<B: AttentionBackend>(
                 // identical under every legal grouping of the same stream.
                 let resident = used_rows(sessions);
                 let appended = match sessions.get_mut(&session) {
-                    None => Err(missing_session(evicted, session)),
+                    None => Err(missing_session(evicted, lost, session)),
                     Some(s) => {
                         s.touch(*clock);
                         // mirror every local touch into the shard clock so
@@ -1241,7 +1340,7 @@ fn execute_batch<B: AttentionBackend>(
                         id,
                         session,
                         head,
-                        result: Err(missing_session(evicted, session)),
+                        result: Err(missing_session(evicted, lost, session)),
                         latency: enq.elapsed(),
                     },
                 ),
@@ -1271,12 +1370,14 @@ fn execute_batch<B: AttentionBackend>(
                             },
                         );
                     } else {
-                        let err = missing_session(evicted, session);
-                        // a Close of an evicted id acknowledges the eviction
-                        // (handle drop/close does this): forget the tombstone
-                        // so the set stays bounded by un-acknowledged victims
-                        // instead of growing with every id ever evicted
+                        let err = missing_session(evicted, lost, session);
+                        // a Close of an evicted or crash-lost id acknowledges
+                        // the loss (handle drop/close does this): forget the
+                        // tombstone so the sets stay bounded by
+                        // un-acknowledged victims instead of growing with
+                        // every id ever evicted or lost
                         evicted.remove(session);
+                        lost.remove(session);
                         deliver(
                             metrics,
                             Op::Close,
@@ -1350,6 +1451,7 @@ fn run_prefill_barrier<B: AttentionBackend>(
     dir: &ShardDirectory,
     sessions: &mut HashMap<SessionId, Session>,
     evicted: &mut EvictedSet,
+    lost: &mut EvictedSet,
     metrics: &mut Metrics,
     clock: &mut u64,
     env: Envelope,
@@ -1360,7 +1462,8 @@ fn run_prefill_barrier<B: AttentionBackend>(
     *clock += 1;
     let result = match req {
         Request::Prefill { keys, values, .. } => handle_prefill(
-            backend, cfg, dir, head, sessions, evicted, metrics, *clock, session, keys, values,
+            backend, cfg, dir, head, sessions, evicted, lost, metrics, *clock, session, keys,
+            values,
         ),
         _ => unreachable!("only prefills run as barriers"),
     };
@@ -1409,6 +1512,7 @@ fn run_promotion_barrier<B: AttentionBackend>(
     head: usize,
     sessions: &mut HashMap<SessionId, Session>,
     evicted: &mut EvictedSet,
+    lost: &mut EvictedSet,
     metrics: &mut Metrics,
     session: SessionId,
 ) -> Result<(), ServeError> {
@@ -1425,6 +1529,7 @@ fn run_promotion_barrier<B: AttentionBackend>(
             head,
             sessions,
             evicted,
+            lost,
             metrics,
             session,
             ServeError::CapacityExhausted { capacity: cfg.worker_kv_budget },
@@ -1438,6 +1543,7 @@ fn run_promotion_barrier<B: AttentionBackend>(
             head,
             sessions,
             evicted,
+            lost,
             metrics,
             session,
             ServeError::SessionLimit { max_sessions: cfg.max_sessions },
@@ -1456,46 +1562,165 @@ fn run_promotion_barrier<B: AttentionBackend>(
     Ok(())
 }
 
-/// The standing per-worker scheduler (see the module docs for the
-/// queue → admit → extend → dispatch cycle). The queue outlives every
-/// dispatch: whatever a cycle could not admit stays at the front and
-/// seeds the next plan, and newly-arriving envelopes *extend* the open
-/// plan until a bound fires. Envelopes leave the bounded-queue gauge the
-/// moment the scheduler pops them into a plan — from then on they are
-/// in-flight work, not backlog.
-fn worker_loop<B: AttentionBackend>(
+/// Extract a human-readable message from a contained panic payload
+/// (the two payload types `panic!` produces, else a placeholder).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s
+    } else {
+        "non-string panic payload"
+    }
+}
+
+/// The per-worker supervisor (ISSUE 9): owns everything that must
+/// survive a worker crash — the envelope receiver, the standing queue,
+/// the accumulated metrics, and the evicted/lost tombstone sets — and
+/// runs successive worker *incarnations* under `catch_unwind`. A clean
+/// incarnation exit (every submitter hung up and the queue drained)
+/// ends the supervisor. A panic that escapes dispatch containment (a
+/// [`WorkerAbort`], or a panic outside any dispatch) restarts the head:
+/// the crash is counted (`worker_panics`/`worker_restarts`), the dead
+/// incarnation's resident sessions are failed shard-wide through
+/// [`ShardDirectory::fail_head`] (`sessions_lost`) — DRAM-spilled
+/// copies survive in the pool and later promote byte-identically onto
+/// the new incarnation — the doomed backlog (queued `Decode`/`Attend`
+/// of lost sessions) is answered with typed [`ServeError::SessionLost`]
+/// errors, and a fresh backend is built from the factory for the next
+/// incarnation. In-flight envelopes of the dead incarnation resolve
+/// through their dropped response channels as `WorkerGone`; queued
+/// `Close`/`Prefill` envelopes stay queued on purpose — the new
+/// incarnation acknowledges the Close (clearing the tombstone) and
+/// re-opens on Prefill.
+///
+/// The factory itself runs *outside* containment on purpose: if the
+/// environment can no longer produce a backend, restarting would be a
+/// lie — the supervisor thread dies and `shutdown` reports the panic.
+fn supervise<B, FB>(
     worker: usize,
     cfg: ServerConfig,
-    mut backend: B,
+    make_backend: FB,
     rx: Receiver<Envelope>,
     gauges: Arc<WorkerGauges>,
     dir: Arc<ShardDirectory>,
-) -> Metrics {
+) -> Metrics
+where
+    B: AttentionBackend,
+    FB: Fn(usize) -> B,
+{
     let head = worker % cfg.heads;
     let mut metrics = Metrics::new();
-    let mut sessions: HashMap<SessionId, Session> = HashMap::new();
-    // sessions reclaimed by a dropping policy: their requests answer
-    // `Evicted` (not `UnknownSession`) until the id is re-opened. Bounded
-    // well past the live-session count so only pathologically stale
-    // tombstones age out.
+    // sessions reclaimed by a dropping policy answer `Evicted`; sessions
+    // whose KV died with a crashed incarnation answer `SessionLost`.
+    // Both tombstone sets outlive incarnations and are bounded well past
+    // the live-session count so only pathologically stale entries age
+    // out.
     let mut evicted = EvictedSet::new((4 * cfg.max_sessions).max(16));
-    // the worker's logical clock: one tick per request, in program
+    let mut lost = EvictedSet::new((4 * cfg.max_sessions).max(16));
+    let mut queue = WorkQueue::new();
+    loop {
+        let backend = make_backend(worker);
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            worker_incarnation(
+                worker, &cfg, backend, &rx, &mut queue, &gauges, &dir, &mut evicted, &mut lost,
+                &mut metrics,
+            )
+        }));
+        match caught {
+            Ok(()) => break,
+            Err(_) => {
+                metrics.worker_panics += 1;
+                metrics.worker_restarts += 1;
+                // Fail this head's sessions shard-wide: resident copies
+                // die (tombstoned below), this head's spilled copies
+                // survive in the directory pool for recovery.
+                let lost_now = dir.fail_head(head);
+                metrics.sessions_lost += lost_now.len() as u64;
+                for &sid in &lost_now {
+                    lost.insert(sid);
+                }
+                // Drain the doomed backlog so no queued ticket outlives
+                // its session silently: every queued Decode/Attend of a
+                // lost session answers typed, now. (`fail_head` returns
+                // the ids sorted.)
+                let drained = queue.drain_matching(|env| {
+                    matches!(env.req, Request::Decode { .. } | Request::Attend { .. })
+                        && lost_now.binary_search(&env.req.session()).is_ok()
+                });
+                for env in drained {
+                    gauges.depth.fetch_sub(1, Ordering::Relaxed);
+                    let op = match env.req {
+                        Request::Decode { .. } => Op::Decode,
+                        _ => Op::Attend,
+                    };
+                    let session = env.req.session();
+                    deliver(
+                        &mut metrics,
+                        op,
+                        &env.sink,
+                        Response {
+                            id: env.req.id(),
+                            session,
+                            head,
+                            result: Err(ServeError::SessionLost { session }),
+                            latency: env.enq.elapsed(),
+                        },
+                    );
+                }
+            }
+        }
+    }
+    // fold the submission-side gauges into this worker's report — once,
+    // for the supervisor's whole life (they are shared atomics, not
+    // per-incarnation state)
+    metrics.shed_requests += gauges.sheds.load(Ordering::Relaxed);
+    metrics.queue_depth_max = metrics.queue_depth_max.max(gauges.depth_hwm.load(Ordering::Relaxed));
+    metrics
+}
+
+/// The standing per-worker scheduler (see the module docs for the
+/// queue → admit → extend → dispatch cycle), run as one backend
+/// *incarnation* under the supervisor. The queue outlives every
+/// dispatch — and every incarnation: whatever a cycle could not admit
+/// stays at the front and seeds the next plan, and newly-arriving
+/// envelopes *extend* the open plan until a bound fires. Envelopes
+/// leave the bounded-queue gauge the moment the scheduler pops them
+/// into a plan — from then on they are in-flight work, not backlog.
+/// Session stores and the logical clock are incarnation-local (a crash
+/// loses them — that is what [`supervise`] recovers from); the
+/// tombstone sets and metrics are borrowed from the supervisor.
+#[allow(clippy::too_many_arguments)]
+fn worker_incarnation<B: AttentionBackend>(
+    worker: usize,
+    cfg: &ServerConfig,
+    mut backend: B,
+    rx: &Receiver<Envelope>,
+    queue: &mut WorkQueue,
+    gauges: &WorkerGauges,
+    dir: &ShardDirectory,
+    evicted: &mut EvictedSet,
+    lost: &mut EvictedSet,
+    metrics: &mut Metrics,
+) {
+    let head = worker % cfg.heads;
+    let mut sessions: HashMap<SessionId, Session> = HashMap::new();
+    // the incarnation's logical clock: one tick per request, in program
     // order — the deterministic LRU key (wall-clock ties would make
     // eviction, and therefore outputs, timing-dependent)
     let mut clock: u64 = 0;
     let policy = cfg.batch;
-    let mut queue = WorkQueue::new();
     loop {
         // Block until there is work (or every submitter hung up and the
         // standing queue drained — the shutdown condition).
-        if !queue.wait_nonempty(&rx) {
+        if !queue.wait_nonempty(rx) {
             break;
         }
         // Reconcile with the shard directory first: apply any demote /
-        // drop decided by another head's barrier since the last cycle,
-        // so a victim is torn down on every head before this cycle's
-        // work can observe it — the fan-out half of atomic eviction.
-        apply_shard_transitions(&mut backend, &dir, head, &mut sessions, &mut evicted, &mut metrics);
+        // drop / loss decided by another head since the last cycle, so a
+        // victim is torn down on every head before this cycle's work can
+        // observe it — the fan-out half of atomic eviction.
+        apply_shard_transitions(&mut backend, dir, head, &mut sessions, evicted, lost, metrics);
         // A Prefill at the front is a barrier: run it alone, then loop.
         if matches!(queue.front().map(|e| &e.req), Some(Request::Prefill { .. })) {
             let env = queue.pop().expect("front checked");
@@ -1503,11 +1728,12 @@ fn worker_loop<B: AttentionBackend>(
             metrics.note_batch();
             run_prefill_barrier(
                 &mut backend,
-                &cfg,
-                &dir,
+                cfg,
+                dir,
                 &mut sessions,
-                &mut evicted,
-                &mut metrics,
+                evicted,
+                lost,
+                metrics,
                 &mut clock,
                 env,
                 head,
@@ -1520,18 +1746,19 @@ fn worker_loop<B: AttentionBackend>(
         // front and executes against the restored store.
         let promote = queue
             .front()
-            .filter(|env| needs_promotion(&dir, &sessions, head, &env.req))
+            .filter(|env| needs_promotion(dir, &sessions, head, &env.req))
             .map(|env| env.req.session());
         if let Some(session) = promote {
             metrics.note_batch();
             if let Err(e) = run_promotion_barrier(
                 &mut backend,
-                &cfg,
-                &dir,
+                cfg,
+                dir,
                 head,
                 &mut sessions,
-                &mut evicted,
-                &mut metrics,
+                evicted,
+                lost,
+                metrics,
                 session,
             ) {
                 let env = queue.pop().expect("front checked");
@@ -1541,7 +1768,7 @@ fn worker_loop<B: AttentionBackend>(
                     _ => Op::Attend,
                 };
                 deliver(
-                    &mut metrics,
+                    metrics,
                     op,
                     &env.sink,
                     Response {
@@ -1565,7 +1792,7 @@ fn worker_loop<B: AttentionBackend>(
                 match queue.front() {
                     Some(env)
                         if !matches!(env.req, Request::Prefill { .. })
-                            && !needs_promotion(&dir, &sessions, head, &env.req)
+                            && !needs_promotion(dir, &sessions, head, &env.req)
                             && plan.admits(&env.req) =>
                     {
                         let env = queue.pop().expect("front checked");
@@ -1589,7 +1816,7 @@ fn worker_loop<B: AttentionBackend>(
             if now >= deadline {
                 break;
             }
-            match queue.wait_arrival(&rx, deadline - now) {
+            match queue.wait_arrival(rx, deadline - now) {
                 ArrivalWait::Arrived => continue,
                 // a timeout may fire early on coarse-timer platforms:
                 // loop and let the deadline re-check decide
@@ -1602,25 +1829,23 @@ fn worker_loop<B: AttentionBackend>(
         metrics.note_batch();
         execute_batch(
             &mut backend,
-            &cfg,
-            &dir,
+            cfg,
+            dir,
             &mut sessions,
-            &mut evicted,
+            evicted,
+            lost,
             &mut clock,
             plan.take(),
             head,
-            &mut metrics,
+            metrics,
         );
     }
-    // fold the submission-side gauges into this worker's report
-    metrics.shed_requests += gauges.sheds.load(Ordering::Relaxed);
-    metrics.queue_depth_max = metrics.queue_depth_max.max(gauges.depth_hwm.load(Ordering::Relaxed));
-    // ... and the backend's hot-path work counters (ISSUE 7): dispatch
-    // configs must agree not only on outputs but on the work performed
+    // the backend's hot-path work counters (ISSUE 7): dispatch configs
+    // must agree not only on outputs but on the work performed. Folded
+    // only on clean exit — a crashed incarnation's work dies with it.
     if let Some(work) = backend.work_stats() {
         metrics.work.add(&work);
     }
-    metrics
 }
 
 /// Route a stream of requests round-robin over heads (helper for load

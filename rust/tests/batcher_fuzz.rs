@@ -52,12 +52,31 @@
 //! run (demoted KV promotes back byte-identically, spilled closes ack
 //! like resident ones), zero `Evicted` anywhere, and demote/promote
 //! counter parity across dispatch configs.
+//!
+//! The fault-injection layer (ISSUE 9) adds a **chaos family**: the
+//! same streams served through a `ChaosBackend` running seeded random
+//! `FaultPlan`s (typed backend errors, contained dispatch panics,
+//! `WorkerAbort` crashes with supervised restart, stalls) across
+//! dispatch configs and reclaim policies. Three invariants: every
+//! submitted ticket resolves typed within a deadline (no hang, no
+//! silent drop); sessions never touched by a fault stay bit-equal to a
+//! fault-free run (a session only diverges after a fault-typed
+//! response); and the fault counters reconcile exactly with the
+//! injection ledger — `backend_faults == errors`,
+//! `worker_panics == panics + crashes`, `worker_restarts == crashes`,
+//! `WorkerGone` observed iff a crash fired, and crashes always lose at
+//! least one resident session.
 
+use std::collections::HashSet;
+use std::sync::atomic::Ordering as AtomicOrdering;
+use std::sync::Arc;
 use std::thread;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use camformer::accuracy::functional::{self, AttnConfig};
-use camformer::coordinator::backend::{AttendItem, AttentionBackend, FunctionalBackend, Pipeline};
+use camformer::coordinator::backend::{
+    AttendItem, AttentionBackend, ChaosBackend, ChaosStats, FaultPlan, FunctionalBackend, Pipeline,
+};
 use camformer::coordinator::batcher::{BatchPolicy, DecodeBatcher, DispatchGroup, PlanMode};
 use camformer::coordinator::kv_store::KvStore;
 use camformer::coordinator::server::{CamformerServer, Request, ServerConfig};
@@ -126,7 +145,7 @@ fn run_stream<B, F>(
 ) -> (Vec<Response>, Metrics)
 where
     B: AttentionBackend + 'static,
-    F: FnMut(usize) -> B,
+    F: Fn(usize) -> B + Send + Sync + 'static,
 {
     run_scheduled(stream, &[], policy, max_sessions, reclaim, WIDE_BUDGET, DEEP_QUEUE, make)
 }
@@ -150,7 +169,7 @@ fn run_scheduled<B, F>(
 ) -> (Vec<Response>, Metrics)
 where
     B: AttentionBackend + 'static,
-    F: FnMut(usize) -> B,
+    F: Fn(usize) -> B + Send + Sync + 'static,
 {
     let cfg = ServerConfig {
         kv_capacity: CAPACITY,
@@ -749,4 +768,218 @@ fn fused_burst_sees_exact_causal_prefix_at_boundary_lengths() {
         assert_eq!(fused_be.work.words_scored, want_words, "burst {burst}: words scored");
         assert_eq!(fused_be.work.tiles_streamed, want_tiles, "burst {burst}: tiles streamed");
     }
+}
+
+/// Dedicated chaos runner (ISSUE 9): submits every request exactly once
+/// against a [`ChaosBackend`] executing `plan`, then resolves every
+/// ticket under one shared deadline — a ticket that misses it is a hang,
+/// the bug this family exists to catch. The legacy runners'
+/// `completed + errors == stream.len()` reconciliation does not hold
+/// here (tickets killed by a crash resolve client-side as `WorkerGone`,
+/// counted in neither), so the chaos test reconciles the server's fault
+/// counters against the injection ledger instead.
+fn run_chaos(
+    stream: &[Request],
+    policy: BatchPolicy,
+    max_sessions: usize,
+    reclaim: ReclaimPolicy,
+    plan: &FaultPlan,
+) -> (Vec<Response>, Metrics, Arc<ChaosStats>) {
+    let cfg = ServerConfig {
+        kv_capacity: CAPACITY,
+        d_k: D,
+        d_v: D,
+        max_sessions,
+        reclaim,
+        batch: policy,
+        worker_kv_budget: WIDE_BUDGET,
+        max_queue: DEEP_QUEUE,
+        ..Default::default()
+    };
+    let stats = Arc::new(ChaosStats::default());
+    let server = {
+        let stats = stats.clone();
+        let plan = plan.clone();
+        CamformerServer::start(cfg, move |_| {
+            let inner = FunctionalBackend::new(CAPACITY, D);
+            ChaosBackend::with_stats(inner, plan.clone(), stats.clone())
+        })
+    };
+    let mut tickets = Vec::with_capacity(stream.len());
+    for req in stream {
+        loop {
+            match server.submit_ticket(req.clone()) {
+                Ok(t) => {
+                    tickets.push(t);
+                    break;
+                }
+                // DEEP_QUEUE makes sheds unlikely, but injected stalls can
+                // back the queue up — replay; nothing was enqueued
+                Err(ServeError::Overloaded { .. }) => thread::yield_now(),
+                Err(e) => panic!("chaos submit failed terminally: {e}"),
+            }
+        }
+    }
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let mut resps: Vec<Response> = tickets
+        .into_iter()
+        .map(|t| {
+            let id = t.id();
+            t.wait_deadline(deadline)
+                .unwrap_or_else(|_| panic!("ticket {id} hung past the chaos deadline"))
+        })
+        .collect();
+    resps.sort_by_key(|r| r.id);
+    let (m, _) = server.shutdown();
+    (resps, m, stats)
+}
+
+/// Could a fault have produced this response? The first such response
+/// taints its session for the rest of the taint walk.
+fn fault_typed(r: &Response) -> bool {
+    match &r.result {
+        Err(ServeError::Backend(msg)) => msg.contains("chaos") || msg.contains("panicked"),
+        Err(ServeError::SessionLost { .. }) | Err(ServeError::WorkerGone { .. }) => true,
+        _ => false,
+    }
+}
+
+/// ISSUE 9 chaos family. Seeded random fault plans (typed backend
+/// errors, contained dispatch panics, worker crashes with supervised
+/// restart, stalls) run against the random streams under two serving
+/// shapes — fused dispatch with `Deny`, and conservative dispatch over a
+/// two-slot DRAM spill tier (so crashes hit a mix of resident and
+/// spilled sessions, and spilled ones recover). Three invariants per
+/// run:
+///
+/// 1. **No hang, no silent drop** — every submitted ticket resolves
+///    typed within the shared deadline (asserted inside [`run_chaos`]).
+/// 2. **Fault-free sessions stay bit-equal to a fault-free run.**
+///    Walking responses in id order, a session becomes *tainted* at its
+///    first fault-typed response — injected backend error, contained
+///    panic, `SessionLost`, `WorkerGone`; group faults taint innocent
+///    batch-mates too, since a dispatch failure has no per-item
+///    attribution. Every response of an untainted session must equal
+///    the clean sequential-dense run exactly (outputs, seq_lens, typed
+///    refusals). Stalls never taint — a stalled dispatch serves
+///    normally. Tainted sessions are unconstrained: rollbacks
+///    legitimately shift their seq_lens.
+/// 3. **Counters reconcile with the injection ledger** —
+///    `backend_faults == errors`, `worker_panics == panics + crashes`,
+///    `worker_restarts == crashes`; `WorkerGone` is observed iff a
+///    crash fired (every crash kills its in-flight dispatch); distinct
+///    `SessionLost` ids never exceed `sessions_lost`; a crash always
+///    loses at least one resident session (the one it was dispatching);
+///    and without crashes nothing is recovered.
+#[test]
+fn chaos_fault_plans_resolve_every_ticket_and_reconcile_counters() {
+    let spill = ReclaimPolicy::LruSpillToDram { min_idle: Duration::ZERO };
+    let mut rng = Rng::new(0xC4405);
+    let (mut total_errors, mut total_panics, mut total_crashes) = (0u64, 0u64, 0u64);
+    for case in 0..30u64 {
+        let mut crng = rng.split();
+        let ops = 10 + crng.index(25);
+        let stream = gen_stream(&mut crng, ops);
+
+        // fault-free ground truth: sequential dense dispatch, no pressure
+        let (clean, _) = run_stream(
+            &stream,
+            BatchPolicy::conservative(1, Duration::from_micros(50)),
+            8,
+            ReclaimPolicy::Deny,
+            |_| pipeline_backend(Pipeline::Dense),
+        );
+
+        let configs = [
+            (
+                "chaos/deny-fused",
+                8,
+                ReclaimPolicy::Deny,
+                BatchPolicy::bounds(16, Duration::from_millis(1)),
+            ),
+            (
+                "chaos/spill-conservative",
+                2,
+                spill,
+                BatchPolicy::conservative(16, Duration::from_millis(1)),
+            ),
+        ];
+        for (ci, (label, max_sessions, reclaim, policy)) in configs.into_iter().enumerate() {
+            let plan = FaultPlan::random(0x9A0_0000 + case * 8 + ci as u64, 24, 0.28);
+            let (resps, m, stats) = run_chaos(&stream, policy, max_sessions, reclaim, &plan);
+            assert_eq!(resps.len(), clean.len(), "case {case} {label}: response count");
+
+            let mut tainted: HashSet<u64> = HashSet::new();
+            let mut lost_ids: HashSet<u64> = HashSet::new();
+            let mut saw_worker_gone = false;
+            for (r, c) in resps.iter().zip(&clean) {
+                assert_eq!(r.id, c.id, "case {case} {label}");
+                if let Err(ServeError::SessionLost { session }) = &r.result {
+                    lost_ids.insert(*session);
+                }
+                if matches!(r.result, Err(ServeError::WorkerGone { .. })) {
+                    saw_worker_gone = true;
+                }
+                if fault_typed(r) {
+                    tainted.insert(r.session);
+                    continue;
+                }
+                if tainted.contains(&r.session) {
+                    continue;
+                }
+                match (&r.result, &c.result) {
+                    (Ok(a), Ok(b)) => {
+                        assert_eq!(a.output, b.output, "case {case} {label} id {}", r.id);
+                        assert_eq!(a.seq_len, b.seq_len, "case {case} {label} id {}", r.id);
+                    }
+                    (Err(a), Err(b)) => assert_eq!(a, b, "case {case} {label} id {}", r.id),
+                    (a, b) => {
+                        panic!("case {case} {label} id {}: {a:?} vs clean {b:?}", r.id)
+                    }
+                }
+            }
+
+            let errors = stats.errors.load(AtomicOrdering::Relaxed);
+            let panics = stats.panics.load(AtomicOrdering::Relaxed);
+            let crashes = stats.crashes.load(AtomicOrdering::Relaxed);
+            assert_eq!(m.backend_faults, errors, "case {case} {label}: backend_faults");
+            assert_eq!(
+                m.worker_panics,
+                panics + crashes,
+                "case {case} {label}: worker_panics must count contained panics AND crashes"
+            );
+            assert_eq!(m.worker_restarts, crashes, "case {case} {label}: worker_restarts");
+            assert_eq!(
+                saw_worker_gone,
+                crashes > 0,
+                "case {case} {label}: every crash kills its in-flight dispatch, and nothing else \
+                 produces WorkerGone"
+            );
+            assert!(
+                lost_ids.len() as u64 <= m.sessions_lost,
+                "case {case} {label}: {} distinct SessionLost ids vs sessions_lost {}",
+                lost_ids.len(),
+                m.sessions_lost
+            );
+            if crashes > 0 {
+                assert!(
+                    m.sessions_lost >= 1,
+                    "case {case} {label}: a crash always loses the session it was dispatching"
+                );
+            } else {
+                assert_eq!(
+                    m.sessions_recovered, 0,
+                    "case {case} {label}: nothing to recover without a crash"
+                );
+            }
+            total_errors += errors;
+            total_panics += panics;
+            total_crashes += crashes;
+        }
+    }
+    assert!(
+        total_errors > 0 && total_panics > 0 && total_crashes > 0,
+        "the suite must exercise every fault kind at least once \
+         (errors {total_errors}, panics {total_panics}, crashes {total_crashes})"
+    );
 }

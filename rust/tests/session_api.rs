@@ -10,10 +10,22 @@
 //! split-brain sessions), and `ReclaimPolicy::LruSpillToDram` demotes
 //! victims into the simulated host DRAM tier and promotes them back
 //! byte-identically — packed key bits included — on their next request.
+//!
+//! Extended for fault containment and supervised restart (ISSUE 9):
+//! dispatch panics are contained (typed `Backend` error, worker keeps
+//! serving); a `WorkerAbort` crash kills the incarnation and the
+//! supervisor respawns it — tickets pending across the restart resolve
+//! typed (`WorkerGone`/`SessionLost`), spilled sessions survive the
+//! crash and resume byte-identically, and a handle dropped on a
+//! genuinely dead worker counts exactly one failed close per head.
 
-use std::time::Duration;
+use std::sync::atomic::{AtomicUsize, Ordering as AtomicOrdering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
-use camformer::coordinator::backend::{AttendItem, AttentionBackend, FunctionalBackend};
+use camformer::coordinator::backend::{
+    AttendItem, AttentionBackend, ChaosBackend, Fault, FaultPlan, FunctionalBackend,
+};
 use camformer::coordinator::kv_store::KvStore;
 use camformer::coordinator::server::{CamformerServer, Request, ServerConfig};
 use camformer::coordinator::{ReclaimPolicy, ServeError};
@@ -185,6 +197,43 @@ fn wait_timeout_expires_then_the_recovered_ticket_still_resolves() {
     server.shutdown();
 }
 
+/// `wait_deadline` is the absolute-time counterpart to `wait_timeout`,
+/// with the same expiry contract: past the deadline the ticket comes
+/// back, still live, and can be waited again.
+#[test]
+fn wait_deadline_expires_then_the_recovered_ticket_still_resolves() {
+    let capacity = 32usize;
+    let cfg = ServerConfig { kv_capacity: capacity, ..Default::default() };
+    let server = CamformerServer::start(cfg, move |_| SlowBackend {
+        inner: FunctionalBackend::new(capacity, 64),
+        delay: Duration::from_millis(300),
+    });
+    let mut rng = Rng::new(9310);
+    let session = server.open(1, rng.normal_vec(8 * 64), rng.normal_vec(8 * 64)).unwrap();
+
+    let ticket = session
+        .decode(rng.normal_vec(64), rng.normal_vec(64), rng.normal_vec(64))
+        .unwrap();
+    // a near-term deadline expires before the 300ms dispatch completes,
+    // handing the ticket back without cancelling the request
+    let ticket = match ticket.wait_deadline(Instant::now() + Duration::from_millis(1)) {
+        Err(t) => t,
+        Ok(r) => panic!("resolved before the deadline: {:?}", r.result),
+    };
+    // a deadline that already passed expires immediately (saturating:
+    // it must not panic or block)
+    let ticket = match ticket.wait_deadline(Instant::now()) {
+        Err(t) => t,
+        Ok(r) => panic!("resolved on an already-expired deadline: {:?}", r.result),
+    };
+    // the recovered ticket still resolves to the (slow) response
+    let r = ticket.wait_deadline(Instant::now() + Duration::from_secs(10)).expect("must resolve");
+    assert!(r.is_ok(), "{:?}", r.result);
+    assert_eq!(r.seq_len(), 9);
+    session.close().unwrap();
+    server.shutdown();
+}
+
 #[test]
 fn dropped_tickets_leak_nothing_and_never_wedge_the_worker() {
     let capacity = 64usize;
@@ -212,12 +261,13 @@ fn dropped_tickets_leak_nothing_and_never_wedge_the_worker() {
     assert_eq!(m.errors, 0);
 }
 
-/// Backend that kills its worker thread on the first dispatch.
+/// Backend whose every dispatch panics (with an ordinary payload — NOT
+/// a `WorkerAbort` — so containment must absorb it).
 struct PanickingBackend;
 
 impl AttentionBackend for PanickingBackend {
     fn attend(&mut self, _q: &[f32], _k: &[f32], _v: &[f32]) -> anyhow::Result<Vec<f32>> {
-        panic!("injected worker death (session_api test)")
+        panic!("injected dispatch panic (session_api test)")
     }
 
     fn name(&self) -> &'static str {
@@ -225,22 +275,227 @@ impl AttentionBackend for PanickingBackend {
     }
 }
 
+/// ISSUE 9: a panicking dispatch used to take the whole worker thread
+/// down (the pending ticket resolved `WorkerGone` through its dropped
+/// slot, and every later request hit a dead queue). Containment now
+/// absorbs it: the ticket resolves with a typed `Backend` error, the
+/// panic is counted, and the worker keeps serving.
 #[test]
-fn worker_death_propagates_worker_gone_into_the_pending_ticket() {
+fn dispatch_panic_is_contained_and_the_worker_keeps_serving() {
     let cfg = ServerConfig { kv_capacity: 16, ..Default::default() };
     let server = CamformerServer::start(cfg, |_| PanickingBackend);
     let mut rng = Rng::new(9500);
     // prefill is a barrier (no dispatch), so open succeeds even here
     let session = server.open(0, rng.normal_vec(4 * 64), rng.normal_vec(4 * 64)).unwrap();
     let ticket = session.attend(rng.normal_vec(64)).unwrap();
-    // the dispatch panics the worker; the pending ticket's completion
-    // slot drops with it and wait() synthesizes the typed error instead
-    // of hanging forever
     let r = ticket.wait();
-    assert_eq!(r.result, Err(ServeError::WorkerGone { worker: 0 }));
-    // handle drop fires closes at a dead worker: must not panic or hang
+    match &r.result {
+        Err(ServeError::Backend(msg)) => {
+            assert!(msg.contains("panic"), "containment must surface the payload: {msg}")
+        }
+        other => panic!("expected a contained-panic Backend error, got {other:?}"),
+    }
+    // the worker survived: the session is intact and teardown confirms
+    session.close().expect("worker must still be serving after a contained panic");
+    let (m, _) = server.shutdown();
+    assert_eq!(m.worker_panics, 1, "the contained panic is counted");
+    assert_eq!(m.worker_restarts, 0, "containment is not a restart");
+    assert_eq!(m.sessions_lost, 0, "no state was lost");
+    assert_eq!(m.errors, 1);
+    assert_eq!(m.closes, 1);
+    assert_eq!(m.close_failures, 0);
+}
+
+/// A crash (`Fault::Crash` raises `WorkerAbort`) escapes containment on
+/// purpose and kills the backend incarnation. The supervisor respawns a
+/// fresh backend from the factory onto the same queue: tickets pending
+/// across the restart resolve typed — `WorkerGone` if in flight when
+/// the incarnation died, `SessionLost` if their session's KV died with
+/// it — and never hang; the lost id revives on re-open.
+#[test]
+fn tickets_pending_across_a_supervised_restart_resolve_typed() {
+    let cfg = ServerConfig { kv_capacity: 32, ..Default::default() };
+    // first incarnation crashes on its first dispatch; respawns are clean
+    let builds = Arc::new(AtomicUsize::new(0));
+    let server = {
+        let builds = builds.clone();
+        CamformerServer::start(cfg, move |_| {
+            let plan = if builds.fetch_add(1, AtomicOrdering::SeqCst) == 0 {
+                FaultPlan::at(vec![(1, Fault::Crash)])
+            } else {
+                FaultPlan::none()
+            };
+            ChaosBackend::new(FunctionalBackend::new(32, 64), plan)
+        })
+    };
+    let mut rng = Rng::new(9510);
+    let session = server.open(1, rng.normal_vec(8 * 64), rng.normal_vec(8 * 64)).unwrap();
+    let mut tickets = Vec::new();
+    for _ in 0..6 {
+        tickets.push(
+            session
+                .decode(rng.normal_vec(64), rng.normal_vec(64), rng.normal_vec(64))
+                .unwrap(),
+        );
+    }
+    // every ticket must resolve typed within the deadline — in-flight
+    // ones through their dropped slots, queued ones through the
+    // supervisor's drain or the new incarnation's tombstone
+    let deadline = Instant::now() + Duration::from_secs(10);
+    for t in tickets {
+        let r = match t.wait_deadline(deadline) {
+            Ok(r) => r,
+            Err(_) => panic!("a ticket hung across the supervised restart"),
+        };
+        assert!(
+            matches!(
+                r.result,
+                Err(ServeError::WorkerGone { .. }) | Err(ServeError::SessionLost { session: 1 })
+            ),
+            "expected WorkerGone or SessionLost, got {:?}",
+            r.result
+        );
+    }
+    // the handle's id is tombstoned on the respawned worker
+    let r = session.attend(rng.normal_vec(64)).unwrap().wait();
+    assert_eq!(r.result, Err(ServeError::SessionLost { session: 1 }));
+    drop(session); // fire-and-forget closes acknowledge the loss
+    // re-opening the lost id revives it on the new incarnation
+    let revived = server.open(1, rng.normal_vec(8 * 64), rng.normal_vec(8 * 64)).unwrap();
+    assert!(revived.attend(rng.normal_vec(64)).unwrap().wait().is_ok());
+    revived.close().unwrap();
+    let (m, _) = server.shutdown();
+    assert_eq!(m.worker_restarts, 1, "one supervised respawn");
+    assert_eq!(m.worker_panics, 1, "the crash is a counted panic");
+    assert_eq!(m.sessions_lost, 1, "the resident session died with the incarnation");
+    assert_eq!(m.sessions_recovered, 0, "nothing was spilled, so nothing could recover");
+    assert!(builds.load(AtomicOrdering::SeqCst) >= 2, "the factory rebuilt the backend");
+}
+
+/// ISSUE 9 acceptance: the DRAM spill pool lives in the shard directory,
+/// outside every worker thread — so a session parked there when its
+/// worker crashes survives, promotes byte-identically onto the
+/// respawned incarnation, and counts as recovered. The resident session
+/// dies (`SessionLost`), the spilled one never sees an error.
+#[test]
+fn spilled_session_survives_worker_crash_and_resumes_byte_identically() {
+    let d = 64usize;
+    let capacity = 32usize;
+    let cfg = ServerConfig {
+        kv_capacity: capacity,
+        // two 16-row sessions overflow the pool: opening B demotes A
+        worker_kv_budget: 24,
+        reclaim: ReclaimPolicy::LruSpillToDram { min_idle: Duration::ZERO },
+        ..Default::default()
+    };
+    let quantum = cfg.pad_quantum;
+    let builds = Arc::new(AtomicUsize::new(0));
+    let server = {
+        let builds = builds.clone();
+        CamformerServer::start(cfg, move |_| {
+            let plan = if builds.fetch_add(1, AtomicOrdering::SeqCst) == 0 {
+                FaultPlan::at(vec![(1, Fault::Crash)])
+            } else {
+                FaultPlan::none()
+            };
+            ChaosBackend::new(FunctionalBackend::new(capacity, d), plan)
+        })
+    };
+    let mut rng = Rng::new(9520);
+    let keys = rng.normal_vec(16 * d);
+    let values = rng.normal_vec(16 * d);
+    let mut mirror = KvStore::new(capacity, d, d);
+    mirror.load(&keys, &values).unwrap();
+
+    let ha = server.open(1, keys, values).unwrap();
+    // opening B overflows the 24-row pool: A is demoted into the shard
+    // directory's spill pool — crash-durable storage
+    let hb = server.open(2, rng.normal_vec(16 * d), rng.normal_vec(16 * d)).unwrap();
+    // B's attend is the first dispatch: the incarnation crashes holding
+    // B's (resident) KV, while A's parked copy sits safely in the pool
+    let r = hb.attend(rng.normal_vec(d)).unwrap().wait();
+    assert!(
+        matches!(
+            r.result,
+            Err(ServeError::WorkerGone { .. }) | Err(ServeError::SessionLost { session: 2 })
+        ),
+        "the crashed dispatch answers typed: {:?}",
+        r.result
+    );
+    // A promotes back onto the RESPAWNED worker, byte-identically: the
+    // output must match the functional reference over the pre-crash KV
+    // (packed key bits included — the fused pipeline scores them)
+    let q = rng.normal_vec(d);
+    let r = ha.attend(q.clone()).unwrap().wait();
+    assert!(r.is_ok(), "the spilled session must survive the crash: {:?}", r.result);
+    assert_eq!(r.seq_len(), 16, "restored context length");
+    let rows = mirror.len().div_ceil(quantum) * quantum;
+    let (kp, vp, _) = mirror.padded(rows);
+    let mut reference = FunctionalBackend::new(capacity, d);
+    let want = reference.attend(&q, kp, vp).unwrap();
+    assert_eq!(r.output(), &want[..], "recovered KV must be byte-identical");
+    // B died with the incarnation: typed loss until re-opened
+    let r = hb.attend(rng.normal_vec(d)).unwrap().wait();
+    assert_eq!(r.result, Err(ServeError::SessionLost { session: 2 }));
+    let hb2 = server.open(2, rng.normal_vec(4 * d), rng.normal_vec(4 * d)).unwrap();
+    assert!(hb2.attend(rng.normal_vec(d)).unwrap().wait().is_ok());
+    drop((ha, hb, hb2));
+    let (m, _) = server.shutdown();
+    assert_eq!(m.worker_restarts, 1);
+    assert_eq!(m.sessions_lost, 1, "only the resident session was lost");
+    assert_eq!(m.sessions_recovered, 1, "the spilled session promoted after the crash");
+    assert_eq!(m.evictions, 0, "the spill tier never drops state");
+}
+
+/// A worker is *genuinely* gone only when its supervisor dies — here the
+/// backend factory panics on the post-crash rebuild, so restart itself
+/// fails. Requests answer `WorkerGone` synchronously, and a
+/// `SessionHandle` dropped afterwards counts exactly one failed close
+/// per head without hanging; shutdown still reports the death.
+#[test]
+fn handle_drop_after_genuine_worker_death_counts_one_close_failure() {
+    let cfg = ServerConfig { kv_capacity: 16, ..Default::default() };
+    let builds = Arc::new(AtomicUsize::new(0));
+    let server = {
+        let builds = builds.clone();
+        CamformerServer::start(cfg, move |_| {
+            if builds.fetch_add(1, AtomicOrdering::SeqCst) > 0 {
+                panic!("factory exhausted: no backend for the respawn");
+            }
+            ChaosBackend::new(FunctionalBackend::new(16, 64), FaultPlan::at(vec![(1, Fault::Crash)]))
+        })
+    };
+    let mut rng = Rng::new(9530);
+    let session = server.open(7, rng.normal_vec(4 * 64), rng.normal_vec(4 * 64)).unwrap();
+    // the crash kills the incarnation; the respawn kills the supervisor
+    let r = session.attend(rng.normal_vec(64)).unwrap().wait();
+    assert!(
+        matches!(
+            r.result,
+            Err(ServeError::WorkerGone { .. }) | Err(ServeError::SessionLost { session: 7 })
+        ),
+        "{:?}",
+        r.result
+    );
+    // give the supervisor thread time to die in the factory
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        match session.attend(rng.normal_vec(64)) {
+            Err(ServeError::WorkerGone { .. }) => break,
+            Err(e) => panic!("unexpected submit error: {e:?}"),
+            Ok(t) => {
+                let _ = t.wait_deadline(deadline);
+            }
+        }
+        assert!(Instant::now() < deadline, "worker never became gone");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    // handle drop fires a close at the dead worker: exactly one failed
+    // close (one head), no hang, no panic
     drop(session);
-    server.shutdown();
+    let (m, _) = server.shutdown();
+    assert_eq!(m.close_failures, 1, "the drop-path close failure is counted once");
+    assert!(m.worker_panics >= 1, "the dead supervisor is reported at shutdown");
 }
 
 #[test]

@@ -1,6 +1,6 @@
 #!/usr/bin/env python3
 """BENCH_hotpath.json regression smoke (ISSUE 7, satellite 5; spill
-tier + noise margin in ISSUE 8).
+tier + noise margin in ISSUE 8; chaos-restart recovery keys in ISSUE 9).
 
 Run after `cargo bench --bench coordinator_hotpath` emits
 BENCH_hotpath.json. Two gates:
@@ -46,6 +46,14 @@ EXPECTED_KEYS = [
     "spill_churn_demotions",
     "spill_churn_promotions",
     "spill_churn_dram_bytes",
+    # chaos restart (ISSUE 9): serving priced straight through periodic
+    # worker crashes, plus the recovery counters that prove the
+    # supervisor restarted, sessions were lost typed, and spilled
+    # sessions actually recovered
+    "chaos_restart_8sess_crash_every_16",
+    "chaos_restart_worker_restarts",
+    "chaos_restart_sessions_lost",
+    "chaos_restart_sessions_recovered",
 ]
 
 FUSED = "long_context_fused_incremental_n4096"
