@@ -1,0 +1,192 @@
+//! Bench: trace-driven traffic + energy/latency co-simulation
+//! (ISSUE 10) — generated workloads replayed through a live server with
+//! every dispatch priced through the circuit models. Each scenario
+//! reports the co-simulation quartet — tokens/s, p99 latency, J/token,
+//! average power — and the set is emitted machine-readably to
+//! `BENCH_serving.json` so tools/check_bench.py can gate the energy
+//! accounting (keys present, J/token finite and nonzero, fused cheaper
+//! than dense) across PRs:
+//!
+//!   bert_steady   — the BERT-class serving mix on an uncontended server:
+//!                   the headline throughput/energy operating point;
+//!   vit_bursty    — the ViT-class mix slammed through a queue bounded at
+//!                   4: constant overload sheds, all replayed to
+//!                   completion by the driver's closed retry loop;
+//!   zipf_spill    — the Zipf-hotset mix on a 2-shard server with two
+//!                   resident sessions per worker: the session tail
+//!                   churns through the DRAM spill tier, so the energy
+//!                   total carries a live DRAM share;
+//!   longctx_fused — one session at n ≈ 1024 decoded through the fused
+//!   longctx_dense   FlashCAM kernel vs the dense-mask baseline: the
+//!                   paper's energy claim at serving scale (the dense
+//!                   pipeline contextualizes every row, the fused kernel
+//!                   streams tiles and touches ≤ k survivors).
+
+use std::time::Duration;
+
+use camformer::coordinator::{
+    CamformerServer, FunctionalBackend, Metrics, ReclaimPolicy, ServerConfig,
+};
+use camformer::workload::{generate, EnergyAccountant, Trace, TraceSpec, TrafficDriver};
+
+/// The co-simulation quartet for one scenario.
+struct Row {
+    tokens_per_s: f64,
+    p99_ms: f64,
+    j_per_token: f64,
+    watts: f64,
+}
+
+/// Replay `trace` against `server` at full speed and price the run:
+/// asserts the closed retry loop landed every scheduled token, then
+/// folds the accumulated work counters into joules.
+fn price(label: &str, spec: &TraceSpec, trace: &Trace, server: CamformerServer) -> (Row, Metrics) {
+    let report = TrafficDriver::full_speed().replay(trace, &server).unwrap();
+    assert!(report.completed(), "{label}: {} ops never resolved", report.failed);
+    assert_eq!(report.decoded_tokens, trace.decode_ops() as u64, "{label}: lost tokens");
+    let (mut metrics, window) = server.shutdown();
+    let acct = EnergyAccountant::paper(spec.d_v);
+    acct.attach(&mut metrics);
+    let row = Row {
+        tokens_per_s: report.tokens_per_s(),
+        p99_ms: report.p99_us() / 1e3,
+        j_per_token: metrics.energy_per_token_j(),
+        watts: metrics.watts(window),
+    };
+    assert!(
+        row.j_per_token.is_finite() && row.j_per_token > 0.0,
+        "{label}: energy accounting must price every run ({})",
+        row.j_per_token
+    );
+    println!(
+        "bench serving_{label:<14} {:>9.0} tok/s  p99 {:>8.2} ms  {:>10.3e} J/tok  {:>8.3e} W",
+        row.tokens_per_s, row.p99_ms, row.j_per_token, row.watts
+    );
+    println!("      {label}: {}", metrics.summary(window));
+    (row, metrics)
+}
+
+/// Long-context single-session spec: one session decoding over an
+/// n ≈ 1024 cache — the shape where the fused-vs-dense energy gap is
+/// widest (the bench's ISSUE-7 companion at serving scale).
+fn longctx_spec() -> TraceSpec {
+    TraceSpec {
+        label: "longctx",
+        requests: 256,
+        population: 1,
+        zipf_s: 0.0,
+        rate_per_s: 2000.0,
+        prefill_rows: (960, 960),
+        decode_steps: (64, 64),
+        d_k: 64,
+        d_v: 64,
+    }
+}
+
+fn main() {
+    let mut rows: Vec<(&'static str, Row)> = Vec::new();
+
+    // scenario: BERT-class steady state — provisioned capacity, default
+    // policy, no contention: the clean operating point
+    {
+        let spec = TraceSpec::bert();
+        let trace = generate(&spec, 1);
+        let cap = spec.kv_capacity();
+        let server = CamformerServer::start(
+            ServerConfig { kv_capacity: cap, d_k: spec.d_k, d_v: spec.d_v, ..Default::default() },
+            move |_| FunctionalBackend::new(cap, 64),
+        );
+        let (row, _) = price("bert_steady", &spec, &trace, server);
+        rows.push(("bert_steady", row));
+    }
+
+    // scenario: ViT-class burst through a queue bounded at 4 — the shed
+    // path must stay on the priced hot path (every shed is replayed)
+    {
+        let spec = TraceSpec::vit();
+        let trace = generate(&spec, 2);
+        let cap = spec.kv_capacity();
+        let server = CamformerServer::start(
+            ServerConfig {
+                kv_capacity: cap,
+                max_queue: 4,
+                d_k: spec.d_k,
+                d_v: spec.d_v,
+                ..Default::default()
+            },
+            move |_| FunctionalBackend::new(cap, 64),
+        );
+        let (row, m) = price("vit_bursty", &spec, &trace, server);
+        assert!(m.shed_requests > 0, "full-speed replay must overrun max_queue = 4");
+        rows.push(("vit_bursty", row));
+    }
+
+    // scenario: Zipf hotset on a 2-shard server with a 2-session
+    // resident tier — the spill tier churns, so the DRAM channel model
+    // contributes a live share of the energy total
+    {
+        let spec = TraceSpec::zipf_hotset();
+        let trace = generate(&spec, 3);
+        let cap = spec.kv_capacity();
+        let server = CamformerServer::start(
+            ServerConfig {
+                shards: 2,
+                kv_capacity: cap,
+                max_sessions: 2,
+                reclaim: ReclaimPolicy::LruSpillToDram { min_idle: Duration::ZERO },
+                d_k: spec.d_k,
+                d_v: spec.d_v,
+                ..Default::default()
+            },
+            move |_| FunctionalBackend::new(cap, 64),
+        );
+        let (row, m) = price("zipf_spill", &spec, &trace, server);
+        assert!(m.demotions > 0 && m.promotions > 0, "hotset must churn the spill tier");
+        assert!(m.dram_energy_j > 0.0, "spill churn must charge DRAM energy");
+        rows.push(("zipf_spill", row));
+    }
+
+    // scenario pair: long-context decode, fused FlashCAM kernel vs the
+    // dense-mask baseline over the SAME trace — the serving-scale energy
+    // comparison check_bench.py gates (fused must stay cheaper per token)
+    {
+        let spec = longctx_spec();
+        let trace = generate(&spec, 4);
+        let cap = spec.kv_capacity();
+        let cfg = ServerConfig {
+            kv_capacity: cap,
+            max_sessions: 1,
+            d_k: spec.d_k,
+            d_v: spec.d_v,
+            ..Default::default()
+        };
+        let fused = CamformerServer::start(cfg.clone(), move |_| FunctionalBackend::new(cap, 64));
+        let (row_f, _) = price("longctx_fused", &spec, &trace, fused);
+        let dense = CamformerServer::start(cfg, move |_| FunctionalBackend::new_dense(cap, 64));
+        let (row_d, _) = price("longctx_dense", &spec, &trace, dense);
+        assert!(
+            row_f.j_per_token < row_d.j_per_token,
+            "fused kernel must decode cheaper than the dense baseline \
+             ({:.3e} vs {:.3e} J/token)",
+            row_f.j_per_token,
+            row_d.j_per_token
+        );
+        rows.push(("longctx_fused", row_f));
+        rows.push(("longctx_dense", row_d));
+    }
+
+    // machine-readable co-simulation surface (scenario -> quartet),
+    // gated by tools/check_bench.py across PRs
+    let mut json = String::from("{\n");
+    for (i, (name, r)) in rows.iter().enumerate() {
+        let sep = if i + 1 < rows.len() { "," } else { "" };
+        json.push_str(&format!(
+            "  \"{name}\": {{\"tokens_per_s\": {:.1}, \"p99_ms\": {:.3}, \
+             \"j_per_token\": {:.6e}, \"watts\": {:.6e}}}{sep}\n",
+            r.tokens_per_s, r.p99_ms, r.j_per_token, r.watts
+        ));
+    }
+    json.push_str("}\n");
+    std::fs::write("BENCH_serving.json", &json).expect("write BENCH_serving.json");
+    println!("      wrote BENCH_serving.json ({} scenarios)", rows.len());
+}

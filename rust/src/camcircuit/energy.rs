@@ -48,6 +48,13 @@ impl EnergyModel {
         self.e_write_cell * (self.cam_h * self.cam_w) as f64
     }
 
+    /// Energy to program one key row \[J\] — the incremental-append unit
+    /// the serving layer pays per admitted KV row (a decode packs exactly
+    /// one row; a prefill of n rows packs n).
+    pub fn program_row(&self) -> f64 {
+        self.e_write_cell * self.cam_w as f64
+    }
+
     /// Energy for one search (query broadcast over the whole tile) \[J\]:
     /// every cap precharges, every column broadcasts, every row converts
     /// through the shared ADC (CAM_H sequential conversions).
@@ -94,6 +101,15 @@ impl EnergyModel {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn program_row_is_tile_share() {
+        // cam_h rows per tile, so one row costs exactly 1/cam_h of a
+        // full tile program
+        let e = EnergyModel::new(16, 64);
+        assert!((e.program_row() * 16.0 - e.program_tile()).abs() < 1e-18);
+        assert!(e.program_row() > 0.0);
+    }
 
     #[test]
     fn per_op_monotonically_decreasing_in_m() {

@@ -13,6 +13,7 @@ use camformer::coordinator::{ServeError, Ticket};
 use camformer::runtime::executable::{default_artifacts_dir, Engine};
 use camformer::util::cli::Args;
 use camformer::util::rng::Rng;
+use camformer::workload::{generate, EnergyAccountant, TraceSpec, TrafficDriver};
 
 fn artifacts_dir(args: &Args) -> PathBuf {
     args.get("artifacts")
@@ -34,6 +35,11 @@ fn artifacts_dir(args: &Args) -> PathBuf {
 /// standing per-worker queue — submissions shed past it answer with the
 /// retryable `Overloaded`, which this driver replays until admission.
 pub fn serve(args: &Args) -> Result<()> {
+    // ISSUE 10: `--trace bert|vit|zipf` switches from the synthetic
+    // fixed-shape workload to the seeded trace-driven co-simulation
+    if let Some(kind) = args.get("trace") {
+        return serve_trace(kind, args);
+    }
     let heads = args.get_usize("heads", 4);
     let sessions = args.get_usize("sessions", 4);
     let steps = args.get_usize("steps", 32);
@@ -174,6 +180,90 @@ pub fn serve(args: &Args) -> Result<()> {
     let (metrics, window) = server.shutdown();
     println!("golden-checked {checked} sessions against the functional model: OK");
     println!("{}", metrics.summary(window));
+    Ok(())
+}
+
+/// Trace-driven traffic + energy co-simulation (ISSUE 10): generate a
+/// seeded workload trace (`--trace bert|vit|zipf`, `--seed N`), replay
+/// it against a live server through the session-handle API — full speed
+/// by default, `--speedup X` paces arrivals at X× the trace timeline —
+/// and price the accumulated work through the circuit models. The
+/// default configuration (4 resident sessions under the DRAM spill
+/// tier) keeps the reclaim path live; `--reclaim deny` needs
+/// `--max-sessions` at least the trace population to admit every open.
+fn serve_trace(kind: &str, args: &Args) -> Result<()> {
+    let seed = args.get_u64("seed", 42);
+    let speedup = args.get_f64("speedup", f64::INFINITY);
+    let shards = args.get_usize("shards", 2);
+    let reclaim_kind = args.get_or("reclaim", "spill");
+    let spec = match kind {
+        "bert" => TraceSpec::bert(),
+        "vit" => TraceSpec::vit(),
+        "zipf" => TraceSpec::zipf_hotset(),
+        other => anyhow::bail!("unknown trace {other:?} (bert|vit|zipf)"),
+    };
+    let max_sessions = args.get_usize("max-sessions", 4);
+    let reclaim = match reclaim_kind {
+        "deny" => ReclaimPolicy::Deny,
+        "lru" => ReclaimPolicy::LruEvictIdle { min_idle: Duration::ZERO },
+        "spill" => ReclaimPolicy::LruSpillToDram { min_idle: Duration::ZERO },
+        other => anyhow::bail!("unknown reclaim policy {other:?} (deny|lru|spill)"),
+    };
+    let trace = generate(&spec, seed);
+    let cap = spec.kv_capacity();
+    println!(
+        "camformer serve --trace {kind}: {} ops ({} decodes) over {} sessions, \
+         seed={seed}, shards={shards}, max-sessions={max_sessions}, reclaim={reclaim_kind}",
+        trace.ops.len(),
+        trace.decode_ops(),
+        spec.population,
+    );
+
+    let server = CamformerServer::start(
+        ServerConfig {
+            shards,
+            kv_capacity: cap,
+            max_sessions,
+            reclaim,
+            d_k: spec.d_k,
+            d_v: spec.d_v,
+            ..Default::default()
+        },
+        move |_| FunctionalBackend::new(cap, 64),
+    );
+    let driver = if speedup.is_finite() {
+        TrafficDriver::paced(speedup)
+    } else {
+        TrafficDriver::full_speed()
+    };
+    let report = driver.replay(&trace, &server)?;
+    let (mut metrics, window) = server.shutdown();
+    EnergyAccountant::paper(spec.d_v).attach(&mut metrics);
+
+    println!(
+        "  replay: {} tokens in {:.1} ms ({:.0} tok/s), opens={} reopens={} \
+         shed_replays={} closes={}",
+        report.decoded_tokens,
+        report.wall.as_secs_f64() * 1e3,
+        report.tokens_per_s(),
+        report.opens,
+        report.reopens,
+        report.shed_replays,
+        report.closes,
+    );
+    println!(
+        "  latency (scheduled arrival -> completion): mean={:.1}us p50={:.1}us p99={:.1}us",
+        report.mean_us(),
+        report.p50_us(),
+        report.p99_us(),
+    );
+    println!("  {}", metrics.summary(window));
+    anyhow::ensure!(
+        report.completed(),
+        "{} of {} ops never resolved",
+        report.failed,
+        trace.ops.len()
+    );
     Ok(())
 }
 

@@ -176,6 +176,27 @@ impl WorkStats {
         self.tiles_streamed += other.tiles_streamed;
         self.survivor_corrections += other.survivor_corrections;
     }
+
+    /// Field-wise difference against an earlier snapshot of the same
+    /// monotonically-growing counters — the per-dispatch ledger unit the
+    /// workload energy accountant prices (ISSUE 10): snapshot before a
+    /// dispatch, subtract after, and the deltas sum back to the totals
+    /// exactly. Panics in debug builds if `earlier` is not actually
+    /// earlier.
+    pub fn delta_since(&self, earlier: &WorkStats) -> WorkStats {
+        debug_assert!(
+            self.attends >= earlier.attends && self.tiles_streamed >= earlier.tiles_streamed,
+            "delta_since wants an earlier snapshot of the same counters"
+        );
+        WorkStats {
+            attends: self.attends - earlier.attends,
+            v_rows_touched: self.v_rows_touched - earlier.v_rows_touched,
+            fallback_rows_packed: self.fallback_rows_packed - earlier.fallback_rows_packed,
+            words_scored: self.words_scored - earlier.words_scored,
+            tiles_streamed: self.tiles_streamed - earlier.tiles_streamed,
+            survivor_corrections: self.survivor_corrections - earlier.survivor_corrections,
+        }
+    }
 }
 
 /// Which functional pipeline serves a query — all three are bit-identical
@@ -870,6 +891,25 @@ mod tests {
         assert_eq!(dense.work.tiles_streamed, 0);
         assert_eq!(fused.work_stats(), Some(fused.work));
         assert_eq!(fused.attend(&qs[0], &k, &v).unwrap(), dense.attend(&qs[0], &k, &v).unwrap());
+    }
+
+    #[test]
+    fn work_stats_delta_reconciles_per_dispatch() {
+        // the energy ledger's contract: snapshot before each dispatch,
+        // delta after — the deltas must sum back to the totals exactly
+        let mut rng = Rng::new(311);
+        let k = rng.normal_vec(64 * 64);
+        let v = rng.normal_vec(64 * 64);
+        let mut f = FunctionalBackend::new(64, 64);
+        let mut ledger = WorkStats::default();
+        for _ in 0..4 {
+            let before = f.work;
+            let q = rng.normal_vec(64);
+            f.attend(&q, &k, &v).unwrap();
+            ledger.add(&f.work.delta_since(&before));
+        }
+        assert_eq!(ledger, f.work, "summed deltas must equal the folded totals");
+        assert_eq!(f.work.delta_since(&f.work), WorkStats::default());
     }
 
     #[test]

@@ -5,6 +5,58 @@ use std::time::Duration;
 use super::backend::WorkStats;
 use crate::util::stats;
 
+/// Accounted per-stage serving energy \[J\] (ISSUE 10): the output of the
+/// workload layer's `EnergyAccountant`, attached to a [`Metrics`] after
+/// shutdown so summaries report J/token, watts and the per-stage split
+/// alongside the latency percentiles. Pure data — every field is a joule
+/// total for one pipeline stage, and the struct is exactly additive
+/// (merging two metrics sums their stages), which is what the energy
+/// additivity property test pins.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct EnergyStages {
+    /// BA-CAM search: tile precharge + broadcast + ADC, per tile streamed.
+    pub search_j: f64,
+    /// CAM programming: one key-row write per KV row admitted/packed.
+    pub program_j: f64,
+    /// Survivor selection: top-k sorter passes + streaming corrections.
+    pub selection_j: f64,
+    /// Softmax normalisation of the survivor scores, per query.
+    pub softmax_j: f64,
+    /// Contextualization: BF16 MACs + V-SRAM + DMA per survivor V row.
+    pub context_j: f64,
+    /// Host-DRAM spill traffic, as charged by the channel model.
+    pub dram_j: f64,
+}
+
+impl EnergyStages {
+    /// Total accounted energy \[J\].
+    pub fn total_j(&self) -> f64 {
+        self.search_j + self.program_j + self.selection_j + self.softmax_j + self.context_j
+            + self.dram_j
+    }
+
+    /// Field-wise accumulate (metrics merging).
+    pub fn add(&mut self, other: &EnergyStages) {
+        self.search_j += other.search_j;
+        self.program_j += other.program_j;
+        self.selection_j += other.selection_j;
+        self.softmax_j += other.softmax_j;
+        self.context_j += other.context_j;
+        self.dram_j += other.dram_j;
+    }
+
+    /// DRAM's share of the total, in \[0, 1\] (0.0 when nothing was
+    /// accounted).
+    pub fn dram_share(&self) -> f64 {
+        let total = self.total_j();
+        if total > 0.0 {
+            self.dram_j / total
+        } else {
+            0.0
+        }
+    }
+}
+
 /// Rolling metrics for one server (or one worker).
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
@@ -77,6 +129,9 @@ pub struct Metrics {
     pub worker_restarts: u64,
     pub sessions_lost: u64,
     pub sessions_recovered: u64,
+    /// Accounted serving energy (ISSUE 10), attached by the workload
+    /// layer's `EnergyAccountant` after shutdown — `None` until priced.
+    pub energy: Option<EnergyStages>,
 }
 
 impl Metrics {
@@ -147,6 +202,46 @@ impl Metrics {
         // high-water marks are per-worker peaks, not additive flows
         self.queue_depth_max = self.queue_depth_max.max(other.queue_depth_max);
         self.kv_rows_hwm = self.kv_rows_hwm.max(other.kv_rows_hwm);
+        // accounted energy is a flow: stage-wise summed when both sides
+        // were priced, carried over when only one was
+        match (&mut self.energy, &other.energy) {
+            (Some(mine), Some(theirs)) => mine.add(theirs),
+            (mine @ None, Some(theirs)) => *mine = Some(*theirs),
+            (_, None) => {}
+        }
+    }
+
+    /// Attach the accounted per-stage energy (the workload layer's
+    /// `EnergyAccountant` output) so summaries report J/token and watts.
+    pub fn attach_energy(&mut self, stages: EnergyStages) {
+        self.energy = Some(stages);
+    }
+
+    /// Accounted energy per decoded token \[J\]; 0.0 until energy is
+    /// attached or before the first decode.
+    pub fn energy_per_token_j(&self) -> f64 {
+        match (&self.energy, self.decodes) {
+            (Some(e), d) if d > 0 => e.total_j() / d as f64,
+            _ => 0.0,
+        }
+    }
+
+    /// Mean accounted power over a measured window \[W\]; 0.0 until
+    /// energy is attached.
+    pub fn watts(&self, window: Duration) -> f64 {
+        match &self.energy {
+            Some(e) if window > Duration::ZERO => e.total_j() / window.as_secs_f64(),
+            _ => 0.0,
+        }
+    }
+
+    /// Decoded tokens per accounted joule \[1/J\] — throughput/W in its
+    /// window-free form (tokens/s ÷ W); 0.0 until energy is attached.
+    pub fn tokens_per_joule(&self) -> f64 {
+        match &self.energy {
+            Some(e) if e.total_j() > 0.0 => self.decodes as f64 / e.total_j(),
+            _ => 0.0,
+        }
     }
 
     /// Record one modeled promotion latency (spill tier → accelerator).
@@ -154,14 +249,22 @@ impl Metrics {
         self.promotion_ns.push(ns);
     }
 
+    /// Any percentile of the modeled promotion latencies \[ns\]; 0.0
+    /// before any promotion. The promotion-side twin of
+    /// [`Metrics::latency_percentile_us`] — both distributions go through
+    /// the same `stats::percentile` plumbing.
+    pub fn promotion_percentile_ns(&self, p: f64) -> f64 {
+        stats::percentile(&self.promotion_ns, p)
+    }
+
     /// Median modeled promotion latency \[ns\]; 0.0 before any promotion.
     pub fn promotion_p50_ns(&self) -> f64 {
-        stats::percentile(&self.promotion_ns, 50.0)
+        self.promotion_percentile_ns(50.0)
     }
 
     /// Tail modeled promotion latency \[ns\].
     pub fn promotion_p99_ns(&self) -> f64 {
-        stats::percentile(&self.promotion_ns, 99.0)
+        self.promotion_percentile_ns(99.0)
     }
 
     /// Record the budget occupancy after a successful admission; keeps
@@ -176,31 +279,44 @@ impl Metrics {
         stats::mean(&self.latencies_us)
     }
 
+    /// Any percentile of the request latency distribution \[µs\] — the
+    /// single helper every named latency accessor goes through (the
+    /// promotion percentiles share the same plumbing via
+    /// [`Metrics::promotion_percentile_ns`]).
+    pub fn latency_percentile_us(&self, p: f64) -> f64 {
+        stats::percentile(&self.latencies_us, p)
+    }
+
+    /// [`Metrics::latency_percentile_us`] as a `Duration`.
+    pub fn latency_percentile(&self, p: f64) -> Duration {
+        Duration::from_secs_f64(self.latency_percentile_us(p) / 1e6)
+    }
+
     pub fn p50_us(&self) -> f64 {
-        stats::percentile(&self.latencies_us, 50.0)
+        self.latency_percentile_us(50.0)
     }
 
     pub fn p95_us(&self) -> f64 {
-        stats::percentile(&self.latencies_us, 95.0)
+        self.latency_percentile_us(95.0)
     }
 
     pub fn p99_us(&self) -> f64 {
-        stats::percentile(&self.latencies_us, 99.0)
+        self.latency_percentile_us(99.0)
     }
 
     /// Median latency as a `Duration`.
     pub fn p50(&self) -> Duration {
-        Duration::from_secs_f64(self.p50_us() / 1e6)
+        self.latency_percentile(50.0)
     }
 
     /// 95th-percentile latency as a `Duration`.
     pub fn p95(&self) -> Duration {
-        Duration::from_secs_f64(self.p95_us() / 1e6)
+        self.latency_percentile(95.0)
     }
 
     /// Tail latency as a `Duration`.
     pub fn p99(&self) -> Duration {
-        Duration::from_secs_f64(self.p99_us() / 1e6)
+        self.latency_percentile(99.0)
     }
 
     /// Throughput over a measured wall-clock window.
@@ -209,7 +325,7 @@ impl Metrics {
     }
 
     pub fn summary(&self, window: Duration) -> String {
-        format!(
+        let mut s = format!(
             "completed={} (prefill={} decode={} attend={} close={}) evictions={} demotions={} \
              promotions={} spilled_rows={} dram_rd={} dram_wr={} promo_p50={:.0}ns batches={} \
              occupancy={:.2}x (max {}) queue_max={} shed={} kv_admitted={} kv_hwm={} errors={} \
@@ -246,7 +362,17 @@ impl Metrics {
             self.p50_us(),
             self.p95_us(),
             self.p99_us()
-        )
+        );
+        if let Some(e) = &self.energy {
+            s.push_str(&format!(
+                " energy_total={:.3e}J j_per_token={:.3e} watts={:.3} dram_share={:.1}%",
+                e.total_j(),
+                self.energy_per_token_j(),
+                self.watts(window),
+                e.dram_share() * 100.0
+            ));
+        }
+        s
     }
 }
 
@@ -458,6 +584,79 @@ mod tests {
             assert!(d > Duration::ZERO);
         }
         assert!(m.p50() <= m.p95() && m.p95() <= m.p99());
+    }
+
+    #[test]
+    fn percentile_helpers_agree_with_named_accessors() {
+        // the deduplicated plumbing: every named accessor is the generic
+        // helper at a fixed p, for latencies and promotions alike
+        let mut m = Metrics::new();
+        for i in 1..=100 {
+            m.record(Duration::from_micros(i));
+            m.note_promotion_latency_ns(i as f64 * 10.0);
+        }
+        assert_eq!(m.p50_us(), m.latency_percentile_us(50.0));
+        assert_eq!(m.p95_us(), m.latency_percentile_us(95.0));
+        assert_eq!(m.p99_us(), m.latency_percentile_us(99.0));
+        assert_eq!(m.p95(), m.latency_percentile(95.0));
+        assert_eq!(m.promotion_p50_ns(), m.promotion_percentile_ns(50.0));
+        assert_eq!(m.promotion_p99_ns(), m.promotion_percentile_ns(99.0));
+    }
+
+    #[test]
+    fn energy_stages_total_and_add() {
+        let mut a = EnergyStages {
+            search_j: 1.0,
+            program_j: 2.0,
+            selection_j: 3.0,
+            softmax_j: 4.0,
+            context_j: 5.0,
+            dram_j: 5.0,
+        };
+        assert!((a.total_j() - 20.0).abs() < 1e-12);
+        assert!((a.dram_share() - 0.25).abs() < 1e-12);
+        let twin = a;
+        a.add(&twin);
+        assert!((a.total_j() - 40.0).abs() < 1e-12);
+        assert_eq!(EnergyStages::default().total_j(), 0.0);
+        assert_eq!(EnergyStages::default().dram_share(), 0.0);
+    }
+
+    #[test]
+    fn attached_energy_surfaces_in_summary_and_accessors() {
+        let mut m = Metrics::new();
+        m.decodes = 10;
+        // unpriced metrics report zero energy and no energy line
+        assert_eq!(m.energy_per_token_j(), 0.0);
+        assert_eq!(m.tokens_per_joule(), 0.0);
+        assert!(!m.summary(Duration::from_secs(1)).contains("j_per_token"));
+        m.attach_energy(EnergyStages { search_j: 3.0, dram_j: 1.0, ..Default::default() });
+        assert!((m.energy_per_token_j() - 0.4).abs() < 1e-12);
+        assert!((m.watts(Duration::from_secs(2)) - 2.0).abs() < 1e-12);
+        assert!((m.tokens_per_joule() - 2.5).abs() < 1e-12);
+        let s = m.summary(Duration::from_secs(2));
+        assert!(s.contains("j_per_token=4.000e-1"), "{s}");
+        assert!(s.contains("watts=2.000"), "{s}");
+        assert!(s.contains("dram_share=25.0%"), "{s}");
+    }
+
+    #[test]
+    fn merge_sums_attached_energy() {
+        let mut a = Metrics::new();
+        let mut b = Metrics::new();
+        b.attach_energy(EnergyStages { context_j: 2.0, ..Default::default() });
+        // None + Some carries the priced side over
+        a.merge(&b);
+        assert!((a.energy.unwrap().total_j() - 2.0).abs() < 1e-12);
+        // Some + Some sums stage-wise
+        a.attach_energy(EnergyStages { context_j: 2.0, dram_j: 1.0, ..Default::default() });
+        a.merge(&b);
+        let e = a.energy.unwrap();
+        assert!((e.context_j - 4.0).abs() < 1e-12);
+        assert!((e.dram_j - 1.0).abs() < 1e-12);
+        // Some + None is unchanged
+        a.merge(&Metrics::new());
+        assert!((a.energy.unwrap().context_j - 4.0).abs() < 1e-12);
     }
 
     #[test]

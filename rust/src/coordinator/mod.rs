@@ -91,7 +91,10 @@
 //!   amortised per backend dispatch), scheduler gauges (shed requests,
 //!   queue-depth high-water mark, KV rows admitted against the shared
 //!   budget and the pool's peak residency), latency percentiles
-//!   (p50/p95/p99) and throughput for the examples and benches.
+//!   (p50/p95/p99) and throughput for the examples and benches; an
+//!   attached [`EnergyStages`] breakdown (priced by the layer-4
+//!   `workload::EnergyAccountant` from the same counters) surfaces
+//!   J/token, watts and the DRAM energy share in `Metrics::summary`.
 //!
 //! # Serving API
 //!
@@ -173,7 +176,7 @@ pub use client::{SessionHandle, Ticket};
 pub use directory::{PendingAction, Reclaimed, ShardDirectory};
 pub use error::ServeError;
 pub use kv_store::{KvStore, SpilledKv};
-pub use metrics::Metrics;
+pub use metrics::{EnergyStages, Metrics};
 pub use server::{
     CamformerServer, Envelope, Output, ReclaimPolicy, Request, Response, ServerConfig,
 };

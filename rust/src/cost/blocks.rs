@@ -127,6 +127,18 @@ pub fn control() -> BlockCost {
     }
 }
 
+/// Energy to contextualize one survivor V row of width `d_v` \[J\]: the
+/// weighted-sum stage walks `d_v` BF16 MACs, touches `2 * d_v` V-SRAM
+/// bytes (prefetch write + MAC read), and occupies the DMA/MC for one
+/// V-row transfer. This is the per-`v_rows_touched` unit the serving
+/// energy accountant charges (ISSUE 10); the paper-shape constant
+/// (d_v = 64) lands at ~1.46 nJ/row.
+pub fn context_row_energy_j(d_v: usize) -> f64 {
+    d_v as f64 * bf16_mac().energy_per_op
+        + (2 * d_v) as f64 * value_sram().energy_per_op
+        + dma_mc().energy_per_op
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -148,6 +160,17 @@ mod tests {
         ] {
             assert!(b.area_mm2 >= 0.0 && b.energy_per_op >= 0.0 && b.static_w >= 0.0);
         }
+    }
+
+    #[test]
+    fn context_row_energy_matches_components() {
+        // d_v = 64: 64 MACs + 128 SRAM bytes + one DMA V-row op
+        let want = 64.0 * 14e-12 + 128.0 * 4.2e-12 + 25e-12;
+        assert!((context_row_energy_j(64) - want).abs() < 1e-18);
+        // ~1.46 nJ/row at the paper shape
+        assert!((context_row_energy_j(64) - 1.4586e-9).abs() < 1e-12);
+        // linear-ish in d_v: doubling the width roughly doubles the cost
+        assert!(context_row_energy_j(128) > 1.9 * context_row_energy_j(64) - 25e-12);
     }
 
     #[test]

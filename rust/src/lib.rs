@@ -9,3 +9,4 @@ pub mod baselines;
 pub mod accuracy;
 pub mod coordinator;
 pub mod runtime;
+pub mod workload;

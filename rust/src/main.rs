@@ -36,7 +36,10 @@ Serving / demo:
            open (shard-wide prefill fan-out) + ticketed live KV-append
            decode steps per session handle, explicit close
            [--sessions N] [--steps N] [--prefill ROWS] [--heads H]
-           [--backend functional|arch|pjrt] [--reclaim deny|lru]
+           [--backend functional|arch|pjrt] [--reclaim deny|lru|spill]
+           --trace bert|vit|zipf replays a seeded workload trace instead
+           and prices it through the circuit models (J/token, watts):
+           [--seed N] [--speedup X] [--shards N] [--max-sessions N]
   quickstart  one query end-to-end through every layer (needs artifacts)
 
 Common options:

@@ -1,0 +1,637 @@
+//! Trace replay: drive a live [`CamformerServer`] through the
+//! session-handle API from a generated [`Trace`].
+//!
+//! The driver is **open-loop with a closed retry loop**: arrivals follow
+//! the trace's schedule (scaled by [`DriverConfig::speedup`], or
+//! replayed as fast as the server admits them when the speedup is
+//! infinite), but every retryable refusal is driven to completion — an
+//! [`ServeError::Overloaded`] shed drains one in-flight ticket and
+//! resubmits, a lost/evicted session is re-opened from its recorded
+//! prefill recipe and the decode replayed — so a finished replay
+//! accounts for every scheduled token, either as a completed decode or
+//! an explicitly-counted failure.
+//!
+//! Latency is measured end-to-end per decode: the time from the op's
+//! *scheduled* arrival to its response, i.e. admission delay (sheds,
+//! backoff, re-opens) plus the server's own enqueue-to-completion
+//! latency. Under an infinite speedup there is no schedule to be late
+//! against, so the admission-delay term is zero and the number reduces
+//! to the server-side latency.
+//!
+//! Determinism: every payload (prefill K/V, decode query/key/value) is
+//! regenerated from `trace.seed` and the op's index — no payload state
+//! is carried between runs, so the same trace replays bit-identical
+//! request contents every time, and a re-opened session re-prefills
+//! exactly the rows the original `Open` admitted.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::client::{SessionHandle, Ticket};
+use crate::coordinator::error::ServeError;
+use crate::coordinator::server::{CamformerServer, ReclaimPolicy, Response};
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+use super::trace::{Trace, TraceOp};
+
+/// Payload-stream tags: which kind of op an index-derived [`Rng`] feeds.
+const TAG_PREFILL: u64 = 1;
+const TAG_DECODE: u64 = 2;
+
+/// Pause between retryable resubmissions with nothing local to drain:
+/// long enough for the target worker to pop a few envelopes, short
+/// enough to be invisible next to a dispatch.
+const RETRY_BACKOFF: Duration = Duration::from_micros(100);
+
+/// Replay knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct DriverConfig {
+    /// Trace-time compression: a scheduled gap of `t` µs is slept as
+    /// `t / speedup`. `f64::INFINITY` (the default) disables pacing and
+    /// replays as fast as the server admits — the right mode for
+    /// benches, where throughput is the measurement.
+    pub speedup: f64,
+    /// Per-op bound on retryable resubmissions (sheds + re-opens)
+    /// before the op is counted as failed.
+    pub max_retries: usize,
+}
+
+impl Default for DriverConfig {
+    fn default() -> Self {
+        DriverConfig { speedup: f64::INFINITY, max_retries: 64 }
+    }
+}
+
+/// What one replay did: per-decode latencies and the retry-loop ledger.
+#[derive(Clone, Debug, Default)]
+pub struct DriverReport {
+    /// End-to-end latency of every completed decode \[µs\], in
+    /// completion order (scheduled arrival → response).
+    pub latencies_us: Vec<f64>,
+    /// Decodes that completed with an `Ok` response.
+    pub decoded_tokens: u64,
+    /// Sessions opened (including re-opens after loss/eviction).
+    pub opens: u64,
+    /// Sessions closed (handle teardown at trace `Close` ops and at
+    /// replay end).
+    pub closes: u64,
+    /// Submissions refused or failed retryably ([`ServeError::Overloaded`],
+    /// [`ServeError::Backend`]) and replayed.
+    pub shed_replays: u64,
+    /// Sessions re-opened from their prefill recipe after
+    /// `SessionLost`/`Evicted`/`UnknownSession`.
+    pub reopens: u64,
+    /// Ops abandoned after [`DriverConfig::max_retries`] or a terminal
+    /// error (e.g. [`ServeError::WorkerGone`]).
+    pub failed: u64,
+    /// Wall-clock duration of the whole replay.
+    pub wall: Duration,
+}
+
+impl DriverReport {
+    /// Median end-to-end decode latency \[µs\].
+    pub fn p50_us(&self) -> f64 {
+        stats::percentile(&self.latencies_us, 50.0)
+    }
+
+    /// Tail end-to-end decode latency \[µs\].
+    pub fn p99_us(&self) -> f64 {
+        stats::percentile(&self.latencies_us, 99.0)
+    }
+
+    /// Mean end-to-end decode latency \[µs\].
+    pub fn mean_us(&self) -> f64 {
+        stats::mean(&self.latencies_us)
+    }
+
+    /// Decode throughput over the replay wall clock \[tokens/s\].
+    pub fn tokens_per_s(&self) -> f64 {
+        let secs = self.wall.as_secs_f64();
+        if secs > 0.0 {
+            self.decoded_tokens as f64 / secs
+        } else {
+            0.0
+        }
+    }
+
+    /// Whether every scheduled op resolved (nothing failed).
+    pub fn completed(&self) -> bool {
+        self.failed == 0
+    }
+}
+
+/// One submitted decode whose ticket has not resolved yet.
+struct PendingOp {
+    /// Index of the trace op (the payload-regeneration key).
+    op_idx: u64,
+    session: u64,
+    /// Admission delay already accrued \[µs\] (scheduled arrival →
+    /// successful submission; 0 when unpaced).
+    admit_delay_us: f64,
+    retries: usize,
+    ticket: Ticket,
+}
+
+/// Replays a [`Trace`] against a live server. Construct with the replay
+/// knobs, then [`TrafficDriver::replay`] per trace.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TrafficDriver {
+    cfg: DriverConfig,
+}
+
+impl TrafficDriver {
+    pub fn new(cfg: DriverConfig) -> Self {
+        TrafficDriver { cfg }
+    }
+
+    /// Full-speed driver (no pacing): the bench/throughput mode.
+    pub fn full_speed() -> Self {
+        TrafficDriver::new(DriverConfig::default())
+    }
+
+    /// Paced driver: trace time compressed by `speedup`.
+    pub fn paced(speedup: f64) -> Self {
+        assert!(speedup > 0.0, "speedup must be positive");
+        TrafficDriver::new(DriverConfig { speedup, ..DriverConfig::default() })
+    }
+
+    /// Replay the trace. Returns the report, or the first *terminal*
+    /// `open` error that aborts the replay outright (a server whose
+    /// admission refuses non-retryably — e.g. a dimension mismatch
+    /// between trace and server config — is a harness bug, not traffic).
+    pub fn replay(
+        &self,
+        trace: &Trace,
+        server: &CamformerServer,
+    ) -> Result<DriverReport, ServeError> {
+        let policy = server.config().reclaim;
+        let mut report = DriverReport::default();
+        let mut handles: HashMap<u64, SessionHandle<'_>> = HashMap::new();
+        // session -> (open op index, prefill rows): enough to regenerate
+        // the exact prefill payload for re-opens
+        let mut recipes: HashMap<u64, (u64, usize)> = HashMap::new();
+        let mut pending: Vec<PendingOp> = Vec::new();
+        let paced = self.cfg.speedup.is_finite();
+        let start = Instant::now();
+
+        for (idx, timed) in trace.ops.iter().enumerate() {
+            let idx = idx as u64;
+            let scheduled = if paced {
+                let at = Duration::from_micros((timed.at_us as f64 / self.cfg.speedup) as u64);
+                let target = start + at;
+                std::thread::sleep(target.saturating_duration_since(Instant::now()));
+                Some(target)
+            } else {
+                None
+            };
+            match timed.op {
+                TraceOp::Open { session, prefill_rows } => {
+                    recipes.insert(session, (idx, prefill_rows));
+                    // a re-used id may still hold a stale handle (its
+                    // state was lost); tear it down before re-admitting
+                    if handles.remove(&session).is_some() {
+                        report.closes += 1;
+                    }
+                    match self.open_session(trace, server, policy, session, idx, prefill_rows) {
+                        Ok(h) => {
+                            handles.insert(session, h);
+                            report.opens += 1;
+                        }
+                        Err(e) if e.is_retryable(&policy) => report.failed += 1,
+                        Err(e) => return Err(e),
+                    }
+                }
+                TraceOp::Decode { session } => {
+                    self.submit_decode(
+                        trace,
+                        server,
+                        policy,
+                        &mut handles,
+                        &recipes,
+                        &mut pending,
+                        &mut report,
+                        session,
+                        idx,
+                        scheduled,
+                    );
+                }
+                TraceOp::Close { session } => {
+                    // resolve this session's in-flight decodes first, so
+                    // the teardown Close can never overtake them
+                    let (mine, rest): (Vec<_>, Vec<_>) =
+                        pending.drain(..).partition(|p| p.session == session);
+                    pending = rest;
+                    for p in mine {
+                        self.resolve(trace, server, policy, &mut handles, &recipes, &mut report, p);
+                    }
+                    if handles.remove(&session).is_some() {
+                        report.closes += 1;
+                    }
+                }
+            }
+            // opportunistic non-blocking drain keeps the in-flight set
+            // (and the final drain) small without stalling the schedule
+            let mut still = Vec::with_capacity(pending.len());
+            for p in pending {
+                let PendingOp { op_idx, session, admit_delay_us, retries, ticket } = p;
+                match ticket.try_wait() {
+                    Ok(resp) => self.finish(
+                        trace,
+                        server,
+                        policy,
+                        &mut handles,
+                        &recipes,
+                        &mut report,
+                        op_idx,
+                        session,
+                        admit_delay_us,
+                        retries,
+                        resp,
+                    ),
+                    Err(ticket) => {
+                        still.push(PendingOp { op_idx, session, admit_delay_us, retries, ticket })
+                    }
+                }
+            }
+            pending = still;
+        }
+
+        // final drain: everything still in flight resolves (blocking),
+        // retry loops included
+        for p in std::mem::take(&mut pending) {
+            self.resolve(trace, server, policy, &mut handles, &recipes, &mut report, p);
+        }
+        report.closes += handles.len() as u64;
+        drop(handles);
+        report.wall = start.elapsed();
+        Ok(report)
+    }
+
+    /// Open with a retry loop: admission refusals under a reclaiming
+    /// policy drain as the server evicts or demotes victims.
+    fn open_session<'srv>(
+        &self,
+        trace: &Trace,
+        server: &'srv CamformerServer,
+        policy: ReclaimPolicy,
+        session: u64,
+        op_idx: u64,
+        rows: usize,
+    ) -> Result<SessionHandle<'srv>, ServeError> {
+        let (keys, values) = prefill_payload(trace, op_idx, rows);
+        let mut attempt = 0;
+        loop {
+            match server.open(session, keys.clone(), values.clone()) {
+                Ok(h) => return Ok(h),
+                Err(e) if e.is_retryable(&policy) && attempt < self.cfg.max_retries => {
+                    attempt += 1;
+                    std::thread::sleep(RETRY_BACKOFF);
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// Submit one decode, draining one in-flight ticket per
+    /// [`ServeError::Overloaded`] shed until the server admits it (or
+    /// the retry budget runs out).
+    #[allow(clippy::too_many_arguments)]
+    fn submit_decode<'srv>(
+        &self,
+        trace: &Trace,
+        server: &'srv CamformerServer,
+        policy: ReclaimPolicy,
+        handles: &mut HashMap<u64, SessionHandle<'srv>>,
+        recipes: &HashMap<u64, (u64, usize)>,
+        pending: &mut Vec<PendingOp>,
+        report: &mut DriverReport,
+        session: u64,
+        op_idx: u64,
+        scheduled: Option<Instant>,
+    ) {
+        let mut retries = 0;
+        loop {
+            if !handles.contains_key(&session) {
+                // the session died (lost/evicted) with no pending decode
+                // left to notice it — re-open from the recipe
+                if retries >= self.cfg.max_retries
+                    || !self.reopen(trace, server, policy, handles, recipes, report, session)
+                {
+                    report.failed += 1;
+                    return;
+                }
+                retries += 1;
+                continue;
+            }
+            let (query, new_key, new_value) = decode_payload(trace, op_idx);
+            let submitted =
+                handles.get(&session).expect("checked above").decode(query, new_key, new_value);
+            match submitted {
+                Ok(ticket) => {
+                    let admit_delay_us = scheduled
+                        .map(|s| Instant::now().saturating_duration_since(s).as_secs_f64() * 1e6)
+                        .unwrap_or(0.0);
+                    pending.push(PendingOp { op_idx, session, admit_delay_us, retries, ticket });
+                    return;
+                }
+                Err(e) if e.is_retryable(&policy) && retries < self.cfg.max_retries => {
+                    retries += 1;
+                    report.shed_replays += 1;
+                    // make room: resolve the oldest in-flight ticket so
+                    // the standing queue can drain
+                    if pending.is_empty() {
+                        std::thread::sleep(RETRY_BACKOFF);
+                    } else {
+                        let p = pending.remove(0);
+                        self.resolve(trace, server, policy, handles, recipes, report, p);
+                    }
+                }
+                Err(_) => {
+                    report.failed += 1;
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Block on a pending op's ticket and feed the response through the
+    /// retry taxonomy.
+    fn resolve<'srv>(
+        &self,
+        trace: &Trace,
+        server: &'srv CamformerServer,
+        policy: ReclaimPolicy,
+        handles: &mut HashMap<u64, SessionHandle<'srv>>,
+        recipes: &HashMap<u64, (u64, usize)>,
+        report: &mut DriverReport,
+        p: PendingOp,
+    ) {
+        let PendingOp { op_idx, session, admit_delay_us, retries, ticket } = p;
+        let resp = ticket.wait();
+        self.finish(
+            trace,
+            server,
+            policy,
+            handles,
+            recipes,
+            report,
+            op_idx,
+            session,
+            admit_delay_us,
+            retries,
+            resp,
+        );
+    }
+
+    /// The retry taxonomy: a completed decode records its latency; a
+    /// retryable failure resubmits (synchronously — retries are rare); a
+    /// state-gone failure re-opens from the recipe and resubmits; the
+    /// rest count as failed. Mutual recursion with [`Self::retry_decode`]
+    /// is bounded by [`DriverConfig::max_retries`].
+    #[allow(clippy::too_many_arguments)]
+    fn finish<'srv>(
+        &self,
+        trace: &Trace,
+        server: &'srv CamformerServer,
+        policy: ReclaimPolicy,
+        handles: &mut HashMap<u64, SessionHandle<'srv>>,
+        recipes: &HashMap<u64, (u64, usize)>,
+        report: &mut DriverReport,
+        op_idx: u64,
+        session: u64,
+        admit_delay_us: f64,
+        retries: usize,
+        resp: Response,
+    ) {
+        match resp.result {
+            Ok(_) => {
+                report.decoded_tokens += 1;
+                report.latencies_us.push(admit_delay_us + resp.latency.as_secs_f64() * 1e6);
+            }
+            Err(_) if retries >= self.cfg.max_retries => report.failed += 1,
+            Err(ServeError::Overloaded { .. }) | Err(ServeError::Backend(_)) => {
+                report.shed_replays += 1;
+                self.retry_decode(
+                    trace,
+                    server,
+                    policy,
+                    handles,
+                    recipes,
+                    report,
+                    op_idx,
+                    session,
+                    admit_delay_us,
+                    retries + 1,
+                );
+            }
+            // state-gone (lost/evicted) and capacity-starved decodes both
+            // resolve through a re-open: a fresh Prefill is the one
+            // admission path that runs the reclaim barrier, so it demotes
+            // or evicts victims to make room where a bare decode retry
+            // would starve forever (eviction never runs mid-dispatch)
+            Err(ServeError::SessionLost { .. })
+            | Err(ServeError::Evicted { .. })
+            | Err(ServeError::UnknownSession { .. })
+            | Err(ServeError::CapacityExhausted { .. })
+            | Err(ServeError::SessionLimit { .. }) => {
+                if self.reopen(trace, server, policy, handles, recipes, report, session) {
+                    self.retry_decode(
+                        trace,
+                        server,
+                        policy,
+                        handles,
+                        recipes,
+                        report,
+                        op_idx,
+                        session,
+                        admit_delay_us,
+                        retries + 1,
+                    );
+                } else {
+                    report.failed += 1;
+                }
+            }
+            Err(_) => report.failed += 1,
+        }
+    }
+
+    /// Resubmit one decode synchronously (submit, block, feed back
+    /// through [`Self::finish`]).
+    #[allow(clippy::too_many_arguments)]
+    fn retry_decode<'srv>(
+        &self,
+        trace: &Trace,
+        server: &'srv CamformerServer,
+        policy: ReclaimPolicy,
+        handles: &mut HashMap<u64, SessionHandle<'srv>>,
+        recipes: &HashMap<u64, (u64, usize)>,
+        report: &mut DriverReport,
+        op_idx: u64,
+        session: u64,
+        admit_delay_us: f64,
+        mut retries: usize,
+    ) {
+        loop {
+            if !handles.contains_key(&session) {
+                if retries >= self.cfg.max_retries
+                    || !self.reopen(trace, server, policy, handles, recipes, report, session)
+                {
+                    report.failed += 1;
+                    return;
+                }
+                retries += 1;
+                continue;
+            }
+            let (query, new_key, new_value) = decode_payload(trace, op_idx);
+            let submitted =
+                handles.get(&session).expect("checked above").decode(query, new_key, new_value);
+            match submitted {
+                Ok(ticket) => {
+                    let resp = ticket.wait();
+                    self.finish(
+                        trace,
+                        server,
+                        policy,
+                        handles,
+                        recipes,
+                        report,
+                        op_idx,
+                        session,
+                        admit_delay_us,
+                        retries,
+                        resp,
+                    );
+                    return;
+                }
+                Err(e) if e.is_retryable(&policy) && retries < self.cfg.max_retries => {
+                    retries += 1;
+                    report.shed_replays += 1;
+                    std::thread::sleep(RETRY_BACKOFF);
+                }
+                Err(_) => {
+                    report.failed += 1;
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Re-admit a lost/evicted session from its prefill recipe. The
+    /// stale handle (if any) is dropped *before* the new `open`, so its
+    /// fire-and-forget closes can never tear down the re-admitted state.
+    fn reopen<'srv>(
+        &self,
+        trace: &Trace,
+        server: &'srv CamformerServer,
+        policy: ReclaimPolicy,
+        handles: &mut HashMap<u64, SessionHandle<'srv>>,
+        recipes: &HashMap<u64, (u64, usize)>,
+        report: &mut DriverReport,
+        session: u64,
+    ) -> bool {
+        let Some(&(open_idx, rows)) = recipes.get(&session) else {
+            return false;
+        };
+        if handles.remove(&session).is_some() {
+            report.closes += 1;
+        }
+        match self.open_session(trace, server, policy, session, open_idx, rows) {
+            Ok(h) => {
+                handles.insert(session, h);
+                report.opens += 1;
+                report.reopens += 1;
+                true
+            }
+            Err(_) => false,
+        }
+    }
+}
+
+/// Prefill payload for the `Open` at trace index `op_idx`: `rows` binary
+/// keys and gaussian values in the trace's geometry, derived purely from
+/// `(trace.seed, op_idx)`.
+pub fn prefill_payload(trace: &Trace, op_idx: u64, rows: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = payload_rng(trace.seed, TAG_PREFILL, op_idx);
+    let keys = rng.pm_one_vec(rows * trace.d_k);
+    let values = rng.normal_vec(rows * trace.d_v);
+    (keys, values)
+}
+
+/// Decode payload for the `Decode` at trace index `op_idx`:
+/// `(query, new_key, new_value)`.
+pub fn decode_payload(trace: &Trace, op_idx: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut rng = payload_rng(trace.seed, TAG_DECODE, op_idx);
+    let query = rng.pm_one_vec(trace.d_k);
+    let new_key = rng.pm_one_vec(trace.d_k);
+    let new_value = rng.normal_vec(trace.d_v);
+    (query, new_key, new_value)
+}
+
+fn payload_rng(seed: u64, tag: u64, op_idx: u64) -> Rng {
+    // tag in the top byte, index whitened across the low 64 bits: the
+    // prefill and decode streams of one trace can never collide
+    Rng::new(seed ^ (tag << 56) ^ op_idx.wrapping_mul(0x9E3779B97F4A7C15))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::trace::{generate, TraceSpec};
+
+    #[test]
+    fn payloads_are_deterministic_and_shaped() {
+        let trace = generate(&TraceSpec::bert(), 42);
+        let (k1, v1) = prefill_payload(&trace, 3, 10);
+        let (k2, v2) = prefill_payload(&trace, 3, 10);
+        assert_eq!(k1, k2);
+        assert_eq!(v1, v2);
+        assert_eq!(k1.len(), 10 * trace.d_k);
+        assert_eq!(v1.len(), 10 * trace.d_v);
+        assert!(k1.iter().all(|&x| x == 1.0 || x == -1.0), "keys live in the CAM's ±1 domain");
+        let (q, nk, nv) = decode_payload(&trace, 3);
+        assert_eq!(q.len(), trace.d_k);
+        assert_eq!(nk.len(), trace.d_k);
+        assert_eq!(nv.len(), trace.d_v);
+        // same index, different tag: the streams must not alias
+        assert_ne!(&k1[..trace.d_k], &q[..]);
+    }
+
+    #[test]
+    fn payload_streams_differ_by_index_and_seed() {
+        let trace = generate(&TraceSpec::bert(), 42);
+        let (a, _) = prefill_payload(&trace, 1, 4);
+        let (b, _) = prefill_payload(&trace, 2, 4);
+        assert_ne!(a, b, "different ops must draw different payloads");
+        let other = generate(&TraceSpec::bert(), 43);
+        let (c, _) = prefill_payload(&other, 1, 4);
+        assert_ne!(a, c, "different seeds must draw different payloads");
+    }
+
+    #[test]
+    fn report_percentiles_and_throughput() {
+        let mut r = DriverReport {
+            latencies_us: (1..=100).map(|i| i as f64).collect(),
+            decoded_tokens: 100,
+            ..DriverReport::default()
+        };
+        r.wall = Duration::from_secs(2);
+        assert!((r.p50_us() - 50.5).abs() < 1e-9);
+        assert!((r.p99_us() - 99.01).abs() < 0.1);
+        assert!((r.mean_us() - 50.5).abs() < 1e-9);
+        assert!((r.tokens_per_s() - 50.0).abs() < 1e-9);
+        assert!(r.completed());
+        r.failed = 1;
+        assert!(!r.completed());
+    }
+
+    #[test]
+    fn empty_report_is_benign() {
+        let r = DriverReport::default();
+        assert_eq!(r.p50_us(), 0.0);
+        assert_eq!(r.p99_us(), 0.0);
+        assert_eq!(r.mean_us(), 0.0);
+        assert_eq!(r.tokens_per_s(), 0.0);
+        assert!(r.completed());
+    }
+}

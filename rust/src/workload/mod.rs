@@ -1,0 +1,41 @@
+//! Layer-4 workload engine (ISSUE 10): trace-driven traffic simulation
+//! with energy/latency co-simulation over the serving stack.
+//!
+//! The paper evaluates CAMformer on throughput *and* energy (Table II /
+//! Fig. 8); this module closes the loop at the system level by driving
+//! the layer-3 server with statistically-shaped traffic and pricing
+//! every dispatch through the layer-1/2 circuit models:
+//!
+//! * [`sampler`] — the statistical primitives: Poisson inter-arrivals
+//!   (inverse CDF over the shared [`Rng`]) and [`Zipf`] session
+//!   popularity (precomputed CDF + binary search);
+//! * [`trace`]   — [`generate`]: a pure function of
+//!   `(`[`TraceSpec`]`, u64 seed)` producing an explicit [`Trace`] — a
+//!   `Vec` of microsecond-timestamped `Open`/`Decode`/`Close` ops in
+//!   the paper's BERT-class (n ≈ 128–384) and ViT-class (n ≈ 197–577)
+//!   shape bands, bit-identical per seed (golden-trace guarded);
+//! * [`driver`]  — [`TrafficDriver`]: replays a trace against a live
+//!   [`CamformerServer`] through the `SessionHandle`/`Ticket` API,
+//!   open-loop (optionally paced) with a closed retry loop — sheds
+//!   drain-and-resubmit, lost sessions re-open from their prefill
+//!   recipe — recording scheduled-arrival → completion latency per
+//!   decode in a [`DriverReport`];
+//! * [`energy`]  — [`EnergyAccountant`]: a pure function from the
+//!   server's accumulated `WorkStats` + DRAM counters to per-stage
+//!   joules ([`EnergyStages`]) via `camcircuit::EnergyModel` and the
+//!   `cost::blocks` constants, additive by construction and surfaced
+//!   through `Metrics::summary()` as J/token, watts and DRAM share.
+//!
+//! [`Rng`]: crate::util::rng::Rng
+//! [`CamformerServer`]: crate::coordinator::CamformerServer
+//! [`EnergyStages`]: crate::coordinator::metrics::EnergyStages
+
+pub mod driver;
+pub mod energy;
+pub mod sampler;
+pub mod trace;
+
+pub use driver::{DriverConfig, DriverReport, TrafficDriver};
+pub use energy::EnergyAccountant;
+pub use sampler::{Zipf, exp_interarrival};
+pub use trace::{TimedOp, Trace, TraceOp, TraceSpec, generate};

@@ -1,0 +1,149 @@
+//! Seeded arrival and popularity samplers for the trace generator.
+//!
+//! Both samplers draw exclusively from [`Rng`] (an explicit-`u64`-seed
+//! xoshiro256++) — no wall clock, no global RNG — so a trace is a pure
+//! function of its seed (the ISSUE 10 determinism guard). The arrival
+//! process is open-loop Poisson (exponential inter-arrival times via the
+//! inverse CDF); session popularity is Zipf, the standard heavy-tailed
+//! model for multi-user serving hotsets (a few sessions absorb most of
+//! the traffic, the long tail thrashes the spill tier).
+
+use crate::util::rng::Rng;
+
+/// One exponential inter-arrival gap \[s\] of a Poisson process with the
+/// given event rate \[1/s\]: `-ln(1 - U) / rate`, `U ~ Uniform[0, 1)`.
+pub fn exp_interarrival(rng: &mut Rng, rate_per_s: f64) -> f64 {
+    assert!(rate_per_s > 0.0, "Poisson rate must be positive, got {rate_per_s}");
+    -(1.0 - rng.uniform()).ln() / rate_per_s
+}
+
+/// Zipf sampler over ranks `0..n`: rank `r` is drawn with probability
+/// proportional to `1 / (r + 1)^s`. The CDF is precomputed once so each
+/// sample is one uniform draw plus a binary search.
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    /// Build the sampler for `n` ranks with exponent `s` (s = 0 is
+    /// uniform; larger s concentrates mass on the head ranks).
+    pub fn new(n: usize, s: f64) -> Self {
+        assert!(n > 0, "Zipf needs at least one rank");
+        assert!(s >= 0.0, "Zipf exponent must be non-negative, got {s}");
+        let mut cdf = Vec::with_capacity(n);
+        let mut total = 0.0f64;
+        for r in 0..n {
+            total += 1.0 / ((r + 1) as f64).powf(s);
+            cdf.push(total);
+        }
+        for c in &mut cdf {
+            *c /= total;
+        }
+        Zipf { cdf }
+    }
+
+    /// Number of ranks.
+    pub fn len(&self) -> usize {
+        self.cdf.len()
+    }
+
+    /// Whether the rank space is empty (never true: `new` asserts n > 0).
+    pub fn is_empty(&self) -> bool {
+        self.cdf.is_empty()
+    }
+
+    /// Draw one rank in `0..n`.
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.uniform();
+        // first rank whose CDF strictly exceeds u; the min guards the
+        // float-dust case where u lands at/after the last partial sum
+        self.cdf.partition_point(|&c| c <= u).min(self.cdf.len() - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    /// Seeded Poisson inter-arrivals must reproduce the exponential
+    /// distribution's first two moments: mean 1/λ and CV = 1 (the
+    /// standard deviation equals the mean), both tolerance-banded.
+    #[test]
+    fn poisson_interarrival_moments() {
+        let mut rng = Rng::new(1234);
+        let rate = 1000.0; // 1k req/s => 1 ms mean gap
+        let gaps: Vec<f64> = (0..20_000).map(|_| exp_interarrival(&mut rng, rate)).collect();
+        assert!(gaps.iter().all(|&g| g >= 0.0));
+        let mean = stats::mean(&gaps);
+        assert!((mean - 1e-3).abs() / 1e-3 < 0.05, "mean gap {mean} vs 1/λ = 1e-3");
+        let sd = stats::std_dev(&gaps);
+        assert!((sd - mean).abs() / mean < 0.10, "exponential CV must be ~1: sd {sd} mean {mean}");
+    }
+
+    /// The exponential right tail: P[gap > 2/λ] = e^-2 ≈ 13.5% — a
+    /// skew-sensitive band a symmetric distribution with the same mean
+    /// and variance would miss badly.
+    #[test]
+    fn poisson_interarrival_tail_mass() {
+        let mut rng = Rng::new(99);
+        let rate = 500.0;
+        let n = 20_000;
+        let over = (0..n)
+            .filter(|_| exp_interarrival(&mut rng, rate) > 2.0 / rate)
+            .count();
+        let frac = over as f64 / n as f64;
+        assert!((frac - 0.1353).abs() < 0.02, "P[gap > 2/λ] = {frac}, want ~e^-2");
+    }
+
+    /// Zipf(s = 1) rank frequencies must fall off as ~1/rank: rank 0
+    /// roughly twice rank 1, roughly ten times rank 9, tolerance-banded.
+    #[test]
+    fn zipf_rank_frequencies() {
+        let z = Zipf::new(100, 1.0);
+        let mut rng = Rng::new(777);
+        let mut counts = vec![0u64; z.len()];
+        let n = 100_000;
+        for _ in 0..n {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        let f = |r: usize| counts[r] as f64 / n as f64;
+        let ratio10 = f(0) / f(9).max(1e-12);
+        assert!((ratio10 - 10.0).abs() < 2.0, "rank0/rank9 = {ratio10}, want ~10");
+        let ratio2 = f(0) / f(1).max(1e-12);
+        assert!((ratio2 - 2.0).abs() < 0.4, "rank0/rank1 = {ratio2}, want ~2");
+        // head concentration: with H_100 ≈ 5.19, the top-10 ranks carry
+        // H_10/H_100 ≈ 56% of the mass
+        let head: f64 = (0..10).map(f).sum();
+        assert!((head - 0.564).abs() < 0.05, "top-10 mass {head}, want ~0.56");
+    }
+
+    /// s = 0 degenerates to uniform: every rank within a band of 1/n.
+    #[test]
+    fn zipf_zero_exponent_is_uniform() {
+        let z = Zipf::new(10, 0.0);
+        let mut rng = Rng::new(5);
+        let mut counts = vec![0u64; 10];
+        let n = 50_000;
+        for _ in 0..n {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        for (r, &c) in counts.iter().enumerate() {
+            let frac = c as f64 / n as f64;
+            assert!((frac - 0.1).abs() < 0.015, "rank {r} freq {frac}, want 0.1");
+        }
+    }
+
+    /// Samples always land in range, including the single-rank edge.
+    #[test]
+    fn zipf_sample_in_range() {
+        let z = Zipf::new(7, 1.2);
+        let mut rng = Rng::new(3);
+        for _ in 0..10_000 {
+            assert!(z.sample(&mut rng) < 7);
+        }
+        let one = Zipf::new(1, 2.0);
+        assert_eq!(one.sample(&mut rng), 0);
+    }
+}

@@ -1,32 +1,49 @@
 #!/usr/bin/env python3
-"""BENCH_hotpath.json regression smoke (ISSUE 7, satellite 5; spill
-tier + noise margin in ISSUE 8; chaos-restart recovery keys in ISSUE 9).
+"""Bench JSON regression smoke (ISSUE 7, satellite 5; spill tier +
+noise margin in ISSUE 8; chaos-restart recovery keys in ISSUE 9; the
+serving traffic / energy co-simulation surface in ISSUE 10).
 
-Run after `cargo bench --bench coordinator_hotpath` emits
-BENCH_hotpath.json. Two gates:
+Two bench surfaces share this gate, distinguished by schema:
 
-1. completeness — every scenario key the bench has historically emitted
-   must still be present (a bench refactor that silently drops a
-   scenario reads as "no regression" forever after). This gate is
-   STRICT: a missing key fails regardless of any margin;
-2. the headline FlashCAM claim — the fused streaming kernel must beat
-   the PR-4 sparse_incremental pipeline per decode step at the largest
-   context (n = 4096), where the O(n·d) scoring loop dominates and the
-   u64 word-parallel pass has the most room. This gate carries a small
-   configurable noise margin (default 3%): the two timings come from
-   separate wall-clock loops on a shared machine, so `fused == sparse
-   * 1.0001` is scheduler jitter, not a regression. Override with
-   `--margin 0.05` or `CHECK_BENCH_MARGIN=0.05` (0 restores the strict
-   comparison).
+* BENCH_hotpath.json  (``cargo bench --bench coordinator_hotpath``) —
+  flat ``{scenario: ns}``. Gates:
+
+  1. completeness — every scenario key the bench has historically
+     emitted must still be present (a bench refactor that silently
+     drops a scenario reads as "no regression" forever after). This
+     gate is STRICT: a missing key fails regardless of any margin;
+  2. the headline FlashCAM claim — the fused streaming kernel must beat
+     the PR-4 sparse_incremental pipeline per decode step at the
+     largest context (n = 4096), where the O(n·d) scoring loop
+     dominates and the u64 word-parallel pass has the most room.
+
+* BENCH_serving.json  (``cargo bench --bench serving_traffic``) —
+  nested ``{scenario: {tokens_per_s, p99_ms, j_per_token, watts}}``.
+  Gates:
+
+  1. completeness — every traffic scenario and every metric of the
+     co-simulation quartet present;
+  2. the energy accounting is live — every J/token finite and nonzero
+     (an accountant that silently stops pricing reads as free serving);
+  3. the serving-scale energy claim — the fused FlashCAM kernel must
+     decode cheaper per token than the dense baseline over the same
+     long-context trace.
+
+The cross-recipe comparisons carry a small configurable noise margin
+(default 3%): paired numbers come from separate wall-clock loops on a
+shared machine, so a hair's-width inversion is scheduler jitter, not a
+regression. Override with ``--margin 0.05`` or ``CHECK_BENCH_MARGIN=0.05``
+(0 restores the strict comparison).
 
 Stdlib only; exits non-zero with a readable report on any violation.
 """
 
 import json
+import math
 import os
 import sys
 
-EXPECTED_KEYS = [
+HOTPATH_KEYS = [
     # long-context recipe x context-length matrix (ISSUEs 4, 7)
     *[
         f"long_context_{recipe}_n{n}"
@@ -59,6 +76,17 @@ EXPECTED_KEYS = [
 FUSED = "long_context_fused_incremental_n4096"
 SPARSE = "long_context_sparse_incremental_n4096"
 
+# the traffic scenarios serving_traffic.rs emits (ISSUE 10) and the
+# co-simulation quartet each must report
+SERVING_KEYS = [
+    "bert_steady",
+    "vit_bursty",
+    "zipf_spill",
+    "longctx_fused",
+    "longctx_dense",
+]
+SERVING_METRICS = ["tokens_per_s", "p99_ms", "j_per_token", "watts"]
+
 DEFAULT_MARGIN = 0.03
 
 
@@ -75,23 +103,9 @@ def parse_margin(argv: list) -> float:
     return margin
 
 
-def main() -> int:
-    argv = sys.argv[1:]
-    try:
-        margin = parse_margin(argv)
-    except (ValueError, IndexError) as e:
-        print(f"check_bench: bad --margin / CHECK_BENCH_MARGIN: {e}", file=sys.stderr)
-        return 2
-    path = argv[0] if argv else "BENCH_hotpath.json"
-    try:
-        with open(path, encoding="utf-8") as f:
-            bench = json.load(f)
-    except OSError as e:
-        print(f"check_bench: cannot read {path}: {e}", file=sys.stderr)
-        return 1
-
-    failures = []
-    missing = [k for k in EXPECTED_KEYS if k not in bench]
+def check_hotpath(bench: dict, margin: float, failures: list) -> None:
+    """Flat {scenario: ns} schema: completeness + fused-vs-sparse ns."""
+    missing = [k for k in HOTPATH_KEYS if k not in bench]
     if missing:
         failures.append(f"missing scenario keys: {', '.join(missing)}")
     for key, ns in bench.items():
@@ -112,11 +126,75 @@ def main() -> int:
                 f"{sparse:.1f} ns/step ({sparse / fused:.2f}x, margin {margin:.1%})"
             )
 
+
+def check_serving(bench: dict, margin: float, failures: list) -> None:
+    """Nested {scenario: quartet} schema: completeness, live energy
+    accounting, fused-vs-dense J/token."""
+    missing = [k for k in SERVING_KEYS if k not in bench]
+    if missing:
+        failures.append(f"missing traffic scenarios: {', '.join(missing)}")
+    for scenario, row in bench.items():
+        if not isinstance(row, dict):
+            failures.append(f"scenario {scenario!r}: expected a metric dict, got {row!r}")
+            continue
+        for metric in SERVING_METRICS:
+            v = row.get(metric)
+            if not isinstance(v, (int, float)) or not math.isfinite(v) or v <= 0:
+                failures.append(
+                    f"scenario {scenario!r}: metric {metric!r} must be finite "
+                    f"and positive, got {v!r}"
+                )
+
+    fused = bench.get("longctx_fused", {})
+    dense = bench.get("longctx_dense", {})
+    fj, dj = fused.get("j_per_token"), dense.get("j_per_token")
+    if isinstance(fj, float) and isinstance(dj, float) and fj > 0 and dj > 0:
+        if fj >= dj * (1.0 + margin):
+            failures.append(
+                f"fused kernel must decode cheaper than the dense baseline "
+                f"(margin {margin:.1%}): longctx_fused = {fj:.3e} J/token >= "
+                f"longctx_dense = {dj:.3e} J/token * {1.0 + margin:.3f}"
+            )
+        else:
+            print(
+                f"check_bench: fused {fj:.3e} J/token vs dense {dj:.3e} J/token "
+                f"({dj / fj:.2f}x, margin {margin:.1%})"
+            )
+
+
+def main() -> int:
+    argv = sys.argv[1:]
+    try:
+        margin = parse_margin(argv)
+    except (ValueError, IndexError) as e:
+        print(f"check_bench: bad --margin / CHECK_BENCH_MARGIN: {e}", file=sys.stderr)
+        return 2
+    path = argv[0] if argv else "BENCH_hotpath.json"
+    try:
+        with open(path, encoding="utf-8") as f:
+            bench = json.load(f)
+    except OSError as e:
+        print(f"check_bench: cannot read {path}: {e}", file=sys.stderr)
+        return 1
+    if not isinstance(bench, dict) or not bench:
+        print(f"check_bench: {path} must hold a non-empty JSON object", file=sys.stderr)
+        return 1
+
+    failures = []
+    # schema sniff: the serving surface nests a metric dict per scenario,
+    # the hotpath surface maps straight to numbers
+    if all(isinstance(v, dict) for v in bench.values()):
+        check_serving(bench, margin, failures)
+        count = len(SERVING_KEYS)
+    else:
+        check_hotpath(bench, margin, failures)
+        count = len(HOTPATH_KEYS)
+
     if failures:
         for f_ in failures:
             print(f"check_bench: FAIL: {f_}", file=sys.stderr)
         return 1
-    print(f"check_bench: OK ({len(EXPECTED_KEYS)} scenarios present)")
+    print(f"check_bench: OK ({count} scenarios present)")
     return 0
 
 
